@@ -1,0 +1,91 @@
+//! Quickstart: the lowest-level path through the stack.
+//!
+//! Spawns ONE simulated NPU, loads the full weight set, compiles the fused
+//! "graph mode" decode executable (`full_decode_b1` — the whole model
+//! forward as a single kernel launch, §2.4), and greedy-decodes a few
+//! prompts token by token. No engine, no scheduler: just the runtime.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use revivemoe::artifacts::ArtifactStore;
+use revivemoe::config::ModelMeta;
+use revivemoe::runtime::{Arg, SimDevice};
+use revivemoe::tensor::Tensor;
+use revivemoe::weights::WeightStore;
+use revivemoe::workload;
+use revivemoe::Result;
+
+fn main() -> Result<()> {
+    let art = std::path::Path::new("artifacts");
+    let meta = ModelMeta::load(art)?;
+    let store = WeightStore::open(&art.join("weights.json"), &art.join("weights.bin"))?;
+    let arts = ArtifactStore::open(&art.join("hlo"))?;
+
+    // one device; everything fits on it ("EP1" deployment)
+    let dev = SimDevice::spawn(0);
+    let t0 = std::time::Instant::now();
+    let weights = store.load_all()?;
+    let n_bytes = dev.handle.load_weights(weights)?;
+    println!("loaded {} weight tensors ({} KiB) in {:?}",
+             store.names().count(), n_bytes / 1024, t0.elapsed());
+
+    let stat = dev.handle.compile("full_decode_b1", arts.path("full_decode_b1")?)?;
+    println!("cached-compiled the fused graph-mode executable in {:.2}s \
+              (read {:.3}s, {} B of HLO)",
+             stat.compile_s, stat.read_s, stat.hlo_bytes);
+
+    let (h, dh, l, s) = (meta.n_heads, meta.d_head, meta.n_layers, meta.max_seq);
+    let weight_names: Vec<String> = store.names().map(|s| s.to_string()).collect();
+
+    for prompt in ["c:hello>", "a:12+30>", "o:dcba>", "m:2957>"] {
+        let mut toks = workload::encode(prompt)?;
+        // host-held KV cache for the fused graph (single rank: no paging)
+        let mut kc = Tensor::zeros(vec![l, 1, s, h, dh]);
+        let mut vc = Tensor::zeros(vec![l, 1, s, h, dh]);
+        let start = toks.len();
+        let mut pos = 0;
+        while pos < toks.len() && toks.len() <= start + 10 {
+            let mut args = vec![
+                Arg::Value(Tensor::i32(vec![1], vec![toks[pos] as i32])),
+                Arg::Value(Tensor::i32(vec![1], vec![pos as i32])),
+                Arg::Value(kc.clone()),
+                Arg::Value(vc.clone()),
+                Arg::Value(Tensor::i32(vec![1], vec![pos as i32])),
+                Arg::Value(Tensor::zeros(vec![meta.n_experts])), // no failed experts
+            ];
+            args.extend(weight_names.iter().map(|n| Arg::Weight(n.clone())));
+            let out = dev.handle.execute("full_decode_b1", args)?;
+            let (logits, nk, nv) = (&out[0], &out[1], &out[2]);
+            // write this token's K/V row at `pos` for every layer
+            let row = h * dh;
+            {
+                let src = nk.as_f32()?.to_vec();
+                let srcv = nv.as_f32()?.to_vec();
+                let ko = kc.as_f32_mut()?;
+                for li in 0..l {
+                    let off = (li * s + pos) * row;
+                    ko[off..off + row].copy_from_slice(&src[li * row..(li + 1) * row]);
+                }
+                let vo = vc.as_f32_mut()?;
+                for li in 0..l {
+                    let off = (li * s + pos) * row;
+                    vo[off..off + row].copy_from_slice(&srcv[li * row..(li + 1) * row]);
+                }
+            }
+            // only start emitting once the prompt is consumed
+            if pos + 1 >= toks.len() {
+                let next = logits.argmax_rows()?[0] as u16;
+                if next == workload::eos_token() {
+                    toks.push(next);
+                    break;
+                }
+                toks.push(next);
+            }
+            pos += 1;
+        }
+        println!("{prompt:<12} -> {:?}", workload::decode(&toks[start..]));
+    }
+
+    dev.handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Role-switch demo (§3.4 / §4.3): a MoE NPU holding the *only* copies of
+//! its experts dies. ReviveMoE first keeps the service alive with the
+//! degraded expert set (missing-experts masking), then performs the role
+//! switch — consuming a DP attention rank, reloading the lost expert
+//! weights from disk — restoring full weight integrity. This is the
+//! combined strategy §4.3 describes: "a role switch can begin in the
+//! background while the system continues inference using the current
+//! (possibly incomplete) expert set."
+//!
+//! Run: `cargo run --release --example role_switch_demo`
+
+use revivemoe::cluster::{FailureBehavior, FaultLevel};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::recovery::{MoeRecoveryKind, ReviveMoE};
+use revivemoe::workload;
+use revivemoe::Result;
+
+fn main() -> Result<()> {
+    // no redundant experts: the failure is guaranteed to lose last copies
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.redundant_per_rank = 0;
+    let (mut engine, _) = Engine::boot(cfg)?;
+    println!(
+        "deployment: {} DP attention ranks {:?}, {} MoE ranks {:?}, no expert redundancy",
+        engine.attn_order.len(),
+        engine.attn_order,
+        engine.moe_order.len(),
+        engine.moe_order
+    );
+
+    let mut done = Vec::new();
+    for r in workload::gen_mixed(24, 99)? {
+        engine.submit(r)?;
+    }
+    for _ in 0..2 {
+        done.extend(engine.step()?);
+    }
+
+    // ---- phase 1: fail MoE rank 3 (device 7); policy allows masking, so
+    // recovery is instant-ish and the service continues degraded.
+    println!("\n=== phase 1: NPU 7 (MoE rank 3) fails; continue with missing experts ===");
+    engine.executors[&7].handle.set_failed(FailureBehavior::Erroring);
+    engine.plugin.post_fault(7, FaultLevel::L5, FailureBehavior::Erroring, "hbm-uce");
+    let ann = engine.detect_failure().unwrap();
+    let report = ReviveMoE::recover(&mut engine, &ann)?;
+    assert_eq!(report.moe_recovery, Some(MoeRecoveryKind::MissingExperts));
+    println!(
+        "recovered in {:.1} ms; masked experts {:?} (1/{} of the model)",
+        report.total().as_secs_f64() * 1e3,
+        report.masked_experts,
+        engine.meta.n_experts / report.masked_experts.len().max(1)
+    );
+    for _ in 0..2 {
+        done.extend(engine.step()?); // serving continues, degraded
+    }
+    println!(
+        "serving continues with {} experts masked; {} requests finished so far",
+        engine.expert_map.missing_experts().len(),
+        done.len()
+    );
+
+    // ---- phase 2: the deferred role switch restores weight integrity.
+    println!("\n=== phase 2: role switch restores the lost experts from disk ===");
+    let t0 = std::time::Instant::now();
+    let victim = *engine
+        .attn_order
+        .iter()
+        .min_by_key(|d| {
+            engine.executors[d]
+                .attn
+                .as_ref()
+                .map(|a| a.sched.load())
+                .unwrap_or(usize::MAX)
+        })
+        .unwrap();
+    println!("victim DP rank: device {victim} (least loaded)");
+    // drain + requeue its sequences, then switch
+    let seqs = engine.drain_for_migration(victim)?;
+    engine.attn_order.retain(|&d| d != victim);
+    let n = engine.requeue(seqs)?;
+    let meta = engine.meta.clone();
+    let slots = engine.expert_map.revive_rank(3)?.to_vec();
+    let (dropped, loaded) = {
+        let ex = engine.executors.get_mut(&victim).unwrap();
+        ex.role_switch_to_moe(3, slots, &meta, &engine.store)?
+    };
+    engine.moe_order[3] = victim;
+    // the switched device needs its MoE graphs + the recreated domain
+    let names = revivemoe::executor::artifact_set(
+        &engine.executors[&victim],
+        &engine.meta,
+        &engine.cfg,
+    );
+    let stats = engine.executors[&victim].compile_set(&engine.arts, &names)?;
+    let epoch = engine
+        .domains
+        .recreate_with_switch(revivemoe::comms::ATTN_EXPERT_DOMAIN, 7, victim)?
+        .epoch;
+    engine.set_epoch(epoch);
+    println!(
+        "role switch done in {:.1} ms: migrated {n} seqs, dropped {dropped} attention \
+         tensors, loaded {} KiB of expert weights from disk, compiled {} graphs",
+        t0.elapsed().as_secs_f64() * 1e3,
+        loaded / 1024,
+        stats.len()
+    );
+    assert!(engine.expert_map.missing_experts().is_empty());
+    println!(
+        "weight integrity restored: DP ranks {:?}, MoE ranks {:?}, no masked experts",
+        engine.attn_order, engine.moe_order
+    );
+
+    done.extend(engine.run_to_completion(50_000)?);
+    println!("\nall {} requests completed across both phases", done.len());
+    engine.shutdown();
+    Ok(())
+}

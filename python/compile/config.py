@@ -1,0 +1,58 @@
+"""Single source of truth for model + deployment shapes.
+
+Both the build-time python layer (train/aot) and — via
+``artifacts/model_meta.json`` — the rust runtime read these numbers.
+Everything is deliberately small: the substrate is a 1-core CPU simulator of
+an 80-NPU deployment (see DESIGN.md), so the *shape* of the paper's results
+is what matters, not absolute seconds.
+"""
+
+from dataclasses import dataclass, asdict, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 64
+    d_model: int = 64
+    n_heads: int = 4
+    d_head: int = 16
+    n_layers: int = 4
+    n_dense_layers: int = 1      # first k layers use a dense FFN (DeepSeek-style)
+    n_experts: int = 32
+    top_k: int = 2
+    d_ff: int = 128              # expert + dense FFN hidden size
+    max_seq: int = 160
+    ln_eps: float = 1e-5
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers - self.n_dense_layers
+
+
+@dataclass(frozen=True)
+class AotConfig:
+    """Which static shapes get an AOT-compiled HLO artifact.
+
+    Decode batch buckets: the rust scheduler rounds running batches up to a
+    bucket. Prefill runs per-sequence (B=1) over seq buckets. ``e_local``
+    covers every experts-per-rank count reachable by the deployment configs
+    and their single-failure re-distributions (EP4: 8 -> role-switch keeps 8,
+    redundancy 8+2=10, loss-redistribute ceil(32/3)=11; EP2: 16; EP1: 32;
+    EP8: 4 -> 5 redundant / 5 redistributed).
+    """
+    decode_batches: List[int] = field(default_factory=lambda: [1, 4, 8])
+    prefill_seqs: List[int] = field(default_factory=lambda: [32, 64, 128, 160])
+    e_local: List[int] = field(default_factory=lambda: [3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 16, 32])
+    # per-expert token capacity of the grouped MoE block (worst case: every
+    # token in the global decode batch routed to one expert)
+    capacities: List[int] = field(default_factory=lambda: [8, 16, 32, 64, 160])
+    dense_tp: int = 4            # dense-FFN tensor-parallel degree (paper runs TP=4)
+
+
+MODEL = ModelConfig()
+AOT = AotConfig()
+
+
+def model_meta() -> dict:
+    return {"model": asdict(MODEL), "aot": asdict(AOT)}

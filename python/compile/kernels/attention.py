@@ -1,0 +1,77 @@
+"""Pallas decode-attention kernel (L1): one query vs a padded KV cache.
+
+The L3 coordinator owns a *paged* KV cache (rust/src/kvcache/); before each
+decode step it gathers the sequence's blocks into the contiguous [S, H, Dh]
+cache layout this kernel reads, and scatters the returned new K/V row back
+into the right page. That keeps the HLO shape static while the block table
+(and its undo log — paper §3.3) lives entirely on the rust side.
+
+TPU mapping (revised in the §Perf pass): grid = (B,) — one step per
+sequence, all heads together. Per step the kernel streams the sequence's
+[S, H, Dh] key and value slabs through VMEM (S*H*Dh*4*2 = 160 KiB at the
+shipped config), computes all-head scores as one batched dot on the MXU,
+masks positions >= cur_len, and folds the token's own (new_k, new_v) in as
+the (S+1)-th slot — an online-softmax over S+1 entries in one pass since S
+fits VMEM. (The original grid was (B, H) — one head per step — which
+profiled 4x slower under the interpret-mode while-loop lowering; per-head
+blocking only pays once S*H*Dh outgrows VMEM.)
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, nk_ref, nv_ref, len_ref, o_ref):
+    q = q_ref[...][0]     # [H, Dh]
+    k = k_ref[...][0]     # [S, H, Dh]
+    v = v_ref[...][0]     # [S, H, Dh]
+    nk = nk_ref[...][0]   # [H, Dh]
+    nv = nv_ref[...][0]   # [H, Dh]
+    cur = len_ref[...][0]  # scalar int32
+    S = k.shape[0]
+    Dh = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    # scores vs cache for every head: [H, S]
+    s_cache = jax.lax.dot_general(
+        q, k, (((1,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    pos = jax.lax.iota(jnp.int32, S)
+    s_cache = jnp.where(pos[None, :] < cur, s_cache, NEG_INF)
+    # score vs the token's own key: [H]
+    s_self = jnp.sum(q * nk, axis=-1) * scale
+    m = jnp.maximum(jnp.max(s_cache, axis=-1), s_self)
+    e_cache = jnp.exp(s_cache - m[:, None])
+    e_self = jnp.exp(s_self - m)
+    denom = jnp.sum(e_cache, axis=-1) + e_self
+    # weighted values: [H, Dh]
+    ctx = jax.lax.dot_general(
+        e_cache, v, (((1,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    )
+    out = (ctx + e_self[:, None] * nv) / denom[:, None]
+    o_ref[...] = out[None]
+
+
+def decode_attention(q, k_cache, v_cache, new_k, new_v, cur_len):
+    """Pallas version of :func:`ref.decode_attention_ref`. Shapes as there."""
+    B, S, H, Dh = k_cache.shape
+    grid = (B,)
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda b: (b, 0, 0)),       # q
+            pl.BlockSpec((1, S, H, Dh), lambda b: (b, 0, 0, 0)),  # k
+            pl.BlockSpec((1, S, H, Dh), lambda b: (b, 0, 0, 0)),  # v
+            pl.BlockSpec((1, H, Dh), lambda b: (b, 0, 0)),       # new_k
+            pl.BlockSpec((1, H, Dh), lambda b: (b, 0, 0)),       # new_v
+            pl.BlockSpec((1,), lambda b: (b,)),                  # cur_len
+        ],
+        out_specs=pl.BlockSpec((1, H, Dh), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, new_k, new_v, cur_len)

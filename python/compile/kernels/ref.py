@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float32 tolerance (pytest + hypothesis sweeps in
+``python/tests/test_kernels.py``), and the L2 model is built so that either
+implementation can be swapped in (``use_pallas`` flag in model.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf so masked softmax stays NaN-free
+
+
+def topk_gate_ref(x, w_router, mask, top_k: int):
+    """Masked top-k router (paper §3.4 'missing experts').
+
+    x:        [T, d]   token activations
+    w_router: [d, E]   router weights
+    mask:     [E]      additive logit mask (0 = healthy, NEG_INF = failed)
+    Returns (idx [T,k] int32, weight [T,k] f32) where weights are the
+    softmax probabilities of the selected experts renormalised over the
+    top-k set (DeepSeek-style).
+    """
+    logits = x @ w_router + mask[None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, top_k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    return topi.astype(jnp.int32), topw
+
+
+def moe_ffn_ref(xs, w1, w2):
+    """Grouped expert FFN.
+
+    xs: [E, C, d]  tokens pre-grouped per expert (padded to capacity C)
+    w1: [E, d, f]  per-expert up-projection
+    w2: [E, f, d]  per-expert down-projection
+    Returns [E, C, d] = silu(xs @ w1) @ w2, computed expert-by-expert.
+    """
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, w1))
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def decode_attention_ref(q, k_cache, v_cache, new_k, new_v, cur_len):
+    """One-query causal attention against a (padded) KV cache.
+
+    q:       [B, H, Dh]     query for the token at position cur_len[b]
+    k_cache: [B, S, H, Dh]  keys for positions < cur_len (garbage beyond)
+    v_cache: [B, S, H, Dh]
+    new_k:   [B, H, Dh]     this token's own key
+    new_v:   [B, H, Dh]
+    cur_len: [B] int32      number of valid cached positions per sequence
+    Returns [B, H, Dh].
+    """
+    B, S, H, Dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    # scores vs cache: [B, H, S]
+    s_cache = jnp.einsum("bhd,bshd->bhs", q, k_cache) * scale
+    pos = jnp.arange(S)[None, None, :]
+    valid = pos < cur_len[:, None, None]
+    s_cache = jnp.where(valid, s_cache, NEG_INF)
+    # score vs the token's own key: [B, H, 1]
+    s_self = jnp.einsum("bhd,bhd->bh", q, new_k)[..., None] * scale
+    s = jnp.concatenate([s_cache, s_self], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p[..., :S], v_cache)
+    out = out + p[..., S:] * new_v
+    return out
+
+
+def prefill_attention_ref(q, k, v):
+    """Causal self-attention over a full prompt. q,k,v: [B, S, H, Dh]."""
+    B, S, H, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((S, S), dtype=bool))
+    s = jnp.where(causal[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

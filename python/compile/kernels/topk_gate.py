@@ -1,0 +1,84 @@
+"""Pallas masked top-k router kernel (L1).
+
+The paper's "missing experts" recovery option (§3.4) masks the routing
+logits of failed experts to -inf immediately before top-k selection so the
+next-best healthy experts are used in their place. Making the mask a
+*runtime input* to this kernel is what lets ReviveMoE change the healthy
+set without recompiling the graph.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the router is a skinny
+[T,d]x[d,E] matmul plus a per-row reduction — one grid step per token block,
+the whole [d,E] router weight staged in VMEM (d*E*4 = 8 KiB at the shipped
+config), top-k done as k max/mask passes in registers rather than a sort.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is analysed statically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# token-block: one grid step handles up to this many tokens
+_BLOCK_T = 32
+
+
+def _gate_kernel(x_ref, w_ref, mask_ref, idx_ref, wt_ref, *, top_k: int):
+    x = x_ref[...]                      # [bt, d]
+    w = w_ref[...]                      # [d, E]
+    mask = mask_ref[...]                # [E]
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32) + mask[None, :]
+    # numerically-stable softmax over experts
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    # top-k by k successive max+mask passes (k is tiny; avoids a full sort)
+    remaining = probs
+    idxs, wts = [], []
+    for _ in range(top_k):
+        i = jnp.argmax(remaining, axis=-1)              # [bt]
+        p = jnp.max(remaining, axis=-1)                 # [bt]
+        idxs.append(i.astype(jnp.int32))
+        wts.append(p)
+        remaining = remaining * (1.0 - jax.nn.one_hot(i, remaining.shape[-1],
+                                                      dtype=remaining.dtype))
+    idx = jnp.stack(idxs, axis=-1)                      # [bt, k]
+    wt = jnp.stack(wts, axis=-1)                        # [bt, k]
+    wt = wt / jnp.sum(wt, axis=-1, keepdims=True)
+    idx_ref[...] = idx
+    wt_ref[...] = wt
+
+
+def topk_gate(x, w_router, mask, top_k: int):
+    """Pallas version of :func:`ref.topk_gate_ref`. Shapes as there."""
+    T, d = x.shape
+    E = w_router.shape[1]
+    bt = min(_BLOCK_T, T)
+    if T % bt != 0:  # pad tokens up to a block multiple; strip after
+        pad = (-T) % bt
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Tp = x.shape[0]
+    grid = (Tp // bt,)
+    idx, wt = pl.pallas_call(
+        functools.partial(_gate_kernel, top_k=top_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, E), lambda i: (0, 0)),
+            pl.BlockSpec((E,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((Tp, top_k), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w_router, mask)
+    return idx[:T], wt[:T]

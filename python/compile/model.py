@@ -1,0 +1,283 @@
+"""L2: the MoE transformer, decomposed into AOT-exportable modules.
+
+The model mirrors the paper's serving target (DeepSeek-style: first
+``n_dense_layers`` use a dense FFN, the rest are top-k-routed MoE layers)
+at toy scale. Two decompositions coexist:
+
+1. **Module decomposition** (what the rust coordinator drives): ``embed`` →
+   per layer [``attn_block`` → ``router_topk`` → XCCL-sim dispatch →
+   ``moe_block`` on expert ranks → XCCL-sim combine (weighted sum done by
+   the coordinator)] → ``lm_head``. Every function takes its weights as
+   explicit arguments so the lowered HLO has weights as *parameters* — a
+   role switch swaps the literals it feeds, never the graph.
+2. **Fused decomposition** (``full_decode_step``): the whole decode step as
+   one HLO — the "graph mode" executable of §2.4, also the unit whose
+   compile time we measure for the cached-vs-full compilation story.
+
+``full_forward`` is the teacher-forced oracle used for training, the
+accuracy experiment reference, and the golden outputs the rust pipeline is
+tested against.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.attention import decode_attention as decode_attention_pl
+from .kernels.moe_ffn import moe_ffn as moe_ffn_pl
+from .kernels.topk_gate import topk_gate as topk_gate_pl
+
+# ---------------------------------------------------------------------------
+# primitives
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# parameter init / (de)serialisation
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+
+    def dense(k, shape, scale=None):
+        scale = scale or (1.0 / jnp.sqrt(shape[0]))
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    d, H, Dh, f, E = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff, cfg.n_experts
+    params = {
+        "embed": dense(ks[0], (cfg.vocab, d), 0.05),
+        "pos": dense(ks[1], (cfg.max_seq, d), 0.05),
+        "lnf_g": jnp.ones((d,)), "lnf_b": jnp.zeros((d,)),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        k = jax.random.split(ks[4 + li], 8)
+        layer = {
+            "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "wq": dense(k[0], (d, H * Dh)), "wk": dense(k[1], (d, H * Dh)),
+            "wv": dense(k[2], (d, H * Dh)), "wo": dense(k[3], (H * Dh, d)),
+            "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        }
+        if li < cfg.n_dense_layers:
+            layer["d_w1"] = dense(k[4], (d, f))
+            layer["d_w2"] = dense(k[5], (f, d))
+        else:
+            layer["router"] = dense(k[4], (d, E), 0.02)
+            layer["e_w1"] = dense(k[5], (E, d, f), 1.0 / jnp.sqrt(d))
+            layer["e_w2"] = dense(k[6], (E, f, d), 1.0 / jnp.sqrt(f))
+        params["layers"].append(layer)
+    return params
+
+
+ATTN_WEIGHT_ORDER = ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b"]
+
+
+def flatten_params(params, cfg: ModelConfig):
+    """Deterministic (name, array) list — the rust weight manifest order."""
+    out = [("embed", params["embed"]), ("pos", params["pos"]),
+           ("lnf_g", params["lnf_g"]), ("lnf_b", params["lnf_b"])]
+    for li, layer in enumerate(params["layers"]):
+        for name in ATTN_WEIGHT_ORDER:
+            out.append((f"layers.{li}.{name}", layer[name]))
+        if li < cfg.n_dense_layers:
+            out.append((f"layers.{li}.d_w1", layer["d_w1"]))
+            out.append((f"layers.{li}.d_w2", layer["d_w2"]))
+        else:
+            out.append((f"layers.{li}.router", layer["router"]))
+            out.append((f"layers.{li}.e_w1", layer["e_w1"]))
+            out.append((f"layers.{li}.e_w2", layer["e_w2"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# exportable modules (weights are explicit positional args)
+
+
+def embed_decode(tok, pos, emb, pos_emb):
+    """tok,pos: [B] int32 -> [B,d]"""
+    return emb[tok] + pos_emb[pos]
+
+
+def embed_prefill(tok, emb, pos_emb):
+    """tok: [B,S] int32 -> [B,S,d]"""
+    S = tok.shape[1]
+    return emb[tok] + pos_emb[None, :S]
+
+
+def _proj_heads(x, w, H, Dh):
+    return (x @ w).reshape(x.shape[:-1] + (H, Dh))
+
+
+def attn_block_decode(x, k_cache, v_cache, cur_len,
+                      ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b,
+                      *, cfg: ModelConfig, use_pallas=True):
+    """One layer's attention half for a decode step.
+
+    x: [B,d]; caches [B,S,H,Dh]; cur_len [B] int32.
+    Returns (h residual-base [B,d], ffn_in [B,d], new_k [B,H,Dh], new_v).
+    """
+    H, Dh = cfg.n_heads, cfg.d_head
+    a_in = layer_norm(x, ln1_g, ln1_b, cfg.ln_eps)
+    q = _proj_heads(a_in, wq, H, Dh)
+    nk = _proj_heads(a_in, wk, H, Dh)
+    nv = _proj_heads(a_in, wv, H, Dh)
+    attn_fn = decode_attention_pl if use_pallas else ref.decode_attention_ref
+    o = attn_fn(q, k_cache, v_cache, nk, nv, cur_len)       # [B,H,Dh]
+    h = x + o.reshape(x.shape[0], H * Dh) @ wo
+    ffn_in = layer_norm(h, ln2_g, ln2_b, cfg.ln_eps)
+    return h, ffn_in, nk, nv
+
+
+def attn_block_prefill(x, ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b,
+                       *, cfg: ModelConfig):
+    """One layer's attention half over a full prompt. x: [B,S,d].
+
+    Returns (h [B,S,d], ffn_in [B,S,d], k [B,S,H,Dh], v [B,S,H,Dh]).
+    """
+    H, Dh = cfg.n_heads, cfg.d_head
+    B, S, d = x.shape
+    a_in = layer_norm(x, ln1_g, ln1_b, cfg.ln_eps)
+    q = _proj_heads(a_in, wq, H, Dh)
+    k = _proj_heads(a_in, wk, H, Dh)
+    v = _proj_heads(a_in, wv, H, Dh)
+    o = ref.prefill_attention_ref(q, k, v)
+    h = x + o.reshape(B, S, H * Dh) @ wo
+    ffn_in = layer_norm(h, ln2_g, ln2_b, cfg.ln_eps)
+    return h, ffn_in, k, v
+
+
+def router_topk(x, w_router, mask, *, cfg: ModelConfig, use_pallas=True):
+    """x: [T,d] -> (idx [T,k] i32, weight [T,k] f32). mask: [E] additive."""
+    fn = topk_gate_pl if use_pallas else ref.topk_gate_ref
+    return fn(x, w_router, mask, cfg.top_k)
+
+
+def moe_block(xs, w1, w2, *, use_pallas=True):
+    """Grouped expert FFN over dispatched tokens. xs: [E_local,C,d]."""
+    fn = moe_ffn_pl if use_pallas else ref.moe_ffn_ref
+    return fn(xs, w1, w2)
+
+
+def dense_ffn_shard(x, w1s, w2s):
+    """One TP shard of the dense FFN: column-split w1, row-split w2.
+
+    Summing the partial outputs over shards (the coordinator's all-reduce)
+    reproduces the unsharded silu(x@w1)@w2 because silu is applied before
+    the contraction axis is split.
+    """
+    return jax.nn.silu(x @ w1s) @ w2s
+
+
+def lm_head(x, lnf_g, lnf_b, emb, *, cfg: ModelConfig):
+    """x: [T,d] -> logits [T,V] (tied embedding)."""
+    return layer_norm(x, lnf_g, lnf_b, cfg.ln_eps) @ emb.T
+
+
+# ---------------------------------------------------------------------------
+# fused "graph mode" decode step (one HLO for the whole model)
+
+
+def full_decode_step(tokens, pos, k_caches, v_caches, cur_len, expert_mask,
+                     flat_weights, *, cfg: ModelConfig, use_pallas=True):
+    """tokens,pos: [B]; caches: [L,B,S,H,Dh]; expert_mask: [E].
+
+    flat_weights: list of arrays in flatten_params order.
+    Returns (logits [B,V], new_ks [L,B,H,Dh], new_vs [L,B,H,Dh]).
+    """
+    it = iter(flat_weights)
+    emb, pos_emb, lnf_g, lnf_b = next(it), next(it), next(it), next(it)
+    x = embed_decode(tokens, pos, emb, pos_emb)
+    B = tokens.shape[0]
+    new_ks, new_vs = [], []
+    for li in range(cfg.n_layers):
+        aw = [next(it) for _ in ATTN_WEIGHT_ORDER]
+        h, ffn_in, nk, nv = attn_block_decode(
+            x, k_caches[li], v_caches[li], cur_len, *aw,
+            cfg=cfg, use_pallas=use_pallas)
+        new_ks.append(nk)
+        new_vs.append(nv)
+        if li < cfg.n_dense_layers:
+            w1, w2 = next(it), next(it)
+            x = h + dense_ffn_shard(ffn_in, w1, w2)
+        else:
+            w_router, e_w1, e_w2 = next(it), next(it), next(it)
+            idx, wt = router_topk(ffn_in, w_router, expert_mask,
+                                  cfg=cfg, use_pallas=use_pallas)
+            # on-device dense-weighted combine (all experts local here)
+            wfull = jnp.zeros((B, cfg.n_experts))
+            for k in range(cfg.top_k):
+                wfull = wfull + jax.nn.one_hot(idx[:, k], cfg.n_experts) * wt[:, k:k + 1]
+            hidden = jax.nn.silu(jnp.einsum("td,edf->tef", ffn_in, e_w1))
+            eout = jnp.einsum("tef,efd->ted", hidden, e_w2)
+            x = h + jnp.einsum("ted,te->td", eout, wfull)
+    logits = lm_head(x, lnf_g, lnf_b, emb, cfg=cfg)
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+# ---------------------------------------------------------------------------
+# teacher-forced full forward (training / golden oracle / accuracy eval)
+
+
+def full_forward(params, tokens, expert_mask, *, cfg: ModelConfig):
+    """tokens: [B,S] int32 -> (logits [B,S,V], expert_counts [E], aux_loss)."""
+    B, S = tokens.shape
+    x = embed_prefill(tokens, params["embed"], params["pos"])
+    counts = jnp.zeros((cfg.n_experts,))
+    aux = 0.0
+    for li, layer in enumerate(params["layers"]):
+        aw = [layer[n] for n in ATTN_WEIGHT_ORDER]
+        h, ffn_in, _, _ = attn_block_prefill(x, *aw, cfg=cfg)
+        if li < cfg.n_dense_layers:
+            x = h + dense_ffn_shard(ffn_in, layer["d_w1"], layer["d_w2"])
+        else:
+            t = ffn_in.reshape(B * S, cfg.d_model)
+            logits_r = t @ layer["router"] + expert_mask[None, :]
+            probs = jax.nn.softmax(logits_r, axis=-1)
+            topw, topi = jax.lax.top_k(probs, cfg.top_k)
+            topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+            wfull = jnp.zeros((B * S, cfg.n_experts))
+            for k in range(cfg.top_k):
+                wfull = wfull + jax.nn.one_hot(topi[:, k], cfg.n_experts) * topw[:, k:k + 1]
+            hidden = jax.nn.silu(jnp.einsum("td,edf->tef", t, layer["e_w1"]))
+            eout = jnp.einsum("tef,efd->ted", hidden, layer["e_w2"])
+            moe_out = jnp.einsum("ted,te->td", eout, wfull)
+            x = h + moe_out.reshape(B, S, cfg.d_model)
+            # bookkeeping: activation counts + Switch-style load-balance aux
+            sel = jnp.sum(wfull > 0, axis=0).astype(jnp.float32)
+            counts = counts + sel
+            frac = sel / jnp.maximum(jnp.sum(sel), 1.0)
+            pmean = jnp.mean(probs, axis=0)
+            aux = aux + cfg.n_experts * jnp.sum(frac * pmean)
+    logits = lm_head(x.reshape(B * S, cfg.d_model), params["lnf_g"],
+                     params["lnf_b"], params["embed"], cfg=cfg)
+    return logits.reshape(B, S, cfg.vocab), counts, aux / max(cfg.n_moe_layers, 1)
+
+
+def loss_fn(params, tokens, expert_mask, *, cfg: ModelConfig, aux_weight=0.01):
+    logits, counts, aux = full_forward(params, tokens[:, :-1], expert_mask, cfg=cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + aux_weight * aux, (jnp.mean(nll), counts)
+
+
+def eval_accuracy(params, seqs, answer_masks, expert_mask, *, cfg: ModelConfig):
+    """Exact-match next-token accuracy over answer positions.
+
+    seqs: [N,S] int32; answer_masks: [N,S] (1 where the token is part of the
+    answer, i.e. it must be *predicted* from the previous position).
+    """
+    logits, counts, _ = full_forward(params, seqs, expert_mask, cfg=cfg)
+    pred = jnp.argmax(logits[:, :-1], axis=-1)            # predicts token i+1
+    tgt = seqs[:, 1:]
+    m = answer_masks[:, 1:].astype(jnp.float32)
+    correct = (pred == tgt).astype(jnp.float32) * m
+    return jnp.sum(correct) / jnp.maximum(jnp.sum(m), 1.0), counts

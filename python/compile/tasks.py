@@ -1,0 +1,164 @@
+"""Synthetic multi-task corpus + byte-level tokenizer.
+
+Stands in for the paper's LM Evaluation Harness suite (ARC, GSM8k, MMLU, …):
+eight deterministic task families over a 64-symbol alphabet, each scored by
+exact-match next-token accuracy over the answer region. The tiny MoE is
+trained on a mixture of all families, so experts specialise per
+task/position — which is exactly what makes the paper's **task-based**
+(fail the most-activated experts per task) vs **every-nth** (uniform)
+failure-selection distinction reproducible (Table 2 / Fig 6).
+
+Sample format: ``"<TAG>:<input>><answer>;"`` — the answer region starts one
+past the ``>`` marker and runs through the ``;`` terminator.
+"""
+
+import json
+import random
+import string
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+ALPHABET = string.ascii_lowercase + string.digits + ":;>,.()[]{}+-*=<|#!?&%$@ /\\^"
+assert len(ALPHABET) == 64 == len(set(ALPHABET)), (len(ALPHABET), ALPHABET)
+CHAR2ID = {c: i for i, c in enumerate(ALPHABET)}
+PAD_ID = CHAR2ID[" "]
+
+
+def encode(s: str) -> List[int]:
+    return [CHAR2ID[c] for c in s]
+
+
+def decode_ids(ids: List[int]) -> str:
+    return "".join(ALPHABET[i] for i in ids)
+
+
+def _letters(rng, lo=3, hi=8):
+    return "".join(rng.choice(string.ascii_lowercase[:16]) for _ in range(rng.randint(lo, hi)))
+
+
+def gen_copy(rng) -> str:
+    w = _letters(rng)
+    return f"c:{w}>{w};"
+
+
+def gen_reverse(rng) -> str:
+    w = _letters(rng)
+    return f"r:{w}>{w[::-1]};"
+
+
+def gen_sort(rng) -> str:
+    w = _letters(rng)
+    return f"o:{w}>{''.join(sorted(w))};"
+
+
+def gen_shift(rng) -> str:
+    w = _letters(rng)
+    shifted = "".join(chr((ord(c) - 97 + 1) % 26 + 97) for c in w)
+    return f"s:{w}>{shifted};"
+
+
+def gen_add(rng) -> str:
+    a, b = rng.randint(0, 49), rng.randint(0, 49)
+    return f"a:{a}+{b}>{a + b};"
+
+
+def gen_max(rng) -> str:
+    ds = "".join(rng.choice(string.digits) for _ in range(rng.randint(3, 7)))
+    return f"m:{ds}>{max(ds)};"
+
+
+def gen_count(rng) -> str:
+    t = rng.choice(string.ascii_lowercase[:6])
+    w = "".join(rng.choice(string.ascii_lowercase[:6]) for _ in range(rng.randint(4, 9)))
+    return f"n:{t},{w}>{w.count(t)};"
+
+
+def gen_dyck(rng) -> str:
+    # balanced-bracket validity check
+    depth, s = 0, []
+    for _ in range(rng.randint(4, 10)):
+        if depth > 0 and rng.random() < 0.5:
+            s.append(")")
+            depth -= 1
+        else:
+            s.append("(")
+            depth += 1
+    txt = "".join(s)
+    if rng.random() < 0.4:  # corrupt some
+        i = rng.randrange(len(txt))
+        txt = txt[:i] + rng.choice("()") + txt[i + 1:]
+    ok, d = True, 0
+    for c in txt:
+        d += 1 if c == "(" else -1
+        if d < 0:
+            ok = False
+            break
+    ok = ok and d == 0
+    return f"d:{txt}>{'v' if ok else 'x'};"
+
+
+TASKS: Dict[str, Callable] = {
+    "copy": gen_copy,
+    "reverse": gen_reverse,
+    "sort": gen_sort,
+    "shift": gen_shift,
+    "add": gen_add,
+    "max": gen_max,
+    "count": gen_count,
+    "dyck": gen_dyck,
+}
+
+
+def answer_span(sample: str) -> Tuple[int, int]:
+    """[start, end) character span of the answer region (after '>', incl ';')."""
+    gt = sample.index(">", 2)  # skip the tag separator at index 1
+    return gt + 1, len(sample)
+
+
+@dataclass
+class EvalSet:
+    task: str
+    # each item: (token ids padded to seq_len, answer position mask)
+    seqs: List[List[int]]
+    answer_masks: List[List[int]]
+    seq_len: int
+
+    def to_json(self) -> dict:
+        return {"task": self.task, "seq_len": self.seq_len,
+                "seqs": self.seqs, "answer_masks": self.answer_masks}
+
+
+def make_eval_set(task: str, n: int, seq_len: int, seed: int) -> EvalSet:
+    rng = random.Random(seed)
+    gen = TASKS[task]
+    seqs, masks = [], []
+    for _ in range(n):
+        s = gen(rng)
+        a0, a1 = answer_span(s)
+        ids = encode(s)[:seq_len]
+        mask = [1 if a0 <= i < a1 else 0 for i in range(len(ids))]
+        pad = seq_len - len(ids)
+        seqs.append(ids + [PAD_ID] * pad)
+        masks.append(mask + [0] * pad)
+    return EvalSet(task, seqs, masks, seq_len)
+
+
+def make_train_batch(rng: random.Random, batch: int, seq_len: int) -> List[List[int]]:
+    """Pack random samples from all task families into fixed-length rows."""
+    rows = []
+    names = list(TASKS)
+    for _ in range(batch):
+        buf = ""
+        while len(buf) < seq_len + 1:
+            buf += TASKS[rng.choice(names)](rng)
+        rows.append(encode(buf[: seq_len + 1]))
+    return rows
+
+
+def write_eval_sets(out_dir: str, n: int = 160, seq_len: int = 32, seed: int = 7):
+    import os
+    os.makedirs(out_dir, exist_ok=True)
+    for t in TASKS:
+        es = make_eval_set(t, n, seq_len, seed + hash(t) % 1000)
+        with open(os.path.join(out_dir, f"{t}.json"), "w") as f:
+            json.dump(es.to_json(), f)

@@ -1,0 +1,163 @@
+"""Build-time training of the tiny MoE LM (stand-in for a pretrained
+DeepSeek-V3 — see DESIGN.md substitution table).
+
+Trains with top-k-sparse routing (identical semantics to serving) plus a
+Switch-style load-balance auxiliary loss, then writes everything the rust
+runtime needs into ``artifacts/``:
+
+- ``weights.bin`` + ``weights.json``   raw little-endian f32 tensors + manifest
+- ``eval/<task>.json``                 per-task eval sets (token ids + answer masks)
+- ``golden/golden.json``               teacher-forced logits/argmax for rust parity
+- ``golden/decode_golden.json``        greedy decode continuations for rust parity
+- ``train_log.json``                   loss curve (EXPERIMENTS.md provenance)
+
+Python runs ONCE at build time; none of this is on the request path.
+"""
+
+import functools
+import json
+import os
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MODEL, model_meta
+from . import model as M
+from . import tasks
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def save_weights(params, path_bin, path_json):
+    flat = M.flatten_params(params, MODEL)
+    manifest, off = [], 0
+    with open(path_bin, "wb") as f:
+        for name, arr in flat:
+            a = np.asarray(arr, dtype=np.float32)
+            b = a.tobytes()  # C-order little-endian f32
+            f.write(b)
+            manifest.append({"name": name, "shape": list(a.shape),
+                             "offset": off, "nbytes": len(b)})
+            off += len(b)
+    with open(path_json, "w") as f:
+        json.dump({"tensors": manifest, "total_bytes": off}, f, indent=1)
+
+
+def export_golden(params, out_dir, seq_len=24):
+    """Teacher-forced + greedy-decode goldens the rust pipeline must match."""
+    os.makedirs(out_dir, exist_ok=True)
+    rng = random.Random(123)
+    rows = [tasks.TASKS[t](rng) for t in ("copy", "add", "sort", "dyck")]
+    mask0 = jnp.zeros((MODEL.n_experts,))
+
+    # (1) teacher-forced logits on fixed sequences
+    seqs = []
+    for s in rows:
+        ids = tasks.encode(s)[:seq_len]
+        seqs.append(ids + [tasks.PAD_ID] * (seq_len - len(ids)))
+    seqs_a = jnp.array(seqs, jnp.int32)
+    logits, _, _ = M.full_forward(params, seqs_a, mask0, cfg=MODEL)
+    golden = {
+        "texts": rows, "seq_len": seq_len, "seqs": seqs,
+        "argmax": np.asarray(jnp.argmax(logits, -1)).tolist(),
+        "logits_row0": np.asarray(logits[0, :, :]).reshape(-1).tolist(),
+    }
+    # (1b) with a masked expert set (missing-experts path parity)
+    maskm = jnp.zeros((MODEL.n_experts,)).at[::4].set(-1e30)
+    logits_m, _, _ = M.full_forward(params, seqs_a, maskm, cfg=MODEL)
+    golden["argmax_masked_every4"] = np.asarray(jnp.argmax(logits_m, -1)).tolist()
+
+    # (2) greedy decode continuations (prompt -> n tokens), via the same
+    # teacher-forced forward re-run per step: position-equivalent to the
+    # rust decode pipeline's incremental path.
+    decodes = []
+    for s in rows:
+        prompt = s[: s.index(">") + 1]
+        ids = tasks.encode(prompt)
+        for _ in range(8):
+            a = jnp.array([ids], jnp.int32)
+            lg, _, _ = M.full_forward(params, a, mask0, cfg=MODEL)
+            nxt = int(jnp.argmax(lg[0, len(ids) - 1]))
+            ids.append(nxt)
+            if tasks.ALPHABET[nxt] == ";":
+                break
+        decodes.append({"prompt": prompt, "output_ids": ids,
+                        "output_text": tasks.decode_ids(ids)})
+    golden["decodes"] = decodes
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def main(steps=800, batch=16, seq_len=64, seed=0, lr=3e-3):
+    os.makedirs(ART, exist_ok=True)
+    t0 = time.time()
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(key, MODEL)
+    opt = adam_init(params)
+    mask0 = jnp.zeros((MODEL.n_experts,))
+    rng = random.Random(seed)
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        functools.partial(M.loss_fn, cfg=MODEL), has_aux=True))
+
+    log = []
+    for step in range(steps):
+        rows = tasks.make_train_batch(rng, batch, seq_len)
+        toks = jnp.array(rows, jnp.int32)
+        (loss, (nll, counts)), grads = grad_fn(params, toks, mask0)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        if step % 20 == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss), "nll": float(nll)})
+            print(f"step {step:4d} loss {float(loss):.4f} nll {float(nll):.4f}",
+                  flush=True)
+
+    save_weights(params, os.path.join(ART, "weights.bin"),
+                 os.path.join(ART, "weights.json"))
+    tasks.write_eval_sets(os.path.join(ART, "eval"))
+    export_golden(params, os.path.join(ART, "golden"))
+    with open(os.path.join(ART, "model_meta.json"), "w") as f:
+        json.dump(model_meta(), f, indent=1)
+
+    # quick sanity eval per task on the saved model
+    accs = {}
+    for t in tasks.TASKS:
+        es = tasks.make_eval_set(t, 64, 32, 99)
+        acc, _ = M.eval_accuracy(params, jnp.array(es.seqs, jnp.int32),
+                                 jnp.array(es.answer_masks, jnp.int32),
+                                 mask0, cfg=MODEL)
+        accs[t] = float(acc)
+        print(f"eval {t:8s} acc {float(acc):.3f}", flush=True)
+    with open(os.path.join(ART, "train_log.json"), "w") as f:
+        json.dump({"log": log, "eval_acc": accs,
+                   "wall_seconds": time.time() - t0,
+                   "steps": steps, "batch": batch, "seq_len": seq_len}, f, indent=1)
+
+
+if __name__ == "__main__":
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=800)
+    p.add_argument("--batch", type=int, default=16)
+    p.add_argument("--seq-len", type=int, default=64)
+    args = p.parse_args()
+    main(steps=args.steps, batch=args.batch, seq_len=args.seq_len)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# allow `pytest python/tests/` from the repo root as well as `pytest tests/`
+# from python/: the `compile` package lives next to this file
+sys.path.insert(0, os.path.dirname(__file__))

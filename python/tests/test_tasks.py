@@ -1,0 +1,82 @@
+"""Corpus/tokenizer invariants for the synthetic eval-harness stand-in."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks
+
+
+class TestTokenizer:
+    def test_roundtrip(self):
+        s = "c:abc>abc;a:1+2>3;"
+        assert tasks.decode_ids(tasks.encode(s)) == s
+
+    def test_alphabet_size(self):
+        assert len(tasks.ALPHABET) == 64
+        assert len(set(tasks.ALPHABET)) == 64
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           task=st.sampled_from(sorted(tasks.TASKS)))
+    def test_samples_encodable(self, seed, task):
+        s = tasks.TASKS[task](random.Random(seed))
+        ids = tasks.encode(s)  # raises KeyError if out-of-alphabet
+        assert all(0 <= i < 64 for i in ids)
+        assert s.endswith(";") and ">" in s
+
+
+class TestTaskSemantics:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_answers_correct(self, seed):
+        rng = random.Random(seed)
+        s = tasks.gen_add(rng)
+        body = s[2:-1]
+        q, a = body.split(">")
+        x, y = q.split("+")
+        assert int(x) + int(y) == int(a)
+
+        s = tasks.gen_reverse(random.Random(seed))
+        q, a = s[2:-1].split(">")
+        assert q[::-1] == a
+
+        s = tasks.gen_sort(random.Random(seed))
+        q, a = s[2:-1].split(">")
+        assert "".join(sorted(q)) == a
+
+        s = tasks.gen_count(random.Random(seed))
+        q, a = s[2:-1].split(">")
+        t, w = q.split(",", 1)
+        assert w.count(t) == int(a)
+
+    def test_answer_span(self):
+        s = "r:abc>cba;"
+        a0, a1 = tasks.answer_span(s)
+        assert s[a0:a1] == "cba;"
+
+    def test_eval_set_masks_cover_answers(self):
+        es = tasks.make_eval_set("copy", 20, 32, 1)
+        for seq, mask in zip(es.seqs, es.answer_masks):
+            assert len(seq) == 32 and len(mask) == 32
+            answered = [tasks.ALPHABET[t] for t, m in zip(seq, mask) if m]
+            assert answered[-1] == ";"  # terminator is part of the answer
+
+    def test_train_batch_shape(self):
+        rows = tasks.make_train_batch(random.Random(0), 4, 48)
+        assert len(rows) == 4 and all(len(r) == 49 for r in rows)
+
+    def test_dyck_validity_labels(self):
+        rng = random.Random(5)
+        for _ in range(50):
+            s = tasks.gen_dyck(rng)
+            q, a = s[2:-1].split(">")
+            d, ok = 0, True
+            for c in q:
+                d += 1 if c == "(" else -1
+                if d < 0:
+                    ok = False
+                    break
+            ok = ok and d == 0
+            assert a == ("v" if ok else "x")

@@ -1,0 +1,233 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!   A. block-table undo log vs naive full rebuild (§3.3) — recovery-path
+//!      cost of log-based recovery, and its steady-state logging overhead;
+//!   B. cached compile vs full compile (§3.6) — PJRT compile of on-disk
+//!      HLO vs the recorded python trace+lower time (the from-scratch
+//!      analog), per graph and for a full recovery;
+//!   C. recompile scope (Full = paper's monolithic graphs / Boundary =
+//!      our decomposed default / None = pure decomposed) on recovery time;
+//!   D. sequence migration: partial recomputation (§3.2) vs restarting
+//!      generation from scratch — tokens recomputed;
+//!   E. rank-compaction cost vs world size (pure coordinator math).
+//!
+//! Run: `cargo bench --bench ablations`
+
+mod common;
+
+use std::time::Instant;
+
+use revivemoe::cluster::FailureBehavior;
+use revivemoe::comms::compact_ranks;
+use revivemoe::config::{DeploymentConfig, RecompileScope};
+use revivemoe::json::{obj, Json};
+use revivemoe::kvcache::BlockManager;
+use revivemoe::recovery::ReviveMoE;
+use revivemoe::scheduler::Sequence;
+
+fn main() {
+    common::ensure_artifacts();
+    let mut results: Vec<(&str, Json)> = Vec::new();
+
+    // -------------------------------------------------------- A: undo log
+    println!("== A. block-table undo log vs naive rebuild ==\n");
+    let n_seq = 64usize;
+    let steps = 200usize;
+    // steady-state logging overhead
+    let mut with_log = BlockManager::new(n_seq * 24, 16);
+    let mut no_log = BlockManager::new(n_seq * 24, 16);
+    no_log.logging_enabled = false;
+    for m in [&mut with_log, &mut no_log] {
+        for s in 0..n_seq as u64 {
+            for _ in 0..8 {
+                m.append_token(s).unwrap();
+            }
+        }
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        with_log.begin_step();
+        for s in 0..n_seq as u64 {
+            with_log.append_token(s).unwrap();
+        }
+    }
+    let t_log = t0.elapsed();
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        no_log.begin_step();
+        for s in 0..n_seq as u64 {
+            no_log.append_token(s).unwrap();
+        }
+    }
+    let t_nolog = t0.elapsed();
+    // recovery: undo one partial step vs rebuilding every table by replay
+    let mut m = BlockManager::new(n_seq * 12, 16);
+    for s in 0..n_seq as u64 {
+        for _ in 0..100 {
+            m.append_token(s).unwrap();
+        }
+    }
+    m.begin_step();
+    for s in 0..n_seq as u64 {
+        m.append_token(s).unwrap();
+    }
+    let t0 = Instant::now();
+    let undone = m.undo_step().unwrap();
+    let t_undo = t0.elapsed();
+    // naive: rebuild all tables from scratch (replay every token's append)
+    let t0 = Instant::now();
+    let mut rebuild = BlockManager::new(n_seq * 12, 16);
+    rebuild.logging_enabled = false;
+    for s in 0..n_seq as u64 {
+        for _ in 0..100 {
+            rebuild.append_token(s).unwrap();
+        }
+    }
+    let t_rebuild = t0.elapsed();
+    println!(
+        "steady-state: {:.0} ns/op with log vs {:.0} ns/op without ({:.1}% overhead)",
+        t_log.as_nanos() as f64 / (steps * n_seq) as f64,
+        t_nolog.as_nanos() as f64 / (steps * n_seq) as f64,
+        100.0 * (t_log.as_secs_f64() / t_nolog.as_secs_f64() - 1.0)
+    );
+    println!(
+        "recovery: undo of a {undone}-op partial step {:.1} µs vs {:.1} µs naive \
+         full-table rebuild ({:.0}x faster)\n",
+        t_undo.as_secs_f64() * 1e6,
+        t_rebuild.as_secs_f64() * 1e6,
+        t_rebuild.as_secs_f64() / t_undo.as_secs_f64().max(1e-9)
+    );
+    results.push((
+        "undo_log",
+        obj(vec![
+            ("log_ns_per_op", Json::Num(t_log.as_nanos() as f64 / (steps * n_seq) as f64)),
+            ("nolog_ns_per_op", Json::Num(t_nolog.as_nanos() as f64 / (steps * n_seq) as f64)),
+            ("undo_us", Json::Num(t_undo.as_secs_f64() * 1e6)),
+            ("rebuild_us", Json::Num(t_rebuild.as_secs_f64() * 1e6)),
+        ]),
+    ));
+
+    // ----------------------------------------------- B: cached vs full compile
+    println!("== B. cached compile vs full (from-scratch) compile ==\n");
+    let compile_times =
+        std::fs::read_to_string("artifacts/compile_times.json").expect("compile_times.json");
+    let ct = Json::parse(&compile_times).unwrap();
+    let full_lower_s = ct.get("full_graph_lower_s").unwrap().as_f64().unwrap();
+    let total_lower_s = ct.get("total_lower_s").unwrap().as_f64().unwrap();
+    // measured cached compile of the same fused graph
+    let dev = revivemoe::runtime::SimDevice::spawn(0);
+    let arts = revivemoe::artifacts::ArtifactStore::open(std::path::Path::new("artifacts/hlo"))
+        .unwrap();
+    let stat = dev.handle.compile("full_decode_b8", arts.path("full_decode_b8").unwrap()).unwrap();
+    dev.handle.shutdown();
+    println!(
+        "fused graph:     full trace+lower (python, recorded) {full_lower_s:.2}s  vs \
+         cached compile (HLO text -> PJRT) {:.2}s  ({:.1}x)",
+        stat.compile_s,
+        full_lower_s / stat.compile_s.max(1e-9)
+    );
+    println!(
+        "whole artifact set: from-scratch lowering {total_lower_s:.1}s (117 graphs) — paid \
+         once at build time, never during recovery\n"
+    );
+    results.push((
+        "compile",
+        obj(vec![
+            ("full_lower_s", Json::Num(full_lower_s)),
+            ("cached_compile_s", Json::Num(stat.compile_s)),
+            ("total_lower_s", Json::Num(total_lower_s)),
+        ]),
+    ));
+
+    // -------------------------------------------- C: recompile scope sweep
+    println!("== C. recovery recompile scope (graph/domain entanglement) ==\n");
+    let mut scope_rows = Vec::new();
+    for scope in [RecompileScope::Full, RecompileScope::Boundary, RecompileScope::None_] {
+        let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+        cfg.recovery.recompile_scope = scope;
+        let (mut engine, _) = common::boot(cfg);
+        common::warm_traffic(&mut engine, 12, 3);
+        let ann = common::fail_device(&mut engine, 5, FailureBehavior::Erroring);
+        let report = ReviveMoE::recover(&mut engine, &ann).unwrap();
+        engine.run_to_completion(20_000).unwrap();
+        engine.shutdown();
+        println!(
+            "{:?}: recovery {:.2}s ({} graphs recompiled)",
+            scope,
+            report.total().as_secs_f64(),
+            report.recompiled_graphs
+        );
+        scope_rows.push(obj(vec![
+            ("scope", Json::Str(format!("{scope:?}"))),
+            ("total_s", Json::Num(report.total().as_secs_f64())),
+            ("graphs", Json::Num(report.recompiled_graphs as f64)),
+        ]));
+    }
+    println!(
+        "=> the paper's monolithic graphs (Full) pay the whole graph cache back on \
+         every recovery; decomposed AOT graphs only re-pay the domain boundary\n"
+    );
+    results.push(("recompile_scope", Json::Arr(scope_rows)));
+
+    // ------------------------------------ D: migration partial recomputation
+    println!("== D. migration: partial recomputation vs restart-from-scratch ==\n");
+    let mut seq = Sequence::new(1, (0..40).map(|x| x % 60).collect(), 32, None);
+    for t in 0..20 {
+        seq.push_token(t % 60);
+    }
+    let mig = seq.migration_view();
+    // partial recomputation: one prefill over prompt+decoded, decode resumes
+    let prefill_tokens_partial = mig.prompt.len();
+    let decode_steps_saved = seq.decoded.len();
+    // restart: re-prefill the original prompt AND re-decode everything
+    let redecode_restart = seq.decoded.len();
+    println!(
+        "sequence with {}-token prompt and {} decoded tokens:",
+        seq.prompt.len(),
+        seq.decoded.len()
+    );
+    println!(
+        "  partial recomputation: 1 prefill of {prefill_tokens_partial} tokens, 0 decode \
+         steps repeated"
+    );
+    println!(
+        "  restart from scratch:  1 prefill of {} tokens + {redecode_restart} decode steps \
+         repeated (and the user-visible tokens may diverge)",
+        seq.prompt.len()
+    );
+    println!(
+        "  => prefill is one batched pass; each decode step is a full model pass — \
+         partial recomputation saves {decode_steps_saved} sequential passes per migrated \
+         sequence\n"
+    );
+    results.push((
+        "migration",
+        obj(vec![
+            ("prefill_tokens", Json::Num(prefill_tokens_partial as f64)),
+            ("decode_steps_saved", Json::Num(decode_steps_saved as f64)),
+        ]),
+    ));
+
+    // ------------------------------------------ E: rank compaction scaling
+    println!("== E. rank compaction cost vs world size ==\n");
+    let mut comp_rows = Vec::new();
+    for n in [8usize, 80, 800, 8000, 80000] {
+        let members: Vec<usize> = (0..n).collect();
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            out = compact_ranks(&members, n / 2);
+        }
+        let per = t0.elapsed().as_secs_f64() / 100.0;
+        println!("world={n:<6} compaction {per:>12.2e} s (len {})", out.len());
+        comp_rows.push(obj(vec![
+            ("world", Json::Num(n as f64)),
+            ("seconds", Json::Num(per)),
+        ]));
+    }
+    println!("=> linear in world size; negligible vs compile even at CloudMatrix scale");
+    results.push(("compaction", Json::Arr(comp_rows)));
+
+    let j = obj(results.into_iter().map(|(k, v)| (k, v)).collect());
+    common::write_results("ablations", &j);
+}

@@ -1,0 +1,102 @@
+//! Shared helpers for the bench drivers (plain `harness = false` mains:
+//! the offline build has no criterion; these print paper-style tables and
+//! write machine-readable JSON under `bench_results/`).
+
+use std::path::Path;
+use std::time::Duration;
+
+use revivemoe::cluster::{FailureBehavior, FaultLevel};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::Json;
+use revivemoe::metrics::{Breakdown, Category};
+use revivemoe::workload;
+
+pub fn ensure_artifacts() {
+    if !Path::new("artifacts/hlo/manifest.json").exists() {
+        eprintln!("ERROR: artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+}
+
+/// `QUICK=1` trims sample counts for smoke runs.
+pub fn quick() -> bool {
+    std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn boot(cfg: DeploymentConfig) -> (Engine, Breakdown) {
+    Engine::boot(cfg).expect("boot failed")
+}
+
+/// Inject a failure and return the annotation recovery needs.
+pub fn fail_device(
+    engine: &mut Engine,
+    device: usize,
+    behavior: FailureBehavior,
+) -> revivemoe::cluster::FaultAnnotation {
+    engine.executors[&device].handle.set_failed(behavior);
+    engine
+        .plugin
+        .post_fault(device, FaultLevel::L6, behavior, "bench-injected");
+    engine.detect_failure().expect("failure must be detected")
+}
+
+/// Put live traffic on the engine (prefills + a few decode steps).
+pub fn warm_traffic(engine: &mut Engine, n: usize, seed: u64) {
+    for r in workload::gen_mixed(n, seed).expect("workload") {
+        engine.submit(r).expect("submit");
+    }
+    for _ in 0..3 {
+        engine.step().expect("step");
+    }
+}
+
+/// Render one breakdown as a paper-style stacked-bar row.
+pub fn stacked_row(label: &str, bd: &Breakdown) -> String {
+    let mut s = format!("{label:<44}");
+    for cat in Category::ALL {
+        let ms = bd.get(cat).as_secs_f64() * 1e3;
+        if ms >= 0.05 {
+            s += &format!(" {}={:.0}ms", short(cat), ms);
+        }
+    }
+    s += &format!("  TOTAL={:.0}ms", bd.total().as_secs_f64() * 1e3);
+    s
+}
+
+fn short(c: Category) -> &'static str {
+    match c {
+        Category::Engine => "eng",
+        Category::ExecutorProcesses => "exec",
+        Category::DistributedGroups => "dist",
+        Category::Xccl => "xccl",
+        Category::RoleSwitch => "switch",
+        Category::Generator => "gen",
+        Category::ReadCache => "read",
+        Category::Compile => "compile",
+        Category::Other => "other",
+    }
+}
+
+pub fn breakdown_json(bd: &Breakdown) -> Json {
+    let pairs: Vec<(&str, Json)> = Category::ALL
+        .iter()
+        .map(|&c| (short(c), Json::Num(bd.get(c).as_secs_f64() * 1e3)))
+        .collect();
+    let mut obj = revivemoe::json::obj(pairs);
+    if let Json::Obj(m) = &mut obj {
+        m.insert("total_ms".into(), Json::Num(bd.total().as_secs_f64() * 1e3));
+    }
+    obj
+}
+
+pub fn write_results(name: &str, j: &Json) {
+    std::fs::create_dir_all("bench_results").ok();
+    let path = format!("bench_results/{name}.json");
+    std::fs::write(&path, j.to_string()).expect("write bench results");
+    println!("\n[results written to {path}]");
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    format!("{:.2}s", d.as_secs_f64())
+}

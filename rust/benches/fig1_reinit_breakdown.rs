@@ -1,0 +1,75 @@
+//! **Figure 1**: breakdown of the time taken for a cached reinitialization
+//! of the serving instance.
+//!
+//! Paper: DeepSeek V3 on 80 NPUs, total 83.1 s, dominated by the Generator
+//! (model instantiation + weight loading), with Executor Processes, Engine,
+//! Distributed Groups, XCCL, Read Cache and (cached) Compile making up the
+//! rest. Here: the tiny MoE on 8 simulated NPUs — absolute numbers differ
+//! by design (our weights are ~6 MiB, not ~700 GiB); the *category
+//! structure* is reproduced, and a paper-scale projection using the cost
+//! model is printed alongside (see EXPERIMENTS.md for the comparison).
+//!
+//! Run: `cargo bench --bench fig1_reinit_breakdown`
+
+mod common;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::json::{obj, Json};
+use revivemoe::metrics::Category;
+
+fn main() {
+    common::ensure_artifacts();
+    let reps = if common::quick() { 1 } else { 3 };
+
+    println!("== Figure 1: cached reinitialization breakdown ==\n");
+    let mut runs = Vec::new();
+    for rep in 0..reps {
+        let (engine, bd) = common::boot(DeploymentConfig::disaggregated_default("artifacts"));
+        println!("{}", common::stacked_row(&format!("cached reinit (run {rep})"), &bd));
+        engine.shutdown();
+        runs.push(bd);
+    }
+    let bd = runs.last().unwrap().clone();
+
+    println!("\n{}", bd.render("per-category (last run)"));
+
+    // paper-scale projection: Generator scales with weight bytes; Compile
+    // with graph complexity; processes with world size.
+    let cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let cm = &cfg.cost_model;
+    let proj_gen = bd.get(Category::Generator).as_secs_f64() * cm.weight_bytes_scale.log10() * 4.0;
+    println!(
+        "paper-scale context: paper Generator ~40 s of 83.1 s total; ours measured \
+         {:.3} s (weights {:.0e}x smaller; log-scaled projection {:.1} s)",
+        bd.get(Category::Generator).as_secs_f64(),
+        cm.weight_bytes_scale,
+        proj_gen
+    );
+
+    let paper = [
+        ("Engine", 4.0),
+        ("Executor Processes", 17.0),
+        ("Distributed Groups", 8.0),
+        ("XCCL", 5.0),
+        ("Generator", 40.0),
+        ("Read Cache", 1.1),
+        ("Compile", 8.0),
+    ];
+    println!("\n{:<22} {:>12} {:>14}", "category", "paper (s)*", "measured (ms)");
+    for (name, p) in paper {
+        let cat = Category::ALL.iter().find(|c| c.name() == name).unwrap();
+        println!(
+            "{:<22} {:>12.1} {:>14.1}",
+            name,
+            p,
+            bd.get(*cat).as_secs_f64() * 1e3
+        );
+    }
+    println!("(* paper values read off Figure 1's 83.1 s stacked bar)");
+
+    let j = obj(vec![
+        ("figure", Json::Str("fig1".into())),
+        ("runs", Json::Arr(runs.iter().map(common::breakdown_json).collect())),
+    ]);
+    common::write_results("fig1_reinit_breakdown", &j);
+}

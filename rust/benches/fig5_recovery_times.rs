@@ -1,0 +1,206 @@
+//! **Figure 5 + Table 1**: recovery time per failure scenario.
+//!
+//! Paper scenarios (80-NPU DeepSeek V3):
+//!   baseline cached reinit ............ 83.1 s
+//!   MA-disagg [attention] ............. ~10.2 s   (87.8 % reduction)
+//!   MA-disagg [MoE, redundant] ........ ~10 s
+//!   MA-disagg [MoE, role switch] ...... ~52.7 s   (36.6 % reduction; Generator-dominated, 40.6 s weight reload)
+//!   MA-disagg [MoE, missing experts] .. ~10 s
+//!   MA-collocated [redundant] ......... ~12 s     (compile 8 s vs 6 s)
+//!
+//! Shape assertions (EXPERIMENTS.md §Fig5): every ReviveMoE scenario beats
+//! the baseline; the role-switch case is the slowest recovery and is
+//! dominated by Generator+switch work; the non-switch scenarios are nearly
+//! identical to one another.
+//!
+//! Run: `cargo bench --bench fig5_recovery_times`
+
+mod common;
+
+use revivemoe::cluster::FailureBehavior;
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::{obj, Json};
+use revivemoe::metrics::Breakdown;
+use revivemoe::recovery::{baseline_reinit, ReviveMoE};
+
+struct Scenario {
+    label: &'static str,
+    make_cfg: fn() -> DeploymentConfig,
+    fail_device: usize,
+}
+
+fn disagg() -> DeploymentConfig {
+    DeploymentConfig::disaggregated_default("artifacts")
+}
+
+fn main() {
+    common::ensure_artifacts();
+
+    let scenarios = [
+        Scenario {
+            label: "MA-disaggregated [attention]",
+            make_cfg: || disagg(),
+            fail_device: 1,
+        },
+        Scenario {
+            label: "MA-disaggregated [MoE, redundant experts]",
+            make_cfg: || {
+                let mut c = disagg();
+                c.redundant_per_rank = 8; // full shifted copy
+                c
+            },
+            fail_device: 5,
+        },
+        Scenario {
+            label: "MA-disaggregated [MoE, role switch]",
+            make_cfg: || {
+                let mut c = disagg();
+                c.redundant_per_rank = 0;
+                c.recovery.allow_missing_experts = false;
+                c
+            },
+            fail_device: 5,
+        },
+        Scenario {
+            label: "MA-disaggregated [MoE, missing experts]",
+            make_cfg: || {
+                let mut c = disagg();
+                c.redundant_per_rank = 0;
+                c.recovery.allow_role_switch = false;
+                c
+            },
+            fail_device: 5,
+        },
+        Scenario {
+            label: "MA-collocated [redundant experts]",
+            make_cfg: || {
+                let mut c = DeploymentConfig::collocated_default("artifacts");
+                c.redundant_per_rank = 4; // full coverage at 8 ranks
+                c
+            },
+            fail_device: 3,
+        },
+    ];
+
+    println!("== Figure 5: recovery time per scenario ==\n");
+
+    let reps = if common::quick() { 1 } else { 2 };
+
+    // --- baseline: cached reinitialization after a MoE failure -------------
+    // (min over reps: single-core compile timings are noisy)
+    let mut base_bd: Option<Breakdown> = None;
+    for _ in 0..reps {
+        let (engine, _) = common::boot(disagg());
+        let ann = engine.plugin.post_fault(
+            5,
+            revivemoe::cluster::FaultLevel::L6,
+            FailureBehavior::Erroring,
+            "bench",
+        );
+        let (e2, bd) = baseline_reinit(engine, &ann).expect("baseline reinit");
+        e2.shutdown();
+        if base_bd.as_ref().map(|b| bd.total() < b.total()).unwrap_or(true) {
+            base_bd = Some(bd);
+        }
+    }
+    let base_bd = base_bd.unwrap();
+    println!("{}", common::stacked_row("BASELINE cached reinit", &base_bd));
+    let base_total = base_bd.total();
+
+    // --- ReviveMoE scenarios ------------------------------------------------
+    let mut rows: Vec<(String, Breakdown, String)> = Vec::new();
+    for sc in &scenarios {
+        let mut best: Option<(Breakdown, String)> = None;
+        for _ in 0..reps {
+            let (mut engine, _): (Engine, _) = common::boot((sc.make_cfg)());
+            common::warm_traffic(&mut engine, 16, 7);
+            let ann = common::fail_device(&mut engine, sc.fail_device, FailureBehavior::Erroring);
+            let report = ReviveMoE::recover(&mut engine, &ann).expect("recovery");
+            // service must actually continue
+            engine.run_to_completion(20_000).expect("post-recovery serving");
+            engine.shutdown();
+            let kind = format!("{:?}", report.moe_recovery);
+            if best
+                .as_ref()
+                .map(|(b, _)| report.breakdown.total() < b.total())
+                .unwrap_or(true)
+            {
+                best = Some((report.breakdown, kind));
+            }
+        }
+        let (bd, kind) = best.unwrap();
+        println!("{}", common::stacked_row(sc.label, &bd));
+        rows.push((sc.label.to_string(), bd, kind));
+    }
+
+    // --- summary + shape assertions -----------------------------------------
+    println!("\n{:<44} {:>10} {:>12}", "scenario", "total", "vs baseline");
+    println!(
+        "{:<44} {:>10} {:>12}",
+        "BASELINE cached reinit",
+        common::fmt_dur(base_total),
+        "--"
+    );
+    let mut totals = Vec::new();
+    for (label, bd, _) in &rows {
+        let t = bd.total();
+        let red = 100.0 * (1.0 - t.as_secs_f64() / base_total.as_secs_f64());
+        println!("{:<44} {:>10} {:>11.1}%", label, common::fmt_dur(t), red);
+        totals.push(t);
+    }
+
+    let mut ok = true;
+    for (i, t) in totals.iter().enumerate() {
+        if *t >= base_total {
+            println!("SHAPE VIOLATION: scenario {i} slower than baseline");
+            ok = false;
+        }
+    }
+    // role switch (index 2) must carry extra work the others skip: the
+    // RoleSwitch + Generator categories (the paper's Generator dominates at
+    // 40.6 s because its expert weights are ~GBs; ours are ~1.5 MiB so the
+    // category is visible but small — see EXPERIMENTS.md scale note), and
+    // it must be slower than the redundant-experts case.
+    use revivemoe::metrics::Category;
+    let switch_extra = rows[2].1.get(Category::Generator) > std::time::Duration::ZERO;
+    let switch_slower = totals[2] > totals[1];
+    if !switch_extra || !switch_slower {
+        println!(
+            "SHAPE NOTE: role-switch extra-work visible={switch_extra}              slower-than-redundant={switch_slower}"
+        );
+    }
+    // non-switch disaggregated scenarios (0, 1, 3) nearly identical (<35 % spread)
+    let ns: Vec<f64> = [0usize, 1, 3].iter().map(|&i| totals[i].as_secs_f64()).collect();
+    let spread = (ns.iter().cloned().fold(f64::MIN, f64::max)
+        - ns.iter().cloned().fold(f64::MAX, f64::min))
+        / ns.iter().sum::<f64>()
+        * ns.len() as f64;
+    println!(
+        "\nshape: all-faster-than-baseline={} role-switch-extra-work={} \
+         non-switch spread={:.0}%",
+        ok,
+        switch_extra && switch_slower,
+        spread * 100.0
+    );
+
+    let j = obj(vec![
+        ("figure", Json::Str("fig5".into())),
+        ("baseline", common::breakdown_json(&base_bd)),
+        (
+            "scenarios",
+            Json::Arr(
+                rows.iter()
+                    .map(|(l, bd, kind)| {
+                        obj(vec![
+                            ("label", Json::Str(l.clone())),
+                            ("kind", Json::Str(kind.clone())),
+                            ("breakdown", common::breakdown_json(bd)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    common::write_results("fig5_recovery_times", &j);
+}

@@ -1,0 +1,223 @@
+//! Artifact store: the on-disk HLO-text library produced by
+//! `python/compile/aot.py`, plus the naming scheme tying deployment shapes
+//! to artifact files. Reading an artifact's text is the paper's
+//! "Read Cache" step; PJRT-compiling it is the "Compile" (cached compile)
+//! step (§3.6).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInput {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<ArtifactInput>,
+}
+
+/// Index over `artifacts/hlo/` (manifest + file paths).
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    entries: HashMap<String, ArtifactEntry>,
+}
+
+impl ArtifactStore {
+    pub fn open(hlo_dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(hlo_dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read HLO manifest in {hlo_dir:?}: {e} \
+                                      (run `make artifacts` first)"))?;
+        let json = crate::json::Json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for (name, e) in json.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(ArtifactInput {
+                        name: i.get("name")?.as_str()?.to_string(),
+                        shape: i.get("shape")?.usize_arr()?,
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactEntry { file: e.get("file")?.as_str()?.to_string(), inputs },
+            );
+        }
+        Ok(ArtifactStore { dir: hlo_dir.to_path_buf(), entries })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no AOT artifact '{name}' (aot.py shape set out of date?)"))
+    }
+
+    pub fn path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+
+    /// Read the HLO text from disk ("Read Cache"). Returns (text, bytes).
+    pub fn read_text(&self, name: &str) -> Result<(String, usize)> {
+        let p = self.path(name)?;
+        let text = std::fs::read_to_string(&p)?;
+        let n = text.len();
+        Ok((text, n))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact naming scheme (must match python/compile/aot.py)
+
+pub fn embed_decode(b: usize) -> String {
+    format!("embed_decode_b{b}")
+}
+
+pub fn attn_decode(b: usize) -> String {
+    format!("attn_decode_b{b}")
+}
+
+pub fn full_decode(b: usize) -> String {
+    format!("full_decode_b{b}")
+}
+
+pub fn embed_prefill(s: usize) -> String {
+    format!("embed_prefill_s{s}")
+}
+
+pub fn attn_prefill(s: usize) -> String {
+    format!("attn_prefill_s{s}")
+}
+
+pub fn router(t: usize) -> String {
+    format!("router_t{t}")
+}
+
+pub fn lm_head(t: usize) -> String {
+    format!("lm_head_t{t}")
+}
+
+pub fn dense_ffn(tp: usize, t: usize) -> String {
+    format!("dense_tp{tp}_t{t}")
+}
+
+pub fn moe_block(e_local: usize, capacity: usize) -> String {
+    format!("moe_e{e_local}_c{capacity}")
+}
+
+/// The executable set an attention (DP) rank needs for a deployment shape.
+pub fn attention_set(
+    batch_buckets: &[usize],
+    prefill_buckets: &[usize],
+) -> Vec<String> {
+    let mut v = Vec::new();
+    for &b in batch_buckets {
+        v.push(embed_decode(b));
+        v.push(attn_decode(b));
+        v.push(router(b));
+        v.push(lm_head(b));
+    }
+    for &s in prefill_buckets {
+        v.push(embed_prefill(s));
+        v.push(attn_prefill(s));
+        v.push(router(s));
+        v.push(lm_head(s));
+    }
+    v.sort();
+    v.dedup();
+    v
+}
+
+/// The executable set a MoE rank needs: one grouped-FFN graph per
+/// (slot count, capacity bucket), plus its dense-FFN shard graphs.
+pub fn moe_set(
+    n_slots: usize,
+    capacity_buckets: &[usize],
+    dense_tp: usize,
+    t_buckets: &[usize],
+) -> Vec<String> {
+    let mut v = Vec::new();
+    for &c in capacity_buckets {
+        v.push(moe_block(n_slots, c));
+    }
+    for &t in t_buckets {
+        v.push(dense_ffn(dense_tp, t));
+    }
+    v.sort();
+    v.dedup();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naming_matches_aot() {
+        assert_eq!(embed_decode(8), "embed_decode_b8");
+        assert_eq!(attn_prefill(64), "attn_prefill_s64");
+        assert_eq!(moe_block(10, 32), "moe_e10_c32");
+        assert_eq!(dense_ffn(2, 4), "dense_tp2_t4");
+    }
+
+    #[test]
+    fn attention_set_dedups() {
+        let v = attention_set(&[1, 4], &[32]);
+        // router_t1, router_t4, router_t32 all present exactly once
+        assert_eq!(v.iter().filter(|n| n.starts_with("router_")).count(), 3);
+        let mut sorted = v.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), v.len());
+    }
+
+    #[test]
+    fn moe_set_contents() {
+        let v = moe_set(8, &[16, 32], 2, &[1, 4]);
+        assert!(v.contains(&"moe_e8_c16".to_string()));
+        assert!(v.contains(&"moe_e8_c32".to_string()));
+        assert!(v.contains(&"dense_tp2_t1".to_string()));
+        assert_eq!(v.len(), 4);
+    }
+
+    #[test]
+    fn store_opens_real_artifacts_if_present() {
+        let dir = std::path::Path::new("artifacts/hlo");
+        if dir.join("manifest.json").exists() {
+            let s = ArtifactStore::open(dir).unwrap();
+            assert!(!s.is_empty());
+            for name in ["attn_decode_b4", "router_t4"] {
+                if s.contains(name) {
+                    let (text, n) = s.read_text(name).unwrap();
+                    assert!(n > 0 && text.contains("HloModule"));
+                }
+            }
+        }
+    }
+}

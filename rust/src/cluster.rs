@@ -1,0 +1,269 @@
+//! Simulated cluster layer: NPU fault codes, the device-plugin annotation
+//! surface, fault injection, and heartbeat monitoring (paper §3.1).
+//!
+//! The paper detects failures two ways: (1) Huawei's NPU device plugin
+//! posts fault annotations (event id, alarm time, severity L1–L6) that a
+//! Ray actor polls; (2) the engine notices a missing executor heartbeat.
+//! Both paths are reproduced here against [`crate::runtime::SimDevice`]
+//! threads: the [`FaultInjector`] flips a device into an error or hung
+//! state, the [`DevicePlugin`] exposes annotations, and the
+//! [`HeartbeatMonitor`] pings devices and reports the first failure it sees.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+
+/// Global identifier of a simulated NPU.
+pub type DeviceId = usize;
+
+/// Fault severity levels L1–L6 (paper §3.1): L1 benign … L6 critical,
+/// requiring full isolation of the NPU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FaultLevel {
+    L1,
+    L2,
+    L3,
+    L4,
+    L5,
+    L6,
+}
+
+impl FaultLevel {
+    /// Does this level require recovery action at all?
+    pub fn needs_recovery(&self) -> bool {
+        *self >= FaultLevel::L3
+    }
+
+    /// Does this level isolate the NPU permanently (it may never rejoin)?
+    pub fn isolates(&self) -> bool {
+        *self >= FaultLevel::L5
+    }
+}
+
+/// How the failed device misbehaves, from the coordinator's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureBehavior {
+    /// Commands return errors immediately (detectable via error replies).
+    Erroring,
+    /// Commands are swallowed; only the heartbeat timeout detects this.
+    Hung,
+}
+
+/// A device-plugin fault annotation, mirroring the fields the Huawei NPU
+/// plugin logs (event id, alarm time, severity, error type).
+#[derive(Clone, Debug)]
+pub struct FaultAnnotation {
+    pub event_id: u64,
+    pub device: DeviceId,
+    pub level: FaultLevel,
+    pub behavior: FailureBehavior,
+    pub error_type: String,
+    pub alarm_unix_ms: u128,
+}
+
+/// The Kubernetes-node-annotation surface the recovery Ray actor polls.
+/// Shared between the injector (writer) and the monitor (reader).
+#[derive(Clone, Default)]
+pub struct DevicePlugin {
+    inner: Arc<Mutex<PluginState>>,
+}
+
+#[derive(Default)]
+struct PluginState {
+    annotations: HashMap<DeviceId, FaultAnnotation>,
+    next_event: u64,
+}
+
+impl DevicePlugin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a fault annotation for `device` (vendor plugin behaviour).
+    pub fn post_fault(&self, device: DeviceId, level: FaultLevel,
+                      behavior: FailureBehavior, error_type: &str) -> FaultAnnotation {
+        let mut st = self.inner.lock().unwrap();
+        st.next_event += 1;
+        let ann = FaultAnnotation {
+            event_id: st.next_event,
+            device,
+            level,
+            behavior,
+            error_type: error_type.to_string(),
+            alarm_unix_ms: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .unwrap_or_default()
+                .as_millis(),
+        };
+        st.annotations.insert(device, ann.clone());
+        ann
+    }
+
+    /// Poll for the most severe un-cleared annotation, if any.
+    pub fn poll(&self) -> Option<FaultAnnotation> {
+        let st = self.inner.lock().unwrap();
+        st.annotations.values().max_by_key(|a| a.level).cloned()
+    }
+
+    pub fn annotation_for(&self, device: DeviceId) -> Option<FaultAnnotation> {
+        self.inner.lock().unwrap().annotations.get(&device).cloned()
+    }
+
+    pub fn clear(&self, device: DeviceId) {
+        self.inner.lock().unwrap().annotations.remove(&device);
+    }
+
+    pub fn clear_all(&self) {
+        self.inner.lock().unwrap().annotations.clear();
+    }
+}
+
+/// Result of one heartbeat sweep.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HeartbeatVerdict {
+    AllHealthy,
+    /// Device answered with an error reply.
+    Erroring(DeviceId),
+    /// Device did not answer within the timeout.
+    TimedOut(DeviceId),
+}
+
+/// Pings a set of devices through a caller-supplied probe and classifies
+/// the first failure. The probe returns `Ok(true)` for a healthy pong,
+/// `Ok(false)` for an error reply, `Err` if the channel is gone, and is
+/// expected to enforce `timeout` itself (SimDevice pings are try_recv with
+/// deadline — see `runtime`).
+pub struct HeartbeatMonitor {
+    pub interval: Duration,
+    pub timeout: Duration,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(interval: Duration, timeout: Duration) -> Self {
+        HeartbeatMonitor { interval, timeout }
+    }
+
+    /// One sweep over `devices`; stops at the first unhealthy device.
+    pub fn sweep<F>(&self, devices: &[DeviceId], mut probe: F) -> HeartbeatVerdict
+    where
+        F: FnMut(DeviceId, Duration) -> Result<bool, ProbeError>,
+    {
+        for &d in devices {
+            match probe(d, self.timeout) {
+                Ok(true) => {}
+                Ok(false) => return HeartbeatVerdict::Erroring(d),
+                Err(ProbeError::Timeout) => return HeartbeatVerdict::TimedOut(d),
+                Err(ProbeError::Disconnected) => return HeartbeatVerdict::TimedOut(d),
+            }
+        }
+        HeartbeatVerdict::AllHealthy
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeError {
+    Timeout,
+    Disconnected,
+}
+
+/// Deterministic fault injection for experiments: which device fails, how,
+/// and at what severity. The injector both flips the device thread's state
+/// (via the handle the caller passes in) and posts the plugin annotation,
+/// mirroring the real split between hardware fault and plugin report.
+pub struct FaultInjector {
+    pub plugin: DevicePlugin,
+}
+
+impl FaultInjector {
+    pub fn new(plugin: DevicePlugin) -> Self {
+        FaultInjector { plugin }
+    }
+
+    /// Inject a fault: marks the device failed through `kill` (the caller
+    /// provides the actual device-thread hook) and posts the annotation.
+    pub fn inject<K: FnOnce(FailureBehavior)>(
+        &self,
+        device: DeviceId,
+        level: FaultLevel,
+        behavior: FailureBehavior,
+        error_type: &str,
+        kill: K,
+    ) -> FaultAnnotation {
+        kill(behavior);
+        self.plugin.post_fault(device, level, behavior, error_type)
+    }
+}
+
+/// Wall-clock stamp helper used by recovery timelines.
+pub fn now_ms(since: Instant) -> f64 {
+    since.elapsed().as_secs_f64() * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_levels_ordered() {
+        assert!(FaultLevel::L6 > FaultLevel::L1);
+        assert!(!FaultLevel::L1.needs_recovery());
+        assert!(!FaultLevel::L2.needs_recovery());
+        assert!(FaultLevel::L3.needs_recovery());
+        assert!(FaultLevel::L5.isolates());
+        assert!(FaultLevel::L6.isolates());
+        assert!(!FaultLevel::L4.isolates());
+    }
+
+    #[test]
+    fn plugin_post_and_poll() {
+        let p = DevicePlugin::new();
+        assert!(p.poll().is_none());
+        p.post_fault(3, FaultLevel::L2, FailureBehavior::Erroring, "ecc");
+        p.post_fault(5, FaultLevel::L6, FailureBehavior::Hung, "hbm");
+        let worst = p.poll().unwrap();
+        assert_eq!(worst.device, 5);
+        assert_eq!(worst.level, FaultLevel::L6);
+        p.clear(5);
+        assert_eq!(p.poll().unwrap().device, 3);
+    }
+
+    #[test]
+    fn event_ids_monotonic() {
+        let p = DevicePlugin::new();
+        let a = p.post_fault(0, FaultLevel::L3, FailureBehavior::Erroring, "x");
+        let b = p.post_fault(1, FaultLevel::L3, FailureBehavior::Erroring, "y");
+        assert!(b.event_id > a.event_id);
+    }
+
+    #[test]
+    fn heartbeat_classifies() {
+        let m = HeartbeatMonitor::new(Duration::from_millis(1), Duration::from_millis(5));
+        let v = m.sweep(&[0, 1, 2], |d, _| {
+            if d == 1 {
+                Err(ProbeError::Timeout)
+            } else {
+                Ok(true)
+            }
+        });
+        assert_eq!(v, HeartbeatVerdict::TimedOut(1));
+
+        let v = m.sweep(&[0, 1], |d, _| Ok(d != 1));
+        assert_eq!(v, HeartbeatVerdict::Erroring(1));
+
+        let v = m.sweep(&[0, 1], |_, _| Ok(true));
+        assert_eq!(v, HeartbeatVerdict::AllHealthy);
+    }
+
+    #[test]
+    fn injector_posts_annotation_and_kills() {
+        let p = DevicePlugin::new();
+        let inj = FaultInjector::new(p.clone());
+        let mut killed = None;
+        inj.inject(7, FaultLevel::L6, FailureBehavior::Hung, "link", |b| {
+            killed = Some(b);
+        });
+        assert_eq!(killed, Some(FailureBehavior::Hung));
+        assert_eq!(p.annotation_for(7).unwrap().level, FaultLevel::L6);
+    }
+}

@@ -1,0 +1,515 @@
+//! XCCL-sim: the collective-communication substrate (paper §2.3, §3.5).
+//!
+//! Models the pieces of Huawei's XCCL that ReviveMoE interacts with:
+//!
+//! - **Domains** with logical-rank assignments, created/destroyed as a
+//!   unit. Recovery *must* fully destroy and recreate XCCL domains (unlike
+//!   GLOO/HCCL subgroups which are merely reassigned) — reproduced by the
+//!   epoch counter: any in-flight op stamped with an old epoch is rejected.
+//! - **Rank compaction** (§3.5): when NPU A with logical rank ℓ_A fails,
+//!   rank ℓ_A+1 becomes ℓ_A and subsequent ranks decrement. In the role
+//!   switch case, switched NPU C takes ℓ_A and the gap C left is compacted.
+//! - **dispatch/combine** (MA-collocated) and **A2E/E2A**
+//!   (MA-disaggregated): token routing by top-k gate output into per-rank
+//!   grouped `[slots, capacity, d]` layouts, and the weighted-sum return
+//!   path. The disaggregated variants additionally handle the asymmetry
+//!   between attention and MoE rank counts (any `n_attn` feeding any
+//!   `n_moe`), which is what distinguishes A2E/E2A from plain all-to-all.
+//! - A **trampoline** domain between experts, destroyed first during
+//!   recovery in MA-disaggregated deployments.
+
+use std::collections::HashMap;
+
+use anyhow::bail;
+
+use crate::cluster::DeviceId;
+use crate::tensor::Tensor;
+use crate::Result;
+
+// ---------------------------------------------------------------------------
+// domains + rank compaction
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DomainState {
+    Active,
+    Destroyed,
+}
+
+/// One XCCL communication domain: an ordered list of members; the index in
+/// `members` *is* the logical rank.
+#[derive(Clone, Debug)]
+pub struct CommDomain {
+    pub name: String,
+    pub epoch: u64,
+    pub state: DomainState,
+    members: Vec<DeviceId>,
+}
+
+impl CommDomain {
+    /// Construct a free-standing active domain (tests / tooling). Normal
+    /// code should create domains through [`DomainManager`].
+    pub fn standalone(name: &str, epoch: u64, members: Vec<DeviceId>) -> Self {
+        CommDomain { name: name.to_string(), epoch, state: DomainState::Active, members }
+    }
+
+    pub fn members(&self) -> &[DeviceId] {
+        &self.members
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn logical_rank_of(&self, dev: DeviceId) -> Option<usize> {
+        self.members.iter().position(|&m| m == dev)
+    }
+
+    pub fn device_at(&self, logical: usize) -> Option<DeviceId> {
+        self.members.get(logical).copied()
+    }
+
+    /// Guard for data-plane ops: domain must be active and the op's epoch
+    /// must match (stale ops from before a recovery are rejected).
+    pub fn check_epoch(&self, epoch: u64) -> Result<()> {
+        if self.state != DomainState::Active {
+            bail!("domain '{}' is destroyed", self.name);
+        }
+        if self.epoch != epoch {
+            bail!("stale epoch {} for domain '{}' (now {})", epoch, self.name, self.epoch);
+        }
+        Ok(())
+    }
+}
+
+/// Close the gap left by removing `failed`: every member after it shifts
+/// one logical rank down (paper §3.5). Pure function so it can be
+/// property-tested in isolation.
+pub fn compact_ranks(members: &[DeviceId], failed: DeviceId) -> Vec<DeviceId> {
+    members.iter().copied().filter(|&m| m != failed).collect()
+}
+
+/// Role-switch variant: `replacement` (already a member elsewhere in the
+/// list, as a former attention rank joining the MoE domain, or not a member
+/// at all) takes the failed member's logical rank; any slot it previously
+/// held is compacted away.
+pub fn compact_ranks_with_switch(
+    members: &[DeviceId],
+    failed: DeviceId,
+    replacement: DeviceId,
+) -> Vec<DeviceId> {
+    members
+        .iter()
+        .copied()
+        .filter(|&m| m != replacement) // drop replacement's old slot, if any
+        .map(|m| if m == failed { replacement } else { m })
+        .collect()
+}
+
+/// Owns every XCCL domain in the deployment (attention-expert domain,
+/// expert trampoline domain, …) and enforces the destroy-then-recreate
+/// lifecycle the paper requires.
+#[derive(Default)]
+pub struct DomainManager {
+    domains: HashMap<String, CommDomain>,
+    next_epoch: u64,
+}
+
+pub const ATTN_EXPERT_DOMAIN: &str = "attn-expert";
+pub const TRAMPOLINE_DOMAIN: &str = "trampoline";
+
+impl DomainManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn create(&mut self, name: &str, members: Vec<DeviceId>) -> Result<&CommDomain> {
+        self.next_epoch += 1;
+        let d = CommDomain {
+            name: name.to_string(),
+            epoch: self.next_epoch,
+            state: DomainState::Active,
+            members,
+        };
+        self.domains.insert(name.to_string(), d);
+        Ok(self.domains.get(name).unwrap())
+    }
+
+    pub fn destroy(&mut self, name: &str) -> Result<()> {
+        match self.domains.get_mut(name) {
+            Some(d) => {
+                d.state = DomainState::Destroyed;
+                Ok(())
+            }
+            None => bail!("no such domain '{name}'"),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&CommDomain> {
+        self.domains
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no such domain '{name}'"))
+    }
+
+    pub fn is_active(&self, name: &str) -> bool {
+        self.domains
+            .get(name)
+            .map(|d| d.state == DomainState::Active)
+            .unwrap_or(false)
+    }
+
+    /// §3.5 recovery: destroy, compact out the failed device, recreate
+    /// under a fresh epoch. Returns the new domain.
+    pub fn recreate_without(&mut self, name: &str, failed: DeviceId) -> Result<&CommDomain> {
+        let members = self.get(name)?.members.clone();
+        self.destroy(name)?;
+        let new_members = compact_ranks(&members, failed);
+        self.create(name, new_members)
+    }
+
+    /// §3.5 role-switch recovery: the switched device takes the failed
+    /// device's logical rank before compaction.
+    pub fn recreate_with_switch(
+        &mut self,
+        name: &str,
+        failed: DeviceId,
+        replacement: DeviceId,
+    ) -> Result<&CommDomain> {
+        let members = self.get(name)?.members.clone();
+        self.destroy(name)?;
+        let new_members = compact_ranks_with_switch(&members, failed, replacement);
+        self.create(name, new_members)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// data plane: dispatch / combine (and their A2E / E2A aliases)
+
+/// Where one (token, expert-choice) landed: which MoE rank, which local
+/// expert slot, which capacity row — plus the gate weight for the combine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Assignment {
+    pub token: usize,
+    pub slot: usize,
+    pub cap_row: usize,
+    pub weight: f32,
+}
+
+/// The grouped payload for one MoE rank.
+#[derive(Clone, Debug)]
+pub struct RankPayload {
+    pub rank: usize,
+    /// `[n_slots, capacity, d]` grouped activations (zero padded).
+    pub grouped: Tensor,
+    /// Valid rows per slot.
+    pub counts: Vec<usize>,
+    pub assigns: Vec<Assignment>,
+}
+
+/// Output of `dispatch`/`a2e`: one payload per MoE rank plus accounting.
+#[derive(Clone, Debug)]
+pub struct DispatchResult {
+    pub per_rank: Vec<RankPayload>,
+    pub bytes_moved: usize,
+    /// Token-choices that exceeded per-expert capacity (should be 0 when
+    /// capacity is sized to the worst case; counted, never silently lost).
+    pub overflowed: usize,
+    pub epoch: u64,
+}
+
+/// Routing interface the dispatch needs from the expert map: physical
+/// location of a (logical) expert, expressed as (moe_rank, slot_on_rank).
+pub trait ExpertRouter {
+    fn route(&self, expert: usize, token: usize) -> Option<(usize, usize)>;
+    fn n_ranks(&self) -> usize;
+    fn slots_on_rank(&self, rank: usize) -> usize;
+}
+
+/// XCCL `dispatch` (MA-collocated) / `A2E` (MA-disaggregated): group each
+/// token's top-k expert choices into per-rank `[slots, capacity, d]`
+/// buffers. `tokens` is `[T, d]`; `idx`/`wt` are the gate outputs `[T, k]`.
+///
+/// Capacity is chosen **per rank**: the smallest entry of
+/// `capacity_buckets` covering that rank's maximum per-slot load (falling
+/// back to the raw maximum if no bucket covers it — tests only; the
+/// engine's bucket set always covers the global worst case). Sizing to the
+/// worst case globally wasted up to 4x padded FLOPs in the grouped expert
+/// kernel — see EXPERIMENTS.md §Perf.
+pub fn dispatch<R: ExpertRouter>(
+    domain: &CommDomain,
+    epoch: u64,
+    tokens: &Tensor,
+    idx: &[i32],
+    wt: &[f32],
+    top_k: usize,
+    router: &R,
+    capacity_buckets: &[usize],
+) -> Result<DispatchResult> {
+    domain.check_epoch(epoch)?;
+    let d = *tokens.shape.last().unwrap();
+    let t_count = tokens.len() / d;
+    debug_assert_eq!(idx.len(), t_count * top_k);
+
+    let n_ranks = router.n_ranks();
+    // pass 1: route every (token, choice); count per-slot load
+    let mut routes: Vec<Option<(usize, usize)>> = Vec::with_capacity(t_count * top_k);
+    let mut counts: Vec<Vec<usize>> =
+        (0..n_ranks).map(|r| vec![0usize; router.slots_on_rank(r)]).collect();
+    let mut overflow = 0usize;
+    for t in 0..t_count {
+        for k in 0..top_k {
+            let e = idx[t * top_k + k] as usize;
+            match router.route(e, t) {
+                Some((rank, slot)) => {
+                    counts[rank][slot] += 1;
+                    routes.push(Some((rank, slot)));
+                }
+                None => {
+                    // expert currently unmapped (missing-experts mode masks
+                    // it at the gate, so this indicates a routing bug) —
+                    // overflow accounting keeps it visible.
+                    overflow += 1;
+                    routes.push(None);
+                }
+            }
+        }
+    }
+    let mut per_rank: Vec<RankPayload> = (0..n_ranks)
+        .map(|r| {
+            let slots = router.slots_on_rank(r);
+            let need = counts[r].iter().copied().max().unwrap_or(0).max(1);
+            let cap = capacity_buckets
+                .iter()
+                .copied()
+                .filter(|&b| b >= need)
+                .min()
+                .unwrap_or(need);
+            RankPayload {
+                rank: r,
+                grouped: Tensor::zeros(vec![slots, cap, d]),
+                counts: vec![0; slots],
+                assigns: Vec::new(),
+            }
+        })
+        .collect();
+
+    // pass 2: scatter token rows into the grouped layouts
+    let mut bytes = 0usize;
+    let tok_data = tokens.as_f32()?;
+    for t in 0..t_count {
+        for k in 0..top_k {
+            let Some((rank, slot)) = routes[t * top_k + k] else { continue };
+            let w = wt[t * top_k + k];
+            let p = &mut per_rank[rank];
+            let capacity = p.grouped.shape[1];
+            let row = p.counts[slot];
+            debug_assert!(row < capacity);
+            p.counts[slot] += 1;
+            let dst_off = (slot * capacity + row) * d;
+            let src = &tok_data[t * d..(t + 1) * d];
+            p.grouped.as_f32_mut()?[dst_off..dst_off + d].copy_from_slice(src);
+            p.assigns.push(Assignment { token: t, slot, cap_row: row, weight: w });
+            bytes += d * 4;
+        }
+    }
+    Ok(DispatchResult { per_rank, bytes_moved: bytes, overflowed: overflow, epoch })
+}
+
+/// XCCL `combine` (MA-collocated) / `E2A` (MA-disaggregated): gather expert
+/// outputs back per token as the gate-weighted sum. `outputs[r]` is rank
+/// r's `[slots, capacity, d]` result; returns `[T, d]`.
+pub fn combine(
+    domain: &CommDomain,
+    disp: &DispatchResult,
+    outputs: &[Tensor],
+    t_count: usize,
+    d: usize,
+) -> Result<(Tensor, usize)> {
+    domain.check_epoch(disp.epoch)?;
+    let mut acc = Tensor::zeros(vec![t_count, d]);
+    let mut bytes = 0usize;
+    for payload in &disp.per_rank {
+        let out = &outputs[payload.rank];
+        let capacity = out.shape[1];
+        let out_data = out.as_f32()?;
+        for a in &payload.assigns {
+            let off = (a.slot * capacity + a.cap_row) * d;
+            acc.axpy_row(a.token, a.weight, &out_data[off..off + d])?;
+            bytes += d * 4;
+        }
+    }
+    Ok((acc, bytes))
+}
+
+/// All-reduce (sum) over per-shard partial outputs — used for the dense-FFN
+/// TP groups (attention TP is 1 in the paper's deployments, §3.4).
+pub fn all_reduce_sum(parts: &[Tensor]) -> Result<Tensor> {
+    anyhow::ensure!(!parts.is_empty(), "all_reduce over empty set");
+    let mut acc = parts[0].clone();
+    for p in &parts[1..] {
+        acc.add_assign(p)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct FlatRouter {
+        n_ranks: usize,
+        per_rank: usize,
+    }
+
+    impl ExpertRouter for FlatRouter {
+        fn route(&self, expert: usize, _t: usize) -> Option<(usize, usize)> {
+            Some((expert / self.per_rank, expert % self.per_rank))
+        }
+        fn n_ranks(&self) -> usize {
+            self.n_ranks
+        }
+        fn slots_on_rank(&self, _r: usize) -> usize {
+            self.per_rank
+        }
+    }
+
+    fn domain() -> CommDomain {
+        CommDomain {
+            name: "t".into(),
+            epoch: 1,
+            state: DomainState::Active,
+            members: vec![0, 1, 2, 3],
+        }
+    }
+
+    #[test]
+    fn compact_closes_gap_preserving_order() {
+        assert_eq!(compact_ranks(&[10, 11, 12, 13], 11), vec![10, 12, 13]);
+        assert_eq!(compact_ranks(&[10], 10), Vec::<DeviceId>::new());
+    }
+
+    #[test]
+    fn switch_takes_failed_slot() {
+        // C=99 replaces failed 11 at logical rank 1
+        assert_eq!(compact_ranks_with_switch(&[10, 11, 12], 11, 99), vec![10, 99, 12]);
+        // replacement already in the list: its old slot is compacted
+        assert_eq!(compact_ranks_with_switch(&[10, 11, 12], 11, 12), vec![10, 12]);
+    }
+
+    #[test]
+    fn domain_lifecycle_and_epochs() {
+        let mut dm = DomainManager::new();
+        let e1 = dm.create(ATTN_EXPERT_DOMAIN, vec![0, 1, 2]).unwrap().epoch;
+        let d = dm.get(ATTN_EXPERT_DOMAIN).unwrap();
+        assert!(d.check_epoch(e1).is_ok());
+        assert!(d.check_epoch(e1 + 1).is_err());
+
+        let e2 = dm.recreate_without(ATTN_EXPERT_DOMAIN, 1).unwrap().epoch;
+        assert!(e2 > e1);
+        let d = dm.get(ATTN_EXPERT_DOMAIN).unwrap();
+        assert_eq!(d.members(), &[0, 2]);
+        assert!(d.check_epoch(e1).is_err(), "stale epoch must be rejected");
+    }
+
+    #[test]
+    fn destroyed_domain_rejects_ops() {
+        let mut dm = DomainManager::new();
+        let e = dm.create("x", vec![0, 1]).unwrap().epoch;
+        dm.destroy("x").unwrap();
+        assert!(dm.get("x").unwrap().check_epoch(e).is_err());
+        assert!(!dm.is_active("x"));
+    }
+
+    #[test]
+    fn dispatch_groups_and_combine_roundtrips() {
+        let dom = domain();
+        let router = FlatRouter { n_ranks: 2, per_rank: 2 }; // 4 experts
+        // 3 tokens, d=2; top-2 each
+        let toks = Tensor::f32(vec![3, 2], vec![1., 1., 2., 2., 3., 3.]);
+        let idx = [0i32, 3, 1, 2, 0, 1];
+        let wt = [0.5f32, 0.5, 0.25, 0.75, 1.0, 0.0];
+        let disp = dispatch(&dom, 1, &toks, &idx, &wt, 2, &router, &[4]).unwrap();
+        assert_eq!(disp.overflowed, 0);
+        assert_eq!(disp.per_rank[0].counts, vec![2, 2]); // e0: t0,t2; e1: t1,t2
+        assert_eq!(disp.per_rank[1].counts, vec![1, 1]); // e2: t1; e3: t0
+
+        // identity "experts": outputs == inputs, so combine must produce
+        // sum_k w_k * token = token (weights sum to 1 per token)
+        let outputs: Vec<Tensor> = disp.per_rank.iter().map(|p| p.grouped.clone()).collect();
+        let (acc, _) = combine(&dom, &disp, &outputs, 3, 2).unwrap();
+        for t in 0..3 {
+            let exp = (t + 1) as f32;
+            assert!((acc.row(t).unwrap()[0] - exp).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dispatch_falls_back_past_small_buckets() {
+        // per-rank capacity selection: no bucket covers the hot expert's
+        // load, so the exact need is used and nothing is dropped
+        let dom = domain();
+        let router = FlatRouter { n_ranks: 1, per_rank: 1 };
+        let toks = Tensor::f32(vec![3, 1], vec![1., 2., 3.]);
+        let idx = [0i32, 0, 0];
+        let wt = [1.0f32, 1.0, 1.0];
+        let disp = dispatch(&dom, 1, &toks, &idx, &wt, 1, &router, &[2]).unwrap();
+        assert_eq!(disp.overflowed, 0);
+        assert_eq!(disp.per_rank[0].counts[0], 3);
+        assert_eq!(disp.per_rank[0].grouped.shape[1], 3);
+    }
+
+    struct PartialRouter;
+
+    impl ExpertRouter for PartialRouter {
+        fn route(&self, expert: usize, _t: usize) -> Option<(usize, usize)> {
+            (expert == 0).then_some((0, 0))
+        }
+        fn n_ranks(&self) -> usize {
+            1
+        }
+        fn slots_on_rank(&self, _r: usize) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn dispatch_counts_unroutable_experts() {
+        let dom = domain();
+        let toks = Tensor::f32(vec![2, 1], vec![1., 2.]);
+        let idx = [0i32, 1]; // expert 1 has no live replica
+        let wt = [1.0f32, 1.0];
+        let disp = dispatch(&dom, 1, &toks, &idx, &wt, 1, &PartialRouter, &[4]).unwrap();
+        assert_eq!(disp.overflowed, 1, "unroutable choice must stay visible");
+        assert_eq!(disp.per_rank[0].counts[0], 1);
+    }
+
+    #[test]
+    fn dispatch_rejects_stale_epoch() {
+        let dom = domain();
+        let router = FlatRouter { n_ranks: 1, per_rank: 4 };
+        let toks = Tensor::f32(vec![1, 1], vec![1.]);
+        assert!(dispatch(&dom, 99, &toks, &[0], &[1.0], 1, &router, &[1]).is_err());
+    }
+
+    #[test]
+    fn asymmetric_a2e_shapes() {
+        // 3 attention ranks worth of tokens -> 2 MoE ranks (asymmetry)
+        let dom = domain();
+        let router = FlatRouter { n_ranks: 2, per_rank: 3 };
+        let toks = Tensor::f32(vec![5, 2], (0..10).map(|x| x as f32).collect());
+        let idx = [0i32, 1, 2, 3, 4, 5, 0, 5, 2, 3];
+        let wt = [0.5f32; 10];
+        let disp = dispatch(&dom, 1, &toks, &idx, &wt, 2, &router, &[8]).unwrap();
+        assert_eq!(disp.per_rank.len(), 2);
+        assert_eq!(disp.per_rank[0].grouped.shape, vec![3, 8, 2]);
+        let total: usize = disp.per_rank.iter().map(|p| p.assigns.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let a = Tensor::f32(vec![2], vec![1., 2.]);
+        let b = Tensor::f32(vec![2], vec![10., 20.]);
+        let s = all_reduce_sum(&[a, b]).unwrap();
+        assert_eq!(s.as_f32().unwrap(), &[11., 22.]);
+    }
+}

@@ -1,0 +1,312 @@
+//! Deployment configuration: model metadata (from `artifacts/model_meta.json`,
+//! the single source of truth shared with the python build layer), the
+//! FlowServe-style deployment shape, the recovery policy, and a cost model
+//! for projecting measured times to paper scale.
+
+use std::path::{Path, PathBuf};
+
+
+use crate::Result;
+
+/// Model dimensions — mirror of `python/compile/config.py::ModelConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub n_dense_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub ln_eps: f64,
+}
+
+impl ModelMeta {
+    pub fn n_moe_layers(&self) -> usize {
+        self.n_layers - self.n_dense_layers
+    }
+
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(artifacts_dir.join("model_meta.json"))?;
+        let j = crate::json::Json::parse(&text)?;
+        let m = j.get("model")?;
+        Ok(ModelMeta {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            d_head: m.get("d_head")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_dense_layers: m.get("n_dense_layers")?.as_usize()?,
+            n_experts: m.get("n_experts")?.as_usize()?,
+            top_k: m.get("top_k")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            max_seq: m.get("max_seq")?.as_usize()?,
+            ln_eps: m.opt("ln_eps").and_then(|v| v.as_f64().ok()).unwrap_or(1e-5),
+        })
+    }
+}
+
+/// MA-collocated vs MA-disaggregated (paper §2.2, Fig 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeployMode {
+    /// Attention + experts on the same ranks; XCCL dispatch/combine.
+    Collocated,
+    /// Attention ranks and MoE ranks disjoint; XCCL A2E/E2A.
+    Disaggregated,
+}
+
+/// Which of the paper's §3.4 weight-integrity options recovery may use,
+/// in preference order: redundant experts -> role switch -> missing experts.
+#[derive(Clone, Debug)]
+pub struct RecoveryPolicy {
+    pub allow_redundant_experts: bool,
+    pub allow_role_switch: bool,
+    pub allow_missing_experts: bool,
+    /// Which graphs recovery recompiles after the XCCL domain is rebuilt.
+    pub recompile_scope: RecompileScope,
+    /// Minimum EP below which missing-experts is considered accuracy-unsafe
+    /// (paper finds 1/32 of experts may be lost, i.e. EP >= 32 ... scaled to
+    /// our 32-expert model this is "at most 1/32 of experts" per failure).
+    pub missing_experts_min_ep: usize,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            allow_redundant_experts: true,
+            allow_role_switch: true,
+            allow_missing_experts: true,
+            recompile_scope: RecompileScope::Boundary,
+            missing_experts_min_ep: 4,
+        }
+    }
+}
+
+/// Recovery-time graph recompilation scope (ablation in
+/// `benches/ablations.rs`):
+///
+/// - `Full`: every executable on every surviving device is recompiled —
+///   models the paper's monolithic Ascend graphs, which bake the whole
+///   communication domain into one fused graph.
+/// - `Boundary` (default): only graphs whose inputs/outputs cross the
+///   recreated attention-expert domain (routers on attention ranks,
+///   grouped expert FFNs + dense shards on MoE ranks) are recompiled; a
+///   role-switched device compiles its full new set. This is what our
+///   module-decomposed AOT artifacts actually require.
+/// - `None_`: nothing recompiles (pure decomposed architecture; the lower
+///   bound the ablation reports).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecompileScope {
+    Full,
+    Boundary,
+    None_,
+}
+
+/// Scale factors used to *project* measured recovery times onto the paper's
+/// DeepSeek-V3 / CloudMatrix384 deployment (documented in EXPERIMENTS.md;
+/// never used in the pass/fail assertions, which check shape only).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// paper MoE weight bytes per rank / ours
+    pub weight_bytes_scale: f64,
+    /// paper graph compile cost / ours
+    pub compile_scale: f64,
+    /// paper process/world size / ours
+    pub world_scale: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // DeepSeek V3: ~671B params vs our ~2M; 80 NPUs vs our 8 devices.
+        CostModel { weight_bytes_scale: 3.0e5, compile_scale: 60.0, world_scale: 10.0 }
+    }
+}
+
+/// The full deployment description handed to [`crate::engine::Engine`].
+#[derive(Clone, Debug)]
+pub struct DeploymentConfig {
+    pub mode: DeployMode,
+    /// Attention (DP) rank count. In Collocated mode every rank is both an
+    /// attention DP member and an expert-parallel member.
+    pub n_attn_ranks: usize,
+    /// MoE (EP) rank count. Ignored in Collocated mode (== n_attn_ranks).
+    pub n_moe_ranks: usize,
+    /// Redundant expert replicas per MoE rank (paper §3.4).
+    pub redundant_per_rank: usize,
+    /// Dense-FFN tensor-parallel degree (paper runs TP=4).
+    pub dense_tp: usize,
+    /// Number of replicated dense-FFN TP groups.
+    pub n_dense_groups: usize,
+    /// KV page size in tokens.
+    pub block_size: usize,
+    /// KV pool capacity, in blocks, per attention rank.
+    pub blocks_per_rank: usize,
+    /// Max concurrently decoding sequences per attention rank.
+    pub max_batch: usize,
+    /// Decode batch buckets with AOT artifacts (must match aot.py).
+    pub batch_buckets: Vec<usize>,
+    /// Prefill seq-len buckets with AOT artifacts (must match aot.py).
+    pub prefill_buckets: Vec<usize>,
+    /// Grouped-MoE per-expert capacity buckets (must match aot.py).
+    pub capacity_buckets: Vec<usize>,
+    pub recovery: RecoveryPolicy,
+    pub cost_model: CostModel,
+    pub heartbeat_interval_ms: u64,
+    pub heartbeat_timeout_ms: u64,
+    pub artifacts_dir: PathBuf,
+    /// Use the fused full-model decode executable when a rank hosts all
+    /// experts ("graph mode", §2.4). Falls back to per-module otherwise.
+    pub graph_mode: bool,
+}
+
+impl DeploymentConfig {
+    /// The paper's main testbed shape, scaled down: 8 simulated NPUs as
+    /// 4 attention DP ranks + 4 MoE ranks (EP4 over 32 experts).
+    pub fn disaggregated_default(artifacts_dir: impl Into<PathBuf>) -> Self {
+        DeploymentConfig {
+            mode: DeployMode::Disaggregated,
+            n_attn_ranks: 4,
+            n_moe_ranks: 4,
+            redundant_per_rank: 2,
+            dense_tp: 2,
+            n_dense_groups: 2,
+            block_size: 16,
+            blocks_per_rank: 128,
+            max_batch: 8,
+            batch_buckets: vec![1, 4, 8],
+            prefill_buckets: vec![32, 64, 128, 160],
+            capacity_buckets: vec![8, 16, 32, 64, 160],
+            recovery: RecoveryPolicy::default(),
+            cost_model: CostModel::default(),
+            heartbeat_interval_ms: 20,
+            heartbeat_timeout_ms: 120,
+            artifacts_dir: artifacts_dir.into(),
+            graph_mode: false,
+        }
+    }
+
+    /// MA-collocated: every rank hosts an attention DP member plus
+    /// 32/n_ranks experts (paper Fig 2a).
+    pub fn collocated_default(artifacts_dir: impl Into<PathBuf>) -> Self {
+        let mut c = Self::disaggregated_default(artifacts_dir);
+        c.mode = DeployMode::Collocated;
+        c.n_attn_ranks = 8;
+        c.n_moe_ranks = 8;
+        c.redundant_per_rank = 1;
+        c.dense_tp = 4;
+        c.n_dense_groups = 2;
+        c
+    }
+
+    /// Tiny single-rank deployment driving the fused full-model graph.
+    pub fn single_rank(artifacts_dir: impl Into<PathBuf>) -> Self {
+        let mut c = Self::disaggregated_default(artifacts_dir);
+        c.mode = DeployMode::Collocated;
+        c.n_attn_ranks = 1;
+        c.n_moe_ranks = 1;
+        c.redundant_per_rank = 0;
+        c.dense_tp = 1;
+        c.n_dense_groups = 1;
+        c.graph_mode = true;
+        c
+    }
+
+    /// Total simulated NPU count.
+    pub fn n_devices(&self) -> usize {
+        match self.mode {
+            DeployMode::Collocated => self.n_attn_ranks,
+            DeployMode::Disaggregated => self.n_attn_ranks + self.n_moe_ranks,
+        }
+    }
+
+    /// Experts-per-rank primaries (excluding redundant replicas).
+    pub fn primaries_per_rank(&self, n_experts: usize) -> usize {
+        n_experts / self.n_moe_ranks
+    }
+
+    /// Round a live batch size up to the nearest AOT bucket.
+    pub fn batch_bucket(&self, n: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn prefill_bucket(&self, n: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn capacity_bucket(&self, n: usize) -> Option<usize> {
+        self.capacity_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn hlo_dir(&self) -> PathBuf {
+        self.artifacts_dir.join("hlo")
+    }
+
+    pub fn weights_bin(&self) -> PathBuf {
+        self.artifacts_dir.join("weights.bin")
+    }
+
+    pub fn weights_manifest(&self) -> PathBuf {
+        self.artifacts_dir.join("weights.json")
+    }
+
+    pub fn validate(&self, _meta: &ModelMeta) -> Result<()> {
+        anyhow::ensure!(self.n_attn_ranks > 0, "need at least one attention rank");
+        anyhow::ensure!(self.n_moe_ranks > 0, "need at least one MoE rank");
+        anyhow::ensure!(
+            self.max_batch <= self.batch_buckets.iter().copied().max().unwrap_or(0),
+            "max_batch exceeds largest AOT batch bucket"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 64, d_model: 64, n_heads: 4, d_head: 16, n_layers: 4,
+            n_dense_layers: 1, n_experts: 32, top_k: 2, d_ff: 128,
+            max_seq: 160, ln_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn default_configs_validate() {
+        let m = meta();
+        DeploymentConfig::disaggregated_default("artifacts").validate(&m).unwrap();
+        DeploymentConfig::collocated_default("artifacts").validate(&m).unwrap();
+        DeploymentConfig::single_rank("artifacts").validate(&m).unwrap();
+    }
+
+    #[test]
+    fn device_count_by_mode() {
+        let d = DeploymentConfig::disaggregated_default("a");
+        assert_eq!(d.n_devices(), 8);
+        let c = DeploymentConfig::collocated_default("a");
+        assert_eq!(c.n_devices(), 8);
+    }
+
+    #[test]
+    fn buckets_round_up() {
+        let d = DeploymentConfig::disaggregated_default("a");
+        assert_eq!(d.batch_bucket(3), Some(4));
+        assert_eq!(d.batch_bucket(8), Some(8));
+        assert_eq!(d.batch_bucket(9), None);
+        assert_eq!(d.prefill_bucket(33), Some(64));
+        assert_eq!(d.capacity_bucket(17), Some(32));
+    }
+
+    #[test]
+    fn uneven_experts_accepted() {
+        // a reinit after a MoE-rank failure redistributes 32 experts over
+        // an uneven rank count; that must be a valid deployment
+        let mut d = DeploymentConfig::disaggregated_default("a");
+        d.n_moe_ranks = 3;
+        d.validate(&meta()).unwrap();
+    }
+}

@@ -1,0 +1,815 @@
+//! The global engine: FlowServe's central process (paper Fig 2).
+//!
+//! Owns every executor, performs global scheduling/dispatch of user
+//! requests to DP ranks, drives the per-step generator choreography
+//! (attention on DP ranks → gate → XCCL-sim dispatch → grouped expert FFN
+//! on MoE ranks → combine), watches heartbeats + device-plugin
+//! annotations, and hands failures to [`crate::recovery::ReviveMoE`].
+//!
+//! `Engine::boot` produces the Figure-1 style initialization breakdown;
+//! every timing category matches Table 1.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::artifacts::ArtifactStore;
+use crate::cluster::{
+    DeviceId, DevicePlugin, FailureBehavior, FaultAnnotation, FaultLevel, HeartbeatMonitor,
+    HeartbeatVerdict,
+};
+use crate::comms::{self, DomainManager, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
+use crate::config::{DeployMode, DeploymentConfig, ModelMeta};
+use crate::executor::{artifact_set, Executor};
+use crate::metrics::{Breakdown, Category, ServingStats};
+use crate::moe::{DenseGroups, ExpertMap};
+use crate::scheduler::{SeqId, SeqState, Sequence, Token};
+use crate::tensor::Tensor;
+use crate::weights::WeightStore;
+use crate::workload::Request;
+use crate::Result;
+
+/// Completed-request record returned to callers.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub seq_id: SeqId,
+    pub task: String,
+    pub prompt: Vec<Token>,
+    pub output: Vec<Token>,
+    pub latency: Duration,
+    pub migrations: u32,
+}
+
+struct RequestRecord {
+    task: String,
+    prompt: Vec<Token>,
+    output: Vec<Token>,
+    submitted: Instant,
+}
+
+pub struct Engine {
+    pub cfg: DeploymentConfig,
+    pub meta: ModelMeta,
+    pub store: WeightStore,
+    pub arts: ArtifactStore,
+    pub executors: HashMap<DeviceId, Executor>,
+    /// DP rank -> device id
+    pub attn_order: Vec<DeviceId>,
+    /// MoE rank -> device id (collocated: same devices as attn_order)
+    pub moe_order: Vec<DeviceId>,
+    pub expert_map: ExpertMap,
+    pub dense: DenseGroups,
+    pub domains: DomainManager,
+    pub plugin: DevicePlugin,
+    pub monitor: HeartbeatMonitor,
+    pub stats: ServingStats,
+    /// cumulative gate activations per expert (Table-2 task-based ranking)
+    pub activation_counts: Vec<u64>,
+    records: HashMap<SeqId, RequestRecord>,
+    next_seq: SeqId,
+    epoch: u64,
+    pub paused: bool,
+}
+
+impl Engine {
+    /// Boot a deployment, producing the per-category breakdown of a
+    /// (cached) initialization — the paper's Figure 1.
+    pub fn boot(cfg: DeploymentConfig) -> Result<(Engine, Breakdown)> {
+        let mut bd = Breakdown::new();
+
+        // -- Engine: central process state, manifests ------------------------
+        let t0 = Instant::now();
+        let meta = ModelMeta::load(&cfg.artifacts_dir)?;
+        cfg.validate(&meta)?;
+        let store = WeightStore::open(&cfg.weights_manifest(), &cfg.weights_bin())?;
+        let arts = ArtifactStore::open(&cfg.hlo_dir())?;
+        let plugin = DevicePlugin::new();
+        let monitor = HeartbeatMonitor::new(
+            Duration::from_millis(cfg.heartbeat_interval_ms),
+            Duration::from_millis(cfg.heartbeat_timeout_ms),
+        );
+        bd.add(Category::Engine, t0.elapsed());
+
+        // -- Executor Processes: spawn device threads + constructors ---------
+        let t0 = Instant::now();
+        let n_dev = cfg.n_devices();
+        let mut executors = HashMap::new();
+        for d in 0..n_dev {
+            executors.insert(d, Executor::spawn(d));
+        }
+        // constructor barrier: wait until every device's PJRT client is up
+        // (their creation is the dominant real cost of process relaunch)
+        for ex in executors.values() {
+            ex.handle
+                .ping(Duration::from_secs(60))
+                .map_err(|e| anyhow::anyhow!("device {} never came up: {e:?}", ex.device_id))?;
+        }
+        let (attn_order, moe_order): (Vec<DeviceId>, Vec<DeviceId>) = match cfg.mode {
+            DeployMode::Collocated => ((0..n_dev).collect(), (0..n_dev).collect()),
+            DeployMode::Disaggregated => (
+                (0..cfg.n_attn_ranks).collect(),
+                (cfg.n_attn_ranks..n_dev).collect(),
+            ),
+        };
+        bd.add(Category::ExecutorProcesses, t0.elapsed());
+
+        // -- Distributed Groups: GLOO/HCCL world handshake --------------------
+        let t0 = Instant::now();
+        for ex in executors.values() {
+            // a ping round-trip per member stands in for the rendezvous
+            ex.handle
+                .ping(Duration::from_secs(5))
+                .map_err(|e| anyhow::anyhow!("device {} failed rendezvous: {e:?}", ex.device_id))?;
+        }
+        let mut domains = DomainManager::new();
+        domains.create("world", (0..n_dev).collect())?;
+        bd.add(Category::DistributedGroups, t0.elapsed());
+
+        // -- XCCL: attention-expert domain (+ trampoline when disaggregated) --
+        let t0 = Instant::now();
+        let mut members = attn_order.clone();
+        if cfg.mode == DeployMode::Disaggregated {
+            members.extend(moe_order.iter().copied());
+            domains.create(TRAMPOLINE_DOMAIN, moe_order.clone())?;
+        }
+        let epoch = domains.create(ATTN_EXPERT_DOMAIN, members)?.epoch;
+        bd.add(Category::Xccl, t0.elapsed());
+
+        // -- Generator: weight loads + KV warmup ------------------------------
+        let t0 = Instant::now();
+        let expert_map = ExpertMap::new_balanced(
+            meta.n_experts,
+            cfg.n_moe_ranks,
+            cfg.redundant_per_rank,
+            None,
+        )?;
+        let dense = DenseGroups::layout(&moe_order, cfg.n_dense_groups, cfg.dense_tp)?;
+        {
+            let mut boot_engine_weights = || -> Result<()> {
+                for (r, &d) in attn_order.iter().enumerate() {
+                    executors.get_mut(&d).unwrap().init_attention(r, &meta, &cfg, &store)?;
+                }
+                for (r, &d) in moe_order.iter().enumerate() {
+                    let slots = expert_map.rank_slots(r).to_vec();
+                    executors.get_mut(&d).unwrap().init_moe(r, &meta, slots, &store)?;
+                }
+                for (g, group) in dense.groups.iter().enumerate() {
+                    for (s, &d) in group.iter().enumerate() {
+                        executors
+                            .get_mut(&d)
+                            .unwrap()
+                            .init_dense_shard(g, s, cfg.dense_tp, &meta, &store)?;
+                    }
+                }
+                Ok(())
+            };
+            boot_engine_weights()?;
+        }
+        bd.add(Category::Generator, t0.elapsed());
+
+        // -- Read Cache + Compile: per-device cached compile -------------------
+        let mut read_s = 0f64;
+        let mut compile_s = 0f64;
+        for ex in executors.values() {
+            let names = artifact_set(ex, &meta, &cfg);
+            for stat in ex.compile_set(&arts, &names)? {
+                read_s += stat.read_s;
+                compile_s += stat.compile_s;
+            }
+        }
+        bd.add(Category::ReadCache, Duration::from_secs_f64(read_s));
+        bd.add(Category::Compile, Duration::from_secs_f64(compile_s));
+
+        // -- Other: scheduler init etc. ---------------------------------------
+        let t0 = Instant::now();
+        let activation_counts = vec![0; meta.n_experts];
+        let engine = Engine {
+            cfg,
+            meta,
+            store,
+            arts,
+            executors,
+            attn_order,
+            moe_order,
+            expert_map,
+            dense,
+            domains,
+            plugin,
+            monitor,
+            stats: ServingStats::default(),
+            activation_counts,
+            records: HashMap::new(),
+            next_seq: 1,
+            epoch,
+            paused: false,
+        };
+        bd.add(Category::Other, t0.elapsed());
+        Ok((engine, bd))
+    }
+
+    /// Tear everything down (baseline restart path / end of run).
+    pub fn shutdown(self) {
+        for (_, ex) in self.executors {
+            ex.shutdown();
+        }
+    }
+
+    // -- request intake -------------------------------------------------------
+
+    /// Submit a request; it is dispatched to the least-loaded DP rank.
+    pub fn submit(&mut self, req: Request) -> Result<SeqId> {
+        let max_prefill = self.cfg.prefill_buckets.iter().copied().max().unwrap_or(0);
+        anyhow::ensure!(
+            req.prompt.len() + req.max_new_tokens <= self.meta.max_seq
+                && req.prompt.len() <= max_prefill,
+            "request too long for the deployment's buckets"
+        );
+        let id = self.next_seq;
+        self.next_seq += 1;
+        let seq = Sequence::new(id, req.prompt.clone(), req.max_new_tokens,
+                                Some(crate::workload::eos_token()));
+        let rank_dev = self.least_loaded_attn()?;
+        self.executors
+            .get_mut(&rank_dev)
+            .unwrap()
+            .attn
+            .as_mut()
+            .unwrap()
+            .sched
+            .submit(seq);
+        self.records.insert(id, RequestRecord {
+            task: req.task,
+            prompt: req.prompt,
+            output: Vec::new(),
+            submitted: Instant::now(),
+        });
+        Ok(id)
+    }
+
+    fn least_loaded_attn(&self) -> Result<DeviceId> {
+        self.attn_order
+            .iter()
+            .copied()
+            .min_by_key(|d| self.executors[d].attn.as_ref().map(|a| a.sched.load()).unwrap_or(usize::MAX))
+            .ok_or_else(|| anyhow::anyhow!("no attention ranks available"))
+    }
+
+    /// Drain every sequence off a (failed or role-switching) attention
+    /// rank for migration (§3.2), banking already-decoded tokens into the
+    /// request records first (their `migration_view` clears `decoded`).
+    pub fn drain_for_migration(&mut self, dev: DeviceId) -> Result<Vec<Sequence>> {
+        let a = self
+            .executors
+            .get_mut(&dev)
+            .ok_or_else(|| anyhow::anyhow!("no executor on device {dev}"))?
+            .attn
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("device {dev} is not an attention rank"))?;
+        let banked: Vec<(SeqId, Vec<Token>)> =
+            a.sched.running.iter().map(|s| (s.id, s.decoded.clone())).collect();
+        let drained = a.sched.drain_for_migration();
+        for (id, dec) in banked {
+            if let Some(rec) = self.records.get_mut(&id) {
+                rec.output.extend(dec);
+            }
+        }
+        Ok(drained)
+    }
+
+    /// Re-queue migrated sequences on surviving ranks (recovery §3.2).
+    pub fn requeue(&mut self, seqs: Vec<Sequence>) -> Result<usize> {
+        let n = seqs.len();
+        for s in seqs {
+            let d = self.least_loaded_attn()?;
+            self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap().sched.submit(s);
+        }
+        Ok(n)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.attn_order
+            .iter()
+            .filter_map(|d| self.executors[d].attn.as_ref())
+            .map(|a| a.sched.load())
+            .sum()
+    }
+
+    // -- serving loop ----------------------------------------------------------
+
+    /// One global iteration: admissions (+prefill) then one decode step.
+    /// Returns completions.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        anyhow::ensure!(!self.paused, "engine is paused for recovery");
+        let mut done = Vec::new();
+
+        // admissions + prefill (per DP rank)
+        for &d in &self.attn_order.clone() {
+            let admitted = {
+                let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                a.sched.admit()
+            };
+            for seq_id in admitted {
+                self.prefill(d, seq_id)?;
+                self.stats.prefills += 1;
+            }
+        }
+
+        // global decode step
+        self.decode_step()?;
+        self.stats.decode_steps += 1;
+
+        // reap completions
+        for &d in &self.attn_order.clone() {
+            let finished = {
+                let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                a.sched.reap()
+            };
+            for seq in finished {
+                // free its pages
+                let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                if a.blocks.table(seq.id).is_some() {
+                    a.blocks.drop_sequence(seq.id)?;
+                }
+                if let Some(rec) = self.records.remove(&seq.id) {
+                    let latency = rec.submitted.elapsed();
+                    let mut output = rec.output;
+                    output.extend_from_slice(&seq.decoded);
+                    self.stats.record_completion(latency, output.len());
+                    done.push(Completion {
+                        seq_id: seq.id,
+                        task: rec.task,
+                        prompt: rec.prompt,
+                        output,
+                        latency,
+                        migrations: seq.migrations,
+                    });
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Run until every submitted request completes (or `max_steps`).
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        for _ in 0..max_steps {
+            if self.pending() == 0 {
+                break;
+            }
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    // -- prefill ---------------------------------------------------------------
+
+    fn prefill(&mut self, dev: DeviceId, seq_id: SeqId) -> Result<()> {
+        let (prompt, ctx) = {
+            let a = self.executors[&dev].attn.as_ref().unwrap();
+            let s = a.sched.running.iter().find(|s| s.id == seq_id).unwrap();
+            (s.prompt.clone(), s.prompt.len())
+        };
+        let s_bucket = self
+            .cfg
+            .prefill_bucket(ctx)
+            .ok_or_else(|| anyhow::anyhow!("prompt longer than any prefill bucket"))?;
+        let mut toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        toks.resize(s_bucket, 0);
+
+        // reserve pages for every prompt position (its own undo-log step)
+        {
+            let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+            a.blocks.begin_step();
+            for _ in 0..ctx {
+                a.blocks.append_token(seq_id)?;
+            }
+        }
+
+        let ex = self.executors.get_mut(&dev).unwrap();
+        let mut x = ex.embed_prefill(s_bucket, &toks)?; // [1,s,d]
+        for li in 0..self.meta.n_layers {
+            let (h, ffn_in, k, v) = {
+                let ex = self.executors.get_mut(&dev).unwrap();
+                ex.attn_prefill(s_bucket, li, &x)?
+            };
+            {
+                let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+                let table = a.blocks.table(seq_id).unwrap().clone();
+                a.kv.scatter_prefill(li, &table, ctx, &k, &v)?;
+            }
+            // flatten [1,s,d] -> [s,d] for the FFN half
+            let d_model = self.meta.d_model;
+            let flat = Tensor::f32(vec![s_bucket, d_model], ffn_in.as_f32()?.to_vec());
+            let ffn_out = if li < self.meta.n_dense_layers {
+                self.dense_layer(li, &flat, s_bucket)?
+            } else {
+                self.moe_layer_prefill(dev, li, &flat, ctx, s_bucket)?
+            };
+            let mut hx = h;
+            // x = h + ffn_out (broadcast back to [1,s,d])
+            let add = Tensor::f32(vec![1, s_bucket, d_model], ffn_out.as_f32()?.to_vec());
+            hx.add_assign(&add)?;
+            x = hx;
+        }
+        // head over all positions; the first generated token comes from the
+        // last *valid* position
+        let d_model = self.meta.d_model;
+        let flat = Tensor::f32(vec![s_bucket, d_model], x.as_f32()?.to_vec());
+        let logits = {
+            let ex = self.executors.get_mut(&dev).unwrap();
+            ex.lm_head(s_bucket, &flat)?
+        };
+        let next = logits.argmax_rows()?[ctx - 1] as Token;
+        let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+        let s = a.sched.get_running_mut(seq_id).unwrap();
+        s.push_token(next);
+        a.blocks.begin_step(); // prefill committed: clear its undo log
+        if let Some(rec) = self.records.get_mut(&seq_id) {
+            if rec.output.is_empty() {
+                self.stats.record_ttft(rec.submitted.elapsed());
+            }
+        }
+        Ok(())
+    }
+
+    // -- decode step -------------------------------------------------------------
+
+    /// Per-rank decode batches: (device, seq_ids, bucket).
+    fn decode_batches(&self) -> Vec<(DeviceId, Vec<SeqId>, usize)> {
+        let mut out = Vec::new();
+        for &d in &self.attn_order {
+            let Some(a) = self.executors[&d].attn.as_ref() else { continue };
+            let ids: Vec<SeqId> = a
+                .sched
+                .running
+                .iter()
+                .filter(|s| s.state == SeqState::Running && !s.is_finished())
+                .map(|s| s.id)
+                .collect();
+            if ids.is_empty() {
+                continue;
+            }
+            let bucket = self.cfg.batch_bucket(ids.len()).unwrap_or(ids.len());
+            out.push((d, ids, bucket));
+        }
+        out
+    }
+
+    fn decode_step(&mut self) -> Result<()> {
+        let batches = self.decode_batches();
+        if batches.is_empty() {
+            return Ok(());
+        }
+
+        // step begin: page reservation per rank (undo-log step boundary §3.3)
+        let mut xs: Vec<Tensor> = Vec::with_capacity(batches.len());
+        let mut lens: Vec<Vec<usize>> = Vec::with_capacity(batches.len());
+        for (d, ids, bucket) in &batches {
+            let mut toks: Vec<i32> = Vec::with_capacity(*bucket);
+            let mut pos: Vec<i32> = Vec::with_capacity(*bucket);
+            let mut ls = Vec::with_capacity(ids.len());
+            {
+                let a = self.executors.get_mut(d).unwrap().attn.as_mut().unwrap();
+                a.blocks.begin_step();
+                a.step_slots.clear();
+                for id in ids {
+                    let (t, p) = {
+                        let s = a.sched.running.iter().find(|s| s.id == *id).unwrap();
+                        (s.last_token(), s.next_pos() - 1)
+                    };
+                    let (blk, slot) = a.blocks.append_token(*id)?;
+                    a.step_slots.push((*id, blk, slot));
+                    toks.push(t as i32);
+                    pos.push(p as i32);
+                    ls.push(p); // cur_len = position
+                }
+            }
+            toks.resize(*bucket, 0);
+            pos.resize(*bucket, 0);
+            let ex = self.executors.get_mut(d).unwrap();
+            xs.push(ex.embed_decode(*bucket, &toks, &pos)?);
+            lens.push(ls);
+        }
+
+        // layer loop
+        for li in 0..self.meta.n_layers {
+            let mut hs: Vec<Tensor> = Vec::with_capacity(batches.len());
+            let mut ffns: Vec<Tensor> = Vec::with_capacity(batches.len());
+            for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
+                let max_seq = self.meta.max_seq;
+                let ex = self.executors.get_mut(d).unwrap();
+                let (h, ffn_in, nk, nv) =
+                    ex.attn_decode(li, *bucket, &xs[bi], ids, &lens[bi], max_seq)?;
+                ex.write_new_kv(li, &nk, &nv)?;
+                hs.push(h);
+                ffns.push(ffn_in);
+            }
+
+            // FFN half over the *global* token set
+            let valid: Vec<usize> = batches.iter().map(|(_, ids, _)| ids.len()).collect();
+            let cat = concat_valid_rows(&ffns, &valid, self.meta.d_model)?;
+            let t_total: usize = valid.iter().sum();
+            let out = if li < self.meta.n_dense_layers {
+                let t_bucket = self.t_bucket(t_total)?;
+                let padded = cat.pad_rows(t_bucket)?;
+                self.dense_layer(li, &padded, t_bucket)?
+            } else {
+                // router runs per attention rank on its own device
+                let mut idx_cat: Vec<i32> = Vec::new();
+                let mut wt_cat: Vec<f32> = Vec::new();
+                let mask = self.expert_map.gate_mask();
+                for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
+                    let ex = self.executors.get_mut(d).unwrap();
+                    let (idx, wt) = ex.router(*bucket, li, &ffns[bi], &mask)?;
+                    let k = self.meta.top_k;
+                    idx_cat.extend_from_slice(&idx[..ids.len() * k]);
+                    wt_cat.extend_from_slice(&wt[..ids.len() * k]);
+                }
+                self.moe_layer_routed(li, &cat, &idx_cat, &wt_cat, t_total)?
+            };
+            // x = h + out, split back per rank
+            let mut row = 0usize;
+            for (bi, (_, ids, bucket)) in batches.iter().enumerate() {
+                let d_model = self.meta.d_model;
+                let mut x = hs[bi].clone();
+                {
+                    let xv = x.as_f32_mut()?;
+                    let ov = out.as_f32()?;
+                    for i in 0..ids.len() {
+                        for j in 0..d_model {
+                            xv[i * d_model + j] += ov[(row + i) * d_model + j];
+                        }
+                    }
+                }
+                row += ids.len();
+                let _ = bucket;
+                xs[bi] = x;
+            }
+        }
+
+        // heads + sampling per rank
+        for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
+            let logits = {
+                let ex = self.executors.get_mut(d).unwrap();
+                ex.lm_head(*bucket, &xs[bi])?
+            };
+            let am = logits.argmax_rows()?;
+            let a = self.executors.get_mut(d).unwrap().attn.as_mut().unwrap();
+            for (i, id) in ids.iter().enumerate() {
+                let s = a.sched.get_running_mut(*id).unwrap();
+                s.push_token(am[i] as Token);
+            }
+            // the step committed on this rank: clear its undo log so a later
+            // failure does not roll back a *completed* step (§3.3)
+            a.blocks.begin_step();
+            self.stats.tokens_generated += ids.len();
+        }
+        Ok(())
+    }
+
+    /// Bucket covering `t` tokens for router/dense/head artifacts.
+    fn t_bucket(&self, t: usize) -> Result<usize> {
+        self.cfg
+            .batch_buckets
+            .iter()
+            .chain(self.cfg.prefill_buckets.iter())
+            .copied()
+            .filter(|&b| b >= t)
+            .min()
+            .ok_or_else(|| anyhow::anyhow!("no T bucket >= {t}"))
+    }
+
+    /// Public probe wrappers (perf tooling; not part of the serving API).
+    #[doc(hidden)]
+    pub fn dense_layer_pub(&mut self, li: usize, x: &Tensor, t: usize) -> Result<Tensor> {
+        self.dense_layer(li, x, t)
+    }
+
+    #[doc(hidden)]
+    pub fn moe_layer_prefill_pub(
+        &mut self,
+        dev: DeviceId,
+        li: usize,
+        x: &Tensor,
+        valid: usize,
+        s_bucket: usize,
+    ) -> Result<Tensor> {
+        self.moe_layer_prefill(dev, li, x, valid, s_bucket)
+    }
+
+    /// Dense-FFN layer over `[t_bucket, d]` tokens: pick a healthy TP
+    /// group, fan out shards, all-reduce (§3.4 dense rebalancing).
+    fn dense_layer(&mut self, li: usize, x: &Tensor, t_bucket: usize) -> Result<Tensor> {
+        let g = self.dense.next_group()?;
+        let members = self.dense.groups[g].clone();
+        let tp = self.cfg.dense_tp;
+        let mut parts = Vec::with_capacity(members.len());
+        for &dev in &members {
+            let ex = self
+                .executors
+                .get_mut(&dev)
+                .ok_or_else(|| anyhow::anyhow!("dense shard device {dev} missing"))?;
+            parts.push(ex.dense_forward(li, tp, t_bucket, x)?);
+        }
+        comms::all_reduce_sum(&parts)
+    }
+
+    /// MoE layer for prefill: route every valid position of `[s,d]`.
+    /// The gate runs on the owning DP rank's device.
+    fn moe_layer_prefill(
+        &mut self,
+        dev: DeviceId,
+        li: usize,
+        x: &Tensor,
+        valid: usize,
+        s_bucket: usize,
+    ) -> Result<Tensor> {
+        let mask = self.expert_map.gate_mask();
+        let (idx, wt) = {
+            let ex = self.executors.get_mut(&dev).unwrap();
+            ex.router(s_bucket, li, x, &mask)?
+        };
+        let k = self.meta.top_k;
+        let valid_x = Tensor::f32(
+            vec![valid, self.meta.d_model],
+            x.as_f32()?[..valid * self.meta.d_model].to_vec(),
+        );
+        let out = self.moe_layer_routed(li, &valid_x, &idx[..valid * k], &wt[..valid * k], valid)?;
+        // pad back to [s,d]
+        out.pad_rows(s_bucket)
+    }
+
+    /// Shared MoE data plane: dispatch -> grouped FFN on MoE ranks ->
+    /// combine. `x` is `[t,d]` valid tokens.
+    fn moe_layer_routed(
+        &mut self,
+        li: usize,
+        x: &Tensor,
+        idx: &[i32],
+        wt: &[f32],
+        t_total: usize,
+    ) -> Result<Tensor> {
+        for &e in idx {
+            if e >= 0 {
+                self.activation_counts[e as usize] += 1;
+            }
+        }
+        let domain = self.domains.get(ATTN_EXPERT_DOMAIN)?;
+        let disp = comms::dispatch(
+            domain,
+            self.epoch,
+            x,
+            idx,
+            wt,
+            self.meta.top_k,
+            &self.expert_map,
+            &self.cfg.capacity_buckets,
+        )?;
+        let _ = t_total;
+        anyhow::ensure!(disp.overflowed == 0, "dispatch overflow: capacity bucket too small");
+        self.stats.bytes_dispatched += disp.bytes_moved;
+
+        let mut outputs: Vec<Tensor> = Vec::with_capacity(disp.per_rank.len());
+        for payload in &disp.per_rank {
+            if payload.assigns.is_empty() {
+                outputs.push(Tensor::zeros(payload.grouped.shape.clone()));
+                continue;
+            }
+            let dev = self.moe_order[payload.rank];
+            let ex = self
+                .executors
+                .get_mut(&dev)
+                .ok_or_else(|| anyhow::anyhow!("MoE device {dev} missing"))?;
+            outputs.push(ex.moe_forward(li, &payload.grouped)?);
+        }
+        let domain = self.domains.get(ATTN_EXPERT_DOMAIN)?;
+        let (acc, bytes) = comms::combine(domain, &disp, &outputs, t_total, self.meta.d_model)?;
+        self.stats.bytes_combined += bytes;
+        Ok(acc)
+    }
+
+    // -- scoring path (teacher-forced eval, §4.2) --------------------------------
+
+    /// Teacher-forced scoring of one sequence: returns the argmax
+    /// prediction at every position (position i predicts token i+1).
+    /// Drives the same attention/gate/dispatch/expert/combine pipeline as
+    /// serving — including the current expert mask — but touches no KV
+    /// pages or scheduler state. `dev_hint` round-robins the attention
+    /// device used for the attention/gate halves.
+    pub fn score_sequence(&mut self, tokens: &[Token], dev_hint: usize) -> Result<Vec<Token>> {
+        let s_bucket = self
+            .cfg
+            .prefill_bucket(tokens.len())
+            .ok_or_else(|| anyhow::anyhow!("sequence longer than any prefill bucket"))?;
+        let dev = self.attn_order[dev_hint % self.attn_order.len()];
+        let mut toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        toks.resize(s_bucket, 0);
+        let mut x = {
+            let ex = self.executors.get_mut(&dev).unwrap();
+            ex.embed_prefill(s_bucket, &toks)?
+        };
+        let d_model = self.meta.d_model;
+        for li in 0..self.meta.n_layers {
+            let (h, ffn_in, _k, _v) = {
+                let ex = self.executors.get_mut(&dev).unwrap();
+                ex.attn_prefill(s_bucket, li, &x)?
+            };
+            let flat = Tensor::f32(vec![s_bucket, d_model], ffn_in.as_f32()?.to_vec());
+            let ffn_out = if li < self.meta.n_dense_layers {
+                self.dense_layer(li, &flat, s_bucket)?
+            } else {
+                self.moe_layer_prefill(dev, li, &flat, tokens.len(), s_bucket)?
+            };
+            let mut hx = h;
+            let add = Tensor::f32(vec![1, s_bucket, d_model], ffn_out.as_f32()?.to_vec());
+            hx.add_assign(&add)?;
+            x = hx;
+        }
+        let flat = Tensor::f32(vec![s_bucket, d_model], x.as_f32()?.to_vec());
+        let logits = {
+            let ex = self.executors.get_mut(&dev).unwrap();
+            ex.lm_head(s_bucket, &flat)?
+        };
+        Ok(logits.argmax_rows()?[..tokens.len()]
+            .iter()
+            .map(|&t| t as Token)
+            .collect())
+    }
+
+    /// Reset the expert-activation counters (per-task calibration, §4.2).
+    pub fn reset_activation_counts(&mut self) {
+        self.activation_counts.iter_mut().for_each(|c| *c = 0);
+    }
+
+    // -- failure detection ------------------------------------------------------
+
+    /// Sweep heartbeats + plugin annotations. Returns a detected failure
+    /// needing recovery, if any (does not recover by itself).
+    pub fn detect_failure(&mut self) -> Option<FaultAnnotation> {
+        if let Some(ann) = self.plugin.poll() {
+            if ann.level.needs_recovery() {
+                return Some(ann);
+            }
+            // benign (L1/L2): log-only, clear it
+            self.plugin.clear(ann.device);
+        }
+        let devices: Vec<DeviceId> = self.executors.keys().copied().collect();
+        let monitor = HeartbeatMonitor { interval: self.monitor.interval, timeout: self.monitor.timeout };
+        let verdict = monitor.sweep(&devices, |d, timeout| self.executors[&d].handle.ping(timeout));
+        match verdict {
+            HeartbeatVerdict::AllHealthy => None,
+            HeartbeatVerdict::Erroring(d) => Some(self.plugin.post_fault(
+                d,
+                FaultLevel::L5,
+                FailureBehavior::Erroring,
+                "heartbeat-error",
+            )),
+            HeartbeatVerdict::TimedOut(d) => Some(self.plugin.post_fault(
+                d,
+                FaultLevel::L6,
+                FailureBehavior::Hung,
+                "heartbeat-timeout",
+            )),
+        }
+    }
+
+    /// Current XCCL epoch (bumped by recovery when domains are recreated).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn set_epoch(&mut self, e: u64) {
+        self.epoch = e;
+    }
+
+    /// The role a device plays (for failure classification).
+    pub fn device_role(&self, d: DeviceId) -> (bool, Option<usize>, bool) {
+        let is_attn = self.attn_order.contains(&d);
+        let moe_rank = self.moe_order.iter().position(|&m| m == d);
+        let hosts_dense = self.dense.groups.iter().flatten().any(|&m| m == d);
+        (is_attn, moe_rank, hosts_dense)
+    }
+}
+
+/// Concatenate the first `valid[i]` rows of each `[bucket_i, d]` tensor.
+fn concat_valid_rows(tensors: &[Tensor], valid: &[usize], d: usize) -> Result<Tensor> {
+    let total: usize = valid.iter().sum();
+    let mut data = Vec::with_capacity(total * d);
+    for (t, &v) in tensors.iter().zip(valid) {
+        data.extend_from_slice(&t.as_f32()?[..v * d]);
+    }
+    Ok(Tensor::f32(vec![total, d], data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_valid_rows_takes_prefixes() {
+        let a = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::f32(vec![2, 2], vec![5., 6., 7., 8.]);
+        let c = concat_valid_rows(&[a, b], &[1, 2], 2).unwrap();
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.as_f32().unwrap(), &[1., 2., 5., 6., 7., 8.]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Lost-expert accuracy evaluation (paper §4.2, Table 2 + Figure 6).
+//!
+//! Reproduces both failure-selection scenarios on the trained tiny MoE:
+//!
+//! - **task-based** (worst case): run a calibration pass per task counting
+//!   gate activations (the engine's dispatch path counts them), rank
+//!   experts globally, fail the top `r · E`, re-evaluate that task.
+//! - **every nth** (uniform): fail experts at stride `1/r`.
+//!
+//! Accuracy is exact-match next-token accuracy over answer positions,
+//! scored through the *serving pipeline itself* (`Engine::score_sequence`)
+//! so the expert masks exercise the real gate → dispatch → grouped-FFN →
+//! combine path, not a shortcut.
+
+use std::collections::HashMap;
+
+
+use crate::engine::Engine;
+use crate::scheduler::Token;
+use crate::workload::EvalSet;
+use crate::Result;
+
+/// The fractions evaluated (paper uses 1/64..1/2 on 256 experts; with 32
+/// experts the smallest meaningful fraction is 1/32 = one expert).
+pub fn default_fractions() -> Vec<(usize, usize)> {
+    vec![(1, 32), (1, 16), (1, 8), (1, 4), (1, 2)]
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskRow {
+    pub task: String,
+    pub base: f64,
+    /// accuracy per fraction, task-based selection
+    pub task_based: Vec<f64>,
+    /// accuracy per fraction, every-nth selection
+    pub every_nth: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LostExpertsTable {
+    pub fractions: Vec<(usize, usize)>,
+    pub rows: Vec<TaskRow>,
+}
+
+impl LostExpertsTable {
+    /// Column means (Figure 6's series).
+    pub fn mean_base(&self) -> f64 {
+        mean(self.rows.iter().map(|r| r.base))
+    }
+
+    pub fn mean_task_based(&self) -> Vec<f64> {
+        (0..self.fractions.len())
+            .map(|i| mean(self.rows.iter().map(|r| r.task_based[i])))
+            .collect()
+    }
+
+    pub fn mean_every_nth(&self) -> Vec<f64> {
+        (0..self.fractions.len())
+            .map(|i| mean(self.rows.iter().map(|r| r.every_nth[i])))
+            .collect()
+    }
+
+    /// Paper-style table rendering.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s += &format!("{:<10} {:>6}", "Task", "Base");
+        for (a, b) in &self.fractions {
+            s += &format!(" {:>7}", format!("TB {a}/{b}"));
+        }
+        for (a, b) in &self.fractions {
+            s += &format!(" {:>7}", format!("EN {a}/{b}"));
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s += &format!("{:<10} {:>6.3}", r.task, r.base);
+            for v in &r.task_based {
+                s += &format!(" {v:>7.3}");
+            }
+            for v in &r.every_nth {
+                s += &format!(" {v:>7.3}");
+            }
+            s.push('\n');
+        }
+        s += &format!("{:<10} {:>6.3}", "Average", self.mean_base());
+        for v in self.mean_task_based() {
+            s += &format!(" {v:>7.3}");
+        }
+        for v in self.mean_every_nth() {
+            s += &format!(" {v:>7.3}");
+        }
+        s.push('\n');
+        s
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = it.collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Score one eval set under the engine's current expert mask.
+pub fn score_set(engine: &mut Engine, set: &EvalSet) -> Result<f64> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (i, (seq, mask)) in set.seqs.iter().zip(&set.answer_masks).enumerate() {
+        // trim padding (trailing PAD tokens carry mask 0 anyway)
+        let toks: Vec<Token> = seq.iter().map(|&t| t as Token).collect();
+        let preds = engine.score_sequence(&toks, i)?;
+        for p in 0..toks.len() - 1 {
+            if mask[p + 1] != 0 {
+                total += 1;
+                if preds[p] == toks[p + 1] {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    Ok(if total == 0 { 0.0 } else { correct as f64 / total as f64 })
+}
+
+/// Experts failed by the every-nth scenario for fraction a/b.
+pub fn every_nth_set(n_experts: usize, frac: (usize, usize)) -> Vec<usize> {
+    let n_fail = n_experts * frac.0 / frac.1;
+    if n_fail == 0 {
+        return Vec::new();
+    }
+    let stride = n_experts / n_fail;
+    (0..n_fail).map(|i| i * stride).collect()
+}
+
+/// Experts failed by the task-based scenario: top `r·E` of `ranking`
+/// (most-activated first).
+pub fn task_based_set(ranking: &[usize], n_experts: usize, frac: (usize, usize)) -> Vec<usize> {
+    let n_fail = n_experts * frac.0 / frac.1;
+    ranking[..n_fail.min(ranking.len())].to_vec()
+}
+
+/// Rank experts by activation count, descending.
+pub fn rank_by_activation(counts: &[u64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    order.sort_by_key(|&e| std::cmp::Reverse(counts[e]));
+    order
+}
+
+/// Run the full §4.2 experiment over every task set.
+pub fn run_lost_experts(
+    engine: &mut Engine,
+    sets: &HashMap<String, EvalSet>,
+    fractions: &[(usize, usize)],
+    n_samples: usize,
+) -> Result<LostExpertsTable> {
+    let n_experts = engine.meta.n_experts;
+    let mut tasks: Vec<&String> = sets.keys().collect();
+    tasks.sort();
+
+    let mut rows = Vec::new();
+    for task in tasks {
+        let set = sets[task].clone().take(n_samples);
+
+        // base + calibration (activation counting happens during scoring)
+        engine.expert_map.clear_missing();
+        engine.reset_activation_counts();
+        let base = score_set(engine, &set)?;
+        let ranking = rank_by_activation(&engine.activation_counts);
+
+        let mut tb = Vec::new();
+        for &f in fractions {
+            let failed = task_based_set(&ranking, n_experts, f);
+            engine.expert_map.set_missing(&failed);
+            tb.push(score_set(engine, &set)?);
+        }
+        let mut en = Vec::new();
+        for &f in fractions {
+            let failed = every_nth_set(n_experts, f);
+            engine.expert_map.set_missing(&failed);
+            en.push(score_set(engine, &set)?);
+        }
+        engine.expert_map.clear_missing();
+        rows.push(TaskRow { task: task.clone(), base, task_based: tb, every_nth: en });
+    }
+    Ok(LostExpertsTable { fractions: fractions.to_vec(), rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_nth_strides() {
+        assert_eq!(every_nth_set(32, (1, 2)), (0..16).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(every_nth_set(32, (1, 32)), vec![0]);
+        assert_eq!(every_nth_set(32, (1, 4)), vec![0, 4, 8, 12, 16, 20, 24, 28]);
+    }
+
+    #[test]
+    fn task_based_takes_top() {
+        let counts = vec![5u64, 100, 2, 50];
+        let ranking = rank_by_activation(&counts);
+        assert_eq!(ranking[..2], [1, 3]);
+        assert_eq!(task_based_set(&ranking, 4, (1, 2)), vec![1, 3]);
+    }
+
+    #[test]
+    fn mean_helpers() {
+        let t = LostExpertsTable {
+            fractions: vec![(1, 2)],
+            rows: vec![
+                TaskRow { task: "a".into(), base: 0.8, task_based: vec![0.4], every_nth: vec![0.6] },
+                TaskRow { task: "b".into(), base: 0.6, task_based: vec![0.2], every_nth: vec![0.4] },
+            ],
+        };
+        assert!((t.mean_base() - 0.7).abs() < 1e-9);
+        assert!((t.mean_task_based()[0] - 0.3).abs() < 1e-9);
+        assert!((t.mean_every_nth()[0] - 0.5).abs() < 1e-9);
+        let s = t.render();
+        assert!(s.contains("Average"));
+    }
+}

@@ -1,0 +1,436 @@
+//! Executors: the per-NPU worker objects of the FlowServe instance
+//! (paper Fig 2). A [`Executor`] owns one simulated NPU and optionally an
+//! attention role ([`AttnState`]: local scheduler, paged KV, generator
+//! state) and/or a MoE role ([`MoeState`]: expert slots). MA-disaggregated
+//! deployments use disjoint sets for the two roles (DPExecutor /
+//! MoEExecutor); MA-collocated gives every executor both. The §3.4 **role
+//! switch** is literally `attn: Some -> None, moe: None -> Some` plus the
+//! weight moves.
+
+
+use crate::artifacts::{self, ArtifactStore};
+use crate::cluster::DeviceId;
+use crate::config::{DeploymentConfig, ModelMeta};
+use crate::kvcache::BlockManager;
+use crate::kvpool::KvPool;
+use crate::moe::ExpertId;
+use crate::runtime::{Arg, CompileStat, DeviceHandle, SimDevice};
+use crate::scheduler::{LocalScheduler, SeqId};
+use crate::tensor::Tensor;
+use crate::weights::{WeightStore, ATTN_WEIGHT_ORDER};
+use crate::Result;
+
+/// Attention-role state (a DPExecutor in the paper's terms).
+pub struct AttnState {
+    pub dp_rank: usize,
+    pub sched: LocalScheduler,
+    pub blocks: BlockManager,
+    pub kv: KvPool,
+    /// `(seq, block, slot)` for each batch element of the in-flight step.
+    pub step_slots: Vec<(SeqId, usize, usize)>,
+}
+
+/// MoE-role state (a MoEExecutor).
+pub struct MoeState {
+    pub moe_rank: usize,
+    pub slots: Vec<ExpertId>,
+}
+
+/// One worker process bound to one simulated NPU.
+pub struct Executor {
+    pub device_id: DeviceId,
+    pub handle: DeviceHandle,
+    device: Option<SimDevice>,
+    pub attn: Option<AttnState>,
+    pub moe: Option<MoeState>,
+    /// (dense group idx, shard idx) if this device hosts a dense-FFN shard.
+    pub dense_shard: Option<(usize, usize)>,
+}
+
+impl Executor {
+    /// Spawn the executor and its device thread ("Executor Processes" in
+    /// the Table-1 breakdown).
+    pub fn spawn(device_id: DeviceId) -> Executor {
+        let dev = SimDevice::spawn(device_id);
+        Executor {
+            device_id,
+            handle: dev.handle.clone(),
+            device: Some(dev),
+            attn: None,
+            moe: None,
+            dense_shard: None,
+        }
+    }
+
+    pub fn is_attention(&self) -> bool {
+        self.attn.is_some()
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.moe.is_some()
+    }
+
+    /// Attach the attention role: scheduler, block manager, KV pool
+    /// ("Generator" KV warmup), attention + router + head weights.
+    pub fn init_attention(
+        &mut self,
+        dp_rank: usize,
+        meta: &ModelMeta,
+        cfg: &DeploymentConfig,
+        store: &WeightStore,
+    ) -> Result<usize> {
+        let mut bytes = 0;
+        bytes += self.handle.load_weights(store.load_common()?)?;
+        bytes += self.handle.load_weights(store.load_attention(meta)?)?;
+        bytes += self.handle.load_weights(store.load_routers(meta)?)?;
+        self.attn = Some(AttnState {
+            dp_rank,
+            sched: LocalScheduler::new(cfg.max_batch),
+            blocks: BlockManager::new(cfg.blocks_per_rank, cfg.block_size),
+            kv: KvPool::new(meta, cfg.blocks_per_rank, cfg.block_size),
+            step_slots: Vec::new(),
+        });
+        Ok(bytes)
+    }
+
+    /// Attach the MoE role with the given expert slot list.
+    pub fn init_moe(
+        &mut self,
+        moe_rank: usize,
+        meta: &ModelMeta,
+        slots: Vec<ExpertId>,
+        store: &WeightStore,
+    ) -> Result<usize> {
+        let bytes = self.handle.load_weights(store.load_expert_slots(meta, &slots)?)?;
+        self.moe = Some(MoeState { moe_rank, slots });
+        Ok(bytes)
+    }
+
+    /// Attach a dense-FFN TP shard.
+    pub fn init_dense_shard(
+        &mut self,
+        group: usize,
+        shard: usize,
+        tp: usize,
+        meta: &ModelMeta,
+        store: &WeightStore,
+    ) -> Result<usize> {
+        let bytes = self.handle.load_weights(store.load_dense_shard(meta, shard, tp)?)?;
+        self.dense_shard = Some((group, shard));
+        Ok(bytes)
+    }
+
+    /// Compile a set of artifacts on this device (cached compile, §3.6).
+    pub fn compile_set(
+        &self,
+        arts: &ArtifactStore,
+        names: &[String],
+    ) -> Result<Vec<CompileStat>> {
+        let mut out = Vec::with_capacity(names.len());
+        for n in names {
+            if self.handle.has_executable(n)? {
+                continue; // precompiled (deploy-time graph cache hit)
+            }
+            out.push(self.handle.compile(n, arts.path(n)?)?);
+        }
+        Ok(out)
+    }
+
+    // -- attention-role device ops -----------------------------------------
+
+    fn attn_weight_args(li: usize) -> Vec<Arg> {
+        ATTN_WEIGHT_ORDER
+            .iter()
+            .map(|n| Arg::Weight(format!("layers.{li}.{n}")))
+            .collect()
+    }
+
+    /// Decode-path embed: tokens/pos `[B]` (already padded to the bucket).
+    pub fn embed_decode(&self, bucket: usize, toks: &[i32], pos: &[i32]) -> Result<Tensor> {
+        let mut args = vec![
+            Arg::Value(Tensor::i32(vec![bucket], toks.to_vec())),
+            Arg::Value(Tensor::i32(vec![bucket], pos.to_vec())),
+            Arg::Weight("embed".into()),
+            Arg::Weight("pos".into()),
+        ];
+        let out = self.handle.execute(&artifacts::embed_decode(bucket), std::mem::take(&mut args))?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// One layer's attention half for the decode batch. `x` is `[B,d]`
+    /// (bucket-padded); gathers this rank's paged KV for `layer`.
+    /// Returns `(h, ffn_in, new_k, new_v)`.
+    pub fn attn_decode(
+        &mut self,
+        layer: usize,
+        bucket: usize,
+        x: &Tensor,
+        seq_ids: &[SeqId],
+        lens: &[usize],
+        max_seq: usize,
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let st = self.attn.as_ref().ok_or_else(|| anyhow::anyhow!("not an attention rank"))?;
+        let tables: Vec<_> = seq_ids
+            .iter()
+            .map(|s| st.blocks.table(*s).ok_or_else(|| anyhow::anyhow!("no table for seq {s}")))
+            .collect::<Result<Vec<_>>>()?;
+        let mut lens_pad = lens.to_vec();
+        let mut tables_pad = tables;
+        // pad batch to bucket with repeats of the last row (len 0 -> masked)
+        static EMPTY: once_empty::Empty = once_empty::Empty;
+        while tables_pad.len() < bucket {
+            tables_pad.push(once_empty::table(&EMPTY));
+            lens_pad.push(0);
+        }
+        let (kc, vc) = st.kv.gather(layer, &tables_pad, &lens_pad, max_seq)?;
+        let cur: Vec<i32> = lens_pad.iter().map(|&l| l as i32).collect();
+        let mut args = vec![
+            Arg::Value(x.clone()),
+            Arg::Value(kc),
+            Arg::Value(vc),
+            Arg::Value(Tensor::i32(vec![bucket], cur)),
+        ];
+        args.extend(Self::attn_weight_args(layer));
+        let out = self.handle.execute(&artifacts::attn_decode(bucket), args)?;
+        let mut it = out.into_iter();
+        let h = it.next().unwrap();
+        let ffn_in = it.next().unwrap();
+        let nk = it.next().unwrap();
+        let nv = it.next().unwrap();
+        Ok((h, ffn_in, nk, nv))
+    }
+
+    /// Write the step's new K/V rows (one per real batch element) into the
+    /// pages reserved by `begin_step_batch`.
+    pub fn write_new_kv(&mut self, layer: usize, nk: &Tensor, nv: &Tensor) -> Result<()> {
+        let st = self.attn.as_mut().ok_or_else(|| anyhow::anyhow!("not an attention rank"))?;
+        let row = nk.shape[1] * nk.shape[2]; // H * Dh
+        let kd = nk.as_f32()?;
+        let vd = nv.as_f32()?;
+        for (i, &(_seq, block, slot)) in st.step_slots.iter().enumerate() {
+            st.kv.write_row(layer, block, slot, &kd[i * row..(i + 1) * row],
+                            &vd[i * row..(i + 1) * row])?;
+        }
+        Ok(())
+    }
+
+    /// Gate for this rank's tokens: returns `(idx, wt)` flattened `[B*k]`.
+    pub fn router(
+        &self,
+        bucket: usize,
+        layer: usize,
+        ffn_in: &Tensor,
+        mask: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let args = vec![
+            Arg::Value(ffn_in.clone()),
+            Arg::Weight(format!("layers.{layer}.router")),
+            Arg::Value(Tensor::f32(vec![mask.len()], mask.to_vec())),
+        ];
+        let out = self.handle.execute(&artifacts::router(bucket), args)?;
+        let idx = out[0].as_i32()?.to_vec();
+        let wt = out[1].as_f32()?.to_vec();
+        Ok((idx, wt))
+    }
+
+    /// Final norm + tied-embedding head over `[T,d]`.
+    pub fn lm_head(&self, bucket: usize, x: &Tensor) -> Result<Tensor> {
+        let args = vec![
+            Arg::Value(x.clone()),
+            Arg::Weight("lnf_g".into()),
+            Arg::Weight("lnf_b".into()),
+            Arg::Weight("embed".into()),
+        ];
+        let out = self.handle.execute(&artifacts::lm_head(bucket), args)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Prefill-path embed for one sequence padded to seq bucket `s`.
+    pub fn embed_prefill(&self, s: usize, toks: &[i32]) -> Result<Tensor> {
+        let args = vec![
+            Arg::Value(Tensor::i32(vec![1, s], toks.to_vec())),
+            Arg::Weight("embed".into()),
+            Arg::Weight("pos".into()),
+        ];
+        let out = self.handle.execute(&artifacts::embed_prefill(s), args)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// One layer's attention half over a full prompt `[1,s,d]`.
+    /// Returns `(h, ffn_in, k, v)` with k/v `[1,s,H,Dh]`.
+    pub fn attn_prefill(
+        &self,
+        s: usize,
+        layer: usize,
+        x: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let mut args = vec![Arg::Value(x.clone())];
+        args.extend(Self::attn_weight_args(layer));
+        let out = self.handle.execute(&artifacts::attn_prefill(s), args)?;
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+    }
+
+    // -- MoE-role device ops -------------------------------------------------
+
+    /// Grouped expert FFN over dispatched tokens `[n_slots, C, d]`.
+    pub fn moe_forward(&self, layer: usize, grouped: &Tensor) -> Result<Tensor> {
+        let st = self.moe.as_ref().ok_or_else(|| anyhow::anyhow!("not a MoE rank"))?;
+        let (n_slots, cap) = (grouped.shape[0], grouped.shape[1]);
+        anyhow::ensure!(n_slots == st.slots.len(), "grouped slots mismatch");
+        let args = vec![
+            Arg::Value(grouped.clone()),
+            Arg::Weight(format!("layers.{layer}.e_w1.slots")),
+            Arg::Weight(format!("layers.{layer}.e_w2.slots")),
+        ];
+        let out = self.handle.execute(&artifacts::moe_block(n_slots, cap), args)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// One dense-FFN TP shard's partial output for `[t,d]` tokens.
+    pub fn dense_forward(&self, layer: usize, tp: usize, t_bucket: usize, x: &Tensor) -> Result<Tensor> {
+        let (_, shard) = self.dense_shard.ok_or_else(|| anyhow::anyhow!("no dense shard here"))?;
+        let args = vec![
+            Arg::Value(x.clone()),
+            Arg::Weight(format!("layers.{layer}.d_w1.s{shard}")),
+            Arg::Weight(format!("layers.{layer}.d_w2.s{shard}")),
+        ];
+        let out = self.handle.execute(&artifacts::dense_ffn(tp, t_bucket), args)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    // -- role switch (§3.4) ---------------------------------------------------
+
+    /// First half of a role switch: drop the attention role (KV pool,
+    /// scheduler, attention weights). Caller must have migrated the
+    /// sequences away first. The second half — loading the failed rank's
+    /// expert weights from disk — is `init_moe`, timed separately by
+    /// recovery because the paper files weight loading under "Generator"
+    /// while the orchestration goes under "Role Switch".
+    pub fn strip_attention_role(&mut self, meta: &ModelMeta) -> Result<usize> {
+        anyhow::ensure!(self.attn.is_some(), "role switch source must be an attention rank");
+        anyhow::ensure!(
+            self.attn.as_ref().unwrap().sched.load() == 0,
+            "migrate sequences before role switching"
+        );
+        self.attn = None; // KV pool + scheduler dropped here
+        let mut dropped = 0;
+        for li in 0..meta.n_layers {
+            for n in ATTN_WEIGHT_ORDER {
+                dropped += self.handle.drop_weights_prefix(&format!("layers.{li}.{n}"))?;
+            }
+        }
+        Ok(dropped)
+    }
+
+    /// Full role switch (strip + expert load) for callers that do not need
+    /// the split timing.
+    pub fn role_switch_to_moe(
+        &mut self,
+        moe_rank: usize,
+        slots: Vec<ExpertId>,
+        meta: &ModelMeta,
+        store: &WeightStore,
+    ) -> Result<(usize, usize)> {
+        let dropped = self.strip_attention_role(meta)?;
+        let loaded = self.init_moe(moe_rank, meta, slots, store)?;
+        Ok((dropped, loaded))
+    }
+
+    /// Kill the device thread (used by tests / baseline teardown).
+    pub fn shutdown(mut self) {
+        self.handle.shutdown();
+        if let Some(d) = self.device.take() {
+            let _ = d.join.join();
+        }
+    }
+}
+
+/// Tiny helper giving `attn_decode` an empty static block table to pad
+/// batch buckets with (len 0 ⇒ fully masked, content irrelevant).
+mod once_empty {
+    use crate::kvcache::BlockTable;
+    use std::sync::OnceLock;
+
+    pub struct Empty;
+    static TABLE: OnceLock<BlockTable> = OnceLock::new();
+
+    pub fn table(_: &Empty) -> &'static BlockTable {
+        TABLE.get_or_init(BlockTable::default)
+    }
+}
+
+/// Which artifacts an executor must have compiled, given its roles.
+pub fn artifact_set(ex: &Executor, meta: &ModelMeta, cfg: &DeploymentConfig) -> Vec<String> {
+    let mut names = Vec::new();
+    if ex.is_attention() {
+        names.extend(artifacts::attention_set(&cfg.batch_buckets, &cfg.prefill_buckets));
+    }
+    if let Some(moe) = &ex.moe {
+        let mut t_buckets = cfg.batch_buckets.clone();
+        t_buckets.extend(cfg.prefill_buckets.iter().copied());
+        // dense t-buckets must cover the *global* concatenated token count
+        names.extend(artifacts::moe_set(
+            moe.slots.len(),
+            &cfg.capacity_buckets,
+            cfg.dense_tp,
+            &t_buckets,
+        ));
+    }
+    if ex.dense_shard.is_some() && !ex.is_moe() {
+        let mut t_buckets = cfg.batch_buckets.clone();
+        t_buckets.extend(cfg.prefill_buckets.iter().copied());
+        for &t in &t_buckets {
+            names.push(artifacts::dense_ffn(cfg.dense_tp, t));
+        }
+    }
+    let _ = meta;
+    names.sort();
+    names.dedup();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_roles_default_empty() {
+        let ex = Executor::spawn(0);
+        assert!(!ex.is_attention());
+        assert!(!ex.is_moe());
+        ex.shutdown();
+    }
+
+    #[test]
+    fn role_switch_requires_attention_role() {
+        let mut ex = Executor::spawn(1);
+        let meta = ModelMeta {
+            vocab: 64, d_model: 64, n_heads: 4, d_head: 16, n_layers: 4,
+            n_dense_layers: 1, n_experts: 32, top_k: 2, d_ff: 128,
+            max_seq: 160, ln_eps: 1e-5,
+        };
+        // no attention role -> must fail before touching the store
+        let store_err = WeightStore::open(
+            std::path::Path::new("/nonexistent.json"),
+            std::path::Path::new("/nonexistent.bin"),
+        );
+        assert!(store_err.is_err());
+        let r = ex.role_switch_to_moe(0, vec![0, 1], &meta, &fake_store());
+        assert!(r.is_err());
+        ex.shutdown();
+    }
+
+    fn fake_store() -> WeightStore {
+        // minimal valid store on disk
+        let dir = std::env::temp_dir().join(format!("exstore-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("w.bin"), [0u8; 4]).unwrap();
+        std::fs::write(
+            dir.join("w.json"),
+            r#"{"tensors":[{"name":"x","shape":[1],"offset":0,"nbytes":4}],"total_bytes":4}"#,
+        )
+        .unwrap();
+        WeightStore::open(&dir.join("w.json"), &dir.join("w.bin")).unwrap()
+    }
+}

@@ -1,0 +1,419 @@
+//! Paged KV cache: block manager, per-sequence block tables, and the
+//! ARIES-style undo log that implements the paper's block-table recovery
+//! (§3.3).
+//!
+//! Invariants the undo log guarantees (property-tested in
+//! `rust/tests/proptest_kvcache.rs`):
+//!
+//! - At the start of every generation step the log is cleared (the previous
+//!   step fully completed).
+//! - Every mutating block operation appends its inverse information.
+//! - `undo_step()` replays the log backwards, returning the block manager,
+//!   every block table, and the free list to their exact step-start state —
+//!   so a failure mid-step never leaves a half-updated table (the paper's
+//!   argument for step-level rather than layer-level recovery, §3.2).
+
+use std::collections::HashMap;
+
+use anyhow::bail;
+
+use crate::Result;
+
+pub type BlockId = usize;
+pub type SeqId = u64;
+
+/// One logged block operation, with enough information to invert it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BlockOp {
+    /// A fresh block was allocated and appended to `seq`'s table;
+    /// `prev_fill` is the previous last block's fill and `created_table`
+    /// records whether this op created the sequence's table (exact undo).
+    Alloc { seq: SeqId, block: BlockId, prev_fill: usize, created_table: bool },
+    /// One token slot was consumed in `seq`'s last block.
+    Append { seq: SeqId },
+    /// `block` was removed from `seq`'s table (ref count decremented; it
+    /// held `fill` tokens and sat at position `pos` in the table).
+    Free { seq: SeqId, block: BlockId, pos: usize, fill: usize },
+    /// Copy-on-write style ref bump of an existing block (prefix sharing).
+    RefInc { block: BlockId },
+    /// The whole table of `seq` was dropped (sequence finished/migrated):
+    /// remembers the table and the per-block fill to restore it.
+    DropTable { seq: SeqId, blocks: Vec<BlockId>, last_fill: usize },
+}
+
+/// Per-sequence page table: ordered blocks plus the fill of the last one.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    /// number of tokens written into the last block
+    pub last_fill: usize,
+}
+
+impl BlockTable {
+    pub fn n_tokens(&self, block_size: usize) -> usize {
+        if self.blocks.is_empty() {
+            0
+        } else {
+            (self.blocks.len() - 1) * block_size + self.last_fill
+        }
+    }
+}
+
+/// The block manager: free list + ref counts + all sequences' tables,
+/// with every mutation logged for undo.
+#[derive(Clone, Debug)]
+pub struct BlockManager {
+    pub block_size: usize,
+    n_blocks: usize,
+    free: Vec<BlockId>,
+    refcnt: Vec<u32>,
+    tables: HashMap<SeqId, BlockTable>,
+    log: Vec<BlockOp>,
+    /// logging can be disabled to measure its overhead (ablation bench)
+    pub logging_enabled: bool,
+}
+
+impl BlockManager {
+    pub fn new(n_blocks: usize, block_size: usize) -> Self {
+        BlockManager {
+            block_size,
+            n_blocks,
+            free: (0..n_blocks).rev().collect(),
+            refcnt: vec![0; n_blocks],
+            tables: HashMap::new(),
+            log: Vec::new(),
+            logging_enabled: true,
+        }
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcnt[b]
+    }
+
+    pub fn table(&self, seq: SeqId) -> Option<&BlockTable> {
+        self.tables.get(&seq)
+    }
+
+    pub fn sequences(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.tables.keys().copied()
+    }
+
+    fn log_op(&mut self, op: BlockOp) {
+        if self.logging_enabled {
+            self.log.push(op);
+        }
+    }
+
+    // -- step lifecycle ----------------------------------------------------
+
+    /// Paper §3.3: "At the start of the current generation step, we clear
+    /// the log and start a new one, as the previous step fully completed."
+    pub fn begin_step(&mut self) {
+        self.log.clear();
+    }
+
+    pub fn log_len(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Undo every operation of the current (failed) step, newest first,
+    /// returning the manager to its step-start state (§3.3).
+    pub fn undo_step(&mut self) -> Result<usize> {
+        let mut undone = 0;
+        while let Some(op) = self.log.pop() {
+            match op {
+                BlockOp::Alloc { seq, block, prev_fill, created_table } => {
+                    // inverse: decrement/free + remove from table tail
+                    let t = self.tables.entry(seq).or_default();
+                    match t.blocks.pop() {
+                        Some(b) if b == block => {}
+                        other => bail!("undo Alloc: table tail {:?} != {}", other, block),
+                    }
+                    t.last_fill = if t.blocks.is_empty() { 0 } else { prev_fill };
+                    if created_table {
+                        self.tables.remove(&seq);
+                    }
+                    self.deref_block(block);
+                }
+                BlockOp::Append { seq } => {
+                    let t = self
+                        .tables
+                        .get_mut(&seq)
+                        .ok_or_else(|| anyhow::anyhow!("undo Append: unknown seq {seq}"))?;
+                    anyhow::ensure!(t.last_fill > 0, "undo Append: empty last block");
+                    t.last_fill -= 1;
+                }
+                BlockOp::Free { seq, block, pos, fill } => {
+                    // inverse: re-acquire the block and reinsert
+                    self.reacquire(block)?;
+                    let t = self.tables.entry(seq).or_default();
+                    let pos = pos.min(t.blocks.len());
+                    t.blocks.insert(pos, block);
+                    if pos == t.blocks.len() - 1 {
+                        t.last_fill = fill;
+                    }
+                }
+                BlockOp::RefInc { block } => {
+                    self.deref_block(block);
+                }
+                BlockOp::DropTable { seq, blocks, last_fill } => {
+                    for &b in &blocks {
+                        self.reacquire(b)?;
+                    }
+                    self.tables.insert(seq, BlockTable { blocks, last_fill });
+                }
+            }
+            undone += 1;
+        }
+        Ok(undone)
+    }
+
+    fn reacquire(&mut self, b: BlockId) -> Result<()> {
+        if self.refcnt[b] == 0 {
+            let pos = self
+                .free
+                .iter()
+                .position(|&x| x == b)
+                .ok_or_else(|| anyhow::anyhow!("reacquire: block {b} not free"))?;
+            self.free.swap_remove(pos);
+        }
+        self.refcnt[b] += 1;
+        Ok(())
+    }
+
+    fn deref_block(&mut self, b: BlockId) {
+        debug_assert!(self.refcnt[b] > 0);
+        self.refcnt[b] -= 1;
+        if self.refcnt[b] == 0 {
+            self.free.push(b);
+        }
+    }
+
+    // -- mutating ops (all logged) ------------------------------------------
+
+    /// Allocate a fresh block onto `seq`'s table.
+    pub fn alloc(&mut self, seq: SeqId) -> Result<BlockId> {
+        let Some(b) = self.free.pop() else {
+            bail!("out of KV blocks ({} total)", self.n_blocks)
+        };
+        self.refcnt[b] += 1;
+        let created_table = !self.tables.contains_key(&seq);
+        let t = self.tables.entry(seq).or_default();
+        let prev_fill = t.last_fill;
+        t.blocks.push(b);
+        t.last_fill = 0;
+        self.log_op(BlockOp::Alloc { seq, block: b, prev_fill, created_table });
+        Ok(b)
+    }
+
+    /// Append one token to `seq`, allocating a new block when the last one
+    /// is full. Returns (block, row) where the KV row lands.
+    pub fn append_token(&mut self, seq: SeqId) -> Result<(BlockId, usize)> {
+        let need_block = match self.tables.get(&seq) {
+            None => true,
+            Some(t) => t.blocks.is_empty() || t.last_fill == self.block_size,
+        };
+        if need_block {
+            self.alloc(seq)?;
+        }
+        let t = self.tables.get_mut(&seq).unwrap();
+        let row = t.last_fill;
+        t.last_fill += 1;
+        let block = *t.blocks.last().unwrap();
+        self.log_op(BlockOp::Append { seq });
+        Ok((block, row))
+    }
+
+    /// Increment an existing block's ref count (prefix sharing / CoW).
+    pub fn ref_inc(&mut self, block: BlockId) -> Result<()> {
+        anyhow::ensure!(self.refcnt[block] > 0, "ref_inc on unreferenced block");
+        self.refcnt[block] += 1;
+        self.log_op(BlockOp::RefInc { block });
+        Ok(())
+    }
+
+    /// Free the last block of `seq` (used when trimming).
+    pub fn free_last(&mut self, seq: SeqId) -> Result<()> {
+        let t = self
+            .tables
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow::anyhow!("free_last: unknown seq {seq}"))?;
+        let Some(b) = t.blocks.pop() else { bail!("free_last: empty table") };
+        let fill = t.last_fill;
+        let pos = t.blocks.len();
+        // a block only ever follows a full one, so the new tail (if any) is full
+        t.last_fill = if t.blocks.is_empty() { 0 } else { self.block_size };
+        self.deref_block(b);
+        self.log_op(BlockOp::Free { seq, block: b, pos, fill });
+        Ok(())
+    }
+
+    /// Drop a sequence's entire table (finished or migrated away).
+    pub fn drop_sequence(&mut self, seq: SeqId) -> Result<()> {
+        let Some(t) = self.tables.remove(&seq) else {
+            bail!("drop_sequence: unknown seq {seq}")
+        };
+        for &b in &t.blocks {
+            self.deref_block(b);
+        }
+        self.log_op(BlockOp::DropTable { seq, blocks: t.blocks, last_fill: t.last_fill });
+        Ok(())
+    }
+
+    /// A consistency audit: refcounts, free list, and tables must agree.
+    /// Used by tests and by the recovery path as a post-undo assertion.
+    pub fn audit(&self) -> Result<()> {
+        let mut expected = vec![0u32; self.n_blocks];
+        for t in self.tables.values() {
+            for &b in &t.blocks {
+                expected[b] += 1;
+            }
+        }
+        for b in 0..self.n_blocks {
+            // refcnt can exceed table count via ref_inc (sharing)
+            anyhow::ensure!(
+                self.refcnt[b] >= expected[b],
+                "block {b}: refcnt {} < table references {}",
+                self.refcnt[b],
+                expected[b]
+            );
+            let in_free = self.free.contains(&b);
+            anyhow::ensure!(
+                (self.refcnt[b] == 0) == in_free,
+                "block {b}: refcnt {} but free-list membership {}",
+                self.refcnt[b],
+                in_free
+            );
+        }
+        Ok(())
+    }
+
+    /// Snapshot for equality assertions in tests.
+    pub fn snapshot(&self) -> BlockSnapshot {
+        let mut free = self.free.clone();
+        free.sort_unstable();
+        let mut tables: Vec<(SeqId, BlockTable)> =
+            self.tables.iter().map(|(k, v)| (*k, v.clone())).collect();
+        tables.sort_by_key(|(k, _)| *k);
+        BlockSnapshot { free, refcnt: self.refcnt.clone(), tables }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockSnapshot {
+    pub free: Vec<BlockId>,
+    pub refcnt: Vec<u32>,
+    pub tables: Vec<(SeqId, BlockTable)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_allocates_on_boundary() {
+        let mut m = BlockManager::new(8, 4);
+        for i in 0..5 {
+            let (b, row) = m.append_token(1).unwrap();
+            if i < 4 {
+                assert_eq!(row, i);
+                assert_eq!(b, m.table(1).unwrap().blocks[0]);
+            } else {
+                assert_eq!(row, 0);
+                assert_eq!(m.table(1).unwrap().blocks.len(), 2);
+            }
+        }
+        assert_eq!(m.table(1).unwrap().n_tokens(4), 5);
+        m.audit().unwrap();
+    }
+
+    #[test]
+    fn undo_restores_step_start() {
+        let mut m = BlockManager::new(8, 4);
+        for _ in 0..6 {
+            m.append_token(1).unwrap();
+        }
+        for _ in 0..3 {
+            m.append_token(2).unwrap();
+        }
+        m.begin_step();
+        let snap = m.snapshot();
+        // a failed step: appends crossing block boundary + a finished seq
+        for _ in 0..4 {
+            m.append_token(1).unwrap();
+        }
+        m.append_token(2).unwrap();
+        m.drop_sequence(2).unwrap();
+        assert_ne!(m.snapshot(), snap);
+        m.undo_step().unwrap();
+        assert_eq!(m.snapshot(), snap);
+        m.audit().unwrap();
+    }
+
+    #[test]
+    fn undo_realloc_free() {
+        let mut m = BlockManager::new(4, 2);
+        m.append_token(7).unwrap();
+        m.append_token(7).unwrap();
+        m.append_token(7).unwrap(); // 2 blocks, last_fill 1
+        m.begin_step();
+        let snap = m.snapshot();
+        m.free_last(7).unwrap();
+        m.undo_step().unwrap();
+        assert_eq!(m.snapshot(), snap);
+    }
+
+    #[test]
+    fn undo_ref_inc() {
+        let mut m = BlockManager::new(4, 2);
+        let b = m.alloc(1).unwrap();
+        m.begin_step();
+        let snap = m.snapshot();
+        m.ref_inc(b).unwrap();
+        m.undo_step().unwrap();
+        assert_eq!(m.snapshot(), snap);
+    }
+
+    #[test]
+    fn oom_errors() {
+        let mut m = BlockManager::new(1, 2);
+        m.alloc(1).unwrap();
+        assert!(m.alloc(2).is_err());
+    }
+
+    #[test]
+    fn audit_detects_agreement() {
+        let mut m = BlockManager::new(4, 2);
+        m.append_token(1).unwrap();
+        m.ref_inc(m.table(1).unwrap().blocks[0]).unwrap();
+        m.audit().unwrap();
+    }
+
+    #[test]
+    fn logging_disabled_skips_log() {
+        let mut m = BlockManager::new(4, 2);
+        m.logging_enabled = false;
+        m.append_token(1).unwrap();
+        assert_eq!(m.log_len(), 0);
+    }
+
+    #[test]
+    fn drop_sequence_returns_blocks() {
+        let mut m = BlockManager::new(4, 2);
+        for _ in 0..4 {
+            m.append_token(9).unwrap();
+        }
+        assert_eq!(m.n_free(), 2);
+        m.drop_sequence(9).unwrap();
+        assert_eq!(m.n_free(), 4);
+        m.audit().unwrap();
+    }
+}

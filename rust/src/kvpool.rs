@@ -1,0 +1,200 @@
+//! The KV tensor pool behind the block table: per-layer paged K/V storage.
+//!
+//! In the real system this memory lives in NPU HBM; here it lives inside
+//! the owning executor so that a device failure (which destroys the
+//! executor) loses the KV exactly like the paper assumes ("the sequences'
+//! KV caches are assumed to be missing due to failure", §3.2). The
+//! coordinator gathers a sequence's pages into the contiguous
+//! `[B, S, H, Dh]` layout the `attn_decode_*` artifacts read, and scatters
+//! each step's new K/V row back into the right page.
+
+use crate::config::ModelMeta;
+use crate::kvcache::BlockTable;
+use crate::tensor::Tensor;
+use crate::Result;
+
+pub struct KvPool {
+    n_layers: usize,
+    n_blocks: usize,
+    block_size: usize,
+    h: usize,
+    dh: usize,
+    row: usize, // H * Dh floats per token per layer
+    /// `[layer][block * block_size * row]`
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvPool {
+    pub fn new(meta: &ModelMeta, n_blocks: usize, block_size: usize) -> Self {
+        let row = meta.n_heads * meta.d_head;
+        let per_layer = n_blocks * block_size * row;
+        KvPool {
+            n_layers: meta.n_layers,
+            n_blocks,
+            block_size,
+            h: meta.n_heads,
+            dh: meta.d_head,
+            row,
+            k: vec![vec![0.0; per_layer]; meta.n_layers],
+            v: vec![vec![0.0; per_layer]; meta.n_layers],
+        }
+    }
+
+    /// HBM-analog footprint (KV warmup accounting in the Generator step).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.n_blocks * self.block_size * self.row * 4
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    fn off(&self, block: usize, slot: usize) -> usize {
+        debug_assert!(block < self.n_blocks && slot < self.block_size);
+        (block * self.block_size + slot) * self.row
+    }
+
+    /// Store one token's K/V row (`[H*Dh]` each) for one layer.
+    pub fn write_row(
+        &mut self,
+        layer: usize,
+        block: usize,
+        slot: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        anyhow::ensure!(k.len() == self.row && v.len() == self.row, "bad KV row width");
+        let o = self.off(block, slot);
+        self.k[layer][o..o + self.row].copy_from_slice(k);
+        self.v[layer][o..o + self.row].copy_from_slice(v);
+        Ok(())
+    }
+
+    /// Gather the pages of `tables` (one per batch element) into contiguous
+    /// `[B, max_seq, H, Dh]` K and V tensors padded with zeros. `lens[i]`
+    /// tokens are valid for element i. (The decode-attention kernel masks
+    /// positions >= len, so the padding content is irrelevant — covered by
+    /// `test_cache_content_beyond_len_irrelevant` on the python side.)
+    pub fn gather(
+        &self,
+        layer: usize,
+        tables: &[&BlockTable],
+        lens: &[usize],
+        max_seq: usize,
+    ) -> Result<(Tensor, Tensor)> {
+        let b = tables.len();
+        let mut kd = vec![0.0f32; b * max_seq * self.row];
+        let mut vd = vec![0.0f32; b * max_seq * self.row];
+        for (i, (t, &len)) in tables.iter().zip(lens).enumerate() {
+            anyhow::ensure!(len <= max_seq, "sequence longer than max_seq");
+            for tok in 0..len {
+                let blk = t.blocks[tok / self.block_size];
+                let o = self.off(blk, tok % self.block_size);
+                let dst = (i * max_seq + tok) * self.row;
+                kd[dst..dst + self.row].copy_from_slice(&self.k[layer][o..o + self.row]);
+                vd[dst..dst + self.row].copy_from_slice(&self.v[layer][o..o + self.row]);
+            }
+        }
+        let shape = vec![b, max_seq, self.h, self.dh];
+        Ok((Tensor::f32(shape.clone(), kd), Tensor::f32(shape, vd)))
+    }
+
+    /// Scatter a prefill's `[1, S, H, Dh]` K/V tensors into pages
+    /// (positions `0..len`).
+    pub fn scatter_prefill(
+        &mut self,
+        layer: usize,
+        table: &BlockTable,
+        len: usize,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Result<()> {
+        let kv = k.as_f32()?;
+        let vv = v.as_f32()?;
+        anyhow::ensure!(kv.len() >= len * self.row, "prefill K too small");
+        for tok in 0..len {
+            let blk = table.blocks[tok / self.block_size];
+            let o = self.off(blk, tok % self.block_size);
+            let src = tok * self.row;
+            self.k[layer][o..o + self.row].copy_from_slice(&kv[src..src + self.row]);
+            self.v[layer][o..o + self.row].copy_from_slice(&vv[src..src + self.row]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::BlockManager;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 64, d_model: 64, n_heads: 4, d_head: 16, n_layers: 2,
+            n_dense_layers: 1, n_experts: 8, top_k: 2, d_ff: 32, max_seq: 32,
+            ln_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn write_then_gather_roundtrips() {
+        let m = meta();
+        let mut pool = KvPool::new(&m, 8, 4);
+        let mut bm = BlockManager::new(8, 4);
+        // 6 tokens for seq 1 -> 2 blocks
+        let mut rows = Vec::new();
+        for i in 0..6 {
+            let (blk, slot) = bm.append_token(1).unwrap();
+            let k: Vec<f32> = (0..64).map(|x| (i * 100 + x) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            pool.write_row(0, blk, slot, &k, &v).unwrap();
+            rows.push((k, v));
+        }
+        let t = bm.table(1).unwrap();
+        let (k, v) = pool.gather(0, &[t], &[6], 16).unwrap();
+        assert_eq!(k.shape, vec![1, 16, 4, 16]);
+        let kd = k.as_f32().unwrap();
+        let vd = v.as_f32().unwrap();
+        for i in 0..6 {
+            assert_eq!(&kd[i * 64..(i + 1) * 64], rows[i].0.as_slice());
+            assert_eq!(&vd[i * 64..(i + 1) * 64], rows[i].1.as_slice());
+        }
+        // padding stays zero
+        assert!(kd[6 * 64..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scatter_prefill_matches_write_rows() {
+        let m = meta();
+        let mut pool = KvPool::new(&m, 8, 4);
+        let mut bm = BlockManager::new(8, 4);
+        for _ in 0..5 {
+            bm.append_token(2).unwrap();
+        }
+        let t = bm.table(2).unwrap().clone();
+        let k = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| x as f32).collect());
+        let v = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| (x * 2) as f32).collect());
+        pool.scatter_prefill(0, &t, 5, &k, &v).unwrap();
+        let (gk, gv) = pool.gather(0, &[&t], &[5], 8).unwrap();
+        assert_eq!(&gk.as_f32().unwrap()[..5 * 64], &k.as_f32().unwrap()[..5 * 64]);
+        assert_eq!(&gv.as_f32().unwrap()[..5 * 64], &v.as_f32().unwrap()[..5 * 64]);
+    }
+
+    #[test]
+    fn gather_batch_of_two() {
+        let m = meta();
+        let mut pool = KvPool::new(&m, 8, 4);
+        let mut bm = BlockManager::new(8, 4);
+        let (b1, s1) = bm.append_token(1).unwrap();
+        let (b2, s2) = bm.append_token(2).unwrap();
+        pool.write_row(1, b1, s1, &[1.0; 64], &[2.0; 64]).unwrap();
+        pool.write_row(1, b2, s2, &[3.0; 64], &[4.0; 64]).unwrap();
+        let t1 = bm.table(1).unwrap().clone();
+        let t2 = bm.table(2).unwrap().clone();
+        let (k, _) = pool.gather(1, &[&t1, &t2], &[1, 1], 4).unwrap();
+        let kd = k.as_f32().unwrap();
+        assert_eq!(kd[0], 1.0);
+        assert_eq!(kd[4 * 64], 3.0); // second batch element starts at S*row
+    }
+}

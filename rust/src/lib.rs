@@ -1,0 +1,57 @@
+//! # ReviveMoE — fast recovery for hardware failures in MoE LLM inference
+//!
+//! Reproduction of *ReviveMoE* (CS.DC 2026) as a three-layer Rust + JAX +
+//! Pallas stack. This crate is **Layer 3**: the FlowServe-like serving
+//! coordinator (engine, DP/MoE executors, paged KV cache with an undo log,
+//! XCCL-sim collectives, heartbeat failure detection) plus the ReviveMoE
+//! recovery procedure itself. Layers 2 (JAX model) and 1 (Pallas kernels)
+//! live under `python/compile/` and are AOT-lowered to HLO-text artifacts
+//! that this crate loads and executes through the PJRT C API (`xla` crate).
+//! Python is never on the request path.
+//!
+//! Module map (see DESIGN.md for the paper-section correspondence):
+//!
+//! - [`config`]     deployment + recovery configuration
+//! - [`tensor`]     minimal host tensor type crossing the PJRT boundary
+//! - [`cluster`]    simulated NPUs, fault codes L1–L6, device plugin,
+//!                  heartbeat monitor (§3.1)
+//! - [`runtime`]    PJRT device threads, artifact store, graph cache (§3.6)
+//! - [`comms`]      XCCL-sim: domains, rank compaction, dispatch/combine,
+//!                  A2E/E2A (§2.3, §3.5)
+//! - [`kvcache`]    paged KV block manager + log-based undo recovery (§3.3)
+//! - [`moe`]        expert placement, redundancy, missing-expert masks,
+//!                  dense-FFN TP groups (§3.4)
+//! - [`scheduler`]  sequences + per-rank continuous batching (§3.2)
+//! - [`weights`]    weight manifest loading / expert slicing
+//! - [`executor`]   DPExecutor / MoEExecutor / generator layer loop (§2.2)
+//! - [`engine`]     global engine: intake, dispatch, serving loop
+//! - [`recovery`]   ReviveMoE recovery + full-reinit baseline (§3, §4.1)
+//! - [`metrics`]    Table-1 timing categories, latency/throughput stats
+//! - [`workload`]   synthetic request generator + eval-set loading (§4.2)
+//! - [`evalharness`] lost-expert accuracy evaluation (Table 2 / Fig 6)
+
+pub mod artifacts;
+pub mod cluster;
+pub mod comms;
+pub mod config;
+pub mod engine;
+pub mod evalharness;
+pub mod executor;
+pub mod json;
+pub mod kvcache;
+pub mod kvpool;
+pub mod metrics;
+pub mod moe;
+pub mod recovery;
+pub mod runtime;
+pub mod scheduler;
+pub mod tensor;
+pub mod weights;
+pub mod workload;
+
+pub use config::{DeployMode, DeploymentConfig, ModelMeta, RecoveryPolicy};
+pub use engine::Engine;
+pub use recovery::{RecoveryReport, ReviveMoE};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

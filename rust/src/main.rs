@@ -1,0 +1,256 @@
+//! `revivemoe` — leader entrypoint / CLI for the ReviveMoE reproduction.
+//!
+//! Usage:
+//!   revivemoe [--artifacts DIR] [--mode disaggregated|collocated] <command>
+//!
+//! Commands:
+//!   serve     [--requests N] [--seed S]      serve a synthetic workload
+//!   failover  [--device D] [--requests N] [--hung]
+//!                                            serve, inject a failure,
+//!                                            recover with ReviveMoE, finish
+//!   eval      [--samples N]                  §4.2 lost-experts accuracy sweep
+//!   info                                     deployment + artifact info
+//!
+//! (CLI is hand-rolled: the offline build environment carries no clap.)
+
+use revivemoe::cluster::{FailureBehavior, FaultLevel};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::recovery::ReviveMoE;
+use revivemoe::workload::{self, EvalSet};
+use revivemoe::{evalharness, Result};
+
+struct Args {
+    artifacts: String,
+    mode: String,
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut artifacts = "artifacts".to_string();
+    let mut mode = "disaggregated".to_string();
+    let mut cmd = String::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--artifacts" => {
+                artifacts = argv.get(i + 1).cloned().unwrap_or_default();
+                i += 2;
+            }
+            "--mode" => {
+                mode = argv.get(i + 1).cloned().unwrap_or_default();
+                i += 2;
+            }
+            f if f.starts_with("--") => {
+                let key = f.trim_start_matches("--").to_string();
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key, argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key, "true".to_string());
+                    i += 1;
+                }
+            }
+            c => {
+                cmd = c.to_string();
+                i += 1;
+            }
+        }
+    }
+    Args { artifacts, mode, cmd, flags }
+}
+
+impl Args {
+    fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn flag_bool(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let cfg = match args.mode.as_str() {
+        "collocated" => DeploymentConfig::collocated_default(&args.artifacts),
+        "single" => DeploymentConfig::single_rank(&args.artifacts),
+        _ => DeploymentConfig::disaggregated_default(&args.artifacts),
+    };
+    match args.cmd.as_str() {
+        "serve" => {
+            let requests = args.flag_usize("requests", 32);
+            let seed = args.flag_usize("seed", 7) as u64;
+            let (mut engine, bd) = Engine::boot(cfg)?;
+            println!("{}", bd.render("boot breakdown"));
+            engine.stats.start();
+            for req in workload::gen_mixed(requests, seed)? {
+                engine.submit(req)?;
+            }
+            let done = engine.run_to_completion(10_000)?;
+            engine.stats.stop();
+            for c in done.iter().take(8) {
+                println!(
+                    "seq {:>3} [{:<7}] {:?} -> {:?}",
+                    c.seq_id,
+                    c.task,
+                    workload::decode(&c.prompt),
+                    workload::decode(&c.output)
+                );
+            }
+            println!("{}", engine.stats.report());
+            engine.shutdown();
+        }
+        "failover" => {
+            let device = args.flag_usize("device", 5);
+            let requests = args.flag_usize("requests", 24);
+            let hung = args.flag_bool("hung");
+            let (mut engine, _) = Engine::boot(cfg)?;
+            engine.stats.start();
+            for req in workload::gen_mixed(requests, 11)? {
+                engine.submit(req)?;
+            }
+            for _ in 0..4 {
+                engine.step()?;
+            }
+            let behavior = if hung { FailureBehavior::Hung } else { FailureBehavior::Erroring };
+            engine.executors[&device].handle.set_failed(behavior);
+            engine.plugin.post_fault(device, FaultLevel::L6, behavior, "cli-injected");
+            let ann = engine.detect_failure().expect("failure must be detected");
+            println!("detected failure on device {} ({})", ann.device, ann.error_type);
+            let report = ReviveMoE::recover(&mut engine, &ann)?;
+            println!("{}", report.breakdown.render("ReviveMoE recovery"));
+            println!(
+                "role={} recovery={:?} migrated={} undone_ops={} recompiled={}",
+                report.role,
+                report.moe_recovery,
+                report.migrated_sequences,
+                report.undone_block_ops,
+                report.recompiled_graphs
+            );
+            let done = engine.run_to_completion(10_000)?;
+            engine.stats.stop();
+            println!("completed {} requests after recovery", done.len());
+            println!("{}", engine.stats.report());
+            engine.shutdown();
+        }
+        "eval" => {
+            let samples = args.flag_usize("samples", 24);
+            let (mut engine, _) = Engine::boot(cfg)?;
+            let dir = std::path::Path::new(&args.artifacts).join("eval");
+            let sets = EvalSet::load_all(&dir)?;
+            let table = evalharness::run_lost_experts(
+                &mut engine,
+                &sets,
+                &evalharness::default_fractions(),
+                samples,
+            )?;
+            println!("{}", table.render());
+            engine.shutdown();
+        }
+        "perf-probe" => {
+            // time each artifact class's execute (the §Perf measurement tool)
+            use revivemoe::artifacts::ArtifactStore;
+            use revivemoe::runtime::{Arg, SimDevice};
+            use revivemoe::tensor::Tensor;
+            use revivemoe::weights::WeightStore;
+            let art = std::path::Path::new(&args.artifacts);
+            let meta = revivemoe::config::ModelMeta::load(art)?;
+            let store = WeightStore::open(&art.join("weights.json"), &art.join("weights.bin"))?;
+            let arts = ArtifactStore::open(&art.join("hlo"))?;
+            let dev = SimDevice::spawn(0);
+            dev.handle.load_weights(store.load_all()?)?;
+            dev.handle.load_weights(store.load_expert_slots(&meta, &(0..8).collect::<Vec<_>>())?)?;
+            dev.handle.load_weights(store.load_dense_shard(&meta, 0, 2)?)?;
+            let (h, dh, s, d, e, v) = (meta.n_heads, meta.d_head, meta.max_seq,
+                                       meta.d_model, meta.n_experts, meta.vocab);
+            let _ = v;
+            let probes: Vec<(&str, Vec<Arg>)> = vec![
+                ("embed_prefill_s32", vec![
+                    Arg::Value(Tensor::i32(vec![1, 32], vec![1; 32])),
+                    Arg::Weight("embed".into()), Arg::Weight("pos".into())]),
+                ("attn_prefill_s32", {
+                    let mut a = vec![Arg::Value(Tensor::zeros(vec![1, 32, d]))];
+                    for n in revivemoe::weights::ATTN_WEIGHT_ORDER {
+                        a.push(Arg::Weight(format!("layers.1.{n}")));
+                    }
+                    a
+                }),
+                ("attn_decode_b8", {
+                    let mut a = vec![
+                        Arg::Value(Tensor::zeros(vec![8, d])),
+                        Arg::Value(Tensor::zeros(vec![8, s, h, dh])),
+                        Arg::Value(Tensor::zeros(vec![8, s, h, dh])),
+                        Arg::Value(Tensor::i32(vec![8], vec![4; 8])),
+                    ];
+                    for n in revivemoe::weights::ATTN_WEIGHT_ORDER {
+                        a.push(Arg::Weight(format!("layers.1.{n}")));
+                    }
+                    a
+                }),
+                ("router_t32", vec![
+                    Arg::Value(Tensor::zeros(vec![32, d])),
+                    Arg::Weight("layers.1.router".into()),
+                    Arg::Value(Tensor::zeros(vec![e]))]),
+                ("router_t8", vec![
+                    Arg::Value(Tensor::zeros(vec![8, d])),
+                    Arg::Weight("layers.1.router".into()),
+                    Arg::Value(Tensor::zeros(vec![e]))]),
+                ("moe_e8_c32", vec![
+                    Arg::Value(Tensor::zeros(vec![8, 32, d])),
+                    Arg::Weight("layers.1.e_w1.slots".into()),
+                    Arg::Weight("layers.1.e_w2.slots".into())]),
+                ("moe_e8_c8", vec![
+                    Arg::Value(Tensor::zeros(vec![8, 8, d])),
+                    Arg::Weight("layers.1.e_w1.slots".into()),
+                    Arg::Weight("layers.1.e_w2.slots".into())]),
+                ("dense_tp2_t32", vec![
+                    Arg::Value(Tensor::zeros(vec![32, d])),
+                    Arg::Weight("layers.0.d_w1.s0".into()),
+                    Arg::Weight("layers.0.d_w2.s0".into())]),
+                ("lm_head_t32", vec![
+                    Arg::Value(Tensor::zeros(vec![32, d])),
+                    Arg::Weight("lnf_g".into()), Arg::Weight("lnf_b".into()),
+                    Arg::Weight("embed".into())]),
+            ];
+            for (name, probe_args) in probes {
+                if !arts.contains(name) {
+                    continue;
+                }
+                dev.handle.compile(name, arts.path(name)?)?;
+                // warmup
+                dev.handle.execute(name, probe_args.clone())?;
+                let n = 20;
+                let t0 = std::time::Instant::now();
+                for _ in 0..n {
+                    dev.handle.execute(name, probe_args.clone())?;
+                }
+                let per = t0.elapsed().as_secs_f64() / n as f64;
+                println!("{name:<20} {:>10.3} ms/execute", per * 1e3);
+            }
+            dev.handle.shutdown();
+        }
+        "info" => {
+            let (engine, bd) = Engine::boot(cfg)?;
+            println!("{}", bd.render("boot breakdown"));
+            println!(
+                "mode={:?} devices={} attn_ranks={:?} moe_ranks={:?} experts={} artifacts={}",
+                engine.cfg.mode,
+                engine.cfg.n_devices(),
+                engine.attn_order,
+                engine.moe_order,
+                engine.meta.n_experts,
+                engine.arts.len()
+            );
+            engine.shutdown();
+        }
+        other => {
+            eprintln!("unknown command {other:?}; see module docs (serve|failover|eval|info)");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

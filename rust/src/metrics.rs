@@ -1,0 +1,258 @@
+//! Timing breakdowns (paper Table 1 categories) and serving statistics.
+//!
+//! Every reinitialization / recovery pass produces a [`Breakdown`] whose
+//! categories match the paper's Figure 1 / Figure 5 stacked bars exactly, so
+//! the bench drivers can print rows directly comparable to the paper.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+
+/// Paper Table 1 timing categories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Time to initialize the engine.
+    Engine,
+    /// Launch executor processes, constructors, Ray-resource allocation.
+    ExecutorProcesses,
+    /// torch.distributed (HCCL/GLOO) group setup.
+    DistributedGroups,
+    /// XCCL communication domain formation.
+    Xccl,
+    /// Role switch a DPExecutor to MoEExecutor.
+    RoleSwitch,
+    /// Generator init: model params, weight loading, KV warmup.
+    Generator,
+    /// Load the cached graph from disk.
+    ReadCache,
+    /// Cached compile of the computation graph.
+    Compile,
+    /// Everything under 100 ms: scheduler init, cancellations, migration.
+    Other,
+}
+
+impl Category {
+    pub const ALL: [Category; 9] = [
+        Category::Engine,
+        Category::ExecutorProcesses,
+        Category::DistributedGroups,
+        Category::Xccl,
+        Category::RoleSwitch,
+        Category::Generator,
+        Category::ReadCache,
+        Category::Compile,
+        Category::Other,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Engine => "Engine",
+            Category::ExecutorProcesses => "Executor Processes",
+            Category::DistributedGroups => "Distributed Groups",
+            Category::Xccl => "XCCL",
+            Category::RoleSwitch => "Role Switch",
+            Category::Generator => "Generator",
+            Category::ReadCache => "Read Cache",
+            Category::Compile => "Compile",
+            Category::Other => "Other",
+        }
+    }
+}
+
+/// A per-category timing breakdown for one reinit/recovery pass.
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    entries: Vec<(Category, Duration)>,
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, cat: Category, d: Duration) {
+        self.entries.push((cat, d));
+    }
+
+    /// Time `f`, file it under `cat`, and return its value.
+    pub fn timed<T>(&mut self, cat: Category, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(cat, t0.elapsed());
+        out
+    }
+
+    pub fn get(&self, cat: Category) -> Duration {
+        self.entries
+            .iter()
+            .filter(|(c, _)| *c == cat)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        self.entries.extend(other.entries.iter().cloned());
+    }
+
+    /// Paper-style table: one row per category plus total, in ms.
+    pub fn render(&self, title: &str) -> String {
+        let mut s = format!("{title}\n");
+        for cat in Category::ALL {
+            let d = self.get(cat);
+            if !d.is_zero() {
+                s += &format!("  {:<20} {:>10.1} ms\n", cat.name(), d.as_secs_f64() * 1e3);
+            }
+        }
+        s += &format!("  {:<20} {:>10.1} ms\n", "TOTAL", self.total().as_secs_f64() * 1e3);
+        s
+    }
+}
+
+impl fmt::Display for Breakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.render("breakdown"))
+    }
+}
+
+/// Online latency/throughput statistics for the serving loop.
+#[derive(Clone, Debug, Default)]
+pub struct ServingStats {
+    pub requests_completed: usize,
+    pub tokens_generated: usize,
+    pub decode_steps: usize,
+    pub prefills: usize,
+    pub bytes_dispatched: usize,
+    pub bytes_combined: usize,
+    latencies_ms: Vec<f64>,
+    ttft_ms: Vec<f64>,
+    started: Option<Instant>,
+    pub wall: Duration,
+}
+
+impl ServingStats {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.wall += t0.elapsed();
+        }
+    }
+
+    pub fn record_completion(&mut self, latency: Duration, n_tokens: usize) {
+        self.requests_completed += 1;
+        self.tokens_generated += n_tokens;
+        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_ttft(&mut self, ttft: Duration) {
+        self.ttft_ms.push(ttft.as_secs_f64() * 1e3);
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.tokens_generated as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    fn pct(v: &[f64], p: f64) -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        let mut s = v.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        Self::pct(&self.latencies_ms, 0.50)
+    }
+
+    pub fn latency_p99(&self) -> f64 {
+        Self::pct(&self.latencies_ms, 0.99)
+    }
+
+    pub fn ttft_p50(&self) -> f64 {
+        Self::pct(&self.ttft_ms, 0.50)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} steps={} prefills={} wall={:.2}s \
+             tput={:.1} tok/s p50={:.1}ms p99={:.1}ms ttft_p50={:.1}ms \
+             dispatched={}B combined={}B",
+            self.requests_completed,
+            self.tokens_generated,
+            self.decode_steps,
+            self.prefills,
+            self.wall.as_secs_f64(),
+            self.throughput_tok_s(),
+            self.latency_p50(),
+            self.latency_p99(),
+            self.ttft_p50(),
+            self.bytes_dispatched,
+            self.bytes_combined,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates_per_category() {
+        let mut b = Breakdown::new();
+        b.add(Category::Engine, Duration::from_millis(10));
+        b.add(Category::Engine, Duration::from_millis(5));
+        b.add(Category::Compile, Duration::from_millis(20));
+        assert_eq!(b.get(Category::Engine), Duration::from_millis(15));
+        assert_eq!(b.total(), Duration::from_millis(35));
+    }
+
+    #[test]
+    fn timed_records_and_returns() {
+        let mut b = Breakdown::new();
+        let v = b.timed(Category::Other, || 42);
+        assert_eq!(v, 42);
+        assert!(b.get(Category::Other) > Duration::ZERO);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let mut b = Breakdown::new();
+        b.add(Category::Xccl, Duration::from_millis(3));
+        let s = b.render("t");
+        assert!(s.contains("XCCL"));
+        assert!(s.contains("TOTAL"));
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = ServingStats::default();
+        for i in 1..=100 {
+            s.record_completion(Duration::from_millis(i), 1);
+        }
+        assert!(s.latency_p50() >= 49.0 && s.latency_p50() <= 52.0);
+        assert!(s.latency_p99() >= 98.0);
+    }
+
+    #[test]
+    fn merge_combines_entries() {
+        let mut a = Breakdown::new();
+        a.add(Category::Engine, Duration::from_millis(1));
+        let mut b = Breakdown::new();
+        b.add(Category::Engine, Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.get(Category::Engine), Duration::from_millis(3));
+    }
+}

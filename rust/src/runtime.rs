@@ -1,0 +1,418 @@
+//! PJRT runtime: one OS thread per simulated NPU.
+//!
+//! Each [`SimDevice`] thread owns its own `xla::PjRtClient` (the crate's
+//! client is `Rc`-based and deliberately `!Send` — exactly the "a device is
+//! an isolated execution domain" property we want), its compiled
+//! executables (the graph cache), and its resident weight literals (the
+//! HBM analog). The coordinator talks to it through a command channel; a
+//! failed device either errors every command or swallows them entirely
+//! ([`FailureBehavior::Hung`]), so failure detection has to go through the
+//! heartbeat/annotation machinery of [`crate::cluster`] — same as the paper.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{DeviceId, FailureBehavior, ProbeError};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Default per-command timeout; a hung device surfaces as a timeout here
+/// (and as a heartbeat miss in the monitor).
+pub const DEFAULT_CMD_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// An executable argument: either a device-resident weight (by name) or a
+/// host value shipped with the call.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    Weight(String),
+    Value(Tensor),
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CompileStat {
+    pub name: String,
+    pub read_s: f64,
+    pub compile_s: f64,
+    pub hlo_bytes: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct DeviceStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub weight_bytes: usize,
+    pub executables: usize,
+}
+
+enum Cmd {
+    Ping { reply: Sender<bool> },
+    Compile { name: String, path: PathBuf, reply: Sender<Result<CompileStat>> },
+    DropExecutables { names: Option<Vec<String>>, reply: Sender<usize> },
+    HasExecutable { name: String, reply: Sender<bool> },
+    LoadWeights { tensors: Vec<(String, Tensor)>, reply: Sender<Result<usize>> },
+    DropWeightsPrefix { prefix: String, reply: Sender<usize> },
+    Execute { exe: String, args: Vec<Arg>, reply: Sender<Result<Vec<Tensor>>> },
+    Stats { reply: Sender<DeviceStats> },
+    SetFailed { behavior: FailureBehavior },
+    Shutdown,
+}
+
+/// Cloneable handle to a device thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    pub id: DeviceId,
+    tx: Sender<Cmd>,
+    pub cmd_timeout: Duration,
+}
+
+/// A spawned simulated NPU.
+pub struct SimDevice {
+    pub handle: DeviceHandle,
+    pub join: JoinHandle<()>,
+}
+
+impl SimDevice {
+    /// Spawn the device thread. The PJRT CPU client is created inside the
+    /// thread (it is not `Send`); creation cost is part of what the paper's
+    /// "Executor Processes" / "Generator" categories measure.
+    pub fn spawn(id: DeviceId) -> SimDevice {
+        let (tx, rx) = mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name(format!("npu-{id}"))
+            .spawn(move || device_main(id, rx))
+            .expect("spawn device thread");
+        SimDevice {
+            handle: DeviceHandle { id, tx, cmd_timeout: DEFAULT_CMD_TIMEOUT },
+            join,
+        }
+    }
+}
+
+fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
+    xla::set_tf_min_log_level(xla::TfLogLevel::Warning);
+    // Eager client creation: the PJRT client is the "NPU context" whose
+    // construction cost belongs to executor-process startup (it is paid by
+    // a full reinitialization but NOT by ReviveMoE recovery, which keeps
+    // surviving processes alive — a real component of the paper's saving).
+    let mut client: Option<xla::PjRtClient> = xla::PjRtClient::cpu().ok();
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut weights: HashMap<String, xla::Literal> = HashMap::new();
+    let mut weight_bytes: usize = 0;
+    let mut stats = DeviceStats::default();
+    let mut failed: Option<FailureBehavior> = None;
+    // Commands swallowed while hung: kept alive (reply senders NOT dropped)
+    // so callers block until their timeout — a genuine hang, not an error.
+    let mut graveyard: Vec<Cmd> = Vec::new();
+
+    while let Ok(cmd) = rx.recv() {
+        // A hung device swallows everything except the simulator's escape
+        // hatches (SetFailed to "un-hang" in tests, Shutdown = SIGKILL).
+        match (&failed, &cmd) {
+            (Some(FailureBehavior::Hung), Cmd::Shutdown) => break,
+            (Some(FailureBehavior::Hung), Cmd::SetFailed { .. }) => {}
+            (Some(FailureBehavior::Hung), _) => {
+                graveyard.push(cmd);
+                continue;
+            }
+            _ => {}
+        }
+        match cmd {
+            Cmd::Ping { reply } => {
+                let _ = reply.send(failed.is_none());
+            }
+            Cmd::SetFailed { behavior } => {
+                failed = Some(behavior);
+                // the hardware is gone: weights and graphs are lost
+                executables.clear();
+                weights.clear();
+                weight_bytes = 0;
+            }
+            Cmd::Shutdown => break,
+            Cmd::Compile { name, path, reply } => {
+                if failed.is_some() {
+                    let _ = reply.send(Err(anyhow::anyhow!("device failed")));
+                    continue;
+                }
+                let _ = reply.send(do_compile(&mut client, &mut executables, &name, &path)
+                    .inspect(|_| {
+                        stats.compiles += 1;
+                        stats.executables = executables.len();
+                    }));
+            }
+            Cmd::DropExecutables { names, reply } => {
+                let n = match names {
+                    None => {
+                        let n = executables.len();
+                        executables.clear();
+                        n
+                    }
+                    Some(list) => list.iter().filter(|n| executables.remove(*n).is_some()).count(),
+                };
+                stats.executables = executables.len();
+                let _ = reply.send(n);
+            }
+            Cmd::HasExecutable { name, reply } => {
+                let _ = reply.send(executables.contains_key(&name));
+            }
+            Cmd::LoadWeights { tensors, reply } => {
+                if failed.is_some() {
+                    let _ = reply.send(Err(anyhow::anyhow!("device failed")));
+                    continue;
+                }
+                let r = (|| -> Result<usize> {
+                    let mut n = 0;
+                    for (name, t) in tensors {
+                        n += t.nbytes();
+                        weights.insert(name, t.to_literal()?);
+                    }
+                    Ok(n)
+                })();
+                if let Ok(n) = &r {
+                    weight_bytes += n;
+                    stats.weight_bytes = weight_bytes;
+                }
+                let _ = reply.send(r);
+            }
+            Cmd::DropWeightsPrefix { prefix, reply } => {
+                let keys: Vec<String> =
+                    weights.keys().filter(|k| k.starts_with(&prefix)).cloned().collect();
+                for k in &keys {
+                    if let Some(lit) = weights.remove(k) {
+                        weight_bytes = weight_bytes.saturating_sub(lit.size_bytes());
+                    }
+                }
+                stats.weight_bytes = weight_bytes;
+                let _ = reply.send(keys.len());
+            }
+            Cmd::Execute { exe, args, reply } => {
+                if failed.is_some() {
+                    let _ = reply.send(Err(anyhow::anyhow!("device failed")));
+                    continue;
+                }
+                let r = do_execute(&executables, &weights, &exe, args);
+                if r.is_ok() {
+                    stats.executions += 1;
+                }
+                let _ = reply.send(r);
+            }
+            Cmd::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+        }
+    }
+}
+
+fn do_compile(
+    client: &mut Option<xla::PjRtClient>,
+    executables: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    path: &PathBuf,
+) -> Result<CompileStat> {
+    if client.is_none() {
+        *client = Some(xla::PjRtClient::cpu()?);
+    }
+    let c = client.as_ref().unwrap();
+    let t0 = Instant::now();
+    let hlo_bytes = std::fs::metadata(path).map(|m| m.len() as usize).unwrap_or(0);
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let read_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = c.compile(&comp)?;
+    let compile_s = t1.elapsed().as_secs_f64();
+    executables.insert(name.to_string(), exe);
+    Ok(CompileStat { name: name.to_string(), read_s, compile_s, hlo_bytes })
+}
+
+fn do_execute(
+    executables: &HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: &HashMap<String, xla::Literal>,
+    exe: &str,
+    args: Vec<Arg>,
+) -> Result<Vec<Tensor>> {
+    let exe = executables
+        .get(exe)
+        .ok_or_else(|| anyhow::anyhow!("executable '{exe}' not compiled on this device"))?;
+    // materialize owned literals for Value args, then borrow in order
+    let mut owned: Vec<xla::Literal> = Vec::new();
+    let mut kinds: Vec<std::result::Result<&str, usize>> = Vec::with_capacity(args.len());
+    for a in &args {
+        match a {
+            Arg::Weight(name) => kinds.push(Ok(name.as_str())),
+            Arg::Value(t) => {
+                kinds.push(Err(owned.len()));
+                owned.push(t.to_literal()?);
+            }
+        }
+    }
+    let mut refs: Vec<&xla::Literal> = Vec::with_capacity(args.len());
+    for k in kinds {
+        match k {
+            Ok(name) => refs.push(
+                weights
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("weight '{name}' not resident on device"))?,
+            ),
+            Err(i) => refs.push(&owned[i]),
+        }
+    }
+    let outs = exe.execute::<&xla::Literal>(&refs)?;
+    let lit = outs[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: the result is always a tuple
+    let parts = lit.to_tuple()?;
+    parts.iter().map(Tensor::from_literal).collect()
+}
+
+impl DeviceHandle {
+    fn send(&self, cmd: Cmd) -> Result<()> {
+        self.tx.send(cmd).map_err(|_| anyhow::anyhow!("device {} thread gone", self.id))
+    }
+
+    fn wait<T>(&self, rx: Receiver<T>) -> Result<T> {
+        match rx.recv_timeout(self.cmd_timeout) {
+            Ok(v) => Ok(v),
+            Err(RecvTimeoutError::Timeout) => {
+                anyhow::bail!("device {} command timed out (hung?)", self.id)
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("device {} disconnected", self.id)
+            }
+        }
+    }
+
+    /// Heartbeat probe (used by [`crate::cluster::HeartbeatMonitor`]).
+    pub fn ping(&self, timeout: Duration) -> std::result::Result<bool, ProbeError> {
+        let (tx, rx) = mpsc::channel();
+        if self.tx.send(Cmd::Ping { reply: tx }).is_err() {
+            return Err(ProbeError::Disconnected);
+        }
+        match rx.recv_timeout(timeout) {
+            Ok(b) => Ok(b),
+            Err(RecvTimeoutError::Timeout) => Err(ProbeError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(ProbeError::Disconnected),
+        }
+    }
+
+    pub fn compile(&self, name: &str, path: PathBuf) -> Result<CompileStat> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::Compile { name: name.to_string(), path, reply: tx })?;
+        self.wait(rx)?
+    }
+
+    pub fn has_executable(&self, name: &str) -> Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::HasExecutable { name: name.to_string(), reply: tx })?;
+        self.wait(rx)
+    }
+
+    pub fn drop_executables(&self, names: Option<Vec<String>>) -> Result<usize> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::DropExecutables { names, reply: tx })?;
+        self.wait(rx)
+    }
+
+    pub fn load_weights(&self, tensors: Vec<(String, Tensor)>) -> Result<usize> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::LoadWeights { tensors, reply: tx })?;
+        self.wait(rx)?
+    }
+
+    pub fn drop_weights_prefix(&self, prefix: &str) -> Result<usize> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::DropWeightsPrefix { prefix: prefix.to_string(), reply: tx })?;
+        self.wait(rx)
+    }
+
+    pub fn execute(&self, exe: &str, args: Vec<Arg>) -> Result<Vec<Tensor>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::Execute { exe: exe.to_string(), args, reply: tx })?;
+        self.wait(rx)?
+    }
+
+    pub fn stats(&self) -> Result<DeviceStats> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::Stats { reply: tx })?;
+        self.wait(rx)
+    }
+
+    /// Simulate a hardware failure (used by the fault injector).
+    pub fn set_failed(&self, behavior: FailureBehavior) {
+        let _ = self.tx.send(Cmd::SetFailed { behavior });
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_and_shutdown() {
+        let d = SimDevice::spawn(0);
+        assert_eq!(d.handle.ping(Duration::from_secs(1)), Ok(true));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn erroring_device_replies_unhealthy() {
+        let d = SimDevice::spawn(1);
+        d.handle.set_failed(FailureBehavior::Erroring);
+        assert_eq!(d.handle.ping(Duration::from_secs(1)), Ok(false));
+        assert!(d.handle.execute("x", vec![]).is_err());
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn hung_device_times_out() {
+        let d = SimDevice::spawn(2);
+        d.handle.set_failed(FailureBehavior::Hung);
+        assert_eq!(d.handle.ping(Duration::from_millis(50)), Err(ProbeError::Timeout));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn weights_load_and_drop() {
+        let d = SimDevice::spawn(3);
+        let t = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let n = d.handle.load_weights(vec![("layers.0.wq".into(), t.clone()),
+                                           ("layers.1.wq".into(), t)]).unwrap();
+        assert_eq!(n, 32);
+        let stats = d.handle.stats().unwrap();
+        assert_eq!(stats.weight_bytes, 32);
+        let dropped = d.handle.drop_weights_prefix("layers.0.").unwrap();
+        assert_eq!(dropped, 1);
+        assert_eq!(d.handle.stats().unwrap().weight_bytes, 16);
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn failure_wipes_device_state() {
+        let d = SimDevice::spawn(4);
+        let t = Tensor::f32(vec![1], vec![5.0]);
+        d.handle.load_weights(vec![("w".into(), t)]).unwrap();
+        d.handle.set_failed(FailureBehavior::Erroring);
+        // device reports failed; its state is gone
+        assert!(d.handle.load_weights(vec![]).is_err());
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let d = SimDevice::spawn(5);
+        let e = d.handle.execute("nope", vec![]).unwrap_err();
+        assert!(e.to_string().contains("not compiled"));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+}

@@ -1,0 +1,271 @@
+//! Sequence lifecycle and per-executor continuous batching (paper §3.2).
+//!
+//! Each DPExecutor owns a [`LocalScheduler`]: waiting queue + running set,
+//! admitting sequences up to `max_batch` with prefill on admission and
+//! bucketed decode batches. Sequence migration (the §3.2 partial
+//! recomputation strategy) is expressed here: [`Sequence::migration_view`]
+//! concatenates prompt + decoded tokens into a new prompt so the receiving
+//! rank re-prefills once and skips all completed decode steps.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+
+pub type SeqId = u64;
+pub type Token = u16;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqState {
+    Waiting,
+    Running,
+    Finished,
+}
+
+#[derive(Clone, Debug)]
+pub struct Sequence {
+    pub id: SeqId,
+    pub prompt: Vec<Token>,
+    pub decoded: Vec<Token>,
+    pub state: SeqState,
+    pub max_new_tokens: usize,
+    pub eos: Option<Token>,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    /// set if this sequence was migrated off a failed rank (telemetry)
+    pub migrations: u32,
+}
+
+impl Sequence {
+    pub fn new(id: SeqId, prompt: Vec<Token>, max_new_tokens: usize, eos: Option<Token>) -> Self {
+        Sequence {
+            id,
+            prompt,
+            decoded: Vec::new(),
+            state: SeqState::Waiting,
+            max_new_tokens,
+            eos,
+            arrived: Instant::now(),
+            first_token_at: None,
+            migrations: 0,
+        }
+    }
+
+    /// Total tokens whose KV must exist to decode the next token.
+    pub fn n_context(&self) -> usize {
+        self.prompt.len() + self.decoded.len()
+    }
+
+    /// Position of the next token to decode (0-indexed).
+    pub fn next_pos(&self) -> usize {
+        self.n_context()
+    }
+
+    /// Last token fed into the decode step.
+    pub fn last_token(&self) -> Token {
+        *self
+            .decoded
+            .last()
+            .or_else(|| self.prompt.last())
+            .expect("sequence has no tokens")
+    }
+
+    pub fn push_token(&mut self, t: Token) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.decoded.push(t);
+        if self.decoded.len() >= self.max_new_tokens || Some(t) == self.eos {
+            self.state = SeqState::Finished;
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == SeqState::Finished
+    }
+
+    /// §3.2 partial recomputation: the migrated sequence re-enters the
+    /// waiting queue elsewhere with prompt := prompt ++ decoded, so prefill
+    /// re-derives all KV and generation resumes exactly where it stopped.
+    /// The generation budget is reduced by what was already decoded (the
+    /// engine owns the full output stream across migrations).
+    pub fn migration_view(&self) -> Sequence {
+        let mut prompt = self.prompt.clone();
+        prompt.extend_from_slice(&self.decoded);
+        Sequence {
+            id: self.id,
+            prompt,
+            decoded: Vec::new(),
+            state: SeqState::Waiting,
+            max_new_tokens: self.max_new_tokens.saturating_sub(self.decoded.len()),
+            eos: self.eos,
+            arrived: self.arrived,
+            first_token_at: self.first_token_at,
+            migrations: self.migrations + 1,
+        }
+    }
+}
+
+/// Per-executor scheduler: FIFO admission into a bounded running set.
+#[derive(Debug, Default)]
+pub struct LocalScheduler {
+    pub waiting: VecDeque<Sequence>,
+    pub running: Vec<Sequence>,
+    pub max_batch: usize,
+    pub finished: Vec<Sequence>,
+}
+
+impl LocalScheduler {
+    pub fn new(max_batch: usize) -> Self {
+        LocalScheduler { waiting: VecDeque::new(), running: Vec::new(), max_batch, finished: Vec::new() }
+    }
+
+    pub fn submit(&mut self, seq: Sequence) {
+        self.waiting.push_back(seq);
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Load metric used by the engine's global dispatch (least-loaded rank).
+    pub fn load(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    /// Admit waiting sequences while there is batch room. Returns the
+    /// admitted sequences' ids (the executor prefills them).
+    pub fn admit(&mut self) -> Vec<SeqId> {
+        let mut admitted = Vec::new();
+        while self.running.len() < self.max_batch {
+            let Some(mut s) = self.waiting.pop_front() else { break };
+            s.state = SeqState::Running;
+            admitted.push(s.id);
+            self.running.push(s);
+        }
+        admitted
+    }
+
+    /// Collect finished sequences out of the running set.
+    pub fn reap(&mut self) -> Vec<Sequence> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].is_finished() {
+                done.push(self.running.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        self.finished.extend(done.iter().cloned());
+        done
+    }
+
+    pub fn get_running_mut(&mut self, id: SeqId) -> Option<&mut Sequence> {
+        self.running.iter_mut().find(|s| s.id == id)
+    }
+
+    /// Drain *all* sequences (running + waiting) for migration off a failed
+    /// rank. Running sequences are converted through `migration_view`.
+    pub fn drain_for_migration(&mut self) -> Vec<Sequence> {
+        let mut out: Vec<Sequence> =
+            self.running.drain(..).map(|s| s.migration_view()).collect();
+        out.extend(self.waiting.drain(..));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(id: SeqId, n: usize) -> Sequence {
+        Sequence::new(id, vec![1; n], 8, Some(0))
+    }
+
+    #[test]
+    fn admit_respects_max_batch() {
+        let mut s = LocalScheduler::new(2);
+        for i in 0..4 {
+            s.submit(seq(i, 3));
+        }
+        let adm = s.admit();
+        assert_eq!(adm, vec![0, 1]);
+        assert_eq!(s.n_running(), 2);
+        assert_eq!(s.queue_depth(), 2);
+        // nothing more admitted until a slot frees
+        assert!(s.admit().is_empty());
+    }
+
+    #[test]
+    fn finish_on_eos_and_budget() {
+        let mut q = seq(1, 2);
+        q.push_token(5);
+        assert!(!q.is_finished());
+        q.push_token(0); // eos
+        assert!(q.is_finished());
+
+        let mut b = Sequence::new(2, vec![1], 2, None);
+        b.push_token(3);
+        b.push_token(4);
+        assert!(b.is_finished());
+    }
+
+    #[test]
+    fn reap_removes_finished() {
+        let mut s = LocalScheduler::new(4);
+        for i in 0..3 {
+            s.submit(seq(i, 2));
+        }
+        s.admit();
+        s.get_running_mut(1).unwrap().push_token(0); // eos -> finished
+        let done = s.reap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(s.n_running(), 2);
+    }
+
+    #[test]
+    fn migration_concatenates_prompt_and_decoded() {
+        let mut q = Sequence::new(9, vec![10, 11], 8, Some(0));
+        q.state = SeqState::Running;
+        q.push_token(12);
+        q.push_token(13);
+        let m = q.migration_view();
+        assert_eq!(m.prompt, vec![10, 11, 12, 13]);
+        assert!(m.decoded.is_empty());
+        assert_eq!(m.state, SeqState::Waiting);
+        assert_eq!(m.migrations, 1);
+        // generation budget continues, not restarts: 2 of 8 already spent
+        assert_eq!(m.max_new_tokens, 6);
+        assert_eq!(m.n_context(), 4);
+    }
+
+    #[test]
+    fn drain_for_migration_takes_everything() {
+        let mut s = LocalScheduler::new(2);
+        for i in 0..3 {
+            s.submit(seq(i, 2));
+        }
+        s.admit();
+        s.get_running_mut(0).unwrap().push_token(7);
+        let drained = s.drain_for_migration();
+        assert_eq!(drained.len(), 3);
+        assert_eq!(s.n_running(), 0);
+        assert_eq!(s.queue_depth(), 0);
+        let migrated = drained.iter().find(|x| x.id == 0).unwrap();
+        assert_eq!(migrated.prompt, vec![1, 1, 7]);
+    }
+
+    #[test]
+    fn next_pos_advances() {
+        let mut q = seq(1, 3);
+        assert_eq!(q.next_pos(), 3);
+        q.push_token(4);
+        assert_eq!(q.next_pos(), 4);
+        assert_eq!(q.last_token(), 4);
+    }
+}

@@ -1,0 +1,220 @@
+//! Minimal host-side tensor crossing the coordinator <-> PJRT boundary.
+//!
+//! The coordinator only ever needs f32 and i32 tensors (activations, KV
+//! rows, token ids, router outputs), plus a handful of host ops used by the
+//! XCCL-sim data plane: gather rows into a grouped layout, weighted
+//! accumulate (the `combine` collective), and elementwise add (residuals
+//! computed on the coordinator in the disaggregated split).
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Row `i` of a 2-D (or flattened-leading-dim) tensor.
+    pub fn row(&self, i: usize) -> Result<&[f32]> {
+        let d = *self.shape.last().ok_or_else(|| anyhow!("scalar tensor"))?;
+        let v = self.as_f32()?;
+        Ok(&v[i * d..(i + 1) * d])
+    }
+
+    /// Convert to an `xla::Literal` (reshaped to `self.shape`).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an `xla::Literal`.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+
+    /// `self += other` (elementwise, f32).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let b = other.as_f32()?.to_vec();
+        let a = self.as_f32_mut()?;
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    /// `self[row] += w * src` — the unit step of the XCCL `combine`.
+    pub fn axpy_row(&mut self, row: usize, w: f32, src: &[f32]) -> Result<()> {
+        let d = *self.shape.last().ok_or_else(|| anyhow!("scalar tensor"))?;
+        let dst = self.as_f32_mut()?;
+        let dst = &mut dst[row * d..(row + 1) * d];
+        for (x, y) in dst.iter_mut().zip(src) {
+            *x += w * y;
+        }
+        Ok(())
+    }
+
+    /// Stack rows (each `[d]`) into `[n, d]`.
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let d = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            data.extend_from_slice(r);
+        }
+        Tensor::f32(vec![rows.len(), d], data)
+    }
+
+    /// Pad (or truncate) the leading dimension to `n` rows.
+    pub fn pad_rows(&self, n: usize) -> Result<Tensor> {
+        let d = *self.shape.last().ok_or_else(|| anyhow!("scalar tensor"))?;
+        let rows = self.len() / d;
+        let v = self.as_f32()?;
+        let mut data = Vec::with_capacity(n * d);
+        data.extend_from_slice(&v[..rows.min(n) * d]);
+        data.resize(n * d, 0.0);
+        let mut shape = self.shape.clone();
+        let last = shape.len() - 1;
+        shape[last] = d;
+        Ok(Tensor::f32(vec![n, d], data))
+    }
+
+    /// Argmax over the last dim, per row. Returns `[rows]`.
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        let d = *self.shape.last().ok_or_else(|| anyhow!("scalar tensor"))?;
+        let v = self.as_f32()?;
+        Ok(v.chunks_exact(d)
+            .map(|r| {
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_literal() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_literal() {
+        let t = Tensor::i32(vec![4], vec![7, -1, 0, 3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn axpy_row_accumulates() {
+        let mut t = Tensor::zeros(vec![2, 3]);
+        t.axpy_row(1, 2.0, &[1.0, 2.0, 3.0]).unwrap();
+        t.axpy_row(1, 0.5, &[2.0, 0.0, 0.0]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[0., 0., 0., 3., 4., 6.]);
+    }
+
+    #[test]
+    fn pad_rows_pads_and_truncates() {
+        let t = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let p = t.pad_rows(3).unwrap();
+        assert_eq!(p.shape, vec![3, 2]);
+        assert_eq!(p.as_f32().unwrap()[4..], [0., 0.]);
+        let q = t.pad_rows(1).unwrap();
+        assert_eq!(q.as_f32().unwrap(), &[1., 2.]);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::f32(vec![2, 3], vec![0., 5., 1., 9., 2., 3.]);
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn row_slices() {
+        let t = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(t.row(1).unwrap(), &[3., 4.]);
+    }
+
+    #[test]
+    fn add_assign_shape_mismatch_errors() {
+        let mut a = Tensor::zeros(vec![2, 2]);
+        let b = Tensor::zeros(vec![2, 3]);
+        assert!(a.add_assign(&b).is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Weight loading: raw little-endian f32 blob + JSON manifest written by
+//! `python/compile/train.py`. Provides the per-rank *views* each executor
+//! loads onto its device: attention stacks, expert slices for an
+//! [`crate::moe::ExpertMap`] slot list, and dense-FFN TP shards.
+//!
+//! Disk reads are deliberately real (not cached at this layer): the
+//! paper's worst-case recovery path is dominated by re-loading expert
+//! weights from disk after a role switch, and we want that cost to be
+//! physically present in the measurements.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+
+use crate::config::ModelMeta;
+use crate::tensor::Tensor;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightManifest {
+    pub tensors: Vec<TensorEntry>,
+    pub total_bytes: usize,
+}
+
+/// Handle to the on-disk weight blob. `load_*` methods read from disk on
+/// every call (see module docs).
+pub struct WeightStore {
+    manifest: WeightManifest,
+    by_name: HashMap<String, usize>,
+    bin_path: std::path::PathBuf,
+}
+
+/// Attention-side weight names of one layer, in the order the
+/// `attn_decode_*` / `attn_prefill_*` artifacts expect them.
+pub const ATTN_WEIGHT_ORDER: [&str; 8] =
+    ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b"];
+
+impl WeightStore {
+    pub fn open(manifest_path: &Path, bin_path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(manifest_path)?;
+        let j = crate::json::Json::parse(&text)?;
+        let tensors = j
+            .get("tensors")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(TensorEntry {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    shape: t.get("shape")?.usize_arr()?,
+                    offset: t.get("offset")?.as_usize()?,
+                    nbytes: t.get("nbytes")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let manifest = WeightManifest { tensors, total_bytes: j.get("total_bytes")?.as_usize()? };
+        let by_name = manifest
+            .tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        Ok(WeightStore { manifest, by_name, bin_path: bin_path.to_path_buf() })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        let idx = self
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no weight tensor named '{name}'"))?;
+        Ok(&self.manifest.tensors[*idx])
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.manifest.tensors.iter().map(|t| t.name.as_str())
+    }
+
+    /// Read one tensor from disk.
+    pub fn load(&self, name: &str) -> Result<Tensor> {
+        let e = self.entry(name)?.clone();
+        let mut f = std::fs::File::open(&self.bin_path)?;
+        use std::io::Seek;
+        f.seek(std::io::SeekFrom::Start(e.offset as u64))?;
+        let mut buf = vec![0u8; e.nbytes];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor::f32(e.shape, data))
+    }
+
+    /// Total bytes a full load touches (Fig-1 Generator accounting).
+    pub fn total_bytes(&self) -> usize {
+        self.manifest.total_bytes
+    }
+
+    // -- per-role views ------------------------------------------------------
+
+    /// Shared tensors every rank needs: embeddings + final norm.
+    pub fn load_common(&self) -> Result<Vec<(String, Tensor)>> {
+        ["embed", "pos", "lnf_g", "lnf_b"]
+            .iter()
+            .map(|n| Ok((n.to_string(), self.load(n)?)))
+            .collect()
+    }
+
+    /// All attention weights for every layer (DP replicates them fully).
+    pub fn load_attention(&self, meta: &ModelMeta) -> Result<Vec<(String, Tensor)>> {
+        let mut out = Vec::new();
+        for li in 0..meta.n_layers {
+            for n in ATTN_WEIGHT_ORDER {
+                let name = format!("layers.{li}.{n}");
+                out.push((name.clone(), self.load(&name)?));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Router weights for every MoE layer (needed by attention ranks, which
+    /// run the gate before dispatch).
+    pub fn load_routers(&self, meta: &ModelMeta) -> Result<Vec<(String, Tensor)>> {
+        let mut out = Vec::new();
+        for li in meta.n_dense_layers..meta.n_layers {
+            let name = format!("layers.{li}.router");
+            out.push((name.clone(), self.load(&name)?));
+        }
+        Ok(out)
+    }
+
+    /// Expert slices for a rank's slot list: `[n_slots, d, f]` and
+    /// `[n_slots, f, d]` per MoE layer, rows gathered in slot order.
+    pub fn load_expert_slots(
+        &self,
+        meta: &ModelMeta,
+        slots: &[usize],
+    ) -> Result<Vec<(String, Tensor)>> {
+        let mut out = Vec::new();
+        for li in meta.n_dense_layers..meta.n_layers {
+            for (suffix, a, b) in [
+                ("e_w1", meta.d_model, meta.d_ff),
+                ("e_w2", meta.d_ff, meta.d_model),
+            ] {
+                let full = self.load(&format!("layers.{li}.{suffix}"))?;
+                let per = a * b;
+                let src = full.as_f32()?;
+                let mut data = Vec::with_capacity(slots.len() * per);
+                for &e in slots {
+                    data.extend_from_slice(&src[e * per..(e + 1) * per]);
+                }
+                out.push((
+                    format!("layers.{li}.{suffix}.slots"),
+                    Tensor::f32(vec![slots.len(), a, b], data),
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// One TP shard of the dense-FFN weights of each dense layer:
+    /// column-slice of w1, row-slice of w2.
+    pub fn load_dense_shard(
+        &self,
+        meta: &ModelMeta,
+        shard: usize,
+        tp: usize,
+    ) -> Result<Vec<(String, Tensor)>> {
+        anyhow::ensure!(shard < tp, "shard {shard} out of range for tp {tp}");
+        let mut out = Vec::new();
+        let fs = meta.d_ff / tp;
+        for li in 0..meta.n_dense_layers {
+            let w1 = self.load(&format!("layers.{li}.d_w1"))?; // [d, f]
+            let w2 = self.load(&format!("layers.{li}.d_w2"))?; // [f, d]
+            let d = meta.d_model;
+            let w1v = w1.as_f32()?;
+            let mut w1s = Vec::with_capacity(d * fs);
+            for row in 0..d {
+                let off = row * meta.d_ff + shard * fs;
+                w1s.extend_from_slice(&w1v[off..off + fs]);
+            }
+            let w2v = w2.as_f32()?;
+            let off = shard * fs * d;
+            let w2s = w2v[off..off + fs * d].to_vec();
+            out.push((format!("layers.{li}.d_w1.s{shard}"), Tensor::f32(vec![d, fs], w1s)));
+            out.push((format!("layers.{li}.d_w2.s{shard}"), Tensor::f32(vec![fs, d], w2s)));
+        }
+        Ok(out)
+    }
+
+    /// Every flat tensor (the fused full_decode graph wants them all).
+    pub fn load_all(&self) -> Result<Vec<(String, Tensor)>> {
+        self.manifest
+            .tensors
+            .iter()
+            .map(|e| Ok((e.name.clone(), self.load(&e.name)?)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_store(dir: &Path) -> WeightStore {
+        // two tensors: a [2,3] ramp and a [4] ramp
+        let a: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let b: Vec<f32> = (10..14).map(|x| x as f32).collect();
+        let mut bytes = Vec::new();
+        for v in a.iter().chain(b.iter()) {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::File::create(dir.join("w.bin")).unwrap().write_all(&bytes).unwrap();
+        let manifest = r#"{"tensors": [
+                {"name": "alpha", "shape": [2,3], "offset": 0, "nbytes": 24},
+                {"name": "beta", "shape": [4], "offset": 24, "nbytes": 16}
+            ], "total_bytes": 40}"#;
+        std::fs::write(dir.join("w.json"), manifest).unwrap();
+        WeightStore::open(&dir.join("w.json"), &dir.join("w.bin")).unwrap()
+    }
+
+    #[test]
+    fn load_reads_correct_slices() {
+        let dir = std::env::temp_dir().join(format!("wstore-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = fake_store(&dir);
+        let a = s.load("alpha").unwrap();
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.as_f32().unwrap(), &[0., 1., 2., 3., 4., 5.]);
+        let b = s.load("beta").unwrap();
+        assert_eq!(b.as_f32().unwrap(), &[10., 11., 12., 13.]);
+        assert!(s.load("gamma").is_err());
+        assert_eq!(s.total_bytes(), 40);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

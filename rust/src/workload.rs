@@ -1,0 +1,308 @@
+//! Workload generation and eval-set loading.
+//!
+//! The tokenizer/alphabet and the task grammars mirror
+//! `python/compile/tasks.py` exactly (checked by unit tests against the
+//! exported eval sets), so the rust serving stack can generate fresh
+//! requests at runtime without ever touching python.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+
+use crate::scheduler::Token;
+use crate::Result;
+
+/// Must match `python/compile/tasks.py::ALPHABET` byte-for-byte.
+pub const ALPHABET: &str =
+    "abcdefghijklmnopqrstuvwxyz0123456789:;>,.()[]{}+-*=<|#!?&%$@ /\\^";
+
+pub fn encode(s: &str) -> Result<Vec<Token>> {
+    s.chars()
+        .map(|c| {
+            ALPHABET
+                .find(c)
+                .map(|i| i as Token)
+                .ok_or_else(|| anyhow::anyhow!("character {c:?} not in alphabet"))
+        })
+        .collect()
+}
+
+pub fn decode(ids: &[Token]) -> String {
+    ids.iter()
+        .map(|&i| ALPHABET.as_bytes().get(i as usize).copied().unwrap_or(b'?') as char)
+        .collect()
+}
+
+/// The end-of-sample terminator every task emits.
+pub fn eos_token() -> Token {
+    ALPHABET.find(';').unwrap() as Token
+}
+
+// ---------------------------------------------------------------------------
+// deterministic RNG (xorshift64*) — keeps workloads reproducible without a
+// rand dependency
+
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// task grammars (subset used for live traffic; full sets come from
+// artifacts/eval/)
+
+pub const TASK_NAMES: [&str; 8] =
+    ["copy", "reverse", "sort", "shift", "add", "max", "count", "dyck"];
+
+fn letters(rng: &mut Rng, lo: usize, hi: usize) -> String {
+    let n = rng.range(lo, hi);
+    (0..n)
+        .map(|_| (b'a' + rng.below(16) as u8) as char)
+        .collect()
+}
+
+/// Generate one full sample "tag:input>answer;".
+pub fn gen_sample(task: &str, rng: &mut Rng) -> String {
+    match task {
+        "copy" => {
+            let w = letters(rng, 3, 8);
+            format!("c:{w}>{w};")
+        }
+        "reverse" => {
+            let w = letters(rng, 3, 8);
+            let r: String = w.chars().rev().collect();
+            format!("r:{w}>{r};")
+        }
+        "sort" => {
+            let w = letters(rng, 3, 8);
+            let mut cs: Vec<char> = w.chars().collect();
+            cs.sort_unstable();
+            format!("o:{w}>{};", cs.into_iter().collect::<String>())
+        }
+        "shift" => {
+            let w = letters(rng, 3, 8);
+            let s: String = w
+                .chars()
+                .map(|c| (((c as u8 - b'a' + 1) % 26) + b'a') as char)
+                .collect();
+            format!("s:{w}>{s};")
+        }
+        "add" => {
+            let a = rng.below(50);
+            let b = rng.below(50);
+            format!("a:{a}+{b}>{};", a + b)
+        }
+        "max" => {
+            let n = rng.range(3, 7);
+            let ds: String = (0..n).map(|_| (b'0' + rng.below(10) as u8) as char).collect();
+            format!("m:{ds}>{};", ds.chars().max().unwrap())
+        }
+        "count" => {
+            let t = (b'a' + rng.below(6) as u8) as char;
+            let n = rng.range(4, 9);
+            let w: String = (0..n).map(|_| (b'a' + rng.below(6) as u8) as char).collect();
+            format!("n:{t},{w}>{};", w.matches(t).count())
+        }
+        "dyck" => {
+            let mut depth = 0i32;
+            let n = rng.range(4, 10);
+            let mut s = String::new();
+            for _ in 0..n {
+                if depth > 0 && rng.below(2) == 0 {
+                    s.push(')');
+                    depth -= 1;
+                } else {
+                    s.push('(');
+                    depth += 1;
+                }
+            }
+            let (mut ok, mut d) = (true, 0i32);
+            for c in s.chars() {
+                d += if c == '(' { 1 } else { -1 };
+                if d < 0 {
+                    ok = false;
+                    break;
+                }
+            }
+            ok = ok && d == 0;
+            format!("d:{s}>{};", if ok { 'v' } else { 'x' })
+        }
+        other => panic!("unknown task {other}"),
+    }
+}
+
+/// A serving request: prompt up to and including '>', plus expected answer.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub task: String,
+    pub prompt: Vec<Token>,
+    pub expected: String,
+    pub max_new_tokens: usize,
+}
+
+pub fn gen_request(task: &str, rng: &mut Rng) -> Result<Request> {
+    let s = gen_sample(task, rng);
+    let gt = s[2..].find('>').unwrap() + 3; // one past '>'
+    let prompt = encode(&s[..gt])?;
+    Ok(Request {
+        task: task.to_string(),
+        prompt,
+        expected: s[gt..].to_string(),
+        max_new_tokens: s.len() - gt + 4,
+    })
+}
+
+/// Mixed-task request stream.
+pub fn gen_mixed(n: usize, seed: u64) -> Result<Vec<Request>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| gen_request(TASK_NAMES[i % TASK_NAMES.len()], &mut rng))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// eval sets exported by train.py
+
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub task: String,
+    pub seq_len: usize,
+    pub seqs: Vec<Vec<u16>>,
+    pub answer_masks: Vec<Vec<u8>>,
+}
+
+impl EvalSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::json::Json::parse(&text)?;
+        let seqs = j
+            .get("seqs")?
+            .as_arr()?
+            .iter()
+            .map(|r| Ok(r.usize_arr()?.into_iter().map(|x| x as u16).collect()))
+            .collect::<Result<Vec<Vec<u16>>>>()?;
+        let answer_masks = j
+            .get("answer_masks")?
+            .as_arr()?
+            .iter()
+            .map(|r| Ok(r.usize_arr()?.into_iter().map(|x| x as u8).collect()))
+            .collect::<Result<Vec<Vec<u8>>>>()?;
+        Ok(EvalSet {
+            task: j.get("task")?.as_str()?.to_string(),
+            seq_len: j.get("seq_len")?.as_usize()?,
+            seqs,
+            answer_masks,
+        })
+    }
+
+    /// Load every task's eval set from `artifacts/eval/`.
+    pub fn load_all(dir: &Path) -> Result<HashMap<String, EvalSet>> {
+        let mut out = HashMap::new();
+        for t in TASK_NAMES {
+            let p = dir.join(format!("{t}.json"));
+            if p.exists() {
+                out.insert(t.to_string(), Self::load(&p)?);
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "no eval sets found in {dir:?} (run `make artifacts`)");
+        Ok(out)
+    }
+
+    /// Truncate to the first `n` samples (quick mode for benches).
+    pub fn take(mut self, n: usize) -> Self {
+        self.seqs.truncate(n);
+        self.answer_masks.truncate(n);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alphabet_is_64_unique() {
+        assert_eq!(ALPHABET.chars().count(), 64);
+        let set: std::collections::BTreeSet<char> = ALPHABET.chars().collect();
+        assert_eq!(set.len(), 64);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "c:abc>abc;a:1+2>3;";
+        let ids = encode(s).unwrap();
+        assert_eq!(decode(&ids), s);
+    }
+
+    #[test]
+    fn samples_well_formed_and_correct() {
+        let mut rng = Rng::new(7);
+        for task in TASK_NAMES {
+            for _ in 0..50 {
+                let s = gen_sample(task, &mut rng);
+                assert!(s.ends_with(';'), "{s}");
+                assert!(s[2..].contains('>'), "{s}");
+                encode(&s).unwrap();
+            }
+        }
+        // spot-check semantics
+        for _ in 0..20 {
+            let s = gen_sample("add", &mut rng);
+            let body = &s[2..s.len() - 1];
+            let (q, a) = body.split_once('>').unwrap();
+            let (x, y) = q.split_once('+').unwrap();
+            assert_eq!(x.parse::<u32>().unwrap() + y.parse::<u32>().unwrap(),
+                       a.parse::<u32>().unwrap());
+        }
+    }
+
+    #[test]
+    fn requests_have_prompt_ending_in_gt() {
+        let mut rng = Rng::new(3);
+        let r = gen_request("copy", &mut rng).unwrap();
+        assert_eq!(decode(&r.prompt).chars().last(), Some('>'));
+        assert!(r.expected.ends_with(';'));
+    }
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn eval_sets_load_if_built() {
+        let dir = Path::new("artifacts/eval");
+        if dir.exists() {
+            let all = EvalSet::load_all(dir).unwrap();
+            assert_eq!(all.len(), 8);
+            let c = &all["copy"];
+            assert_eq!(c.seqs[0].len(), c.seq_len);
+            assert_eq!(c.answer_masks[0].len(), c.seq_len);
+        }
+    }
+}

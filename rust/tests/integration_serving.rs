@@ -1,0 +1,161 @@
+//! End-to-end serving integration: boot a real deployment over the AOT
+//! artifacts, serve, and check the rust pipeline's numerics against the
+//! goldens exported by the python oracle (`python/compile/train.py`).
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! loud message) otherwise. Booting a deployment compiles ~190 graphs on a
+//! single core, so all serving tests share one engine.
+
+use std::path::Path;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::Json;
+use revivemoe::workload::{self, EvalSet};
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/hlo/manifest.json").exists()
+        && Path::new("artifacts/golden/golden.json").exists()
+}
+
+#[test]
+fn serving_pipeline_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let (mut engine, bd) = Engine::boot(cfg).unwrap();
+    assert!(bd.total().as_millis() > 0);
+
+    // ---------------------------------------------------------------
+    // (1) teacher-forced golden parity: rust scoring pipeline must match
+    // the python full_forward oracle argmax positions.
+    let golden = Json::parse(
+        &std::fs::read_to_string("artifacts/golden/golden.json").unwrap(),
+    )
+    .unwrap();
+    let seqs = golden.get("seqs").unwrap().as_arr().unwrap();
+    let argmax = golden.get("argmax").unwrap().as_arr().unwrap();
+    let mut total = 0usize;
+    let mut agree = 0usize;
+    for (row, am) in seqs.iter().zip(argmax) {
+        let toks: Vec<u16> = row.usize_arr().unwrap().iter().map(|&x| x as u16).collect();
+        let expect: Vec<u16> = am.usize_arr().unwrap().iter().map(|&x| x as u16).collect();
+        let pred = engine.score_sequence(&toks, 0).unwrap();
+        for (p, e) in pred.iter().zip(&expect) {
+            total += 1;
+            if p == e {
+                agree += 1;
+            }
+        }
+    }
+    let frac = agree as f64 / total as f64;
+    assert!(
+        frac > 0.98,
+        "rust pipeline argmax agreement with python oracle too low: {frac:.4}"
+    );
+
+    // (1b) masked-expert parity: every-4th expert failed
+    let masked: Vec<usize> = (0..engine.meta.n_experts).step_by(4).collect();
+    engine.expert_map.set_missing(&masked);
+    let argmax_m = golden.get("argmax_masked_every4").unwrap().as_arr().unwrap();
+    let mut total_m = 0usize;
+    let mut agree_m = 0usize;
+    for (row, am) in seqs.iter().zip(argmax_m) {
+        let toks: Vec<u16> = row.usize_arr().unwrap().iter().map(|&x| x as u16).collect();
+        let expect: Vec<u16> = am.usize_arr().unwrap().iter().map(|&x| x as u16).collect();
+        let pred = engine.score_sequence(&toks, 0).unwrap();
+        for (p, e) in pred.iter().zip(&expect) {
+            total_m += 1;
+            if p == e {
+                agree_m += 1;
+            }
+        }
+    }
+    engine.expert_map.clear_missing();
+    assert!(
+        agree_m as f64 / total_m as f64 > 0.98,
+        "masked-gate parity too low"
+    );
+
+    // ---------------------------------------------------------------
+    // (2) greedy-decode golden parity: serve the golden prompts through
+    // the full scheduler/KV/dispatch machinery and compare continuations.
+    let decodes = golden.get("decodes").unwrap().as_arr().unwrap();
+    let mut ids = Vec::new();
+    for d in decodes {
+        let prompt = workload::encode(d.get("prompt").unwrap().as_str().unwrap()).unwrap();
+        let req = workload::Request {
+            task: "golden".into(),
+            prompt,
+            expected: String::new(),
+            max_new_tokens: 8,
+        };
+        ids.push(engine.submit(req).unwrap());
+    }
+    let done = engine.run_to_completion(200).unwrap();
+    assert_eq!(done.len(), decodes.len(), "all golden prompts must finish");
+    let mut matches = 0;
+    for c in &done {
+        let idx = ids.iter().position(|&i| i == c.seq_id).unwrap();
+        let d = &decodes[idx];
+        let full: Vec<u16> = d
+            .get("output_ids")
+            .unwrap()
+            .usize_arr()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u16)
+            .collect();
+        let prompt_len = workload::encode(d.get("prompt").unwrap().as_str().unwrap())
+            .unwrap()
+            .len();
+        let expect_out = &full[prompt_len..];
+        if c.output == expect_out {
+            matches += 1;
+        } else {
+            eprintln!(
+                "golden mismatch: got {:?} want {:?}",
+                workload::decode(&c.output),
+                workload::decode(expect_out)
+            );
+        }
+    }
+    assert!(
+        matches >= decodes.len() - 1,
+        "at most one borderline-argmax divergence tolerated: {matches}/{}",
+        decodes.len()
+    );
+
+    // ---------------------------------------------------------------
+    // (3) batched serving: correctness of scheduler bookkeeping under load
+    let reqs = workload::gen_mixed(24, 3).unwrap();
+    let expected: Vec<String> = reqs.iter().map(|r| r.expected.clone()).collect();
+    for r in reqs {
+        engine.submit(r).unwrap();
+    }
+    let done = engine.run_to_completion(500).unwrap();
+    assert_eq!(done.len(), 24, "every request completes");
+    for c in &done {
+        assert!(!c.output.is_empty());
+        assert!(c.output.len() <= 16 + 4);
+    }
+    // the model is small; just require that SOME answers are exactly right
+    let right = done
+        .iter()
+        .filter(|c| {
+            let i = (c.seq_id - 5) as usize; // 4 golden seqs came first
+            i < expected.len() && workload::decode(&c.output) == expected[i]
+        })
+        .count();
+    assert!(right >= 4, "expected a few exact answers, got {right}/24");
+
+    // (4) eval sets flow through the harness path
+    let sets = EvalSet::load_all(Path::new("artifacts/eval")).unwrap();
+    let copy = sets["copy"].clone().take(8);
+    let acc = revivemoe::evalharness::score_set(&mut engine, &copy).unwrap();
+    assert!(acc > 0.2, "copy-task accuracy through rust pipeline: {acc}");
+
+    engine.shutdown();
+}

@@ -1,0 +1,183 @@
+//! Property-based tests for XCCL-sim rank compaction and dispatch/combine
+//! (§2.3, §3.5), driven by the in-tree deterministic RNG.
+
+use revivemoe::comms::{
+    combine, compact_ranks, compact_ranks_with_switch, dispatch, CommDomain, DomainManager,
+    ExpertRouter,
+};
+use revivemoe::tensor::Tensor;
+use revivemoe::workload::Rng;
+
+struct FlatRouter {
+    n_ranks: usize,
+    per_rank: usize,
+}
+
+impl ExpertRouter for FlatRouter {
+    fn route(&self, expert: usize, _t: usize) -> Option<(usize, usize)> {
+        Some((expert / self.per_rank, expert % self.per_rank))
+    }
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+    fn slots_on_rank(&self, _r: usize) -> usize {
+        self.per_rank
+    }
+}
+
+fn domain(members: Vec<usize>) -> CommDomain {
+    CommDomain::standalone("prop", 1, members)
+}
+
+// -- compaction properties -----------------------------------------------
+
+#[test]
+fn compaction_is_order_preserving_and_bijective() {
+    for seed in 0..300 {
+        let mut rng = Rng::new(1000 + seed);
+        let n = rng.below(16) + 2;
+        let members: Vec<usize> = (0..n).map(|i| i * 10).collect();
+        let failed = members[rng.below(n)];
+        let out = compact_ranks(&members, failed);
+        // exactly one member removed
+        assert_eq!(out.len(), n - 1);
+        assert!(!out.contains(&failed));
+        // relative order preserved
+        let filtered: Vec<usize> = members.iter().copied().filter(|&m| m != failed).collect();
+        assert_eq!(out, filtered);
+        // no duplicates
+        let set: std::collections::BTreeSet<_> = out.iter().collect();
+        assert_eq!(set.len(), out.len());
+    }
+}
+
+#[test]
+fn switch_compaction_properties() {
+    for seed in 0..300 {
+        let mut rng = Rng::new(5000 + seed);
+        let n = rng.below(12) + 2;
+        let members: Vec<usize> = (0..n).map(|i| i * 7 + 1).collect();
+        let failed = members[rng.below(n)];
+        // replacement: sometimes a member, sometimes external
+        let replacement = if rng.below(2) == 0 {
+            members[rng.below(n)]
+        } else {
+            999
+        };
+        if replacement == failed {
+            continue;
+        }
+        let out = compact_ranks_with_switch(&members, failed, replacement);
+        assert!(!out.contains(&failed));
+        // the replacement holds the failed member's logical rank
+        let failed_rank = members.iter().position(|&m| m == failed).unwrap();
+        let adj: usize = members[..failed_rank]
+            .iter()
+            .filter(|&&m| m == replacement)
+            .count();
+        assert_eq!(out[failed_rank - adj], replacement);
+        // no duplicates
+        let set: std::collections::BTreeSet<_> = out.iter().collect();
+        assert_eq!(set.len(), out.len());
+    }
+}
+
+#[test]
+fn repeated_failures_compact_to_empty() {
+    let mut dm = DomainManager::new();
+    dm.create("d", (0..8).collect()).unwrap();
+    let mut epochs = vec![dm.get("d").unwrap().epoch];
+    for dev in 0..8 {
+        let e = dm.recreate_without("d", dev).unwrap().epoch;
+        assert!(e > *epochs.last().unwrap(), "epochs strictly increase");
+        epochs.push(e);
+    }
+    assert_eq!(dm.get("d").unwrap().size(), 0);
+}
+
+// -- dispatch/combine properties -------------------------------------------
+
+#[test]
+fn combine_of_identity_experts_reconstructs_weighted_tokens() {
+    // If every expert computes the identity, combine(x) == sum_k w_k * x
+    // == x whenever the top-k weights sum to 1.
+    for seed in 0..100 {
+        let mut rng = Rng::new(42 + seed);
+        let t_count = rng.below(24) + 1;
+        let d = 4;
+        let n_ranks = rng.below(3) + 1;
+        let per_rank = rng.below(3) + 1;
+        let n_exp = n_ranks * per_rank;
+        let router = FlatRouter { n_ranks, per_rank };
+        let dom = domain((0..n_ranks).collect());
+
+        let toks: Vec<f32> = (0..t_count * d).map(|i| (i % 17) as f32 - 3.0).collect();
+        let tokens = Tensor::f32(vec![t_count, d], toks.clone());
+        let top_k = 2.min(n_exp);
+        let mut idx = Vec::new();
+        let mut wt = Vec::new();
+        for t in 0..t_count {
+            let e1 = rng.below(n_exp);
+            let mut e2 = rng.below(n_exp);
+            if top_k == 2 && e2 == e1 {
+                e2 = (e1 + 1) % n_exp;
+            }
+            let w = (rng.below(99) + 1) as f32 / 100.0;
+            if top_k == 2 {
+                idx.extend_from_slice(&[e1 as i32, e2 as i32]);
+                wt.extend_from_slice(&[w, 1.0 - w]);
+            } else {
+                idx.push(e1 as i32);
+                wt.push(1.0);
+            }
+            let _ = t;
+        }
+        let disp = dispatch(&dom, 1, &tokens, &idx, &wt, top_k, &router, &[t_count]).unwrap();
+        assert_eq!(disp.overflowed, 0, "capacity = t_count can never overflow");
+        // every (token, choice) accounted for exactly once
+        let total: usize = disp.per_rank.iter().map(|p| p.assigns.len()).sum();
+        assert_eq!(total, t_count * top_k);
+
+        let outputs: Vec<Tensor> = disp.per_rank.iter().map(|p| p.grouped.clone()).collect();
+        let (acc, _) = combine(&dom, &disp, &outputs, t_count, d).unwrap();
+        for i in 0..t_count * d {
+            assert!(
+                (acc.as_f32().unwrap()[i] - toks[i]).abs() < 1e-4,
+                "seed {seed} elem {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn grouped_rows_match_source_tokens() {
+    // every assignment's capacity row must hold the source token's data
+    let mut rng = Rng::new(99);
+    let t_count = 13;
+    let d = 3;
+    let router = FlatRouter { n_ranks: 2, per_rank: 4 };
+    let dom = domain(vec![0, 1]);
+    let toks: Vec<f32> = (0..t_count * d).map(|i| i as f32).collect();
+    let tokens = Tensor::f32(vec![t_count, d], toks.clone());
+    let mut idx = Vec::new();
+    let mut wt = Vec::new();
+    for _ in 0..t_count {
+        idx.push(rng.below(8) as i32);
+        idx.push(rng.below(8) as i32);
+        wt.extend_from_slice(&[0.5, 0.5]);
+    }
+    let disp = dispatch(&dom, 1, &tokens, &idx, &wt, 2, &router, &[t_count]).unwrap();
+    for p in &disp.per_rank {
+        let cap = p.grouped.shape[1];
+        let g = p.grouped.as_f32().unwrap();
+        for a in &p.assigns {
+            let off = (a.slot * cap + a.cap_row) * d;
+            assert_eq!(&g[off..off + d], &toks[a.token * d..(a.token + 1) * d]);
+        }
+        // counts agree with assignments
+        for (slot, &c) in p.counts.iter().enumerate() {
+            let n = p.assigns.iter().filter(|a| a.slot == slot).count();
+            assert_eq!(c, n);
+        }
+    }
+}

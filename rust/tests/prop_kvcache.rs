@@ -1,0 +1,148 @@
+//! Property-based tests for the block manager's undo log (§3.3).
+//!
+//! The offline build carries no proptest crate, so this uses the in-tree
+//! deterministic xorshift generator to drive randomized operation
+//! sequences — same idea: arbitrary interleavings of block ops within a
+//! step must be perfectly reversed by `undo_step`.
+
+use revivemoe::kvcache::BlockManager;
+use revivemoe::workload::Rng;
+
+/// Apply a random (but valid) block op; returns false if nothing applied.
+fn random_op(m: &mut BlockManager, rng: &mut Rng, live_seqs: &mut Vec<u64>) -> bool {
+    let choice = rng.below(100);
+    match choice {
+        // append to an existing or new sequence (most common op)
+        0..=59 => {
+            let seq = if live_seqs.is_empty() || rng.below(4) == 0 {
+                let s = rng.below(1000) as u64 + 1;
+                if !live_seqs.contains(&s) {
+                    live_seqs.push(s);
+                }
+                s
+            } else {
+                live_seqs[rng.below(live_seqs.len())]
+            };
+            m.append_token(seq).is_ok()
+        }
+        // ref-bump a random block of a random sequence
+        60..=69 => {
+            if live_seqs.is_empty() {
+                return false;
+            }
+            let seq = live_seqs[rng.below(live_seqs.len())];
+            let Some(t) = m.table(seq) else { return false };
+            if t.blocks.is_empty() {
+                return false;
+            }
+            let b = t.blocks[rng.below(t.blocks.len())];
+            m.ref_inc(b).is_ok()
+        }
+        // trim the last block
+        70..=79 => {
+            if live_seqs.is_empty() {
+                return false;
+            }
+            let seq = live_seqs[rng.below(live_seqs.len())];
+            if m.table(seq).map(|t| t.blocks.is_empty()).unwrap_or(true) {
+                return false;
+            }
+            m.free_last(seq).is_ok()
+        }
+        // finish a sequence entirely
+        _ => {
+            if live_seqs.is_empty() {
+                return false;
+            }
+            let i = rng.below(live_seqs.len());
+            let seq = live_seqs[i];
+            if m.table(seq).is_none() {
+                return false;
+            }
+            live_seqs.swap_remove(i);
+            m.drop_sequence(seq).is_ok()
+        }
+    }
+}
+
+#[test]
+fn undo_restores_any_random_step() {
+    for trial in 0..200 {
+        let mut rng = Rng::new(0xC0FFEE + trial);
+        let mut m = BlockManager::new(64, 4);
+        let mut live = Vec::new();
+        // build up arbitrary pre-state (committed steps)
+        for _ in 0..rng.below(120) {
+            random_op(&mut m, &mut rng, &mut live);
+        }
+        m.begin_step();
+        let snap = m.snapshot();
+        let live_snap = live.clone();
+        // a failed step with up to 40 random ops
+        for _ in 0..rng.below(40) + 1 {
+            random_op(&mut m, &mut rng, &mut live);
+        }
+        m.undo_step().expect("undo must succeed");
+        assert_eq!(m.snapshot(), snap, "trial {trial}: state must match step start");
+        m.audit().expect("audit after undo");
+        live = live_snap;
+        // the manager must still be fully usable after an undo
+        for _ in 0..20 {
+            random_op(&mut m, &mut rng, &mut live);
+        }
+        m.audit().expect("audit after continued use");
+    }
+}
+
+#[test]
+fn undo_is_idempotent_on_empty_log() {
+    let mut m = BlockManager::new(8, 4);
+    for _ in 0..5 {
+        m.append_token(1).unwrap();
+    }
+    m.begin_step();
+    let snap = m.snapshot();
+    assert_eq!(m.undo_step().unwrap(), 0);
+    assert_eq!(m.undo_step().unwrap(), 0);
+    assert_eq!(m.snapshot(), snap);
+}
+
+#[test]
+fn interleaved_sequences_roundtrip() {
+    // two sequences interleaving appends across block boundaries
+    for seed in 0..50 {
+        let mut rng = Rng::new(7000 + seed);
+        let mut m = BlockManager::new(32, 2); // tiny blocks force allocs
+        for _ in 0..10 {
+            m.append_token(1).unwrap();
+            m.append_token(2).unwrap();
+        }
+        m.begin_step();
+        let snap = m.snapshot();
+        for _ in 0..rng.below(16) + 1 {
+            let s = 1 + rng.below(2) as u64;
+            m.append_token(s).unwrap();
+        }
+        if rng.below(2) == 0 {
+            m.drop_sequence(2).unwrap();
+        }
+        m.undo_step().unwrap();
+        assert_eq!(m.snapshot(), snap);
+    }
+}
+
+#[test]
+fn oom_mid_step_is_recoverable() {
+    let mut m = BlockManager::new(4, 1); // 4 single-token blocks
+    m.append_token(1).unwrap();
+    m.append_token(1).unwrap();
+    m.begin_step();
+    let snap = m.snapshot();
+    m.append_token(2).unwrap();
+    m.append_token(2).unwrap();
+    assert!(m.append_token(3).is_err(), "pool exhausted");
+    // failure: roll the partial step back
+    m.undo_step().unwrap();
+    assert_eq!(m.snapshot(), snap);
+    assert_eq!(m.n_free(), 2);
+}

@@ -1,0 +1,145 @@
+//! Property-based tests for expert placement / weight-integrity invariants
+//! (§3.4) across randomized deployment shapes and failure orders.
+
+use revivemoe::comms::ExpertRouter;
+use revivemoe::moe::{DenseGroups, ExpertMap, FailOutcome};
+use revivemoe::workload::Rng;
+
+#[test]
+fn placement_invariants_hold_across_shapes() {
+    for seed in 0..200 {
+        let mut rng = Rng::new(31 + seed);
+        let n_ranks = rng.below(7) + 1;
+        let n_experts = n_ranks * (rng.below(6) + 1) + rng.below(n_ranks); // maybe uneven
+        if n_experts < n_ranks {
+            continue;
+        }
+        let per = n_experts / n_ranks;
+        let red = rng.below((n_experts - per).max(1).min(6) + 1);
+        let m = match ExpertMap::new_balanced(n_experts, n_ranks, red, None) {
+            Ok(m) => m,
+            Err(_) => continue, // impossible placement request
+        };
+        // every expert mapped at least once
+        for e in 0..n_experts {
+            assert!(m.replica_count(e) >= 1, "seed {seed}: expert {e} unmapped");
+        }
+        // no duplicate expert on any single rank
+        for r in 0..n_ranks {
+            let s = m.rank_slots(r);
+            let set: std::collections::BTreeSet<_> = s.iter().collect();
+            assert_eq!(set.len(), s.len(), "seed {seed}: duplicates on rank {r}");
+        }
+        // total slots = primaries + n_ranks * red
+        let total: usize = (0..n_ranks).map(|r| m.rank_slots(r).len()).sum();
+        assert_eq!(total, n_experts + n_ranks * red);
+        m.audit().unwrap();
+    }
+}
+
+#[test]
+fn full_shifted_redundancy_covers_any_single_failure() {
+    // redundancy == primaries per rank => every single-rank failure covered
+    for (n_experts, n_ranks) in [(32, 4), (32, 8), (16, 2), (24, 4)] {
+        let per = n_experts / n_ranks;
+        let m0 = ExpertMap::new_balanced(n_experts, n_ranks, per, None).unwrap();
+        for r in 0..n_ranks {
+            let mut m = m0.clone();
+            assert_eq!(
+                m.fail_rank(r).unwrap(),
+                FailOutcome::AllCovered,
+                "E={n_experts} R={n_ranks} rank {r} not covered"
+            );
+            // routing never points at the dead rank
+            for e in 0..n_experts {
+                for t in 0..4 {
+                    if let Some((rank, slot)) = m.route(e, t) {
+                        assert_ne!(rank, r);
+                        assert_eq!(m.rank_slots(rank)[slot], e);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_failures_until_exhaustion() {
+    for seed in 0..50 {
+        let mut rng = Rng::new(777 + seed);
+        let mut m = ExpertMap::new_balanced(32, 4, 2, None).unwrap();
+        let mut order: Vec<usize> = (0..4).collect();
+        // random failure order
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.below(i + 1));
+        }
+        let mut masked = Vec::new();
+        for &r in &order[..3] {
+            match m.fail_rank(r).unwrap() {
+                FailOutcome::AllCovered => {}
+                FailOutcome::LostExperts(l) => {
+                    m.mask_out(&l);
+                    masked.extend(l);
+                }
+            }
+            m.audit().unwrap();
+            // gate mask matches the missing set exactly
+            let mask = m.gate_mask();
+            let missing = m.missing_experts();
+            for e in 0..32 {
+                assert_eq!(missing.contains(&e), mask[e] != 0.0);
+            }
+        }
+        // last remaining rank still routes everything it hosts
+        let last = order[3];
+        for &e in m.rank_slots(last) {
+            assert!(m.route(e, 0).is_some());
+        }
+    }
+}
+
+#[test]
+fn revive_after_masking_restores_exactly_the_lost_set() {
+    let mut m = ExpertMap::new_balanced(32, 4, 0, None).unwrap();
+    let lost = match m.fail_rank(1).unwrap() {
+        FailOutcome::LostExperts(l) => l,
+        _ => panic!("no redundancy -> must lose experts"),
+    };
+    m.mask_out(&lost);
+    assert_eq!(m.missing_experts(), lost);
+    let slots = m.revive_rank(1).unwrap().to_vec();
+    assert_eq!(slots, (8..16).collect::<Vec<_>>());
+    assert!(m.missing_experts().is_empty());
+    for e in 0..32 {
+        assert!(m.replica_count(e) >= 1);
+    }
+}
+
+#[test]
+fn dense_group_failures_random_walk() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(4242 + seed);
+        let n_dev = rng.below(6) + 2;
+        let devices: Vec<usize> = (100..100 + n_dev).collect();
+        let tp = [1, 2, 4][rng.below(3)].min(n_dev);
+        let n_groups = rng.below(3) + 1;
+        let mut g = DenseGroups::layout(&devices, n_groups, tp).unwrap();
+        let mut healthy = n_groups;
+        for _ in 0..n_dev {
+            let dev = devices[rng.below(n_dev)];
+            let hit = g.fail_device(dev);
+            healthy -= hit.len();
+            assert_eq!(g.healthy_groups().len(), healthy);
+            if healthy > 0 {
+                // rebalancing only ever picks healthy groups
+                for _ in 0..4 {
+                    let pick = g.next_group().unwrap();
+                    assert!(g.is_healthy(pick));
+                }
+            } else {
+                assert!(g.next_group().is_err());
+                break;
+            }
+        }
+    }
+}
