@@ -1,6 +1,10 @@
 //! Shared helpers for the bench drivers (plain `harness = false` mains:
 //! the offline build has no criterion; these print paper-style tables and
 //! write machine-readable JSON under `bench_results/`).
+//!
+//! Every bench target compiles its own copy of this module and uses a
+//! subset of it.
+#![allow(dead_code)]
 
 use std::path::Path;
 use std::time::Duration;

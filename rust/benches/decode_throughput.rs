@@ -1,0 +1,214 @@
+//! **Decode throughput**: per-decode-step wall time and tokens/s as rank
+//! count grows, serial vs overlapped data plane.
+//!
+//! The seed engine serialized every device round-trip, so a "parallel"
+//! deployment's decode step grew linearly with rank count (~4x at 4
+//! ranks). With the async submit/await data plane the per-step time must
+//! stay near-flat: the acceptance bar is overlapped step time at 4 ranks
+//! <= 1.5x the 1-rank time.
+//!
+//! Each shape boots once and serves the same workload twice — first with
+//! `serial_data_plane` (the seed behavior, kept as the A/B baseline),
+//! then overlapped — so the comparison shares weights, artifacts, and
+//! prompts. Shapes whose AOT artifact set is missing (non-default expert
+//! slot counts) are skipped loudly, not failed.
+//!
+//! Run: `cargo bench --bench decode_throughput` (or
+//! `scripts/bench_decode.sh` from the repo root, which also refreshes
+//! `BENCH_decode_throughput.json`).
+
+mod common;
+
+use std::time::Instant;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::workload::{self, Request};
+
+struct Shape {
+    label: String,
+    mode: &'static str,
+    attn_ranks: usize,
+    cfg: DeploymentConfig,
+}
+
+struct PhaseResult {
+    step_ms_p50: f64,
+    step_ms_mean: f64,
+    tok_s: f64,
+    steps: usize,
+}
+
+fn shapes() -> Vec<Shape> {
+    let mut out = Vec::new();
+    // Disaggregated: DP rank count sweeps, EP4 fixed (the default artifact
+    // set covers 10 expert slots per MoE rank for every DP width).
+    for r in [1usize, 2, 4, 8] {
+        let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+        cfg.n_attn_ranks = r;
+        out.push(Shape {
+            label: format!("MA-disaggregated DP{r} EP4"),
+            mode: "disaggregated",
+            attn_ranks: r,
+            cfg,
+        });
+    }
+    // Collocated: rank count sweeps; redundancy chosen so the per-rank
+    // expert slot count matches an AOT'd grouped-FFN artifact where
+    // possible (32 slots @1 rank, 10 @4, 5 @8); others skip at boot.
+    for (r, redundant) in [(1usize, 0usize), (2, 0), (4, 2), (8, 1)] {
+        let mut cfg = DeploymentConfig::collocated_default("artifacts");
+        cfg.n_attn_ranks = r;
+        cfg.n_moe_ranks = r;
+        cfg.redundant_per_rank = redundant;
+        cfg.dense_tp = r.min(4);
+        cfg.n_dense_groups = (r / cfg.dense_tp).max(1);
+        out.push(Shape {
+            label: format!("MA-collocated DP{r} EP{r}"),
+            mode: "collocated",
+            attn_ranks: r,
+            cfg,
+        });
+    }
+    out
+}
+
+fn requests(n: usize, decode_steps: usize) -> Vec<Request> {
+    workload::gen_mixed(n, 7)
+        .expect("workload")
+        .into_iter()
+        .map(|mut r| {
+            r.max_new_tokens = decode_steps;
+            r
+        })
+        .collect()
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+/// Serve `reqs` to completion under the given data-plane mode, returning
+/// per-decode-step and throughput figures.
+fn run_phase(engine: &mut Engine, reqs: &[Request], serial: bool, max_steps: usize) -> PhaseResult {
+    engine.cfg.serial_data_plane = serial;
+    for r in reqs {
+        engine.submit(r.clone()).expect("submit");
+    }
+    let tokens_before = engine.stats.tokens_generated;
+    engine.stats.take_decode_step_ms(); // drop any stale samples
+    let t0 = Instant::now();
+    let done = engine.run_to_completion(max_steps).expect("serve");
+    // leftovers would decode during the NEXT phase and skew the serial
+    // vs overlapped comparison written to the baseline — fail loudly
+    assert_eq!(done.len(), reqs.len(), "phase left requests unfinished (raise max_steps)");
+    let wall = t0.elapsed().as_secs_f64();
+    let samples = engine.stats.take_decode_step_ms();
+    let tokens = engine.stats.tokens_generated - tokens_before;
+    PhaseResult {
+        step_ms_p50: median(samples.clone()),
+        step_ms_mean: if samples.is_empty() {
+            0.0
+        } else {
+            samples.iter().sum::<f64>() / samples.len() as f64
+        },
+        tok_s: if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
+        steps: samples.len(),
+    }
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let decode_steps = if quick { 8 } else { 24 };
+
+    let mut rows: Vec<Json> = Vec::new();
+    // overlapped p50 step time per disaggregated DP width, for the 4v1 bar
+    let mut disagg_overlap_p50: Vec<(usize, f64)> = Vec::new();
+
+    println!("decode throughput: serial vs overlapped data plane\n");
+    for shape in shapes() {
+        let (mut engine, _bd) = match Engine::boot(shape.cfg) {
+            Ok(x) => x,
+            Err(e) => {
+                println!("{:<32} SKIP (boot: {e})", shape.label);
+                continue;
+            }
+        };
+        // a full decode batch on every DP rank
+        let n_req = engine.cfg.max_batch * shape.attn_ranks;
+        let reqs = requests(n_req, decode_steps);
+        let max_steps = decode_steps * 4 + 64;
+
+        let serial = run_phase(&mut engine, &reqs, true, max_steps);
+        let overlap = run_phase(&mut engine, &reqs, false, max_steps);
+        let speedup = if overlap.step_ms_p50 > 0.0 {
+            serial.step_ms_p50 / overlap.step_ms_p50
+        } else {
+            0.0
+        };
+        println!(
+            "{:<32} serial step p50 {:>7.2} ms | overlap step p50 {:>7.2} ms | x{:.2} | {:.0} -> {:.0} tok/s",
+            shape.label, serial.step_ms_p50, overlap.step_ms_p50, speedup,
+            serial.tok_s, overlap.tok_s,
+        );
+        if shape.mode == "disaggregated" {
+            disagg_overlap_p50.push((shape.attn_ranks, overlap.step_ms_p50));
+        }
+        rows.push(obj(vec![
+            ("label", s(&shape.label)),
+            ("mode", s(shape.mode)),
+            ("attn_ranks", num(shape.attn_ranks as f64)),
+            ("requests", num(n_req as f64)),
+            ("serial_step_ms_p50", num(serial.step_ms_p50)),
+            ("serial_step_ms_mean", num(serial.step_ms_mean)),
+            ("serial_tok_s", num(serial.tok_s)),
+            ("serial_steps", num(serial.steps as f64)),
+            ("overlap_step_ms_p50", num(overlap.step_ms_p50)),
+            ("overlap_step_ms_mean", num(overlap.step_ms_mean)),
+            ("overlap_tok_s", num(overlap.tok_s)),
+            ("overlap_steps", num(overlap.steps as f64)),
+            ("overlap_speedup", num(speedup)),
+        ]));
+        engine.shutdown();
+    }
+
+    // acceptance bar: overlapped 4-rank step time vs 1-rank (disagg sweep)
+    let p50_at = |r: usize| {
+        disagg_overlap_p50
+            .iter()
+            .find(|(ranks, _)| *ranks == r)
+            .map(|&(_, ms)| ms)
+    };
+    let ratio_4v1 = match (p50_at(4), p50_at(1)) {
+        (Some(four), Some(one)) if one > 0.0 => four / one,
+        _ => f64::NAN,
+    };
+    // a skipped 1- or 4-rank shape leaves the ratio undefined: write null,
+    // never NaN (the minimal JSON writer would emit an unparseable token)
+    let ratio_json = if ratio_4v1.is_finite() {
+        println!("\noverlapped step p50, 4 ranks / 1 rank = {ratio_4v1:.2} (bar: <= 1.5)");
+        num(ratio_4v1)
+    } else {
+        Json::Null
+    };
+
+    let j = obj(vec![
+        ("bench", s("decode_throughput")),
+        ("quick", Json::Bool(quick)),
+        ("decode_steps_per_request", num(decode_steps as f64)),
+        ("overlap_step_p50_ratio_4rank_over_1rank", ratio_json),
+        ("shapes", Json::Arr(rows)),
+    ]);
+    common::write_results("decode_throughput", &j);
+    // repo-root copy: the perf baseline every future PR compares against
+    match std::fs::write("../BENCH_decode_throughput.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_decode_throughput.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_decode_throughput.json: {e}"),
+    }
+}

@@ -160,6 +160,11 @@ pub struct DeploymentConfig {
     /// Use the fused full-model decode executable when a rank hosts all
     /// experts ("graph mode", §2.4). Falls back to per-module otherwise.
     pub graph_mode: bool,
+    /// Serialize every device round-trip instead of overlapping ranks
+    /// (the pre-async data-plane behavior). Kept as an A/B baseline for
+    /// the overlap-correctness tests and the decode-throughput bench;
+    /// production deployments leave this off.
+    pub serial_data_plane: bool,
 }
 
 impl DeploymentConfig {
@@ -185,6 +190,7 @@ impl DeploymentConfig {
             heartbeat_timeout_ms: 120,
             artifacts_dir: artifacts_dir.into(),
             graph_mode: false,
+            serial_data_plane: false,
         }
     }
 

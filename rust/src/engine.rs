@@ -6,6 +6,15 @@
 //! on MoE ranks → combine), watches heartbeats + device-plugin
 //! annotations, and hands failures to [`crate::recovery::ReviveMoE`].
 //!
+//! The data plane is *overlapped*: every per-rank device call in the hot
+//! serving paths is fanned out with [`crate::runtime::ExecWave`] — submit
+//! to all DP/MoE/dense ranks first, collect afterwards — so simulated
+//! "parallel" ranks genuinely run concurrently and per-step wall time
+//! stays ~flat as rank count grows. Setting
+//! `DeploymentConfig::serial_data_plane` restores the serialized
+//! round-trips (the A/B baseline used by the overlap-correctness tests
+//! and `benches/decode_throughput.rs`).
+//!
 //! `Engine::boot` produces the Figure-1 style initialization breakdown;
 //! every timing category matches Table 1.
 
@@ -19,9 +28,10 @@ use crate::cluster::{
 };
 use crate::comms::{self, DomainManager, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, ModelMeta};
-use crate::executor::{artifact_set, Executor};
+use crate::executor::{artifact_set, out1, out4, router_out, Executor};
 use crate::metrics::{Breakdown, Category, ServingStats};
 use crate::moe::{DenseGroups, ExpertMap};
+use crate::runtime::ExecWave;
 use crate::scheduler::{SeqId, SeqState, Sequence, Token};
 use crate::tensor::Tensor;
 use crate::weights::WeightStore;
@@ -39,9 +49,13 @@ pub struct Completion {
     pub migrations: u32,
 }
 
+/// Engine-side bookkeeping for one in-flight request. The prompt is NOT
+/// duplicated here: it lives in the [`Sequence`] and is recovered at
+/// completion (migration views fold banked decoded tokens into the
+/// sequence prompt; `output.len()` tells us how many to peel back off).
 struct RequestRecord {
     task: String,
-    prompt: Vec<Token>,
+    /// Tokens banked by migrations; the live tail stays on the sequence.
     output: Vec<Token>,
     submitted: Instant,
 }
@@ -225,7 +239,9 @@ impl Engine {
         );
         let id = self.next_seq;
         self.next_seq += 1;
-        let seq = Sequence::new(id, req.prompt.clone(), req.max_new_tokens,
+        // the prompt moves into the sequence exactly once; the completion
+        // path recovers it from there (see `step`'s reap loop)
+        let seq = Sequence::new(id, req.prompt, req.max_new_tokens,
                                 Some(crate::workload::eos_token()));
         let rank_dev = self.least_loaded_attn()?;
         self.executors
@@ -238,7 +254,6 @@ impl Engine {
             .submit(seq);
         self.records.insert(id, RequestRecord {
             task: req.task,
-            prompt: req.prompt,
             output: Vec::new(),
             submitted: Instant::now(),
         });
@@ -255,23 +270,27 @@ impl Engine {
 
     /// Drain every sequence off a (failed or role-switching) attention
     /// rank for migration (§3.2), banking already-decoded tokens into the
-    /// request records first (their `migration_view` clears `decoded`).
+    /// request records before the migration view folds them into the
+    /// prompt.
     pub fn drain_for_migration(&mut self, dev: DeviceId) -> Result<Vec<Sequence>> {
-        let a = self
-            .executors
-            .get_mut(&dev)
-            .ok_or_else(|| anyhow::anyhow!("no executor on device {dev}"))?
-            .attn
-            .as_mut()
-            .ok_or_else(|| anyhow::anyhow!("device {dev} is not an attention rank"))?;
-        let banked: Vec<(SeqId, Vec<Token>)> =
-            a.sched.running.iter().map(|s| (s.id, s.decoded.clone())).collect();
-        let drained = a.sched.drain_for_migration();
-        for (id, dec) in banked {
-            if let Some(rec) = self.records.get_mut(&id) {
-                rec.output.extend(dec);
+        let (running, waiting) = {
+            let a = self
+                .executors
+                .get_mut(&dev)
+                .ok_or_else(|| anyhow::anyhow!("no executor on device {dev}"))?
+                .attn
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("device {dev} is not an attention rank"))?;
+            a.sched.take_all()
+        };
+        let mut drained = Vec::with_capacity(running.len() + waiting.len());
+        for s in running {
+            if let Some(rec) = self.records.get_mut(&s.id) {
+                rec.output.extend_from_slice(&s.decoded);
             }
+            drained.push(s.into_migration_view());
         }
+        drained.extend(waiting);
         Ok(drained)
     }
 
@@ -331,16 +350,23 @@ impl Engine {
                 }
                 if let Some(rec) = self.records.remove(&seq.id) {
                     let latency = rec.submitted.elapsed();
+                    let banked = rec.output.len();
                     let mut output = rec.output;
                     output.extend_from_slice(&seq.decoded);
+                    // the sequence prompt is the original prompt plus every
+                    // banked (pre-migration) decoded token — peel those off
+                    // to recover the prompt without having stored a copy
+                    let migrations = seq.migrations;
+                    let mut prompt = seq.prompt;
+                    prompt.truncate(prompt.len().saturating_sub(banked));
                     self.stats.record_completion(latency, output.len());
                     done.push(Completion {
                         seq_id: seq.id,
                         task: rec.task,
-                        prompt: rec.prompt,
+                        prompt,
                         output,
                         latency,
-                        migrations: seq.migrations,
+                        migrations,
                     });
                 }
             }
@@ -384,36 +410,49 @@ impl Engine {
             }
         }
 
-        let ex = self.executors.get_mut(&dev).unwrap();
-        let mut x = ex.embed_prefill(s_bucket, &toks)?; // [1,s,d]
+        let d_model = self.meta.d_model;
+        let mut x = {
+            let ex = self.executors.get_mut(&dev).unwrap();
+            ex.embed_prefill(s_bucket, &toks)? // [1,s,d]
+        };
         for li in 0..self.meta.n_layers {
             let (h, ffn_in, k, v) = {
                 let ex = self.executors.get_mut(&dev).unwrap();
                 ex.attn_prefill(s_bucket, li, &x)?
+            };
+            // zero-copy flatten [1,s,d] -> [s,d] for the FFN half
+            let flat = ffn_in.into_shape(vec![s_bucket, d_model])?;
+            // submit the FFN half first, then scatter this layer's K/V into
+            // the paged pool while the devices chew on it — the next
+            // layer's attention only gathers KV after the wave collects
+            let is_dense = li < self.meta.n_dense_layers;
+            let wave = if is_dense {
+                self.submit_dense_layer(li, &flat, s_bucket)?
+            } else {
+                let mask = self.expert_map.gate_mask();
+                let mut w = ExecWave::new(self.cfg.serial_data_plane);
+                w.push(self.executors[&dev].submit_router(s_bucket, li, &flat, &mask)?)?;
+                w
             };
             {
                 let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
                 let table = a.blocks.table(seq_id).unwrap().clone();
                 a.kv.scatter_prefill(li, &table, ctx, &k, &v)?;
             }
-            // flatten [1,s,d] -> [s,d] for the FFN half
-            let d_model = self.meta.d_model;
-            let flat = Tensor::f32(vec![s_bucket, d_model], ffn_in.as_f32()?.to_vec());
-            let ffn_out = if li < self.meta.n_dense_layers {
-                self.dense_layer(li, &flat, s_bucket)?
+            let ffn_out = if is_dense {
+                Self::collect_dense(wave)?
             } else {
-                self.moe_layer_prefill(dev, li, &flat, ctx, s_bucket)?
+                let (idx, wt) = router_out(wave.collect()?.pop().unwrap())?;
+                self.moe_routed_valid(li, &flat, &idx, &wt, ctx, s_bucket)?
             };
             let mut hx = h;
-            // x = h + ffn_out (broadcast back to [1,s,d])
-            let add = Tensor::f32(vec![1, s_bucket, d_model], ffn_out.as_f32()?.to_vec());
-            hx.add_assign(&add)?;
+            // x = h + ffn_out (zero-copy broadcast back to [1,s,d])
+            hx.add_assign(&ffn_out.into_shape(vec![1, s_bucket, d_model])?)?;
             x = hx;
         }
         // head over all positions; the first generated token comes from the
         // last *valid* position
-        let d_model = self.meta.d_model;
-        let flat = Tensor::f32(vec![s_bucket, d_model], x.as_f32()?.to_vec());
+        let flat = x.into_shape(vec![s_bucket, d_model])?;
         let logits = {
             let ex = self.executors.get_mut(&dev).unwrap();
             ex.lm_head(s_bucket, &flat)?
@@ -455,14 +494,18 @@ impl Engine {
     }
 
     fn decode_step(&mut self) -> Result<()> {
+        let t_step = Instant::now();
         let batches = self.decode_batches();
         if batches.is_empty() {
             return Ok(());
         }
+        let serial = self.cfg.serial_data_plane;
 
-        // step begin: page reservation per rank (undo-log step boundary §3.3)
-        let mut xs: Vec<Tensor> = Vec::with_capacity(batches.len());
+        // step begin: page reservation per rank (undo-log step boundary
+        // §3.3), then the embed fan-out — every DP rank's embed is in
+        // flight before any result is collected.
         let mut lens: Vec<Vec<usize>> = Vec::with_capacity(batches.len());
+        let mut wave = ExecWave::new(serial);
         for (d, ids, bucket) in &batches {
             let mut toks: Vec<i32> = Vec::with_capacity(*bucket);
             let mut pos: Vec<i32> = Vec::with_capacity(*bucket);
@@ -485,21 +528,27 @@ impl Engine {
             }
             toks.resize(*bucket, 0);
             pos.resize(*bucket, 0);
-            let ex = self.executors.get_mut(d).unwrap();
-            xs.push(ex.embed_decode(*bucket, &toks, &pos)?);
+            wave.push(self.executors[d].submit_embed_decode(*bucket, &toks, &pos)?)?;
             lens.push(ls);
         }
+        let mut xs: Vec<Tensor> =
+            wave.collect()?.into_iter().map(out1).collect::<Result<Vec<_>>>()?;
 
         // layer loop
         for li in 0..self.meta.n_layers {
+            // attention halves: all DP ranks submitted before any collect
+            let max_seq = self.meta.max_seq;
+            let mut wave = ExecWave::new(serial);
+            for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
+                wave.push(self.executors[d].submit_attn_decode(
+                    li, *bucket, &xs[bi], ids, &lens[bi], max_seq,
+                )?)?;
+            }
             let mut hs: Vec<Tensor> = Vec::with_capacity(batches.len());
             let mut ffns: Vec<Tensor> = Vec::with_capacity(batches.len());
-            for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
-                let max_seq = self.meta.max_seq;
-                let ex = self.executors.get_mut(d).unwrap();
-                let (h, ffn_in, nk, nv) =
-                    ex.attn_decode(li, *bucket, &xs[bi], ids, &lens[bi], max_seq)?;
-                ex.write_new_kv(li, &nk, &nv)?;
+            for ((d, _, _), out) in batches.iter().zip(wave.collect()?) {
+                let (h, ffn_in, nk, nv) = out4(out)?;
+                self.executors.get_mut(d).unwrap().write_new_kv(li, &nk, &nv)?;
                 hs.push(h);
                 ffns.push(ffn_in);
             }
@@ -513,45 +562,40 @@ impl Engine {
                 let padded = cat.pad_rows(t_bucket)?;
                 self.dense_layer(li, &padded, t_bucket)?
             } else {
-                // router runs per attention rank on its own device
-                let mut idx_cat: Vec<i32> = Vec::new();
-                let mut wt_cat: Vec<f32> = Vec::new();
+                // router runs per attention rank on its own device, all
+                // ranks overlapped
                 let mask = self.expert_map.gate_mask();
-                for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
-                    let ex = self.executors.get_mut(d).unwrap();
-                    let (idx, wt) = ex.router(*bucket, li, &ffns[bi], &mask)?;
-                    let k = self.meta.top_k;
+                let mut wave = ExecWave::new(serial);
+                for (bi, (d, _, bucket)) in batches.iter().enumerate() {
+                    wave.push(self.executors[d].submit_router(*bucket, li, &ffns[bi], &mask)?)?;
+                }
+                let k = self.meta.top_k;
+                let mut idx_cat: Vec<i32> = Vec::with_capacity(t_total * k);
+                let mut wt_cat: Vec<f32> = Vec::with_capacity(t_total * k);
+                for ((_, ids, _), out) in batches.iter().zip(wave.collect()?) {
+                    let (idx, wt) = router_out(out)?;
                     idx_cat.extend_from_slice(&idx[..ids.len() * k]);
                     wt_cat.extend_from_slice(&wt[..ids.len() * k]);
                 }
                 self.moe_layer_routed(li, &cat, &idx_cat, &wt_cat, t_total)?
             };
-            // x = h + out, split back per rank
+            // x = h + out, split back per rank through a borrowed row view
+            // (no per-rank clone + element loop)
             let mut row = 0usize;
-            for (bi, (_, ids, bucket)) in batches.iter().enumerate() {
-                let d_model = self.meta.d_model;
-                let mut x = hs[bi].clone();
-                {
-                    let xv = x.as_f32_mut()?;
-                    let ov = out.as_f32()?;
-                    for i in 0..ids.len() {
-                        for j in 0..d_model {
-                            xv[i * d_model + j] += ov[(row + i) * d_model + j];
-                        }
-                    }
-                }
+            for (bi, ((_, ids, _), mut x)) in batches.iter().zip(hs).enumerate() {
+                x.add_slice(out.rows(row, ids.len())?)?;
                 row += ids.len();
-                let _ = bucket;
                 xs[bi] = x;
             }
         }
 
-        // heads + sampling per rank
-        for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
-            let logits = {
-                let ex = self.executors.get_mut(d).unwrap();
-                ex.lm_head(*bucket, &xs[bi])?
-            };
+        // heads + sampling per rank: submit every rank's head, then sample
+        let mut wave = ExecWave::new(serial);
+        for (bi, (d, _, bucket)) in batches.iter().enumerate() {
+            wave.push(self.executors[d].submit_lm_head(*bucket, &xs[bi])?)?;
+        }
+        for ((d, ids, _), out) in batches.iter().zip(wave.collect()?) {
+            let logits = out1(out)?;
             let am = logits.argmax_rows()?;
             let a = self.executors.get_mut(d).unwrap().attn.as_mut().unwrap();
             for (i, id) in ids.iter().enumerate() {
@@ -563,6 +607,7 @@ impl Engine {
             a.blocks.begin_step();
             self.stats.tokens_generated += ids.len();
         }
+        self.stats.record_decode_step(t_step.elapsed());
         Ok(())
     }
 
@@ -596,21 +641,39 @@ impl Engine {
         self.moe_layer_prefill(dev, li, x, valid, s_bucket)
     }
 
-    /// Dense-FFN layer over `[t_bucket, d]` tokens: pick a healthy TP
-    /// group, fan out shards, all-reduce (§3.4 dense rebalancing).
-    fn dense_layer(&mut self, li: usize, x: &Tensor, t_bucket: usize) -> Result<Tensor> {
+    /// Submit a dense-FFN layer over `[t_bucket, d]` tokens without
+    /// collecting: pick a healthy TP group and fan out every shard
+    /// (§3.4 dense rebalancing). Finish with [`Self::collect_dense`].
+    fn submit_dense_layer(&mut self, li: usize, x: &Tensor, t_bucket: usize) -> Result<ExecWave> {
         let g = self.dense.next_group()?;
         let members = self.dense.groups[g].clone();
         let tp = self.cfg.dense_tp;
-        let mut parts = Vec::with_capacity(members.len());
+        let mut wave = ExecWave::new(self.cfg.serial_data_plane);
         for &dev in &members {
             let ex = self
                 .executors
-                .get_mut(&dev)
+                .get(&dev)
                 .ok_or_else(|| anyhow::anyhow!("dense shard device {dev} missing"))?;
-            parts.push(ex.dense_forward(li, tp, t_bucket, x)?);
+            wave.push(ex.submit_dense_forward(li, tp, t_bucket, x)?)?;
         }
+        Ok(wave)
+    }
+
+    /// Await a dense-shard wave and all-reduce the partial outputs.
+    fn collect_dense(wave: ExecWave) -> Result<Tensor> {
+        let parts = wave
+            .collect()?
+            .into_iter()
+            .map(out1)
+            .collect::<Result<Vec<_>>>()?;
         comms::all_reduce_sum(&parts)
+    }
+
+    /// Dense-FFN layer over `[t_bucket, d]` tokens: shard fan-out +
+    /// all-reduce.
+    fn dense_layer(&mut self, li: usize, x: &Tensor, t_bucket: usize) -> Result<Tensor> {
+        let wave = self.submit_dense_layer(li, x, t_bucket)?;
+        Self::collect_dense(wave)
     }
 
     /// MoE layer for prefill: route every valid position of `[s,d]`.
@@ -628,18 +691,28 @@ impl Engine {
             let ex = self.executors.get_mut(&dev).unwrap();
             ex.router(s_bucket, li, x, &mask)?
         };
+        self.moe_routed_valid(li, x, &idx, &wt, valid, s_bucket)
+    }
+
+    /// Route the first `valid` rows of `[s,d]` through the MoE data plane
+    /// and pad the result back to `[s_bucket, d]`.
+    fn moe_routed_valid(
+        &mut self,
+        li: usize,
+        x: &Tensor,
+        idx: &[i32],
+        wt: &[f32],
+        valid: usize,
+        s_bucket: usize,
+    ) -> Result<Tensor> {
         let k = self.meta.top_k;
-        let valid_x = Tensor::f32(
-            vec![valid, self.meta.d_model],
-            x.as_f32()?[..valid * self.meta.d_model].to_vec(),
-        );
+        let valid_x = Tensor::f32(vec![valid, self.meta.d_model], x.rows(0, valid)?.to_vec());
         let out = self.moe_layer_routed(li, &valid_x, &idx[..valid * k], &wt[..valid * k], valid)?;
-        // pad back to [s,d]
         out.pad_rows(s_bucket)
     }
 
-    /// Shared MoE data plane: dispatch -> grouped FFN on MoE ranks ->
-    /// combine. `x` is `[t,d]` valid tokens.
+    /// Shared MoE data plane: dispatch -> grouped FFN fanned out across
+    /// every busy MoE rank -> combine. `x` is `[t,d]` valid tokens.
     fn moe_layer_routed(
         &mut self,
         li: usize,
@@ -664,22 +737,31 @@ impl Engine {
             &self.expert_map,
             &self.cfg.capacity_buckets,
         )?;
-        let _ = t_total;
         anyhow::ensure!(disp.overflowed == 0, "dispatch overflow: capacity bucket too small");
         self.stats.bytes_dispatched += disp.bytes_moved;
 
-        let mut outputs: Vec<Tensor> = Vec::with_capacity(disp.per_rank.len());
-        for payload in &disp.per_rank {
+        // fan the grouped FFN out across every MoE rank with work, then
+        // collect. Idle ranks get a minimal placeholder: `combine` reads
+        // only `shape[1]` plus the rows named in `assigns` (none here), so
+        // no full-size zero buffer is materialized for them.
+        let mut outputs: Vec<Tensor> =
+            disp.per_rank.iter().map(|_| Tensor::zeros(vec![0, 1, 0])).collect();
+        let mut wave = ExecWave::new(self.cfg.serial_data_plane);
+        let mut submitted: Vec<usize> = Vec::new();
+        for (pi, payload) in disp.per_rank.iter().enumerate() {
             if payload.assigns.is_empty() {
-                outputs.push(Tensor::zeros(payload.grouped.shape.clone()));
                 continue;
             }
             let dev = self.moe_order[payload.rank];
             let ex = self
                 .executors
-                .get_mut(&dev)
+                .get(&dev)
                 .ok_or_else(|| anyhow::anyhow!("MoE device {dev} missing"))?;
-            outputs.push(ex.moe_forward(li, &payload.grouped)?);
+            wave.push(ex.submit_moe_forward(li, &payload.grouped)?)?;
+            submitted.push(pi);
+        }
+        for (pi, out) in submitted.into_iter().zip(wave.collect()?) {
+            outputs[pi] = out1(out)?;
         }
         let domain = self.domains.get(ATTN_EXPERT_DOMAIN)?;
         let (acc, bytes) = comms::combine(domain, &disp, &outputs, t_total, self.meta.d_model)?;
@@ -713,18 +795,17 @@ impl Engine {
                 let ex = self.executors.get_mut(&dev).unwrap();
                 ex.attn_prefill(s_bucket, li, &x)?
             };
-            let flat = Tensor::f32(vec![s_bucket, d_model], ffn_in.as_f32()?.to_vec());
+            let flat = ffn_in.into_shape(vec![s_bucket, d_model])?;
             let ffn_out = if li < self.meta.n_dense_layers {
                 self.dense_layer(li, &flat, s_bucket)?
             } else {
                 self.moe_layer_prefill(dev, li, &flat, tokens.len(), s_bucket)?
             };
             let mut hx = h;
-            let add = Tensor::f32(vec![1, s_bucket, d_model], ffn_out.as_f32()?.to_vec());
-            hx.add_assign(&add)?;
+            hx.add_assign(&ffn_out.into_shape(vec![1, s_bucket, d_model])?)?;
             x = hx;
         }
-        let flat = Tensor::f32(vec![s_bucket, d_model], x.as_f32()?.to_vec());
+        let flat = x.into_shape(vec![s_bucket, d_model])?;
         let logits = {
             let ex = self.executors.get_mut(&dev).unwrap();
             ex.lm_head(s_bucket, &flat)?
@@ -753,8 +834,11 @@ impl Engine {
             self.plugin.clear(ann.device);
         }
         let devices: Vec<DeviceId> = self.executors.keys().copied().collect();
-        let monitor = HeartbeatMonitor { interval: self.monitor.interval, timeout: self.monitor.timeout };
-        let verdict = monitor.sweep(&devices, |d, timeout| self.executors[&d].handle.ping(timeout));
+        // borrow the executor map by field so the sweep closure does not
+        // capture `self` (which the monitor itself is borrowed from)
+        let executors = &self.executors;
+        let verdict =
+            self.monitor.sweep(&devices, |d, timeout| executors[&d].handle.ping(timeout));
         match verdict {
             HeartbeatVerdict::AllHealthy => None,
             HeartbeatVerdict::Erroring(d) => Some(self.plugin.post_fault(

@@ -14,7 +14,7 @@ use crate::config::{DeploymentConfig, ModelMeta};
 use crate::kvcache::BlockManager;
 use crate::kvpool::KvPool;
 use crate::moe::ExpertId;
-use crate::runtime::{Arg, CompileStat, DeviceHandle, SimDevice};
+use crate::runtime::{Arg, CompileStat, DeviceHandle, PendingExec, SimDevice};
 use crate::scheduler::{LocalScheduler, SeqId};
 use crate::tensor::Tensor;
 use crate::weights::{WeightStore, ATTN_WEIGHT_ORDER};
@@ -145,30 +145,31 @@ impl Executor {
             .collect()
     }
 
-    /// Decode-path embed: tokens/pos `[B]` (already padded to the bucket).
-    pub fn embed_decode(&self, bucket: usize, toks: &[i32], pos: &[i32]) -> Result<Tensor> {
-        let mut args = vec![
+    /// Submit the decode-path embed without waiting: tokens/pos `[B]`
+    /// (already padded to the bucket).
+    pub fn submit_embed_decode(&self, bucket: usize, toks: &[i32], pos: &[i32]) -> Result<PendingExec> {
+        let args = vec![
             Arg::Value(Tensor::i32(vec![bucket], toks.to_vec())),
             Arg::Value(Tensor::i32(vec![bucket], pos.to_vec())),
             Arg::Weight("embed".into()),
             Arg::Weight("pos".into()),
         ];
-        let out = self.handle.execute(&artifacts::embed_decode(bucket), std::mem::take(&mut args))?;
-        Ok(out.into_iter().next().unwrap())
+        self.handle.submit_execute(&artifacts::embed_decode(bucket), args)
     }
 
-    /// One layer's attention half for the decode batch. `x` is `[B,d]`
-    /// (bucket-padded); gathers this rank's paged KV for `layer`.
-    /// Returns `(h, ffn_in, new_k, new_v)`.
-    pub fn attn_decode(
-        &mut self,
+    /// Submit one layer's attention half for the decode batch without
+    /// waiting. `x` is `[B,d]` (bucket-padded); this rank's paged KV for
+    /// `layer` is gathered host-side at submission time. Awaiting the
+    /// result yields `(h, ffn_in, new_k, new_v)` (unpack with [`out4`]).
+    pub fn submit_attn_decode(
+        &self,
         layer: usize,
         bucket: usize,
         x: &Tensor,
         seq_ids: &[SeqId],
         lens: &[usize],
         max_seq: usize,
-    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+    ) -> Result<PendingExec> {
         let st = self.attn.as_ref().ok_or_else(|| anyhow::anyhow!("not an attention rank"))?;
         let tables: Vec<_> = seq_ids
             .iter()
@@ -191,13 +192,7 @@ impl Executor {
             Arg::Value(Tensor::i32(vec![bucket], cur)),
         ];
         args.extend(Self::attn_weight_args(layer));
-        let out = self.handle.execute(&artifacts::attn_decode(bucket), args)?;
-        let mut it = out.into_iter();
-        let h = it.next().unwrap();
-        let ffn_in = it.next().unwrap();
-        let nk = it.next().unwrap();
-        let nv = it.next().unwrap();
-        Ok((h, ffn_in, nk, nv))
+        self.handle.submit_execute(&artifacts::attn_decode(bucket), args)
     }
 
     /// Write the step's new K/V rows (one per real batch element) into the
@@ -214,6 +209,23 @@ impl Executor {
         Ok(())
     }
 
+    /// Submit the gate for this rank's tokens without waiting. Unpack the
+    /// awaited result with [`router_out`].
+    pub fn submit_router(
+        &self,
+        bucket: usize,
+        layer: usize,
+        ffn_in: &Tensor,
+        mask: &[f32],
+    ) -> Result<PendingExec> {
+        let args = vec![
+            Arg::Value(ffn_in.clone()),
+            Arg::Weight(format!("layers.{layer}.router")),
+            Arg::Value(Tensor::f32(vec![mask.len()], mask.to_vec())),
+        ];
+        self.handle.submit_execute(&artifacts::router(bucket), args)
+    }
+
     /// Gate for this rank's tokens: returns `(idx, wt)` flattened `[B*k]`.
     pub fn router(
         &self,
@@ -222,27 +234,24 @@ impl Executor {
         ffn_in: &Tensor,
         mask: &[f32],
     ) -> Result<(Vec<i32>, Vec<f32>)> {
-        let args = vec![
-            Arg::Value(ffn_in.clone()),
-            Arg::Weight(format!("layers.{layer}.router")),
-            Arg::Value(Tensor::f32(vec![mask.len()], mask.to_vec())),
-        ];
-        let out = self.handle.execute(&artifacts::router(bucket), args)?;
-        let idx = out[0].as_i32()?.to_vec();
-        let wt = out[1].as_f32()?.to_vec();
-        Ok((idx, wt))
+        router_out(self.submit_router(bucket, layer, ffn_in, mask)?.wait()?)
     }
 
-    /// Final norm + tied-embedding head over `[T,d]`.
-    pub fn lm_head(&self, bucket: usize, x: &Tensor) -> Result<Tensor> {
+    /// Submit the final norm + tied-embedding head over `[T,d]` without
+    /// waiting.
+    pub fn submit_lm_head(&self, bucket: usize, x: &Tensor) -> Result<PendingExec> {
         let args = vec![
             Arg::Value(x.clone()),
             Arg::Weight("lnf_g".into()),
             Arg::Weight("lnf_b".into()),
             Arg::Weight("embed".into()),
         ];
-        let out = self.handle.execute(&artifacts::lm_head(bucket), args)?;
-        Ok(out.into_iter().next().unwrap())
+        self.handle.submit_execute(&artifacts::lm_head(bucket), args)
+    }
+
+    /// Final norm + tied-embedding head over `[T,d]` (blocking).
+    pub fn lm_head(&self, bucket: usize, x: &Tensor) -> Result<Tensor> {
+        out1(self.submit_lm_head(bucket, x)?.wait()?)
     }
 
     /// Prefill-path embed for one sequence padded to seq bucket `s`.
@@ -273,8 +282,9 @@ impl Executor {
 
     // -- MoE-role device ops -------------------------------------------------
 
-    /// Grouped expert FFN over dispatched tokens `[n_slots, C, d]`.
-    pub fn moe_forward(&self, layer: usize, grouped: &Tensor) -> Result<Tensor> {
+    /// Submit the grouped expert FFN over dispatched tokens
+    /// `[n_slots, C, d]` without waiting.
+    pub fn submit_moe_forward(&self, layer: usize, grouped: &Tensor) -> Result<PendingExec> {
         let st = self.moe.as_ref().ok_or_else(|| anyhow::anyhow!("not a MoE rank"))?;
         let (n_slots, cap) = (grouped.shape[0], grouped.shape[1]);
         anyhow::ensure!(n_slots == st.slots.len(), "grouped slots mismatch");
@@ -283,20 +293,25 @@ impl Executor {
             Arg::Weight(format!("layers.{layer}.e_w1.slots")),
             Arg::Weight(format!("layers.{layer}.e_w2.slots")),
         ];
-        let out = self.handle.execute(&artifacts::moe_block(n_slots, cap), args)?;
-        Ok(out.into_iter().next().unwrap())
+        self.handle.submit_execute(&artifacts::moe_block(n_slots, cap), args)
     }
 
-    /// One dense-FFN TP shard's partial output for `[t,d]` tokens.
-    pub fn dense_forward(&self, layer: usize, tp: usize, t_bucket: usize, x: &Tensor) -> Result<Tensor> {
+    /// Submit one dense-FFN TP shard's partial output for `[t,d]` tokens
+    /// without waiting.
+    pub fn submit_dense_forward(
+        &self,
+        layer: usize,
+        tp: usize,
+        t_bucket: usize,
+        x: &Tensor,
+    ) -> Result<PendingExec> {
         let (_, shard) = self.dense_shard.ok_or_else(|| anyhow::anyhow!("no dense shard here"))?;
         let args = vec![
             Arg::Value(x.clone()),
             Arg::Weight(format!("layers.{layer}.d_w1.s{shard}")),
             Arg::Weight(format!("layers.{layer}.d_w2.s{shard}")),
         ];
-        let out = self.handle.execute(&artifacts::dense_ffn(tp, t_bucket), args)?;
-        Ok(out.into_iter().next().unwrap())
+        self.handle.submit_execute(&artifacts::dense_ffn(tp, t_bucket), args)
     }
 
     // -- role switch (§3.4) ---------------------------------------------------
@@ -344,6 +359,27 @@ impl Executor {
             let _ = d.join.join();
         }
     }
+}
+
+/// Unpack a 1-output awaited executable result.
+pub fn out1(mut out: Vec<Tensor>) -> Result<Tensor> {
+    anyhow::ensure!(!out.is_empty(), "executable returned no outputs");
+    Ok(out.swap_remove(0))
+}
+
+/// Unpack a 4-output awaited executable result (attention halves).
+pub fn out4(out: Vec<Tensor>) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+    anyhow::ensure!(out.len() >= 4, "expected 4 outputs, got {}", out.len());
+    let mut it = out.into_iter();
+    Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+}
+
+/// Unpack an awaited router result into `(idx, wt)` flattened `[B*k]`.
+pub fn router_out(out: Vec<Tensor>) -> Result<(Vec<i32>, Vec<f32>)> {
+    anyhow::ensure!(out.len() >= 2, "expected 2 router outputs, got {}", out.len());
+    let idx = out[0].as_i32()?.to_vec();
+    let wt = out[1].as_f32()?.to_vec();
+    Ok((idx, wt))
 }
 
 /// Tiny helper giving `attn_decode` an empty static block table to pad

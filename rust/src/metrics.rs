@@ -129,6 +129,7 @@ pub struct ServingStats {
     pub bytes_combined: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
+    decode_step_ms: Vec<f64>,
     started: Option<Instant>,
     pub wall: Duration,
 }
@@ -152,6 +153,29 @@ impl ServingStats {
 
     pub fn record_ttft(&mut self, ttft: Duration) {
         self.ttft_ms.push(ttft.as_secs_f64() * 1e3);
+    }
+
+    /// Wall time of one global decode step (all ranks). The overlap work
+    /// lives or dies on this staying ~flat as rank count grows.
+    pub fn record_decode_step(&mut self, d: Duration) {
+        self.decode_step_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn decode_step_p50(&self) -> f64 {
+        Self::pct(&self.decode_step_ms, 0.50)
+    }
+
+    pub fn decode_step_mean(&self) -> f64 {
+        if self.decode_step_ms.is_empty() {
+            return 0.0;
+        }
+        self.decode_step_ms.iter().sum::<f64>() / self.decode_step_ms.len() as f64
+    }
+
+    /// Drain the per-step samples (bench phases reuse one engine and want
+    /// each phase's samples in isolation).
+    pub fn take_decode_step_ms(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.decode_step_ms)
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -189,7 +213,7 @@ impl ServingStats {
         format!(
             "requests={} tokens={} steps={} prefills={} wall={:.2}s \
              tput={:.1} tok/s p50={:.1}ms p99={:.1}ms ttft_p50={:.1}ms \
-             dispatched={}B combined={}B",
+             step_p50={:.2}ms dispatched={}B combined={}B",
             self.requests_completed,
             self.tokens_generated,
             self.decode_steps,
@@ -199,6 +223,7 @@ impl ServingStats {
             self.latency_p50(),
             self.latency_p99(),
             self.ttft_p50(),
+            self.decode_step_p50(),
             self.bytes_dispatched,
             self.bytes_combined,
         )
@@ -244,6 +269,19 @@ mod tests {
         }
         assert!(s.latency_p50() >= 49.0 && s.latency_p50() <= 52.0);
         assert!(s.latency_p99() >= 98.0);
+    }
+
+    #[test]
+    fn decode_step_stats_record_and_drain() {
+        let mut s = ServingStats::default();
+        assert_eq!(s.decode_step_mean(), 0.0);
+        s.record_decode_step(Duration::from_millis(10));
+        s.record_decode_step(Duration::from_millis(20));
+        assert!((s.decode_step_mean() - 15.0).abs() < 1e-9);
+        assert!(s.decode_step_p50() >= 10.0);
+        let drained = s.take_decode_step_ms();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(s.decode_step_mean(), 0.0, "drain must reset the samples");
     }
 
     #[test]

@@ -8,10 +8,28 @@
 //! failed device either errors every command or swallows them entirely
 //! ([`FailureBehavior::Hung`]), so failure detection has to go through the
 //! heartbeat/annotation machinery of [`crate::cluster`] — same as the paper.
+//!
+//! # Asynchronous command API
+//!
+//! Device commands come in two flavors. The blocking calls
+//! ([`DeviceHandle::execute`] and friends) submit and wait in one step.
+//! The split calls ([`DeviceHandle::submit_execute`]) return a
+//! [`PendingExec`] immediately, which the caller awaits later with
+//! [`PendingExec::wait`] (blocking, deadline-bounded) or polls with
+//! [`PendingExec::try_wait`]. The per-command timeout clock starts at
+//! *submission*, so a pending result on a hung device still surfaces as a
+//! timeout error — never an engine hang — exactly like the blocking path.
+//!
+//! This split is what lets the engine overlap device work across ranks:
+//! submit one command to every DP/MoE/dense rank, then collect the
+//! results, so "parallel" ranks genuinely run concurrently instead of
+//! serializing round-trips. [`ExecWave`] packages that submit-all /
+//! collect-all pattern (with an optional serialized mode kept as the A/B
+//! baseline for correctness tests and the decode-throughput bench).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -88,6 +106,128 @@ impl SimDevice {
             handle: DeviceHandle { id, tx, cmd_timeout: DEFAULT_CMD_TIMEOUT },
             join,
         }
+    }
+}
+
+/// A command submitted to a device but not yet collected. The deadline is
+/// fixed at submission time: a hung device swallows the command and never
+/// replies, so the caller's `wait`/`try_wait` times out instead of hanging.
+pub struct PendingReply<T> {
+    device: DeviceId,
+    rx: Receiver<T>,
+    deadline: Instant,
+}
+
+impl<T> PendingReply<T> {
+    pub fn device(&self) -> DeviceId {
+        self.device
+    }
+
+    /// Block until the reply arrives or the submission-time deadline
+    /// passes.
+    pub fn wait(self) -> Result<T> {
+        let remaining = self.deadline.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(remaining) {
+            Ok(v) => Ok(v),
+            Err(RecvTimeoutError::Timeout) => {
+                anyhow::bail!("device {} command timed out (hung?)", self.device)
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("device {} disconnected", self.device)
+            }
+        }
+    }
+
+    /// Non-blocking poll: `Ok(Some(v))` when the reply is ready,
+    /// `Ok(None)` while still in flight, `Err` once the deadline has
+    /// passed or the device thread is gone.
+    pub fn try_wait(&mut self) -> Result<Option<T>> {
+        match self.rx.try_recv() {
+            Ok(v) => Ok(Some(v)),
+            Err(TryRecvError::Empty) => {
+                if Instant::now() >= self.deadline {
+                    anyhow::bail!("device {} command timed out (hung?)", self.device)
+                }
+                Ok(None)
+            }
+            Err(TryRecvError::Disconnected) => {
+                anyhow::bail!("device {} disconnected", self.device)
+            }
+        }
+    }
+}
+
+/// An in-flight `Execute`: awaiting it yields the executable's outputs.
+/// Device-side errors (failed device, missing executable/weight) surface
+/// from `wait`/`try_wait` exactly as they do from the blocking
+/// [`DeviceHandle::execute`].
+pub struct PendingExec {
+    inner: PendingReply<Result<Vec<Tensor>>>,
+}
+
+impl PendingExec {
+    pub fn device(&self) -> DeviceId {
+        self.inner.device()
+    }
+
+    /// Block until the outputs arrive or the deadline passes.
+    pub fn wait(self) -> Result<Vec<Tensor>> {
+        self.inner.wait()?
+    }
+
+    /// Non-blocking poll; see [`PendingReply::try_wait`].
+    pub fn try_wait(&mut self) -> Result<Option<Vec<Tensor>>> {
+        match self.inner.try_wait()? {
+            Some(r) => Ok(Some(r?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// One fan-out wave of `Execute` submissions, collected in submission
+/// order. In `serial` mode every push awaits its result before returning —
+/// the pre-async data-plane behavior, kept as the A/B baseline for the
+/// overlap-correctness tests and the decode-throughput bench.
+pub struct ExecWave {
+    serial: bool,
+    slots: Vec<WaveSlot>,
+}
+
+enum WaveSlot {
+    Pending(PendingExec),
+    Ready(Vec<Tensor>),
+}
+
+impl ExecWave {
+    pub fn new(serial: bool) -> Self {
+        ExecWave { serial, slots: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Add a submitted command to the wave (awaiting it immediately in
+    /// serial mode).
+    pub fn push(&mut self, p: PendingExec) -> Result<()> {
+        let slot = if self.serial { WaveSlot::Ready(p.wait()?) } else { WaveSlot::Pending(p) };
+        self.slots.push(slot);
+        Ok(())
+    }
+
+    /// Await every in-flight member; results come back in push order.
+    pub fn collect(self) -> Result<Vec<Vec<Tensor>>> {
+        self.slots
+            .into_iter()
+            .map(|s| match s {
+                WaveSlot::Ready(v) => Ok(v),
+                WaveSlot::Pending(p) => p.wait(),
+            })
+            .collect()
     }
 }
 
@@ -326,10 +466,22 @@ impl DeviceHandle {
         self.wait(rx)
     }
 
-    pub fn execute(&self, exe: &str, args: Vec<Arg>) -> Result<Vec<Tensor>> {
+    /// Submit an `Execute` without waiting. The per-command timeout clock
+    /// starts now; await the returned handle with [`PendingExec::wait`].
+    pub fn submit_execute(&self, exe: &str, args: Vec<Arg>) -> Result<PendingExec> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::Execute { exe: exe.to_string(), args, reply: tx })?;
-        self.wait(rx)?
+        Ok(PendingExec {
+            inner: PendingReply {
+                device: self.id,
+                rx,
+                deadline: Instant::now() + self.cmd_timeout,
+            },
+        })
+    }
+
+    pub fn execute(&self, exe: &str, args: Vec<Arg>) -> Result<Vec<Tensor>> {
+        self.submit_execute(exe, args)?.wait()
     }
 
     pub fn stats(&self) -> Result<DeviceStats> {
@@ -414,5 +566,63 @@ mod tests {
         assert!(e.to_string().contains("not compiled"));
         d.handle.shutdown();
         d.join.join().unwrap();
+    }
+
+    #[test]
+    fn submitted_execute_resolves_like_blocking() {
+        let d = SimDevice::spawn(6);
+        // device-side errors surface at wait, not at submit
+        let pending = d.handle.submit_execute("nope", vec![]).unwrap();
+        let e = pending.wait().unwrap_err();
+        assert!(e.to_string().contains("not compiled"));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn pending_on_hung_device_times_out() {
+        let d = SimDevice::spawn(7);
+        let mut h = d.handle.clone();
+        h.cmd_timeout = Duration::from_millis(100);
+        d.handle.set_failed(FailureBehavior::Hung);
+        let t0 = Instant::now();
+        let pending = h.submit_execute("x", vec![]).unwrap();
+        let e = pending.wait().unwrap_err();
+        assert!(e.to_string().contains("timed out"), "got: {e}");
+        assert!(t0.elapsed() < Duration::from_secs(2), "wait must be deadline-bounded");
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn try_wait_polls_until_deadline() {
+        let d = SimDevice::spawn(8);
+        let mut h = d.handle.clone();
+        h.cmd_timeout = Duration::from_millis(80);
+        d.handle.set_failed(FailureBehavior::Hung);
+        let mut pending = h.submit_execute("x", vec![]).unwrap();
+        // still in flight: poll says "not yet" without blocking
+        assert!(pending.try_wait().unwrap().is_none());
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(pending.try_wait().unwrap_err().to_string().contains("timed out"));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn wave_collects_in_submission_order() {
+        let devs: Vec<SimDevice> = (20..23).map(SimDevice::spawn).collect();
+        let mut wave = ExecWave::new(false);
+        for d in &devs {
+            wave.push(d.handle.submit_execute("nope", vec![]).unwrap()).unwrap();
+        }
+        assert_eq!(wave.len(), 3);
+        // every member resolves (here: to the device-side error)
+        let err = wave.collect().unwrap_err();
+        assert!(err.to_string().contains("not compiled"));
+        for d in devs {
+            d.handle.shutdown();
+            d.join.join().unwrap();
+        }
     }
 }

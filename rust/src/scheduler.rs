@@ -89,14 +89,21 @@ impl Sequence {
     /// The generation budget is reduced by what was already decoded (the
     /// engine owns the full output stream across migrations).
     pub fn migration_view(&self) -> Sequence {
-        let mut prompt = self.prompt.clone();
-        prompt.extend_from_slice(&self.decoded);
+        self.clone().into_migration_view()
+    }
+
+    /// Owning variant of [`Self::migration_view`]: moves `prompt` and
+    /// `decoded` instead of cloning them (this runs on the recovery hot
+    /// path, once per in-flight sequence on the failed rank).
+    pub fn into_migration_view(mut self) -> Sequence {
+        let n_decoded = self.decoded.len();
+        self.prompt.append(&mut self.decoded);
         Sequence {
             id: self.id,
-            prompt,
-            decoded: Vec::new(),
+            prompt: self.prompt,
+            decoded: self.decoded, // empty after the append above
             state: SeqState::Waiting,
-            max_new_tokens: self.max_new_tokens.saturating_sub(self.decoded.len()),
+            max_new_tokens: self.max_new_tokens.saturating_sub(n_decoded),
             eos: self.eos,
             arrived: self.arrived,
             first_token_at: self.first_token_at,
@@ -168,12 +175,20 @@ impl LocalScheduler {
         self.running.iter_mut().find(|s| s.id == id)
     }
 
+    /// Remove every sequence (running and waiting separately) without any
+    /// conversion — the engine banks running sequences' decoded tokens
+    /// before turning them into migration views.
+    pub fn take_all(&mut self) -> (Vec<Sequence>, Vec<Sequence>) {
+        (self.running.drain(..).collect(), self.waiting.drain(..).collect())
+    }
+
     /// Drain *all* sequences (running + waiting) for migration off a failed
-    /// rank. Running sequences are converted through `migration_view`.
+    /// rank. Running sequences are converted through `into_migration_view`.
     pub fn drain_for_migration(&mut self) -> Vec<Sequence> {
+        let (running, waiting) = self.take_all();
         let mut out: Vec<Sequence> =
-            self.running.drain(..).map(|s| s.migration_view()).collect();
-        out.extend(self.waiting.drain(..));
+            running.into_iter().map(Sequence::into_migration_view).collect();
+        out.extend(waiting);
         out
     }
 }

@@ -77,6 +77,29 @@ impl Tensor {
         Ok(&v[i * d..(i + 1) * d])
     }
 
+    /// Borrowed view of rows `[start, start + n)` (leading dims flattened).
+    pub fn rows(&self, start: usize, n: usize) -> Result<&[f32]> {
+        let d = *self.shape.last().ok_or_else(|| anyhow!("scalar tensor"))?;
+        let v = self.as_f32()?;
+        let (a, b) = (start * d, (start + n) * d);
+        if b > v.len() {
+            bail!("row range {start}..{} out of bounds for {} rows", start + n, v.len() / d);
+        }
+        Ok(&v[a..b])
+    }
+
+    /// Zero-copy reshape: same element count, new shape, data moved — not
+    /// copied. This is how `[1, s, d]` activations flatten to `[s, d]` (and
+    /// back) on the coordinator without a full-buffer copy per layer.
+    pub fn into_shape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.len() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.len(), shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
     /// Convert to an `xla::Literal` (reshaped to `self.shape`).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
@@ -103,9 +126,23 @@ impl Tensor {
         if self.shape != other.shape {
             bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
         }
-        let b = other.as_f32()?.to_vec();
+        let b = other.as_f32()?;
         let a = self.as_f32_mut()?;
         for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    /// `self[..src.len()] += src` — residual add against a borrowed row
+    /// view (see [`Self::rows`]) without materializing an intermediate
+    /// tensor. `src` must not exceed this tensor's element count.
+    pub fn add_slice(&mut self, src: &[f32]) -> Result<()> {
+        let a = self.as_f32_mut()?;
+        if src.len() > a.len() {
+            bail!("add_slice source ({} elems) exceeds tensor ({} elems)", src.len(), a.len());
+        }
+        for (x, y) in a.iter_mut().zip(src) {
             *x += y;
         }
         Ok(())
@@ -132,17 +169,17 @@ impl Tensor {
         Tensor::f32(vec![rows.len(), d], data)
     }
 
-    /// Pad (or truncate) the leading dimension to `n` rows.
+    /// Pad (or truncate) a 2-D `[rows, d]` tensor to `[n, d]`. Explicitly
+    /// 2-D only: silently flattening higher-rank inputs to `[n, d]` was a
+    /// latent bug, so other ranks are rejected.
     pub fn pad_rows(&self, n: usize) -> Result<Tensor> {
-        let d = *self.shape.last().ok_or_else(|| anyhow!("scalar tensor"))?;
-        let rows = self.len() / d;
+        let [rows, d] = self.shape[..] else {
+            bail!("pad_rows requires a 2-D tensor, got shape {:?}", self.shape);
+        };
         let v = self.as_f32()?;
         let mut data = Vec::with_capacity(n * d);
         data.extend_from_slice(&v[..rows.min(n) * d]);
         data.resize(n * d, 0.0);
-        let mut shape = self.shape.clone();
-        let last = shape.len() - 1;
-        shape[last] = d;
         Ok(Tensor::f32(vec![n, d], data))
     }
 
@@ -197,6 +234,34 @@ mod tests {
         assert_eq!(p.as_f32().unwrap()[4..], [0., 0.]);
         let q = t.pad_rows(1).unwrap();
         assert_eq!(q.as_f32().unwrap(), &[1., 2.]);
+    }
+
+    #[test]
+    fn pad_rows_rejects_non_2d() {
+        let t = Tensor::f32(vec![1, 2, 2], vec![1., 2., 3., 4.]);
+        assert!(t.pad_rows(3).is_err(), "3-D input must not be silently flattened");
+        let s = Tensor::f32(vec![4], vec![1., 2., 3., 4.]);
+        assert!(s.pad_rows(2).is_err());
+    }
+
+    #[test]
+    fn into_shape_is_zero_copy_reshape() {
+        let t = Tensor::f32(vec![1, 2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let flat = t.into_shape(vec![2, 3]).unwrap();
+        assert_eq!(flat.shape, vec![2, 3]);
+        assert_eq!(flat.row(1).unwrap(), &[4., 5., 6.]);
+        assert!(flat.into_shape(vec![7]).is_err(), "element count must match");
+    }
+
+    #[test]
+    fn rows_view_and_add_slice() {
+        let t = Tensor::f32(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(1, 2).unwrap(), &[3., 4., 5., 6.]);
+        assert!(t.rows(2, 2).is_err(), "out-of-bounds view must error");
+        let mut x = Tensor::f32(vec![2, 2], vec![10., 10., 10., 10.]);
+        x.add_slice(t.rows(1, 2).unwrap()).unwrap();
+        assert_eq!(x.as_f32().unwrap(), &[13., 14., 15., 16.]);
+        assert!(x.add_slice(&[0.0; 5]).is_err(), "oversized source must error");
     }
 
     #[test]
