@@ -11,6 +11,10 @@
 //!      cached-compiles the boundary graphs, and resumes;
 //!   5. every request still completes — migrated ones report `migrations=1`.
 //!
+//! Paper correspondence: Figure 3 (recovery steps 1-7) plus the §3.3
+//! log-based block-table undo — the headline claim that a failure is
+//! survived *without restarting the serving instance*.
+//!
 //! Run: `cargo run --release --example failover_demo`
 
 use std::time::Instant;

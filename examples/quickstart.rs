@@ -5,6 +5,11 @@
 //! forward as a single kernel launch, §2.4), and greedy-decodes a few
 //! prompts token by token. No engine, no scheduler: just the runtime.
 //!
+//! Paper correspondence: §2.4's "graph mode" claim — when one rank hosts
+//! the whole model, the entire decode step runs as a single fused graph
+//! launch (`full_decode_b1`), the configuration whose recompile cost
+//! motivates the §3.6 cached-compile machinery.
+//!
 //! Run: `cargo run --release --example quickstart`
 
 use revivemoe::artifacts::ArtifactStore;

@@ -7,6 +7,10 @@
 //! background while the system continues inference using the current
 //! (possibly incomplete) expert set."
 //!
+//! Paper correspondence: §3.4 Figure 4's weight-integrity decision (role
+//! switch branch) and §4.3 / Figure 5's finding that the switch is
+//! dominated by Generator time (expert weights re-read from disk).
+//!
 //! Run: `cargo run --release --example role_switch_demo`
 
 use revivemoe::cluster::{FailureBehavior, FaultLevel};

@@ -7,6 +7,11 @@
 //! latency percentiles, TTFT, answer accuracy per task family, and the
 //! dispatch/combine byte traffic.
 //!
+//! Paper correspondence: Figure 2(b), the MA-disaggregated deployment —
+//! attention DP ranks feeding MoE EP ranks through XCCL A2E/E2A — serving
+//! the §4 testbed workload with no faults injected (the healthy control
+//! every recovery experiment compares against).
+//!
 //! Run: `cargo run --release --example serve_disaggregated -- [n_requests]`
 
 use std::collections::HashMap;

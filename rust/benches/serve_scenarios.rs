@@ -1,0 +1,117 @@
+//! **Serve scenarios**: goodput and tail latency under live open-loop
+//! traffic with injected faults — ReviveMoE in-place recovery vs the
+//! cached-reinitialization baseline under *identical* seeded scenarios.
+//!
+//! This is the online counterpart of `fig5_recovery_times`: instead of
+//! timing a recovery pass against an idle engine, each run drives the
+//! serving loop (`serve::run_scenario`) with Poisson arrivals, detects the
+//! scripted fault mid-stream, recovers while arrivals keep queuing, and
+//! drains. Reported per (scenario, strategy): completed/incomplete
+//! requests, recovery count, stall wall time, goodput (completed req/s),
+//! latency p99, TTFT/TPOT p50s — the Tarragon/FailSafe-style resilience
+//! framing (goodput under continuous load with failures).
+//!
+//! Run: `cargo bench --bench serve_scenarios` (or
+//! `scripts/bench_serve.sh` from the repo root, which also refreshes
+//! `BENCH_serve_scenarios.json`).
+
+mod common;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy};
+
+fn scenarios(quick: bool) -> Vec<Scenario> {
+    let n = if quick { 16 } else { 48 };
+    let seed = 7;
+    vec![
+        Scenario::steady(seed).requests(n),
+        Scenario::single_fault(seed).requests(n),
+        Scenario::cascade(seed).requests(n),
+        Scenario::fault_then_revive(seed).requests(n),
+    ]
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let strategies = [RecoveryStrategy::ReviveMoE, RecoveryStrategy::BaselineReinit];
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("online fault scenarios: ReviveMoE vs baseline reinit\n");
+    println!(
+        "{:<14} {:<16} {:>5} {:>5} {:>4} {:>9} {:>9} {:>8} {:>8}",
+        "scenario", "strategy", "done", "inc", "rec", "stall_ms", "goodput", "e2e_p99", "tpot_ms"
+    );
+    for scenario in scenarios(quick) {
+        for strategy in strategies {
+            let (engine, _bd) =
+                match Engine::boot(DeploymentConfig::disaggregated_default("artifacts")) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        println!("{:<14} SKIP (boot: {e})", scenario.name);
+                        continue;
+                    }
+                };
+            let (engine, report) = match run_scenario(engine, &scenario, strategy) {
+                Ok(x) => x,
+                Err(e) => {
+                    println!("{:<14} {:<16} FAILED: {e}", scenario.name, strategy.name());
+                    continue;
+                }
+            };
+            println!(
+                "{:<14} {:<16} {:>5} {:>5} {:>4} {:>9.0} {:>9.2} {:>8.1} {:>8.2}",
+                report.scenario,
+                report.strategy.name(),
+                report.completed.len(),
+                report.incomplete,
+                report.recoveries.len(),
+                report.stats.stall_total_ms(),
+                report.stats.goodput_req_s(),
+                report.e2e_latency_pct(0.99),
+                report.stats.tpot_p50(),
+            );
+            rows.push(obj(vec![
+                ("scenario", s(&report.scenario)),
+                ("strategy", s(report.strategy.name())),
+                ("submitted", num(report.submitted as f64)),
+                ("completed", num(report.completed.len() as f64)),
+                ("incomplete", num(report.incomplete as f64)),
+                ("ticks", num(report.ticks as f64)),
+                ("recoveries", num(report.recoveries.len() as f64)),
+                ("requests_restarted", num(report.stats.requests_restarted as f64)),
+                ("stall_total_ms", num(report.stats.stall_total_ms())),
+                ("stall_max_ms", num(report.stats.stall_max_ms())),
+                ("goodput_req_s", num(report.stats.goodput_req_s())),
+                ("throughput_tok_s", num(report.stats.throughput_tok_s())),
+                // e2e latencies are restart-inclusive (a reinit-restarted
+                // request keeps its original arrival clock); the stats
+                // percentiles measure each engine-life separately
+                ("latency_e2e_p50_ms", num(report.e2e_latency_pct(0.50))),
+                ("latency_e2e_p99_ms", num(report.e2e_latency_pct(0.99))),
+                ("latency_p50_ms", num(report.stats.latency_p50())),
+                ("latency_p99_ms", num(report.stats.latency_p99())),
+                ("ttft_p50_ms", num(report.stats.ttft_p50())),
+                ("ttft_p99_ms", num(report.stats.ttft_p99())),
+                ("tpot_p50_ms", num(report.stats.tpot_p50())),
+                ("tpot_p99_ms", num(report.stats.tpot_p99())),
+            ]));
+            engine.shutdown();
+        }
+    }
+
+    let j = obj(vec![
+        ("bench", s("serve_scenarios")),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("serve_scenarios", &j);
+    // repo-root copy: the serving-resilience baseline future PRs compare to
+    match std::fs::write("../BENCH_serve_scenarios.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_serve_scenarios.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_serve_scenarios.json: {e}"),
+    }
+}

@@ -10,16 +10,23 @@ use std::path::{Path, PathBuf};
 
 use crate::Result;
 
+/// One declared input of an AOT artifact (name, shape, dtype).
 #[derive(Clone, Debug)]
 pub struct ArtifactInput {
+    /// Parameter name as lowered by aot.py.
     pub name: String,
+    /// Static shape the graph was lowered with.
     pub shape: Vec<usize>,
+    /// Element dtype ("f32" or "i32").
     pub dtype: String,
 }
 
+/// One manifest entry: the HLO-text file plus its input signature.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// HLO-text file name relative to the hlo/ directory.
     pub file: String,
+    /// Input signature, in call order.
     pub inputs: Vec<ArtifactInput>,
 }
 
@@ -31,6 +38,7 @@ pub struct ArtifactStore {
 }
 
 impl ArtifactStore {
+    /// Open the store by reading `manifest.json` in `hlo_dir`.
     pub fn open(hlo_dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(hlo_dir.join("manifest.json"))
             .map_err(|e| anyhow::anyhow!("cannot read HLO manifest in {hlo_dir:?}: {e} \
@@ -58,16 +66,19 @@ impl ArtifactStore {
         Ok(ArtifactStore { dir: hlo_dir.to_path_buf(), entries })
     }
 
+    /// Whether an artifact named `name` exists.
     pub fn contains(&self, name: &str) -> bool {
         self.entries.contains_key(name)
     }
 
+    /// Manifest entry for `name`.
     pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
         self.entries
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("no AOT artifact '{name}' (aot.py shape set out of date?)"))
     }
 
+    /// On-disk path of `name`'s HLO text.
     pub fn path(&self, name: &str) -> Result<PathBuf> {
         Ok(self.dir.join(&self.entry(name)?.file))
     }
@@ -80,14 +91,17 @@ impl ArtifactStore {
         Ok((text, n))
     }
 
+    /// Every artifact name in the manifest (unordered).
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }
 
+    /// Number of artifacts in the manifest.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the manifest is empty.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -96,38 +110,47 @@ impl ArtifactStore {
 // ---------------------------------------------------------------------------
 // artifact naming scheme (must match python/compile/aot.py)
 
+/// Decode-path embedding graph for batch bucket `b`.
 pub fn embed_decode(b: usize) -> String {
     format!("embed_decode_b{b}")
 }
 
+/// Decode-path attention-half graph for batch bucket `b`.
 pub fn attn_decode(b: usize) -> String {
     format!("attn_decode_b{b}")
 }
 
+/// Fused full-model decode graph ("graph mode", §2.4) for bucket `b`.
 pub fn full_decode(b: usize) -> String {
     format!("full_decode_b{b}")
 }
 
+/// Prefill-path embedding graph for seq bucket `s`.
 pub fn embed_prefill(s: usize) -> String {
     format!("embed_prefill_s{s}")
 }
 
+/// Prefill-path attention-half graph for seq bucket `s`.
 pub fn attn_prefill(s: usize) -> String {
     format!("attn_prefill_s{s}")
 }
 
+/// Top-k gate graph over `t` tokens.
 pub fn router(t: usize) -> String {
     format!("router_t{t}")
 }
 
+/// Final-norm + tied-embedding head graph over `t` tokens.
 pub fn lm_head(t: usize) -> String {
     format!("lm_head_t{t}")
 }
 
+/// One dense-FFN TP shard graph (degree `tp`) over `t` tokens.
 pub fn dense_ffn(tp: usize, t: usize) -> String {
     format!("dense_tp{tp}_t{t}")
 }
 
+/// Grouped expert-FFN graph: `e_local` slots at per-slot `capacity`.
 pub fn moe_block(e_local: usize, capacity: usize) -> String {
     format!("moe_e{e_local}_c{capacity}")
 }

@@ -21,11 +21,17 @@ pub type DeviceId = usize;
 /// requiring full isolation of the NPU.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum FaultLevel {
+    /// Informational; no action required.
     L1,
+    /// Minor; log-only.
     L2,
+    /// Degraded; recovery action required.
     L3,
+    /// Serious; recovery action required.
     L4,
+    /// Critical; the NPU is isolated (may not rejoin until replaced).
     L5,
+    /// Most critical; full isolation of the NPU.
     L6,
 }
 
@@ -52,13 +58,24 @@ pub enum FailureBehavior {
 
 /// A device-plugin fault annotation, mirroring the fields the Huawei NPU
 /// plugin logs (event id, alarm time, severity, error type).
+///
+/// Annotations carry two ordering signals: `event_id` is a monotonic
+/// arrival sequence number (ties between equally-severe faults resolve
+/// oldest-first, which keeps multi-failure recovery deterministic), and
+/// `alarm_unix_ms` is the wall-clock alarm timestamp the real plugin logs.
 #[derive(Clone, Debug)]
 pub struct FaultAnnotation {
+    /// Monotonic arrival sequence number (per plugin instance).
     pub event_id: u64,
+    /// The device the fault was observed on.
     pub device: DeviceId,
+    /// Severity (paper §3.1 L1–L6).
     pub level: FaultLevel,
+    /// How the device misbehaves from the coordinator's point of view.
     pub behavior: FailureBehavior,
+    /// Vendor error-type string (e.g. "hbm", "heartbeat-timeout").
     pub error_type: String,
+    /// Wall-clock alarm time in unix milliseconds.
     pub alarm_unix_ms: u128,
 }
 
@@ -76,6 +93,7 @@ struct PluginState {
 }
 
 impl DevicePlugin {
+    /// Fresh plugin surface with no annotations.
     pub fn new() -> Self {
         Self::default()
     }
@@ -100,20 +118,45 @@ impl DevicePlugin {
         ann
     }
 
-    /// Poll for the most severe un-cleared annotation, if any.
+    /// Poll for the most severe un-cleared annotation, if any. Ties between
+    /// equally severe faults resolve to the *oldest* event id, so cascading
+    /// multi-failure recovery processes faults in a deterministic arrival
+    /// order (the annotation map itself is unordered).
     pub fn poll(&self) -> Option<FaultAnnotation> {
         let st = self.inner.lock().unwrap();
-        st.annotations.values().max_by_key(|a| a.level).cloned()
+        st.annotations
+            .values()
+            .max_by_key(|a| (a.level, std::cmp::Reverse(a.event_id)))
+            .cloned()
     }
 
+    /// The annotation currently posted for `device`, if any.
     pub fn annotation_for(&self, device: DeviceId) -> Option<FaultAnnotation> {
         self.inner.lock().unwrap().annotations.get(&device).cloned()
     }
 
+    /// Every un-cleared annotation that needs recovery action, oldest
+    /// first. Recovery uses this to know which *other* devices are already
+    /// condemned while it handles the current fault (so it neither
+    /// schedules work onto them nor tries to recompile their graphs).
+    pub fn pending_recovery(&self) -> Vec<FaultAnnotation> {
+        let st = self.inner.lock().unwrap();
+        let mut v: Vec<FaultAnnotation> = st
+            .annotations
+            .values()
+            .filter(|a| a.level.needs_recovery())
+            .cloned()
+            .collect();
+        v.sort_by_key(|a| a.event_id);
+        v
+    }
+
+    /// Remove the annotation for `device` (fault handled).
     pub fn clear(&self, device: DeviceId) {
         self.inner.lock().unwrap().annotations.remove(&device);
     }
 
+    /// Remove every annotation.
     pub fn clear_all(&self) {
         self.inner.lock().unwrap().annotations.clear();
     }
@@ -122,6 +165,7 @@ impl DevicePlugin {
 /// Result of one heartbeat sweep.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum HeartbeatVerdict {
+    /// Every probed device answered a healthy pong.
     AllHealthy,
     /// Device answered with an error reply.
     Erroring(DeviceId),
@@ -135,11 +179,14 @@ pub enum HeartbeatVerdict {
 /// expected to enforce `timeout` itself (SimDevice pings are try_recv with
 /// deadline — see `runtime`).
 pub struct HeartbeatMonitor {
+    /// Intended sweep cadence (informational; the caller drives sweeps).
     pub interval: Duration,
+    /// Per-device probe timeout.
     pub timeout: Duration,
 }
 
 impl HeartbeatMonitor {
+    /// Build a monitor with the given sweep cadence and probe timeout.
     pub fn new(interval: Duration, timeout: Duration) -> Self {
         HeartbeatMonitor { interval, timeout }
     }
@@ -161,9 +208,12 @@ impl HeartbeatMonitor {
     }
 }
 
+/// Why a heartbeat probe failed to produce a pong.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProbeError {
+    /// No reply within the probe timeout (hung device).
     Timeout,
+    /// The device's command channel is gone (thread exited).
     Disconnected,
 }
 
@@ -172,10 +222,12 @@ pub enum ProbeError {
 /// (via the handle the caller passes in) and posts the plugin annotation,
 /// mirroring the real split between hardware fault and plugin report.
 pub struct FaultInjector {
+    /// The annotation surface faults are posted to.
     pub plugin: DevicePlugin,
 }
 
 impl FaultInjector {
+    /// Build an injector writing to `plugin`.
     pub fn new(plugin: DevicePlugin) -> Self {
         FaultInjector { plugin }
     }
@@ -226,6 +278,29 @@ mod tests {
         assert_eq!(worst.level, FaultLevel::L6);
         p.clear(5);
         assert_eq!(p.poll().unwrap().device, 3);
+    }
+
+    #[test]
+    fn poll_breaks_severity_ties_oldest_first() {
+        let p = DevicePlugin::new();
+        p.post_fault(4, FaultLevel::L6, FailureBehavior::Erroring, "first");
+        p.post_fault(1, FaultLevel::L6, FailureBehavior::Erroring, "second");
+        // equal severity: the earlier event wins, not an arbitrary map order
+        assert_eq!(p.poll().unwrap().device, 4);
+        p.clear(4);
+        assert_eq!(p.poll().unwrap().device, 1);
+    }
+
+    #[test]
+    fn pending_recovery_lists_actionable_faults_in_arrival_order() {
+        let p = DevicePlugin::new();
+        p.post_fault(2, FaultLevel::L2, FailureBehavior::Erroring, "benign");
+        p.post_fault(7, FaultLevel::L5, FailureBehavior::Erroring, "a");
+        p.post_fault(3, FaultLevel::L6, FailureBehavior::Hung, "b");
+        let pending = p.pending_recovery();
+        assert_eq!(pending.len(), 2, "L2 needs no recovery");
+        assert_eq!(pending[0].device, 7);
+        assert_eq!(pending[1].device, 3);
     }
 
     #[test]

@@ -29,9 +29,12 @@ use crate::Result;
 // ---------------------------------------------------------------------------
 // domains + rank compaction
 
+/// Lifecycle state of a communication domain.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DomainState {
+    /// Usable by data-plane collectives.
     Active,
+    /// Destroyed by recovery; every op against it is rejected.
     Destroyed,
 }
 
@@ -39,8 +42,11 @@ pub enum DomainState {
 /// `members` *is* the logical rank.
 #[derive(Clone, Debug)]
 pub struct CommDomain {
+    /// Domain name (e.g. [`ATTN_EXPERT_DOMAIN`]).
     pub name: String,
+    /// Creation epoch; ops stamped with an older epoch are rejected.
     pub epoch: u64,
+    /// Active or destroyed.
     pub state: DomainState,
     members: Vec<DeviceId>,
 }
@@ -52,18 +58,22 @@ impl CommDomain {
         CommDomain { name: name.to_string(), epoch, state: DomainState::Active, members }
     }
 
+    /// The ordered member list (index == logical rank).
     pub fn members(&self) -> &[DeviceId] {
         &self.members
     }
 
+    /// Number of members.
     pub fn size(&self) -> usize {
         self.members.len()
     }
 
+    /// The logical rank `dev` holds in this domain, if it is a member.
     pub fn logical_rank_of(&self, dev: DeviceId) -> Option<usize> {
         self.members.iter().position(|&m| m == dev)
     }
 
+    /// The device holding logical rank `logical`.
     pub fn device_at(&self, logical: usize) -> Option<DeviceId> {
         self.members.get(logical).copied()
     }
@@ -114,14 +124,18 @@ pub struct DomainManager {
     next_epoch: u64,
 }
 
+/// The attention↔expert dispatch/combine domain every deployment forms.
 pub const ATTN_EXPERT_DOMAIN: &str = "attn-expert";
+/// The between-experts trampoline domain (MA-disaggregated only).
 pub const TRAMPOLINE_DOMAIN: &str = "trampoline";
 
 impl DomainManager {
+    /// Empty manager with no domains.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Create (or replace) a domain under a fresh epoch.
     pub fn create(&mut self, name: &str, members: Vec<DeviceId>) -> Result<&CommDomain> {
         self.next_epoch += 1;
         let d = CommDomain {
@@ -134,6 +148,7 @@ impl DomainManager {
         Ok(self.domains.get(name).unwrap())
     }
 
+    /// Mark a domain destroyed; subsequent ops against it are rejected.
     pub fn destroy(&mut self, name: &str) -> Result<()> {
         match self.domains.get_mut(name) {
             Some(d) => {
@@ -144,12 +159,14 @@ impl DomainManager {
         }
     }
 
+    /// Look a domain up by name.
     pub fn get(&self, name: &str) -> Result<&CommDomain> {
         self.domains
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("no such domain '{name}'"))
     }
 
+    /// Whether `name` exists and is active.
     pub fn is_active(&self, name: &str) -> bool {
         self.domains
             .get(name)
@@ -179,6 +196,24 @@ impl DomainManager {
         let new_members = compact_ranks_with_switch(&members, failed, replacement);
         self.create(name, new_members)
     }
+
+    /// Device-revival counterpart of [`Self::recreate_without`]: destroy
+    /// the domain and recreate it under a fresh epoch with `revived`
+    /// appended as the highest logical rank (no-op membership change if it
+    /// is already a member). Ranks of existing members are preserved, the
+    /// mirror image of failure-time compaction.
+    pub fn recreate_with_member(
+        &mut self,
+        name: &str,
+        revived: DeviceId,
+    ) -> Result<&CommDomain> {
+        let mut members = self.get(name)?.members.clone();
+        self.destroy(name)?;
+        if !members.contains(&revived) {
+            members.push(revived);
+        }
+        self.create(name, members)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -188,39 +223,52 @@ impl DomainManager {
 /// expert slot, which capacity row — plus the gate weight for the combine.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Assignment {
+    /// Source token index in the dispatched `[T, d]` batch.
     pub token: usize,
+    /// Destination expert slot on the receiving rank.
     pub slot: usize,
+    /// Row within the slot's capacity buffer.
     pub cap_row: usize,
+    /// Gate weight applied on the combine path.
     pub weight: f32,
 }
 
 /// The grouped payload for one MoE rank.
 #[derive(Clone, Debug)]
 pub struct RankPayload {
+    /// Receiving MoE rank (logical).
     pub rank: usize,
     /// `[n_slots, capacity, d]` grouped activations (zero padded).
     pub grouped: Tensor,
     /// Valid rows per slot.
     pub counts: Vec<usize>,
+    /// Every (token, slot, row, weight) landing on this rank.
     pub assigns: Vec<Assignment>,
 }
 
 /// Output of `dispatch`/`a2e`: one payload per MoE rank plus accounting.
 #[derive(Clone, Debug)]
 pub struct DispatchResult {
+    /// One payload per MoE rank (idle ranks have empty `assigns`).
     pub per_rank: Vec<RankPayload>,
+    /// Total activation bytes moved attention→experts.
     pub bytes_moved: usize,
     /// Token-choices that exceeded per-expert capacity (should be 0 when
     /// capacity is sized to the worst case; counted, never silently lost).
     pub overflowed: usize,
+    /// Epoch the dispatch was stamped with (checked again at combine).
     pub epoch: u64,
 }
 
 /// Routing interface the dispatch needs from the expert map: physical
 /// location of a (logical) expert, expressed as (moe_rank, slot_on_rank).
 pub trait ExpertRouter {
+    /// Physical `(moe_rank, slot)` serving `expert` for `token`, or `None`
+    /// if the expert currently has no live replica.
     fn route(&self, expert: usize, token: usize) -> Option<(usize, usize)>;
+    /// Number of MoE ranks in the placement (alive or not).
     fn n_ranks(&self) -> usize;
+    /// Expert slots hosted on `rank`.
     fn slots_on_rank(&self, rank: usize) -> usize;
 }
 
@@ -408,6 +456,23 @@ mod tests {
         let d = dm.get(ATTN_EXPERT_DOMAIN).unwrap();
         assert_eq!(d.members(), &[0, 2]);
         assert!(d.check_epoch(e1).is_err(), "stale epoch must be rejected");
+    }
+
+    #[test]
+    fn recreate_with_member_appends_under_new_epoch() {
+        let mut dm = DomainManager::new();
+        let e1 = dm.create(ATTN_EXPERT_DOMAIN, vec![0, 1, 2, 3]).unwrap().epoch;
+        dm.recreate_without(ATTN_EXPERT_DOMAIN, 2).unwrap();
+        let e3 = dm.recreate_with_member(ATTN_EXPERT_DOMAIN, 2).unwrap().epoch;
+        assert!(e3 > e1);
+        let d = dm.get(ATTN_EXPERT_DOMAIN).unwrap();
+        // surviving ranks keep their compacted order; revived joins last
+        assert_eq!(d.members(), &[0, 1, 3, 2]);
+        assert!(d.check_epoch(e3).is_ok());
+        // idempotent membership: re-adding an existing member only bumps epoch
+        let e4 = dm.recreate_with_member(ATTN_EXPERT_DOMAIN, 2).unwrap().epoch;
+        assert!(e4 > e3);
+        assert_eq!(dm.get(ATTN_EXPERT_DOMAIN).unwrap().size(), 4);
     }
 
     #[test]

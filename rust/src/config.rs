@@ -11,24 +11,37 @@ use crate::Result;
 /// Model dimensions — mirror of `python/compile/config.py::ModelConfig`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelMeta {
+    /// Vocabulary size (64: the shared alphabet).
     pub vocab: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// Total transformer layers.
     pub n_layers: usize,
+    /// Leading dense-FFN layers (the rest are MoE).
     pub n_dense_layers: usize,
+    /// Expert count of each MoE layer.
     pub n_experts: usize,
+    /// Experts activated per token.
     pub top_k: usize,
+    /// FFN hidden width.
     pub d_ff: usize,
+    /// Maximum context length (prompt + generation).
     pub max_seq: usize,
+    /// LayerNorm epsilon.
     pub ln_eps: f64,
 }
 
 impl ModelMeta {
+    /// Number of MoE layers (`n_layers - n_dense_layers`).
     pub fn n_moe_layers(&self) -> usize {
         self.n_layers - self.n_dense_layers
     }
 
+    /// Load the metadata from `artifacts_dir/model_meta.json`.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(artifacts_dir.join("model_meta.json"))?;
         let j = crate::json::Json::parse(&text)?;
@@ -62,8 +75,11 @@ pub enum DeployMode {
 /// in preference order: redundant experts -> role switch -> missing experts.
 #[derive(Clone, Debug)]
 pub struct RecoveryPolicy {
+    /// May recovery rely on redundant expert replicas?
     pub allow_redundant_experts: bool,
+    /// May recovery consume a DP rank via role switch?
     pub allow_role_switch: bool,
+    /// May recovery mask lost experts out of the gate?
     pub allow_missing_experts: bool,
     /// Which graphs recovery recompiles after the XCCL domain is rebuilt.
     pub recompile_scope: RecompileScope,
@@ -100,8 +116,11 @@ impl Default for RecoveryPolicy {
 ///   bound the ablation reports).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RecompileScope {
+    /// Every executable on every surviving device.
     Full,
+    /// Only graphs crossing the recreated domain (default).
     Boundary,
+    /// Nothing recompiles (pure decomposed lower bound).
     None_,
 }
 
@@ -128,6 +147,7 @@ impl Default for CostModel {
 /// The full deployment description handed to [`crate::engine::Engine`].
 #[derive(Clone, Debug)]
 pub struct DeploymentConfig {
+    /// Collocated or disaggregated (paper §2.2).
     pub mode: DeployMode,
     /// Attention (DP) rank count. In Collocated mode every rank is both an
     /// attention DP member and an expert-parallel member.
@@ -152,10 +172,15 @@ pub struct DeploymentConfig {
     pub prefill_buckets: Vec<usize>,
     /// Grouped-MoE per-expert capacity buckets (must match aot.py).
     pub capacity_buckets: Vec<usize>,
+    /// Which recovery options are permitted, and the recompile scope.
     pub recovery: RecoveryPolicy,
+    /// Scale factors for projecting to paper scale (reporting only).
     pub cost_model: CostModel,
+    /// Heartbeat sweep cadence in ms.
     pub heartbeat_interval_ms: u64,
+    /// Heartbeat probe timeout in ms.
     pub heartbeat_timeout_ms: u64,
+    /// Root of the artifact tree (weights, HLO, eval sets).
     pub artifacts_dir: PathBuf,
     /// Use the fused full-model decode executable when a rank hosts all
     /// experts ("graph mode", §2.4). Falls back to per-module otherwise.
@@ -238,26 +263,32 @@ impl DeploymentConfig {
         self.batch_buckets.iter().copied().find(|&b| b >= n)
     }
 
+    /// Round a prompt length up to the nearest AOT prefill bucket.
     pub fn prefill_bucket(&self, n: usize) -> Option<usize> {
         self.prefill_buckets.iter().copied().find(|&b| b >= n)
     }
 
+    /// Round a per-expert load up to the nearest AOT capacity bucket.
     pub fn capacity_bucket(&self, n: usize) -> Option<usize> {
         self.capacity_buckets.iter().copied().find(|&b| b >= n)
     }
 
+    /// `artifacts_dir/hlo` — the AOT graph library.
     pub fn hlo_dir(&self) -> PathBuf {
         self.artifacts_dir.join("hlo")
     }
 
+    /// `artifacts_dir/weights.bin` — the raw weight blob.
     pub fn weights_bin(&self) -> PathBuf {
         self.artifacts_dir.join("weights.bin")
     }
 
+    /// `artifacts_dir/weights.json` — the weight manifest.
     pub fn weights_manifest(&self) -> PathBuf {
         self.artifacts_dir.join("weights.json")
     }
 
+    /// Sanity-check the shape against the model metadata.
     pub fn validate(&self, _meta: &ModelMeta) -> Result<()> {
         anyhow::ensure!(self.n_attn_ranks > 0, "need at least one attention rank");
         anyhow::ensure!(self.n_moe_ranks > 0, "need at least one MoE rank");

@@ -41,12 +41,35 @@ use crate::Result;
 /// Completed-request record returned to callers.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// The engine-assigned sequence id.
     pub seq_id: SeqId,
+    /// Task family the request belonged to.
     pub task: String,
+    /// The original prompt (reconstructed across migrations).
     pub prompt: Vec<Token>,
+    /// Every decoded token, in order, across migrations.
     pub output: Vec<Token>,
+    /// End-to-end latency from submission to the final token.
     pub latency: Duration,
+    /// Time from submission to the first decoded token, if one was
+    /// produced before completion (survives migrations).
+    pub ttft: Option<Duration>,
+    /// How many times the sequence was migrated off a failed rank.
     pub migrations: u32,
+}
+
+/// What one guarded engine iteration did (see [`Engine::step_checked`]).
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// The step ran; these requests completed during it.
+    Ran(Vec<Completion>),
+    /// A device fault preempted the step (either the pre-step sweep
+    /// flagged it, or the step itself died against the failed device and
+    /// the post-error sweep classified it). The engine state is exactly as
+    /// recovery expects it: uncommitted block ops sit in the undo logs and
+    /// no token was recorded for the aborted step, so
+    /// `ReviveMoE::recover` + re-decode resumes cleanly.
+    Preempted(FaultAnnotation),
 }
 
 /// Engine-side bookkeeping for one in-flight request. The prompt is NOT
@@ -60,28 +83,49 @@ struct RequestRecord {
     submitted: Instant,
 }
 
+/// The global serving engine: central state of one FlowServe instance.
 pub struct Engine {
+    /// Deployment shape this instance was booted with.
     pub cfg: DeploymentConfig,
+    /// Model dimensions (from `artifacts/model_meta.json`).
     pub meta: ModelMeta,
+    /// On-disk weight store (role switches reload expert weights from it).
     pub store: WeightStore,
+    /// AOT HLO artifact index.
     pub arts: ArtifactStore,
+    /// Every live executor, keyed by device id.
     pub executors: HashMap<DeviceId, Executor>,
     /// DP rank -> device id
     pub attn_order: Vec<DeviceId>,
     /// MoE rank -> device id (collocated: same devices as attn_order)
     pub moe_order: Vec<DeviceId>,
+    /// Logical-to-physical expert placement (§3.4).
     pub expert_map: ExpertMap,
+    /// Replicated dense-FFN TP groups (§3.4).
     pub dense: DenseGroups,
+    /// XCCL domain manager (§3.5).
     pub domains: DomainManager,
+    /// Device-plugin fault annotation surface (§3.1).
     pub plugin: DevicePlugin,
+    /// Heartbeat monitor (§3.1).
     pub monitor: HeartbeatMonitor,
+    /// Online serving statistics.
     pub stats: ServingStats,
     /// cumulative gate activations per expert (Table-2 task-based ranking)
     pub activation_counts: Vec<u64>,
     records: HashMap<SeqId, RequestRecord>,
     next_seq: SeqId,
     epoch: u64,
+    /// When the last heartbeat sweep ran (sweeps are paced by
+    /// `monitor.interval`; annotation polls are free and happen every
+    /// `detect_failure` call).
+    last_sweep: Option<Instant>,
+    /// True while the engine is paused for recovery; `step` refuses to run.
     pub paused: bool,
+    /// Re-entrancy guard: true while a recovery pass is executing. A
+    /// second fault arriving during recovery must *queue* (the plugin
+    /// keeps its annotation) and recover afterwards, never nest.
+    pub recovering: bool,
 }
 
 impl Engine {
@@ -214,7 +258,9 @@ impl Engine {
             records: HashMap::new(),
             next_seq: 1,
             epoch,
+            last_sweep: None,
             paused: false,
+            recovering: false,
         };
         bd.add(Category::Other, t0.elapsed());
         Ok((engine, bd))
@@ -260,11 +306,40 @@ impl Engine {
         Ok(id)
     }
 
-    fn least_loaded_attn(&self) -> Result<DeviceId> {
+    /// Least-loaded attention rank whose device has no un-cleared
+    /// needs-recovery annotation — the shared selection used for fresh
+    /// submissions, migration targets, and role-switch victims, so that
+    /// mid-cascade nothing lands on (or strips) a rank that is already
+    /// condemned but not yet recovered. `None` when no healthy attention
+    /// rank remains.
+    pub fn least_loaded_healthy_attn(&self) -> Option<DeviceId> {
+        let flagged: Vec<DeviceId> = self
+            .plugin
+            .pending_recovery()
+            .into_iter()
+            .map(|a| a.device)
+            .collect();
         self.attn_order
             .iter()
             .copied()
-            .min_by_key(|d| self.executors[d].attn.as_ref().map(|a| a.sched.load()).unwrap_or(usize::MAX))
+            .filter(|d| !flagged.contains(d))
+            .min_by_key(|&d| self.attn_load_of(d))
+    }
+
+    /// The one load metric rank placement uses (waiting + running; MAX for
+    /// a device without an attention role).
+    fn attn_load_of(&self, d: DeviceId) -> usize {
+        self.executors[&d].attn.as_ref().map(|a| a.sched.load()).unwrap_or(usize::MAX)
+    }
+
+    /// Dispatch target: the least-loaded healthy attention rank. In the
+    /// degenerate case where *every* remaining rank is condemned (a burst
+    /// that will be recovered rank by rank), placement falls back to the
+    /// least-loaded rank overall — those sequences are simply re-migrated
+    /// when that rank's own recovery runs.
+    fn least_loaded_attn(&self) -> Result<DeviceId> {
+        self.least_loaded_healthy_attn()
+            .or_else(|| self.attn_order.iter().copied().min_by_key(|&d| self.attn_load_of(d)))
             .ok_or_else(|| anyhow::anyhow!("no attention ranks available"))
     }
 
@@ -304,6 +379,7 @@ impl Engine {
         Ok(n)
     }
 
+    /// Sequences still in the system (waiting + running) across all ranks.
     pub fn pending(&self) -> usize {
         self.attn_order
             .iter()
@@ -357,21 +433,56 @@ impl Engine {
                     // banked (pre-migration) decoded token — peel those off
                     // to recover the prompt without having stored a copy
                     let migrations = seq.migrations;
+                    let ttft = seq.first_token_at.map(|t| t.duration_since(seq.arrived));
                     let mut prompt = seq.prompt;
                     prompt.truncate(prompt.len().saturating_sub(banked));
                     self.stats.record_completion(latency, output.len());
+                    if let Some(t) = ttft {
+                        self.stats.record_tpot(latency, t, output.len());
+                    }
                     done.push(Completion {
                         seq_id: seq.id,
                         task: rec.task,
                         prompt,
                         output,
                         latency,
+                        ttft,
                         migrations,
                     });
                 }
             }
         }
         Ok(done)
+    }
+
+    /// One guarded iteration for online serving: sweep for faults, then
+    /// step. Reports a fault as [`StepOutcome::Preempted`] instead of an
+    /// opaque error — both when the pre-step sweep catches it and when the
+    /// step itself dies against the failed device mid-flight (the
+    /// post-error sweep classifies it). Only errors with no detectable
+    /// device fault behind them propagate as `Err`.
+    ///
+    /// On preemption nothing was committed for the aborted step: block-op
+    /// undo logs still hold the step's page operations (recovery rolls
+    /// them back, §3.3) and no token was pushed, so after
+    /// `ReviveMoE::recover` the next `step` simply re-runs the work.
+    pub fn step_checked(&mut self) -> Result<StepOutcome> {
+        if let Some(ann) = self.detect_failure() {
+            return Ok(StepOutcome::Preempted(ann));
+        }
+        match self.step() {
+            Ok(done) => Ok(StepOutcome::Ran(done)),
+            Err(e) => {
+                // a failed step must always be classified with a fresh
+                // heartbeat sweep, whatever the pacing says — the error is
+                // the signal that something just died
+                self.last_sweep = None;
+                match self.detect_failure() {
+                    Some(ann) => Ok(StepOutcome::Preempted(ann)),
+                    None => Err(e),
+                }
+            }
+        }
     }
 
     /// Run until every submitted request completes (or `max_steps`).
@@ -825,6 +936,12 @@ impl Engine {
 
     /// Sweep heartbeats + plugin annotations. Returns a detected failure
     /// needing recovery, if any (does not recover by itself).
+    ///
+    /// The annotation poll is free and runs on every call; the heartbeat
+    /// sweep (one ping round-trip per device) is paced by
+    /// `monitor.interval`, so a caller invoking this inline every serving
+    /// tick — the serve loop does — pays ping traffic at the configured
+    /// cadence rather than per tick. The first call always sweeps.
     pub fn detect_failure(&mut self) -> Option<FaultAnnotation> {
         if let Some(ann) = self.plugin.poll() {
             if ann.level.needs_recovery() {
@@ -833,7 +950,15 @@ impl Engine {
             // benign (L1/L2): log-only, clear it
             self.plugin.clear(ann.device);
         }
-        let devices: Vec<DeviceId> = self.executors.keys().copied().collect();
+        if self.last_sweep.is_some_and(|t| t.elapsed() < self.monitor.interval) {
+            return None;
+        }
+        self.last_sweep = Some(Instant::now());
+        let mut devices: Vec<DeviceId> = self.executors.keys().copied().collect();
+        // deterministic sweep order: with several devices down at once the
+        // heartbeat must always flag the same one first (scenario replays
+        // depend on it; the executor map itself is unordered)
+        devices.sort_unstable();
         // borrow the executor map by field so the sweep closure does not
         // capture `self` (which the monitor itself is borrowed from)
         let executors = &self.executors;
@@ -861,6 +986,7 @@ impl Engine {
         self.epoch
     }
 
+    /// Adopt a new XCCL epoch (called by recovery after domain recreation).
     pub fn set_epoch(&mut self, e: u64) {
         self.epoch = e;
     }

@@ -26,9 +26,12 @@ pub fn default_fractions() -> Vec<(usize, usize)> {
     vec![(1, 32), (1, 16), (1, 8), (1, 4), (1, 2)]
 }
 
+/// One task's accuracy row (Table-2 analog).
 #[derive(Clone, Debug)]
 pub struct TaskRow {
+    /// Task family name.
     pub task: String,
+    /// Accuracy with every expert healthy.
     pub base: f64,
     /// accuracy per fraction, task-based selection
     pub task_based: Vec<f64>,
@@ -36,9 +39,12 @@ pub struct TaskRow {
     pub every_nth: Vec<f64>,
 }
 
+/// The full lost-experts sweep: rows per task, columns per fraction.
 #[derive(Clone, Debug)]
 pub struct LostExpertsTable {
+    /// Failed-expert fractions evaluated (numerator, denominator).
     pub fractions: Vec<(usize, usize)>,
+    /// One row per task.
     pub rows: Vec<TaskRow>,
 }
 
@@ -48,12 +54,14 @@ impl LostExpertsTable {
         mean(self.rows.iter().map(|r| r.base))
     }
 
+    /// Column means of the task-based selection series.
     pub fn mean_task_based(&self) -> Vec<f64> {
         (0..self.fractions.len())
             .map(|i| mean(self.rows.iter().map(|r| r.task_based[i])))
             .collect()
     }
 
+    /// Column means of the every-nth selection series.
     pub fn mean_every_nth(&self) -> Vec<f64> {
         (0..self.fractions.len())
             .map(|i| mean(self.rows.iter().map(|r| r.every_nth[i])))

@@ -22,9 +22,13 @@ use crate::Result;
 
 /// Attention-role state (a DPExecutor in the paper's terms).
 pub struct AttnState {
+    /// This executor's DP rank at init time.
     pub dp_rank: usize,
+    /// Local continuous-batching scheduler.
     pub sched: LocalScheduler,
+    /// Paged block manager (with the §3.3 undo log).
     pub blocks: BlockManager,
+    /// The paged K/V storage behind the block tables.
     pub kv: KvPool,
     /// `(seq, block, slot)` for each batch element of the in-flight step.
     pub step_slots: Vec<(SeqId, usize, usize)>,
@@ -32,16 +36,22 @@ pub struct AttnState {
 
 /// MoE-role state (a MoEExecutor).
 pub struct MoeState {
+    /// This executor's MoE (EP) rank.
     pub moe_rank: usize,
+    /// Expert ids hosted, in slot order.
     pub slots: Vec<ExpertId>,
 }
 
 /// One worker process bound to one simulated NPU.
 pub struct Executor {
+    /// The simulated NPU this executor is bound to.
     pub device_id: DeviceId,
+    /// Command handle to the device thread.
     pub handle: DeviceHandle,
     device: Option<SimDevice>,
+    /// Attention-role state, if attached.
     pub attn: Option<AttnState>,
+    /// MoE-role state, if attached.
     pub moe: Option<MoeState>,
     /// (dense group idx, shard idx) if this device hosts a dense-FFN shard.
     pub dense_shard: Option<(usize, usize)>,
@@ -62,10 +72,12 @@ impl Executor {
         }
     }
 
+    /// Whether the attention role is attached.
     pub fn is_attention(&self) -> bool {
         self.attn.is_some()
     }
 
+    /// Whether the MoE role is attached.
     pub fn is_moe(&self) -> bool {
         self.moe.is_some()
     }

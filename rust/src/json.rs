@@ -12,17 +12,25 @@ use std::fmt::Write as _;
 
 use anyhow::{bail, Result};
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64, like javascript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted — serialization is canonical).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -34,6 +42,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field access (error when absent or not an object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow::anyhow!("missing key '{key}'")),
@@ -41,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Optional object field access.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -48,6 +58,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an object.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an array.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -62,6 +74,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -69,6 +82,7 @@ impl Json {
         }
     }
 
+    /// Read as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -76,14 +90,17 @@ impl Json {
         }
     }
 
+    /// Read as a number truncated to usize.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// Read an array of numbers as usizes.
     pub fn usize_arr(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
+    /// Read an array of numbers as f64s.
     pub fn f64_arr(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
@@ -324,14 +341,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number literal builder.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String literal builder.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Number-array builder.
 pub fn arr_f64(v: &[f64]) -> Json {
     Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
 }

@@ -19,7 +19,9 @@ use anyhow::bail;
 
 use crate::Result;
 
+/// Index of one KV page in the pool.
 pub type BlockId = usize;
+/// Sequence identifier (same space as `scheduler::SeqId`).
 pub type SeqId = u64;
 
 /// One logged block operation, with enough information to invert it.
@@ -44,12 +46,14 @@ pub enum BlockOp {
 /// Per-sequence page table: ordered blocks plus the fill of the last one.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct BlockTable {
+    /// The sequence's pages, in position order.
     pub blocks: Vec<BlockId>,
     /// number of tokens written into the last block
     pub last_fill: usize,
 }
 
 impl BlockTable {
+    /// Tokens stored across the table given the pool's block size.
     pub fn n_tokens(&self, block_size: usize) -> usize {
         if self.blocks.is_empty() {
             0
@@ -63,6 +67,7 @@ impl BlockTable {
 /// with every mutation logged for undo.
 #[derive(Clone, Debug)]
 pub struct BlockManager {
+    /// Tokens per block (page size).
     pub block_size: usize,
     n_blocks: usize,
     free: Vec<BlockId>,
@@ -74,6 +79,7 @@ pub struct BlockManager {
 }
 
 impl BlockManager {
+    /// A manager over `n_blocks` pages of `block_size` tokens each.
     pub fn new(n_blocks: usize, block_size: usize) -> Self {
         BlockManager {
             block_size,
@@ -86,22 +92,27 @@ impl BlockManager {
         }
     }
 
+    /// Blocks currently on the free list.
     pub fn n_free(&self) -> usize {
         self.free.len()
     }
 
+    /// Total pool capacity in blocks.
     pub fn n_total(&self) -> usize {
         self.n_blocks
     }
 
+    /// Reference count of one block.
     pub fn refcount(&self, b: BlockId) -> u32 {
         self.refcnt[b]
     }
 
+    /// The page table of `seq`, if it has one.
     pub fn table(&self, seq: SeqId) -> Option<&BlockTable> {
         self.tables.get(&seq)
     }
 
+    /// Every sequence currently holding a table (unordered).
     pub fn sequences(&self) -> impl Iterator<Item = SeqId> + '_ {
         self.tables.keys().copied()
     }
@@ -120,6 +131,7 @@ impl BlockManager {
         self.log.clear();
     }
 
+    /// Undo-log entries accumulated since the last `begin_step`.
     pub fn log_len(&self) -> usize {
         self.log.len()
     }
@@ -307,10 +319,14 @@ impl BlockManager {
     }
 }
 
+/// Canonicalized manager state for equality assertions in tests.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BlockSnapshot {
+    /// Free list, sorted.
     pub free: Vec<BlockId>,
+    /// Per-block reference counts.
     pub refcnt: Vec<u32>,
+    /// Every table, sorted by sequence id.
     pub tables: Vec<(SeqId, BlockTable)>,
 }
 

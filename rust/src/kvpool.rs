@@ -13,6 +13,7 @@ use crate::kvcache::BlockTable;
 use crate::tensor::Tensor;
 use crate::Result;
 
+/// Per-layer paged K/V storage owned by one attention executor.
 pub struct KvPool {
     n_layers: usize,
     n_blocks: usize,
@@ -26,6 +27,7 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// Allocate a zeroed pool sized for `n_blocks` pages per layer.
     pub fn new(meta: &ModelMeta, n_blocks: usize, block_size: usize) -> Self {
         let row = meta.n_heads * meta.d_head;
         let per_layer = n_blocks * block_size * row;
@@ -46,6 +48,7 @@ impl KvPool {
         2 * self.n_layers * self.n_blocks * self.block_size * self.row * 4
     }
 
+    /// Number of layers the pool stores K/V for.
     pub fn n_layers(&self) -> usize {
         self.n_layers
     }

@@ -9,7 +9,8 @@
 //! that this crate loads and executes through the PJRT C API (`xla` crate).
 //! Python is never on the request path.
 //!
-//! Module map (see DESIGN.md for the paper-section correspondence):
+//! Module map (see docs/ARCHITECTURE.md for the paper-section
+//! correspondence and the request/recovery lifecycles):
 //!
 //! - [`config`]     deployment + recovery configuration
 //! - [`tensor`]     minimal host tensor type crossing the PJRT boundary
@@ -25,10 +26,16 @@
 //! - [`weights`]    weight manifest loading / expert slicing
 //! - [`executor`]   DPExecutor / MoEExecutor / generator layer loop (§2.2)
 //! - [`engine`]     global engine: intake, dispatch, serving loop
-//! - [`recovery`]   ReviveMoE recovery + full-reinit baseline (§3, §4.1)
+//! - [`recovery`]   ReviveMoE recovery, device revival, reinit baseline
+//!                  (§3, §4.1)
+//! - [`scenario`]   deterministic, seeded fault-scenario scripts
+//! - [`serve`]      online serving loop: open-loop traffic, inline
+//!                  detection, recovery under load (§4)
 //! - [`metrics`]    Table-1 timing categories, latency/throughput stats
-//! - [`workload`]   synthetic request generator + eval-set loading (§4.2)
+//! - [`workload`]   synthetic request generator, open-loop arrival
+//!                  process, eval-set loading (§4.2)
 //! - [`evalharness`] lost-expert accuracy evaluation (Table 2 / Fig 6)
+#![warn(missing_docs)]
 
 pub mod artifacts;
 pub mod cluster;
@@ -44,7 +51,9 @@ pub mod metrics;
 pub mod moe;
 pub mod recovery;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
+pub mod serve;
 pub mod tensor;
 pub mod weights;
 pub mod workload;
@@ -52,6 +61,8 @@ pub mod workload;
 pub use config::{DeployMode, DeploymentConfig, ModelMeta, RecoveryPolicy};
 pub use engine::Engine;
 pub use recovery::{RecoveryReport, ReviveMoE};
+pub use scenario::Scenario;
+pub use serve::{run_scenario, RecoveryStrategy, ServeReport};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

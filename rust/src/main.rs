@@ -4,7 +4,13 @@
 //!   revivemoe [--artifacts DIR] [--mode disaggregated|collocated] <command>
 //!
 //! Commands:
-//!   serve     [--requests N] [--seed S]      serve a synthetic workload
+//!   serve     [--scenario NAME] [--strategy revivemoe|reinit]
+//!             [--rate R] [--requests N] [--ticks T] [--seed S] [--log]
+//!                                            online open-loop serving under
+//!                                            a deterministic fault scenario
+//!                                            (steady | single-fault |
+//!                                            cascade | fault-revive |
+//!                                            rate-surge)
 //!   failover  [--device D] [--requests N] [--hung]
 //!                                            serve, inject a failure,
 //!                                            recover with ReviveMoE, finish
@@ -17,8 +23,10 @@ use revivemoe::cluster::{FailureBehavior, FaultLevel};
 use revivemoe::config::DeploymentConfig;
 use revivemoe::engine::Engine;
 use revivemoe::recovery::ReviveMoE;
-use revivemoe::workload::{self, EvalSet};
-use revivemoe::{evalharness, Result};
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy};
+use revivemoe::workload::EvalSet;
+use revivemoe::{evalharness, workload, Result};
 
 struct Args {
     artifacts: String,
@@ -68,6 +76,10 @@ impl Args {
         self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    fn flag_f64(&self, name: &str) -> Option<f64> {
+        self.flags.get(name).and_then(|v| v.parse().ok())
+    }
+
     fn flag_bool(&self, name: &str) -> bool {
         self.flags.get(name).map(|v| v == "true").unwrap_or(false)
     }
@@ -82,26 +94,49 @@ fn main() -> Result<()> {
     };
     match args.cmd.as_str() {
         "serve" => {
-            let requests = args.flag_usize("requests", 32);
             let seed = args.flag_usize("seed", 7) as u64;
-            let (mut engine, bd) = Engine::boot(cfg)?;
-            println!("{}", bd.render("boot breakdown"));
-            engine.stats.start();
-            for req in workload::gen_mixed(requests, seed)? {
-                engine.submit(req)?;
+            let name = args.flags.get("scenario").map(String::as_str).unwrap_or("steady");
+            let Some(mut scenario) = Scenario::by_name(name, seed) else {
+                eprintln!(
+                    "unknown scenario {name:?}; one of: {}",
+                    Scenario::CANNED.join(" | ")
+                );
+                std::process::exit(2);
+            };
+            if let Some(rate) = args.flag_f64("rate") {
+                scenario = scenario.rate(rate);
             }
-            let done = engine.run_to_completion(10_000)?;
-            engine.stats.stop();
-            for c in done.iter().take(8) {
+            if args.flags.contains_key("requests") {
+                scenario = scenario.requests(args.flag_usize("requests", 48));
+            }
+            if args.flags.contains_key("ticks") {
+                scenario = scenario.ticks(args.flag_usize("ticks", 600) as u64);
+            }
+            let strategy = match args.flags.get("strategy").map(String::as_str) {
+                Some("reinit" | "baseline_reinit") => RecoveryStrategy::BaselineReinit,
+                _ => RecoveryStrategy::ReviveMoE,
+            };
+            let (engine, bd) = Engine::boot(cfg)?;
+            println!("{}", bd.render("boot breakdown"));
+            let (engine, report) = run_scenario(engine, &scenario, strategy)?;
+            if args.flag_bool("log") {
+                for line in &report.event_log {
+                    println!("  {line}");
+                }
+            }
+            for c in report.completed.iter().take(8) {
                 println!(
-                    "seq {:>3} [{:<7}] {:?} -> {:?}",
-                    c.seq_id,
+                    "req {:>3} [{:<7}] tick {:>4} restarts={} migrations={} -> {:?}",
+                    c.arrival,
                     c.task,
-                    workload::decode(&c.prompt),
+                    c.completed_tick,
+                    c.restarts,
+                    c.migrations,
                     workload::decode(&c.output)
                 );
             }
-            println!("{}", engine.stats.report());
+            println!("{}", report.summary());
+            println!("{}", report.stats.report());
             engine.shutdown();
         }
         "failover" => {

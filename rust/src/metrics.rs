@@ -32,6 +32,7 @@ pub enum Category {
 }
 
 impl Category {
+    /// Every category, in the paper's stacked-bar order.
     pub const ALL: [Category; 9] = [
         Category::Engine,
         Category::ExecutorProcesses,
@@ -44,6 +45,7 @@ impl Category {
         Category::Other,
     ];
 
+    /// Human-readable category name (matches the paper's tables).
     pub fn name(&self) -> &'static str {
         match self {
             Category::Engine => "Engine",
@@ -66,10 +68,12 @@ pub struct Breakdown {
 }
 
 impl Breakdown {
+    /// Empty breakdown.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// File a duration under a category (categories accumulate).
     pub fn add(&mut self, cat: Category, d: Duration) {
         self.entries.push((cat, d));
     }
@@ -82,6 +86,7 @@ impl Breakdown {
         out
     }
 
+    /// Total time filed under `cat`.
     pub fn get(&self, cat: Category) -> Duration {
         self.entries
             .iter()
@@ -90,10 +95,12 @@ impl Breakdown {
             .sum()
     }
 
+    /// Sum over every category.
     pub fn total(&self) -> Duration {
         self.entries.iter().map(|(_, d)| *d).sum()
     }
 
+    /// Append another breakdown's entries into this one.
     pub fn merge(&mut self, other: &Breakdown) {
         self.entries.extend(other.entries.iter().cloned());
     }
@@ -118,41 +125,105 @@ impl fmt::Display for Breakdown {
     }
 }
 
+/// The crate's one percentile definition (nearest-rank on the sorted
+/// samples): every latency/TTFT/TPOT figure — `ServingStats` and the
+/// serve loop's restart-inclusive end-to-end report alike — goes through
+/// here, so all of them agree on what "p99" means. `p` in `[0, 1]`;
+/// returns 0.0 for an empty sample set.
+pub fn percentile(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mut s = v.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+    s[idx]
+}
+
 /// Online latency/throughput statistics for the serving loop.
+///
+/// Besides the aggregate counters, the serve loop feeds per-request TTFT
+/// and TPOT samples plus recovery *stall windows* (wall time the engine
+/// was paused for a recovery or a baseline reinitialization) so a
+/// fault-scenario run can report goodput and tail latency under failures.
 #[derive(Clone, Debug, Default)]
 pub struct ServingStats {
+    /// Requests that ran to completion.
     pub requests_completed: usize,
+    /// Total decoded tokens across all requests.
     pub tokens_generated: usize,
+    /// Global decode steps executed.
     pub decode_steps: usize,
+    /// Prefills executed (admissions, including re-prefills after migration).
     pub prefills: usize,
+    /// Activation bytes moved attention→experts.
     pub bytes_dispatched: usize,
+    /// Activation bytes moved experts→attention.
     pub bytes_combined: usize,
+    /// Recoveries performed during the measured window.
+    pub recoveries: usize,
+    /// Requests restarted from scratch by a baseline reinitialization.
+    pub requests_restarted: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
+    tpot_ms: Vec<f64>,
     decode_step_ms: Vec<f64>,
+    stall_ms: Vec<f64>,
     started: Option<Instant>,
+    /// Measured wall-clock window (accumulated across start/stop pairs).
     pub wall: Duration,
 }
 
 impl ServingStats {
+    /// Open a measurement window.
     pub fn start(&mut self) {
         self.started = Some(Instant::now());
     }
 
+    /// Close the current measurement window, accumulating into `wall`.
     pub fn stop(&mut self) {
         if let Some(t0) = self.started.take() {
             self.wall += t0.elapsed();
         }
     }
 
+    /// Record one finished request's end-to-end latency and output length.
     pub fn record_completion(&mut self, latency: Duration, n_tokens: usize) {
         self.requests_completed += 1;
         self.tokens_generated += n_tokens;
         self.latencies_ms.push(latency.as_secs_f64() * 1e3);
     }
 
+    /// Record one request's time-to-first-token.
     pub fn record_ttft(&mut self, ttft: Duration) {
         self.ttft_ms.push(ttft.as_secs_f64() * 1e3);
+    }
+
+    /// Record one finished request's mean time-per-output-token: the
+    /// decode phase (latency minus TTFT) divided by the tokens decoded
+    /// after the first.
+    pub fn record_tpot(&mut self, latency: Duration, ttft: Duration, n_tokens: usize) {
+        if n_tokens > 1 {
+            let decode = latency.saturating_sub(ttft).as_secs_f64() * 1e3;
+            self.tpot_ms.push(decode / (n_tokens - 1) as f64);
+        }
+    }
+
+    /// Record one recovery-induced stall window (engine paused or, for
+    /// the reinit baseline, being rebooted).
+    pub fn record_stall(&mut self, stall: Duration) {
+        self.recoveries += 1;
+        self.stall_ms.push(stall.as_secs_f64() * 1e3);
+    }
+
+    /// Total stalled wall time in milliseconds.
+    pub fn stall_total_ms(&self) -> f64 {
+        self.stall_ms.iter().sum()
+    }
+
+    /// The longest single stall window in milliseconds.
+    pub fn stall_max_ms(&self) -> f64 {
+        self.stall_ms.iter().copied().fold(0.0, f64::max)
     }
 
     /// Wall time of one global decode step (all ranks). The overlap work
@@ -161,10 +232,12 @@ impl ServingStats {
         self.decode_step_ms.push(d.as_secs_f64() * 1e3);
     }
 
+    /// Median decode-step wall time (ms).
     pub fn decode_step_p50(&self) -> f64 {
         Self::pct(&self.decode_step_ms, 0.50)
     }
 
+    /// Mean decode-step wall time (ms).
     pub fn decode_step_mean(&self) -> f64 {
         if self.decode_step_ms.is_empty() {
             return 0.0;
@@ -178,6 +251,7 @@ impl ServingStats {
         std::mem::take(&mut self.decode_step_ms)
     }
 
+    /// Decoded tokens per wall second over the measured window.
     pub fn throughput_tok_s(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
         if secs > 0.0 {
@@ -187,43 +261,73 @@ impl ServingStats {
         }
     }
 
-    fn pct(v: &[f64], p: f64) -> f64 {
-        if v.is_empty() {
-            return 0.0;
+    /// Goodput: *completed* requests per wall second over the measured
+    /// window. Requests lost to a restart and re-run count once (at their
+    /// eventual completion), so a reinit baseline pays for its lost work.
+    pub fn goodput_req_s(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.requests_completed as f64 / secs
+        } else {
+            0.0
         }
-        let mut s = v.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
-        s[idx]
     }
 
+    fn pct(v: &[f64], p: f64) -> f64 {
+        percentile(v, p)
+    }
+
+    /// Median end-to-end request latency (ms).
     pub fn latency_p50(&self) -> f64 {
         Self::pct(&self.latencies_ms, 0.50)
     }
 
+    /// 99th-percentile end-to-end request latency (ms).
     pub fn latency_p99(&self) -> f64 {
         Self::pct(&self.latencies_ms, 0.99)
     }
 
+    /// Median time-to-first-token (ms).
     pub fn ttft_p50(&self) -> f64 {
         Self::pct(&self.ttft_ms, 0.50)
     }
 
+    /// 99th-percentile time-to-first-token (ms).
+    pub fn ttft_p99(&self) -> f64 {
+        Self::pct(&self.ttft_ms, 0.99)
+    }
+
+    /// Median time-per-output-token (ms).
+    pub fn tpot_p50(&self) -> f64 {
+        Self::pct(&self.tpot_ms, 0.50)
+    }
+
+    /// 99th-percentile time-per-output-token (ms).
+    pub fn tpot_p99(&self) -> f64 {
+        Self::pct(&self.tpot_ms, 0.99)
+    }
+
+    /// One-line human-readable summary of the measured window.
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} steps={} prefills={} wall={:.2}s \
-             tput={:.1} tok/s p50={:.1}ms p99={:.1}ms ttft_p50={:.1}ms \
-             step_p50={:.2}ms dispatched={}B combined={}B",
+             tput={:.1} tok/s goodput={:.2} req/s p50={:.1}ms p99={:.1}ms \
+             ttft_p50={:.1}ms tpot_p50={:.2}ms step_p50={:.2}ms \
+             recoveries={} stall={:.0}ms dispatched={}B combined={}B",
             self.requests_completed,
             self.tokens_generated,
             self.decode_steps,
             self.prefills,
             self.wall.as_secs_f64(),
             self.throughput_tok_s(),
+            self.goodput_req_s(),
             self.latency_p50(),
             self.latency_p99(),
             self.ttft_p50(),
+            self.tpot_p50(),
             self.decode_step_p50(),
+            self.recoveries,
+            self.stall_total_ms(),
             self.bytes_dispatched,
             self.bytes_combined,
         )
@@ -282,6 +386,26 @@ mod tests {
         let drained = s.take_decode_step_ms();
         assert_eq!(drained.len(), 2);
         assert_eq!(s.decode_step_mean(), 0.0, "drain must reset the samples");
+    }
+
+    #[test]
+    fn tpot_and_stall_accounting() {
+        let mut s = ServingStats::default();
+        // 1 token: no TPOT sample (nothing decoded after the first token)
+        s.record_tpot(Duration::from_millis(50), Duration::from_millis(50), 1);
+        assert_eq!(s.tpot_p50(), 0.0);
+        // 5 tokens, 40ms of decode after a 10ms TTFT -> 10ms per token
+        s.record_tpot(Duration::from_millis(50), Duration::from_millis(10), 5);
+        assert!((s.tpot_p50() - 10.0).abs() < 1e-9);
+
+        assert_eq!(s.recoveries, 0);
+        s.record_stall(Duration::from_millis(120));
+        s.record_stall(Duration::from_millis(30));
+        assert_eq!(s.recoveries, 2);
+        assert!((s.stall_total_ms() - 150.0).abs() < 1e-9);
+        assert!((s.stall_max_ms() - 120.0).abs() < 1e-9);
+        let r = s.report();
+        assert!(r.contains("recoveries=2"));
     }
 
     #[test]

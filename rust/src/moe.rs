@@ -24,15 +24,19 @@ use anyhow::bail;
 use crate::comms::ExpertRouter;
 use crate::Result;
 
+/// Logical expert index in `0..n_experts`.
 pub type ExpertId = usize;
+/// Logical MoE (expert-parallel) rank index.
 pub type MoeRank = usize;
 
 /// Additive gate-logit mask value for failed experts (matches the python
 /// side's finite stand-in for −∞, keeping softmax NaN-free).
 pub const MASK_NEG_INF: f32 = -1.0e30;
 
+/// The logical-to-physical expert mapping (see module docs).
 #[derive(Clone, Debug)]
 pub struct ExpertMap {
+    /// Total logical experts per MoE layer.
     pub n_experts: usize,
     /// slot lists per MoE rank: `slots[r][s]` = expert hosted in slot s.
     slots: Vec<Vec<ExpertId>>,
@@ -133,14 +137,17 @@ impl ExpertMap {
         }
     }
 
+    /// MoE rank count of the placement (alive or not).
     pub fn n_ranks(&self) -> usize {
         self.slots.len()
     }
 
+    /// Ranks currently alive.
     pub fn live_ranks(&self) -> Vec<MoeRank> {
         (0..self.slots.len()).filter(|&r| self.alive[r]).collect()
     }
 
+    /// Whether rank `r` is alive.
     pub fn is_alive(&self, r: MoeRank) -> bool {
         self.alive[r]
     }
@@ -150,6 +157,7 @@ impl ExpertMap {
         &self.slots[r]
     }
 
+    /// Experts currently masked out of the gate, ascending.
     pub fn missing_experts(&self) -> Vec<ExpertId> {
         self.missing.iter().copied().collect()
     }
@@ -190,6 +198,7 @@ impl ExpertMap {
         self.missing = experts.iter().copied().collect();
     }
 
+    /// Unmask every expert (placement unchanged).
     pub fn clear_missing(&mut self) {
         self.missing.clear();
     }
@@ -262,6 +271,7 @@ impl ExpertRouter for ExpertMap {
 /// Replicated dense-FFN tensor-parallel groups (paper §3.4 last paragraph).
 #[derive(Clone, Debug)]
 pub struct DenseGroups {
+    /// Tensor-parallel degree of each group.
     pub tp: usize,
     /// groups[g] = device ids hosting the g-th replica's TP shards, in
     /// shard order.
@@ -287,14 +297,17 @@ impl DenseGroups {
         Ok(DenseGroups { tp, groups, healthy: vec![true; n_groups], cursor: 0 })
     }
 
+    /// Total group count (healthy or not).
     pub fn n_groups(&self) -> usize {
         self.groups.len()
     }
 
+    /// Indices of groups currently in the rotation.
     pub fn healthy_groups(&self) -> Vec<usize> {
         (0..self.groups.len()).filter(|&g| self.healthy[g]).collect()
     }
 
+    /// Whether group `g` is healthy.
     pub fn is_healthy(&self, g: usize) -> bool {
         self.healthy[g]
     }

@@ -17,14 +17,14 @@
 //! 7. read graph caches and perform the cached compile for the new
 //!    deployment shape (§3.6); resume.
 
+use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
-
 
 use crate::cluster::{DeviceId, FaultAnnotation};
 use crate::comms::{ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
-use crate::config::{DeployMode, RecompileScope};
+use crate::config::{DeployMode, DeploymentConfig, RecompileScope};
 use crate::engine::Engine;
-use crate::executor::artifact_set;
+use crate::executor::{artifact_set, Executor};
 use crate::metrics::{Breakdown, Category};
 use crate::moe::FailOutcome;
 use crate::Result;
@@ -32,25 +32,72 @@ use crate::Result;
 /// Which §3.4 weight-integrity option recovery took.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MoeRecoveryKind {
+    /// The failed rank's experts all survive as replicas elsewhere.
     RedundantExperts,
+    /// A DP rank switched roles and reloaded the lost experts from disk.
     RoleSwitch,
+    /// The lost experts were masked out of the gate.
     MissingExperts,
 }
 
+/// What one `ReviveMoE::recover` pass did, with Table-1 style timings.
 #[derive(Debug)]
 pub struct RecoveryReport {
+    /// Per-category timing of the pass (paper Fig 5 stacked bars).
     pub breakdown: Breakdown,
+    /// The device that failed.
     pub failed_device: DeviceId,
+    /// Role classification: "attention", "moe", or "collocated".
     pub role: String,
+    /// Weight-integrity option taken, if the device hosted experts.
     pub moe_recovery: Option<MoeRecoveryKind>,
+    /// Sequences migrated off the failed rank (§3.2).
     pub migrated_sequences: usize,
+    /// Block operations rolled back by the undo log (§3.3).
     pub undone_block_ops: usize,
+    /// Sequences on *surviving* ranks whose page state was rolled away
+    /// with the aborted step (admitted mid-step) and were requeued for
+    /// re-prefill rather than left running without KV.
+    pub requeued_unprefilled: usize,
+    /// Graphs recompiled for the new deployment shape (§3.6).
     pub recompiled_graphs: usize,
+    /// Experts masked out of the gate (missing-experts option only).
     pub masked_experts: Vec<usize>,
+    /// The DP device consumed by a role switch, if one happened.
     pub switched_device: Option<DeviceId>,
 }
 
 impl RecoveryReport {
+    /// Total recovery wall time (sum over all categories).
+    pub fn total(&self) -> Duration {
+        self.breakdown.total()
+    }
+}
+
+/// What one `ReviveMoE::revive` pass did when a repaired device rejoined.
+#[derive(Debug)]
+pub struct ReviveReport {
+    /// Per-category timing of the pass (process spawn under
+    /// ExecutorProcesses, weight loads under Generator, domain recreation
+    /// under XCCL, graph work under ReadCache/Compile).
+    pub breakdown: Breakdown,
+    /// The device that rejoined.
+    pub device: DeviceId,
+    /// The MoE rank it re-took, if its old rank was still dead (weights
+    /// re-loaded from disk, replica redundancy restored to the
+    /// pre-failure placement).
+    pub restored_moe_rank: Option<usize>,
+    /// Whether it (re)joined the DP attention set.
+    pub joined_attention: bool,
+    /// Dense-FFN TP groups brought back to healthy by the revival.
+    pub restored_dense_groups: Vec<usize>,
+    /// Graphs compiled on the revived device plus boundary recompiles on
+    /// survivors.
+    pub recompiled_graphs: usize,
+}
+
+impl ReviveReport {
+    /// Total revival wall time (sum over all categories).
     pub fn total(&self) -> Duration {
         self.breakdown.total()
     }
@@ -61,7 +108,31 @@ pub struct ReviveMoE;
 
 impl ReviveMoE {
     /// Recover the engine from a single-NPU failure in place.
+    ///
+    /// Not re-entrant: a second fault arriving *while this runs* (a
+    /// cascading failure) must wait its turn — its plugin annotation stays
+    /// posted, `Engine::detect_failure` surfaces it on the next sweep, and
+    /// a second `recover` call handles it sequentially. The guard below
+    /// turns an accidental nested call into an error instead of corrupted
+    /// engine state; devices condemned-but-not-yet-recovered are skipped
+    /// by this pass (no scheduling onto them, no graph work on them).
+    ///
+    /// An `Err` from this function is **instance-fatal**: the engine is
+    /// deliberately left paused (serving over half-recovered state would
+    /// corrupt sequences), and the caller's options are a full
+    /// [`baseline_reinit`] or shutdown. It is not retryable in place.
     pub fn recover(engine: &mut Engine, ann: &FaultAnnotation) -> Result<RecoveryReport> {
+        anyhow::ensure!(
+            !engine.recovering,
+            "recovery already in progress; queue the fault and retry after it completes"
+        );
+        engine.recovering = true;
+        let out = Self::recover_locked(engine, ann);
+        engine.recovering = false;
+        out
+    }
+
+    fn recover_locked(engine: &mut Engine, ann: &FaultAnnotation) -> Result<RecoveryReport> {
         let mut bd = Breakdown::new();
         let failed = ann.device;
         let (is_attn, moe_rank, hosts_dense) = engine.device_role(failed);
@@ -96,10 +167,17 @@ impl ReviveMoE {
             migrated = engine.requeue(seqs)?;
         }
         let mut undone = 0;
+        let mut requeued_unprefilled = 0;
         for &d in &engine.attn_order.clone() {
             let a = engine.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
             undone += a.blocks.undo_step()?;
             a.blocks.audit()?;
+            // A sequence admitted in the very step the failure aborted is
+            // Running but its prefill page reservations were just rolled
+            // away — decoding it would read KV that does not exist. Send
+            // it back to the head of the waiting queue for a re-prefill.
+            let (sched, blocks) = (&mut a.sched, &a.blocks);
+            requeued_unprefilled += sched.demote_running(|s| blocks.table(s.id).is_none());
         }
         bd.add(Category::Other, t0.elapsed());
 
@@ -209,60 +287,16 @@ impl ReviveMoE {
         // are (see [`RecompileScope`]): the paper's fused Ascend graphs bake
         // the whole communication domain in (`Full`); our decomposed AOT
         // artifacts only entangle the graphs at the dispatch/combine
-        // boundary (`Boundary`, default).
-        let mut read_s = 0f64;
-        let mut compile_s = 0f64;
-        let mut recompiled = 0;
+        // boundary (`Boundary`, default). Devices condemned by a *pending*
+        // second fault are skipped — their graph work belongs to their own
+        // recovery pass, and touching a dead device here would wedge this
+        // one.
         let scope = engine.cfg.recovery.recompile_scope;
-        let mut device_ids: Vec<DeviceId> = engine.executors.keys().copied().collect();
-        device_ids.sort_unstable();
-        for d in device_ids {
-            let names = {
-                let ex = &engine.executors[&d];
-                let mut t_buckets = engine.cfg.batch_buckets.clone();
-                t_buckets.extend(engine.cfg.prefill_buckets.iter().copied());
-                match scope {
-                    RecompileScope::None_ => Vec::new(),
-                    RecompileScope::Full => artifact_set(ex, &engine.meta, &engine.cfg),
-                    RecompileScope::Boundary => {
-                        if switched_device == Some(d) {
-                            // brand-new MoE executor: full set
-                            artifact_set(ex, &engine.meta, &engine.cfg)
-                        } else {
-                            let mut v = Vec::new();
-                            if ex.is_attention() {
-                                for &t in &t_buckets {
-                                    v.push(crate::artifacts::router(t));
-                                }
-                            }
-                            if let Some(moe) = &ex.moe {
-                                for &c in &engine.cfg.capacity_buckets {
-                                    v.push(crate::artifacts::moe_block(moe.slots.len(), c));
-                                }
-                            }
-                            if ex.dense_shard.is_some() {
-                                for &t in &t_buckets {
-                                    v.push(crate::artifacts::dense_ffn(engine.cfg.dense_tp, t));
-                                }
-                            }
-                            v.sort();
-                            v.dedup();
-                            v
-                        }
-                    }
-                }
-            };
-            if names.is_empty() {
-                continue;
-            }
-            let ex = engine.executors.get_mut(&d).unwrap();
-            ex.handle.drop_executables(Some(names.clone()))?;
-            for stat in ex.compile_set(&engine.arts, &names)? {
-                read_s += stat.read_s;
-                compile_s += stat.compile_s;
-                recompiled += 1;
-            }
-        }
+        let skip: BTreeSet<DeviceId> =
+            engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
+        let full_set: Vec<DeviceId> = switched_device.into_iter().collect();
+        let (read_s, compile_s, recompiled) =
+            recompile_for_domain_change(engine, scope, &full_set, &skip)?;
         bd.add(Category::ReadCache, Duration::from_secs_f64(read_s));
         bd.add(Category::Compile, Duration::from_secs_f64(compile_s));
 
@@ -278,9 +312,158 @@ impl ReviveMoE {
             moe_recovery,
             migrated_sequences: migrated,
             undone_block_ops: undone,
+            requeued_unprefilled,
             recompiled_graphs: recompiled,
             masked_experts: masked,
             switched_device,
+        })
+    }
+
+    /// Bring a repaired (or replacement) NPU back into the live instance —
+    /// the inverse of a failure, without restarting anything.
+    ///
+    /// The device gets a fresh executor process; then, depending on what
+    /// the deployment is missing:
+    ///
+    /// - if the device's old MoE rank is still dead, it re-takes that rank:
+    ///   expert weights re-load from disk (Generator, like a role switch)
+    ///   and `ExpertMap::revive_rank` restores the *pre-failure* slot list —
+    ///   primaries and redundant replicas — so replica redundancy returns
+    ///   to its original level and any masked-as-missing experts of that
+    ///   rank are served again;
+    /// - if the rank was already re-taken by a role switch (or the device
+    ///   was an attention rank to begin with), the device joins the DP
+    ///   attention set instead, restoring the DP width the switch consumed;
+    /// - dense-FFN TP groups that lost a shard on this device reload it and
+    ///   return to the healthy rotation.
+    ///
+    /// Finally the XCCL domains are destroyed and recreated with the device
+    /// as a member (fresh epoch, §3.5) and the new executor cached-compiles
+    /// its artifact set (§3.6) — survivors only redo boundary graphs, same
+    /// as failure-time recovery.
+    pub fn revive(engine: &mut Engine, device: DeviceId) -> Result<ReviveReport> {
+        anyhow::ensure!(
+            !engine.recovering,
+            "cannot revive a device while a recovery pass is running"
+        );
+        anyhow::ensure!(
+            !engine.executors.contains_key(&device),
+            "device {device} is already part of the instance"
+        );
+        let mut bd = Breakdown::new();
+
+        // -- Executor Processes: relaunch the worker --------------------------
+        let t0 = Instant::now();
+        let mut ex = Executor::spawn(device);
+        ex.handle
+            .ping(Duration::from_secs(60))
+            .map_err(|e| anyhow::anyhow!("revived device {device} never came up: {e:?}"))?;
+        bd.add(Category::ExecutorProcesses, t0.elapsed());
+
+        // -- Generator: reload whatever roles the deployment is missing ------
+        // Load phase first, commit phase second: every fallible weight load
+        // lands in the local executor only, and engine state (expert map,
+        // DP order, dense rotation, executor table) mutates *after* all of
+        // them succeeded — an error mid-revive leaves the engine exactly as
+        // it was, minus one spawned-then-dropped worker.
+        let t0 = Instant::now();
+        let meta = engine.meta.clone();
+        let dead_moe_rank = engine
+            .moe_order
+            .iter()
+            .position(|&d| d == device)
+            .filter(|&r| !engine.expert_map.is_alive(r));
+        if let Some(mr) = dead_moe_rank {
+            // the pre-failure slot list (primaries + replicas) is retained
+            // by the map even while the rank is dead
+            let slots = engine.expert_map.rank_slots(mr).to_vec();
+            ex.init_moe(mr, &meta, slots, &engine.store)?;
+        }
+        let was_attn = match engine.cfg.mode {
+            DeployMode::Collocated => true,
+            DeployMode::Disaggregated => device < engine.cfg.n_attn_ranks,
+        };
+        // join the DP set when the device was an attention rank, or when
+        // its MoE rank is already covered (a role switch consumed a DP
+        // rank; the revived device gives that width back)
+        let joined_attention =
+            (was_attn || dead_moe_rank.is_none()) && !engine.attn_order.contains(&device);
+        if joined_attention {
+            let dp_rank = engine.attn_order.len();
+            ex.init_attention(dp_rank, &meta, &engine.cfg, &engine.store)?;
+        }
+        let mut restored_dense_groups = Vec::new();
+        for g in 0..engine.dense.n_groups() {
+            if engine.dense.is_healthy(g) {
+                continue;
+            }
+            let members = engine.dense.groups[g].clone();
+            let mut reloaded = false;
+            for (s, &m) in members.iter().enumerate() {
+                if m == device {
+                    ex.init_dense_shard(g, s, engine.cfg.dense_tp, &meta, &engine.store)?;
+                    reloaded = true;
+                }
+            }
+            // only return the group to rotation when every other shard
+            // still has a live executor (a group compromised by a second,
+            // still-dead device must stay out)
+            let all_live = members
+                .iter()
+                .all(|m| *m == device || engine.executors.contains_key(m));
+            if reloaded && all_live {
+                restored_dense_groups.push(g);
+            }
+        }
+        anyhow::ensure!(
+            dead_moe_rank.is_some() || joined_attention || !restored_dense_groups.is_empty(),
+            "device {device} has no role to revive in this deployment"
+        );
+        // commit: every load succeeded, adopt the device
+        let restored_moe_rank = match dead_moe_rank {
+            Some(mr) => {
+                engine.expert_map.revive_rank(mr)?;
+                Some(mr)
+            }
+            None => None,
+        };
+        if joined_attention {
+            engine.attn_order.push(device);
+        }
+        for &g in &restored_dense_groups {
+            engine.dense.restore_group(g);
+        }
+        engine.executors.insert(device, ex);
+        bd.add(Category::Generator, t0.elapsed());
+
+        // -- XCCL: recreate domains with the device back in (§3.5) ------------
+        let t0 = Instant::now();
+        if engine.cfg.mode == DeployMode::Disaggregated && restored_moe_rank.is_some() {
+            engine.domains.recreate_with_member(TRAMPOLINE_DOMAIN, device)?;
+        }
+        let epoch = engine.domains.recreate_with_member(ATTN_EXPERT_DOMAIN, device)?.epoch;
+        engine.set_epoch(epoch);
+        bd.add(Category::Xccl, t0.elapsed());
+
+        // -- Read Cache + Compile (§3.6) --------------------------------------
+        let scope = engine.cfg.recovery.recompile_scope;
+        let skip: BTreeSet<DeviceId> =
+            engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
+        // the revived executor has an empty graph cache: it compiles its
+        // full set under every scope; survivors follow the policy
+        let (read_s, compile_s, recompiled) =
+            recompile_for_domain_change(engine, scope, &[device], &skip)?;
+        bd.add(Category::ReadCache, Duration::from_secs_f64(read_s));
+        bd.add(Category::Compile, Duration::from_secs_f64(compile_s));
+
+        engine.plugin.clear(device);
+        Ok(ReviveReport {
+            breakdown: bd,
+            device,
+            restored_moe_rank,
+            joined_attention,
+            restored_dense_groups,
+            recompiled_graphs: recompiled,
         })
     }
 
@@ -300,12 +483,15 @@ impl ReviveMoE {
             engine.attn_order.len() > 1,
             "role switch needs a spare attention rank"
         );
-        // victim: least-loaded attention rank
-        let victim = *engine
-            .attn_order
-            .iter()
-            .min_by_key(|d| engine.executors[d].attn.as_ref().map(|a| a.sched.load()).unwrap_or(usize::MAX))
-            .unwrap();
+        // victim: least-loaded *healthy* attention rank — a device condemned
+        // by a pending second fault must not be chosen mid-cascade (its own
+        // recovery pass owns it, and issuing role-switch commands against a
+        // dead device would abort this pass half-way). Same selection the
+        // engine uses for submissions/migrations, minus its last-resort
+        // fallback: stripping a condemned rank is never acceptable.
+        let victim = engine.least_loaded_healthy_attn().ok_or_else(|| {
+            anyhow::anyhow!("no healthy attention rank available for a role switch")
+        })?;
         let seqs = engine.drain_for_migration(victim)?;
         engine.attn_order.retain(|&d| d != victim);
         engine.requeue(seqs)?;
@@ -329,6 +515,81 @@ impl ReviveMoE {
         *switched_device = Some(victim);
         Ok(())
     }
+}
+
+/// The boundary artifact names one executor must redo after the
+/// attention-expert domain changed shape: routers on attention ranks,
+/// grouped expert FFNs on MoE ranks, dense shards where hosted.
+fn boundary_names(ex: &Executor, cfg: &DeploymentConfig) -> Vec<String> {
+    let mut t_buckets = cfg.batch_buckets.clone();
+    t_buckets.extend(cfg.prefill_buckets.iter().copied());
+    let mut v = Vec::new();
+    if ex.is_attention() {
+        for &t in &t_buckets {
+            v.push(crate::artifacts::router(t));
+        }
+    }
+    if let Some(moe) = &ex.moe {
+        for &c in &cfg.capacity_buckets {
+            v.push(crate::artifacts::moe_block(moe.slots.len(), c));
+        }
+    }
+    if ex.dense_shard.is_some() {
+        for &t in &t_buckets {
+            v.push(crate::artifacts::dense_ffn(cfg.dense_tp, t));
+        }
+    }
+    v.sort();
+    v.dedup();
+    v
+}
+
+/// Shared §3.6 recompile sweep after an XCCL domain change (failure
+/// recovery and device revival both end with one). `full_set` devices get
+/// their complete artifact set regardless of scope (role-switched or
+/// freshly revived executors start with an empty graph cache); `skip`
+/// devices are left alone entirely (condemned by a pending fault — their
+/// own recovery pass owns their graph work). Returns
+/// `(read_s, compile_s, graphs_compiled)`.
+fn recompile_for_domain_change(
+    engine: &mut Engine,
+    scope: RecompileScope,
+    full_set: &[DeviceId],
+    skip: &BTreeSet<DeviceId>,
+) -> Result<(f64, f64, usize)> {
+    let mut read_s = 0f64;
+    let mut compile_s = 0f64;
+    let mut recompiled = 0usize;
+    let mut device_ids: Vec<DeviceId> = engine.executors.keys().copied().collect();
+    device_ids.sort_unstable();
+    for d in device_ids {
+        if skip.contains(&d) {
+            continue;
+        }
+        let names = {
+            let ex = &engine.executors[&d];
+            if full_set.contains(&d) {
+                artifact_set(ex, &engine.meta, &engine.cfg)
+            } else {
+                match scope {
+                    RecompileScope::None_ => Vec::new(),
+                    RecompileScope::Full => artifact_set(ex, &engine.meta, &engine.cfg),
+                    RecompileScope::Boundary => boundary_names(ex, &engine.cfg),
+                }
+            }
+        };
+        if names.is_empty() {
+            continue;
+        }
+        let ex = engine.executors.get_mut(&d).unwrap();
+        ex.handle.drop_executables(Some(names.clone()))?;
+        for stat in ex.compile_set(&engine.arts, &names)? {
+            read_s += stat.read_s;
+            compile_s += stat.compile_s;
+            recompiled += 1;
+        }
+    }
+    Ok((read_s, compile_s, recompiled))
 }
 
 // ---------------------------------------------------------------------------
@@ -377,6 +638,7 @@ mod tests {
             moe_recovery: Some(MoeRecoveryKind::RedundantExperts),
             migrated_sequences: 0,
             undone_block_ops: 0,
+            requeued_unprefilled: 0,
             recompiled_graphs: 0,
             masked_experts: vec![],
             switched_device: None,

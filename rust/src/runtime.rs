@@ -45,23 +45,35 @@ pub const DEFAULT_CMD_TIMEOUT: Duration = Duration::from_secs(5);
 /// host value shipped with the call.
 #[derive(Clone, Debug)]
 pub enum Arg {
+    /// A device-resident weight, referenced by name.
     Weight(String),
+    /// A host value shipped with the call.
     Value(Tensor),
 }
 
+/// Timing of one cached compile (read the HLO text, then PJRT-compile).
 #[derive(Clone, Debug, Default)]
 pub struct CompileStat {
+    /// Artifact name.
     pub name: String,
+    /// Seconds spent reading the HLO text from disk ("Read Cache").
     pub read_s: f64,
+    /// Seconds spent in the PJRT compile ("Compile").
     pub compile_s: f64,
+    /// Size of the HLO text read.
     pub hlo_bytes: usize,
 }
 
+/// Rolling counters one device thread maintains.
 #[derive(Clone, Debug, Default)]
 pub struct DeviceStats {
+    /// Successful executions.
     pub executions: u64,
+    /// Compiles performed.
     pub compiles: u64,
+    /// Bytes of resident weights.
     pub weight_bytes: usize,
+    /// Executables in the graph cache.
     pub executables: usize,
 }
 
@@ -81,14 +93,18 @@ enum Cmd {
 /// Cloneable handle to a device thread.
 #[derive(Clone)]
 pub struct DeviceHandle {
+    /// The device this handle talks to.
     pub id: DeviceId,
     tx: Sender<Cmd>,
+    /// Per-command deadline (starts at submission).
     pub cmd_timeout: Duration,
 }
 
 /// A spawned simulated NPU.
 pub struct SimDevice {
+    /// Command handle to the device thread.
     pub handle: DeviceHandle,
+    /// Join handle of the device thread.
     pub join: JoinHandle<()>,
 }
 
@@ -119,6 +135,7 @@ pub struct PendingReply<T> {
 }
 
 impl<T> PendingReply<T> {
+    /// The device the command was submitted to.
     pub fn device(&self) -> DeviceId {
         self.device
     }
@@ -166,6 +183,7 @@ pub struct PendingExec {
 }
 
 impl PendingExec {
+    /// The device the execute was submitted to.
     pub fn device(&self) -> DeviceId {
         self.inner.device()
     }
@@ -199,14 +217,17 @@ enum WaveSlot {
 }
 
 impl ExecWave {
+    /// A new wave; `serial` awaits each push immediately (A/B baseline).
     pub fn new(serial: bool) -> Self {
         ExecWave { serial, slots: Vec::new() }
     }
 
+    /// Members pushed so far.
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// Whether the wave has no members.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
@@ -436,30 +457,35 @@ impl DeviceHandle {
         }
     }
 
+    /// Compile one HLO-text artifact into the device's graph cache.
     pub fn compile(&self, name: &str, path: PathBuf) -> Result<CompileStat> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::Compile { name: name.to_string(), path, reply: tx })?;
         self.wait(rx)?
     }
 
+    /// Whether `name` is already in the device's graph cache.
     pub fn has_executable(&self, name: &str) -> Result<bool> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::HasExecutable { name: name.to_string(), reply: tx })?;
         self.wait(rx)
     }
 
+    /// Drop cached executables (all of them when `names` is None).
     pub fn drop_executables(&self, names: Option<Vec<String>>) -> Result<usize> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::DropExecutables { names, reply: tx })?;
         self.wait(rx)
     }
 
+    /// Load named weights into device residence; returns bytes moved.
     pub fn load_weights(&self, tensors: Vec<(String, Tensor)>) -> Result<usize> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::LoadWeights { tensors, reply: tx })?;
         self.wait(rx)?
     }
 
+    /// Drop every resident weight whose name starts with `prefix`.
     pub fn drop_weights_prefix(&self, prefix: &str) -> Result<usize> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::DropWeightsPrefix { prefix: prefix.to_string(), reply: tx })?;
@@ -480,10 +506,12 @@ impl DeviceHandle {
         })
     }
 
+    /// Blocking execute: submit then await in one call.
     pub fn execute(&self, exe: &str, args: Vec<Arg>) -> Result<Vec<Tensor>> {
         self.submit_execute(exe, args)?.wait()
     }
 
+    /// Fetch the device's rolling counters.
     pub fn stats(&self) -> Result<DeviceStats> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::Stats { reply: tx })?;
@@ -495,6 +523,7 @@ impl DeviceHandle {
         let _ = self.tx.send(Cmd::SetFailed { behavior });
     }
 
+    /// Terminate the device thread (SIGKILL analog; queued work is lost).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Cmd::Shutdown);
     }

@@ -1,0 +1,265 @@
+//! Deterministic fault-scenario scripts for the online serving loop.
+//!
+//! A [`Scenario`] is a seeded, replayable description of one serving run:
+//! the open-loop arrival process (rate, request budget) plus a script of
+//! timed events — fault injections, device revivals, arrival-rate changes
+//! — stamped in *engine ticks* (one tick = one `Engine::step`). Nothing in
+//! a scenario references wall time, so running the same scenario twice
+//! against identically-configured engines produces identical token
+//! streams and an identical event ordering (asserted by
+//! `tests/integration_serve.rs`).
+//!
+//! The interesting compositions the paper's setting implies are canned
+//! here: a single mid-decode fault ([`Scenario::single_fault`]), a
+//! cascading double fault where the second device dies while the first
+//! recovery is still pending ([`Scenario::cascade`]), a fault followed by
+//! the repaired device rejoining ([`Scenario::fault_then_revive`]), and a
+//! load surge ([`Scenario::rate_surge`]). Device ids in the canned
+//! scenarios assume the default 8-device MA-disaggregated shape
+//! (devices 0–3 attention, 4–7 MoE).
+
+use crate::cluster::{DeviceId, FailureBehavior, FaultLevel};
+
+/// One scripted occurrence within a scenario.
+#[derive(Clone, Debug)]
+pub enum ScenarioEvent {
+    /// Kill a device (the simulated hardware fault) and post its plugin
+    /// annotation, through [`crate::cluster::FaultInjector`] — the same
+    /// kill+annotate sequence the benches and the CLI use.
+    InjectFault {
+        /// The device to kill.
+        device: DeviceId,
+        /// Severity posted to the plugin (L3+ triggers recovery).
+        level: FaultLevel,
+        /// Erroring (detectable replies) or hung (heartbeat-only).
+        behavior: FailureBehavior,
+    },
+    /// A repaired or replacement NPU rejoins the instance
+    /// (`ReviveMoE::revive`): weights reload from disk, the expert map
+    /// re-replicates back to its pre-failure redundancy, and the XCCL
+    /// domains are recreated with the device as a member.
+    ReviveDevice {
+        /// The device rejoining.
+        device: DeviceId,
+    },
+    /// Change the open-loop arrival rate (requests per tick).
+    RateChange {
+        /// The new mean arrival rate.
+        rate: f64,
+    },
+    /// Stop arrivals entirely (the drain phase of a run).
+    StopArrivals,
+}
+
+/// A scenario event bound to the tick it fires at.
+#[derive(Clone, Debug)]
+pub struct TimedEvent {
+    /// Tick the event fires at (events fire before the tick's step).
+    pub at_tick: u64,
+    /// What happens.
+    pub event: ScenarioEvent,
+}
+
+/// A seeded, deterministic script of one online serving run.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Scenario name (used in reports and bench JSON).
+    pub name: String,
+    /// Seed for the arrival process (prompts and inter-arrival gaps).
+    pub seed: u64,
+    /// Initial mean arrival rate in requests per tick.
+    pub rate: f64,
+    /// Total request budget (None = arrivals never stop on their own).
+    pub max_requests: Option<usize>,
+    /// Hard tick cap: the loop stops here even with work outstanding
+    /// (guards against non-terminating scripts).
+    pub max_ticks: u64,
+    /// The event script, in insertion order.
+    pub events: Vec<TimedEvent>,
+}
+
+impl Scenario {
+    /// A quiet scenario: `max_requests` open-loop arrivals at `rate`
+    /// requests/tick, no scripted events.
+    pub fn new(name: &str, seed: u64) -> Self {
+        Scenario {
+            name: name.to_string(),
+            seed,
+            rate: 1.0,
+            max_requests: Some(48),
+            max_ticks: 600,
+            events: Vec::new(),
+        }
+    }
+
+    /// Set the initial arrival rate (requests per tick).
+    pub fn rate(mut self, rate: f64) -> Self {
+        self.rate = rate;
+        self
+    }
+
+    /// Set the total request budget.
+    pub fn requests(mut self, n: usize) -> Self {
+        self.max_requests = Some(n);
+        self
+    }
+
+    /// Set the hard tick cap.
+    pub fn ticks(mut self, n: u64) -> Self {
+        self.max_ticks = n;
+        self
+    }
+
+    /// Script a fault injection at `tick`.
+    pub fn inject_fault(
+        mut self,
+        tick: u64,
+        device: DeviceId,
+        level: FaultLevel,
+        behavior: FailureBehavior,
+    ) -> Self {
+        self.events.push(TimedEvent {
+            at_tick: tick,
+            event: ScenarioEvent::InjectFault { device, level, behavior },
+        });
+        self
+    }
+
+    /// Script a device revival at `tick`.
+    pub fn revive(mut self, tick: u64, device: DeviceId) -> Self {
+        self.events
+            .push(TimedEvent { at_tick: tick, event: ScenarioEvent::ReviveDevice { device } });
+        self
+    }
+
+    /// Script an arrival-rate change at `tick`.
+    pub fn rate_change(mut self, tick: u64, rate: f64) -> Self {
+        self.events.push(TimedEvent { at_tick: tick, event: ScenarioEvent::RateChange { rate } });
+        self
+    }
+
+    /// Script an arrival stop at `tick`.
+    pub fn stop_arrivals(mut self, tick: u64) -> Self {
+        self.events.push(TimedEvent { at_tick: tick, event: ScenarioEvent::StopArrivals });
+        self
+    }
+
+    /// The event script sorted by tick (stable: same-tick events keep
+    /// their insertion order — this is what makes a cascading double
+    /// fault's ordering well-defined).
+    pub fn sorted_events(&self) -> Vec<TimedEvent> {
+        let mut v = self.events.clone();
+        v.sort_by_key(|e| e.at_tick);
+        v
+    }
+
+    // -- canned scenarios ----------------------------------------------------
+
+    /// Steady open-loop traffic, no faults (the control run).
+    pub fn steady(seed: u64) -> Self {
+        Scenario::new("steady", seed)
+    }
+
+    /// One MoE NPU dies mid-decode (erroring, L6) under live traffic.
+    pub fn single_fault(seed: u64) -> Self {
+        Scenario::new("single-fault", seed).inject_fault(
+            6,
+            5,
+            FaultLevel::L6,
+            FailureBehavior::Erroring,
+        )
+    }
+
+    /// Cascading double fault: a MoE NPU dies, and while its recovery is
+    /// pending an attention NPU dies too (same tick, so the second fault
+    /// is already posted when the first recovery runs). The second
+    /// recovery must queue behind the first — sequentially, never nested.
+    pub fn cascade(seed: u64) -> Self {
+        Scenario::new("cascade", seed)
+            .inject_fault(6, 5, FaultLevel::L6, FailureBehavior::Erroring)
+            .inject_fault(6, 2, FaultLevel::L5, FailureBehavior::Erroring)
+    }
+
+    /// A MoE NPU dies, is recovered, and the repaired device rejoins a
+    /// few ticks later (`ReviveMoE::revive` + re-replication).
+    pub fn fault_then_revive(seed: u64) -> Self {
+        Scenario::new("fault-revive", seed)
+            .inject_fault(6, 5, FaultLevel::L6, FailureBehavior::Erroring)
+            .revive(16, 5)
+    }
+
+    /// Load surge: the arrival rate triples mid-run, then drops back.
+    pub fn rate_surge(seed: u64) -> Self {
+        Scenario::new("rate-surge", seed)
+            .rate(0.5)
+            .rate_change(10, 1.5)
+            .rate_change(25, 0.5)
+    }
+
+    /// Look a canned scenario up by name (the `serve` CLI mode's
+    /// `--scenario` flag).
+    pub fn by_name(name: &str, seed: u64) -> Option<Self> {
+        match name {
+            "steady" => Some(Self::steady(seed)),
+            "single-fault" => Some(Self::single_fault(seed)),
+            "cascade" => Some(Self::cascade(seed)),
+            "fault-revive" => Some(Self::fault_then_revive(seed)),
+            "rate-surge" => Some(Self::rate_surge(seed)),
+            _ => None,
+        }
+    }
+
+    /// Every canned scenario name, for CLI help and the bench sweep.
+    pub const CANNED: [&str; 5] =
+        ["steady", "single-fault", "cascade", "fault-revive", "rate-surge"];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_events() {
+        let s = Scenario::new("t", 1)
+            .rate(2.0)
+            .requests(10)
+            .ticks(99)
+            .inject_fault(5, 3, FaultLevel::L6, FailureBehavior::Hung)
+            .revive(9, 3)
+            .rate_change(7, 0.25)
+            .stop_arrivals(20);
+        assert_eq!(s.rate, 2.0);
+        assert_eq!(s.max_requests, Some(10));
+        assert_eq!(s.max_ticks, 99);
+        assert_eq!(s.events.len(), 4);
+    }
+
+    #[test]
+    fn sorted_events_stable_within_tick() {
+        let s = Scenario::new("t", 1)
+            .inject_fault(6, 5, FaultLevel::L6, FailureBehavior::Erroring)
+            .inject_fault(6, 2, FaultLevel::L5, FailureBehavior::Erroring)
+            .rate_change(3, 0.1);
+        let ev = s.sorted_events();
+        assert_eq!(ev[0].at_tick, 3);
+        // same-tick faults keep insertion order: device 5 before device 2
+        match (&ev[1].event, &ev[2].event) {
+            (
+                ScenarioEvent::InjectFault { device: a, .. },
+                ScenarioEvent::InjectFault { device: b, .. },
+            ) => {
+                assert_eq!((*a, *b), (5, 2));
+            }
+            other => panic!("unexpected order: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn canned_scenarios_resolve_by_name() {
+        for name in Scenario::CANNED {
+            let s = Scenario::by_name(name, 7).expect(name);
+            assert_eq!(s.name, name);
+        }
+        assert!(Scenario::by_name("nope", 7).is_none());
+    }
+}

@@ -10,32 +10,48 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-
+/// Globally unique sequence identifier assigned by the engine at submit.
 pub type SeqId = u64;
+/// Token id in the 64-symbol alphabet shared with the python build layer.
 pub type Token = u16;
 
+/// Lifecycle state of a sequence within its local scheduler.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SeqState {
+    /// In the waiting queue; not yet admitted to the running set.
     Waiting,
+    /// Admitted: prefilled (or about to be) and decoding.
     Running,
+    /// Hit EOS or exhausted its generation budget.
     Finished,
 }
 
+/// One in-flight generation request: prompt, decoded tail, and budget.
 #[derive(Clone, Debug)]
 pub struct Sequence {
+    /// Engine-assigned identifier (stable across migrations).
     pub id: SeqId,
+    /// Prompt tokens. After a migration this also contains previously
+    /// decoded tokens (see [`Sequence::migration_view`]).
     pub prompt: Vec<Token>,
+    /// Tokens decoded since the last (re-)prefill.
     pub decoded: Vec<Token>,
+    /// Current scheduler state.
     pub state: SeqState,
+    /// Remaining generation budget (reduced across migrations).
     pub max_new_tokens: usize,
+    /// Stop token, if any.
     pub eos: Option<Token>,
+    /// When the sequence entered the system (TTFT reference point).
     pub arrived: Instant,
+    /// When the first token was decoded (set once, survives migrations).
     pub first_token_at: Option<Instant>,
     /// set if this sequence was migrated off a failed rank (telemetry)
     pub migrations: u32,
 }
 
 impl Sequence {
+    /// Create a fresh waiting sequence.
     pub fn new(id: SeqId, prompt: Vec<Token>, max_new_tokens: usize, eos: Option<Token>) -> Self {
         Sequence {
             id,
@@ -69,6 +85,8 @@ impl Sequence {
             .expect("sequence has no tokens")
     }
 
+    /// Record a decoded token, stamping first-token time and flipping to
+    /// `Finished` on EOS or budget exhaustion.
     pub fn push_token(&mut self, t: Token) {
         if self.first_token_at.is_none() {
             self.first_token_at = Some(Instant::now());
@@ -79,6 +97,7 @@ impl Sequence {
         }
     }
 
+    /// Whether the sequence has produced its last token.
     pub fn is_finished(&self) -> bool {
         self.state == SeqState::Finished
     }
@@ -115,25 +134,31 @@ impl Sequence {
 /// Per-executor scheduler: FIFO admission into a bounded running set.
 #[derive(Debug, Default)]
 pub struct LocalScheduler {
+    /// FIFO of sequences not yet admitted.
     pub waiting: VecDeque<Sequence>,
+    /// The bounded running (decoding) set.
     pub running: Vec<Sequence>,
+    /// Maximum concurrent running sequences (decode batch bound).
     pub max_batch: usize,
-    pub finished: Vec<Sequence>,
 }
 
 impl LocalScheduler {
+    /// Create an empty scheduler admitting up to `max_batch` sequences.
     pub fn new(max_batch: usize) -> Self {
-        LocalScheduler { waiting: VecDeque::new(), running: Vec::new(), max_batch, finished: Vec::new() }
+        LocalScheduler { waiting: VecDeque::new(), running: Vec::new(), max_batch }
     }
 
+    /// Enqueue a sequence at the back of the waiting queue.
     pub fn submit(&mut self, seq: Sequence) {
         self.waiting.push_back(seq);
     }
 
+    /// Number of sequences waiting for admission.
     pub fn queue_depth(&self) -> usize {
         self.waiting.len()
     }
 
+    /// Number of sequences currently in the running set.
     pub fn n_running(&self) -> usize {
         self.running.len()
     }
@@ -156,7 +181,9 @@ impl LocalScheduler {
         admitted
     }
 
-    /// Collect finished sequences out of the running set.
+    /// Collect finished sequences out of the running set. Ownership moves
+    /// to the caller — nothing is retained here, so a long-running serve
+    /// loop's memory does not grow with completed requests.
     pub fn reap(&mut self) -> Vec<Sequence> {
         let mut done = Vec::new();
         let mut i = 0;
@@ -167,12 +194,37 @@ impl LocalScheduler {
                 i += 1;
             }
         }
-        self.finished.extend(done.iter().cloned());
         done
     }
 
+    /// Mutable access to a running sequence by id.
     pub fn get_running_mut(&mut self, id: SeqId) -> Option<&mut Sequence> {
         self.running.iter_mut().find(|s| s.id == id)
+    }
+
+    /// Move running sequences for which `lost_state` holds back to the
+    /// *front* of the waiting queue (preserving their relative order) so
+    /// they are re-prefilled before new admissions. Recovery uses this for
+    /// sequences whose device-side state (KV pages) was rolled away by the
+    /// undo log — e.g. a sequence admitted in the very step a failure
+    /// aborted, which is Running but owns no block table. Returns how many
+    /// sequences were demoted.
+    pub fn demote_running<F: FnMut(&Sequence) -> bool>(&mut self, mut lost_state: F) -> usize {
+        let mut demoted = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if lost_state(&self.running[i]) {
+                demoted.push(self.running.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        let n = demoted.len();
+        for mut s in demoted.into_iter().rev() {
+            s.state = SeqState::Waiting;
+            self.waiting.push_front(s);
+        }
+        n
     }
 
     /// Remove every sequence (running and waiting separately) without any
@@ -282,5 +334,81 @@ mod tests {
         q.push_token(4);
         assert_eq!(q.next_pos(), 4);
         assert_eq!(q.last_token(), 4);
+    }
+
+    #[test]
+    fn migration_view_agrees_with_into_migration_view() {
+        let mut q = Sequence::new(4, vec![1, 2, 3], 10, Some(0));
+        q.state = SeqState::Running;
+        q.push_token(7);
+        q.push_token(8);
+        let borrowed = q.migration_view();
+        let owned = q.clone().into_migration_view();
+        assert_eq!(borrowed.id, owned.id);
+        assert_eq!(borrowed.prompt, owned.prompt);
+        assert_eq!(borrowed.decoded, owned.decoded);
+        assert_eq!(borrowed.state, owned.state);
+        assert_eq!(borrowed.max_new_tokens, owned.max_new_tokens);
+        assert_eq!(borrowed.eos, owned.eos);
+        assert_eq!(borrowed.migrations, owned.migrations);
+        assert_eq!(borrowed.first_token_at, owned.first_token_at);
+    }
+
+    #[test]
+    fn migration_budget_preserved_across_re_prefill() {
+        // total budget across any number of migrations must equal the
+        // original max_new_tokens: decoded-so-far + remaining budget
+        let mut q = Sequence::new(5, vec![1, 2], 8, None);
+        q.state = SeqState::Running;
+        q.push_token(3);
+        q.push_token(4);
+        let mut m = q.into_migration_view(); // banked 2, remaining 6
+        assert_eq!(m.max_new_tokens, 6);
+        m.state = SeqState::Running;
+        m.push_token(5); // post-re-prefill decode resumes
+        let m2 = m.into_migration_view(); // banked 3 total, remaining 5
+        assert_eq!(m2.max_new_tokens, 5);
+        assert_eq!(m2.prompt, vec![1, 2, 3, 4, 5]);
+        assert_eq!(m2.migrations, 2);
+        // invariant: prompt growth + remaining budget == original budget
+        assert_eq!((m2.prompt.len() - 2) + m2.max_new_tokens, 8);
+    }
+
+    #[test]
+    fn take_all_empties_and_scheduler_stays_submittable() {
+        let mut s = LocalScheduler::new(2);
+        for i in 0..4 {
+            s.submit(seq(i, 2));
+        }
+        s.admit();
+        let (running, waiting) = s.take_all();
+        assert_eq!(running.len(), 2);
+        assert_eq!(waiting.len(), 2);
+        assert_eq!(s.n_running(), 0);
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.load(), 0);
+        // the drained scheduler must accept fresh work and admit again
+        for sq in running.into_iter().map(Sequence::into_migration_view).chain(waiting) {
+            s.submit(sq);
+        }
+        let adm = s.admit();
+        assert_eq!(adm.len(), 2, "re-submitted sequences admit normally");
+        assert_eq!(s.queue_depth(), 2);
+    }
+
+    #[test]
+    fn demote_running_returns_to_waiting_front_in_order() {
+        let mut s = LocalScheduler::new(4);
+        for i in 0..3 {
+            s.submit(seq(i, 2));
+        }
+        s.admit();
+        s.submit(seq(9, 2)); // a later arrival already waiting
+        let n = s.demote_running(|q| q.id != 1);
+        assert_eq!(n, 2);
+        assert_eq!(s.n_running(), 1);
+        let order: Vec<SeqId> = s.waiting.iter().map(|q| q.id).collect();
+        assert_eq!(order, vec![0, 2, 9], "demoted go first, relative order kept");
+        assert!(s.waiting.iter().all(|q| q.state == SeqState::Waiting));
     }
 }

@@ -1,0 +1,486 @@
+//! The online serving loop: open-loop traffic, inline failure detection,
+//! and in-place recovery under live load.
+//!
+//! This is the piece that turns the offline recovery benches into the
+//! paper's actual setting: a MaaS instance serving a continuous request
+//! stream that does *not* stop because hardware died. Each tick the loop
+//!
+//! 1. fires the scenario's scripted events due at this tick (fault
+//!    injections, device revivals, rate changes — see [`crate::scenario`]);
+//! 2. pulls open-loop arrivals (`workload::ArrivalProcess`, Poisson
+//!    inter-arrival in tick time) and submits them — arrivals keep coming
+//!    and keep queuing while a recovery is in flight;
+//! 3. runs one guarded engine iteration ([`Engine::step_checked`]): a
+//!    healthy step decodes one token per running sequence; a fault —
+//!    caught by the pre-step sweep or by the step dying mid-flight —
+//!    preempts the step and is handled by the configured
+//!    [`RecoveryStrategy`] before serving resumes.
+//!
+//! Faults recover *sequentially*: if a second device dies while the first
+//! recovery is pending (a cascade), its annotation queues on the device
+//! plugin and a second recovery pass runs right after the first —
+//! `ReviveMoE::recover` is guarded against re-entry and skips
+//! condemned-but-unrecovered devices, so the cascade cannot corrupt
+//! engine state.
+//!
+//! Everything observable is tick-stamped, so a seeded [`Scenario`] replays
+//! deterministically: identical token streams per arrival and an
+//! identical event log across runs (wall-clock latencies of course vary;
+//! they are reported but never part of the determinism surface).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::cluster::{FaultAnnotation, FaultInjector};
+use crate::engine::{Completion, Engine, StepOutcome};
+use crate::metrics::ServingStats;
+use crate::recovery::{baseline_reinit, ReviveMoE};
+use crate::scenario::{Scenario, ScenarioEvent};
+use crate::scheduler::{SeqId, Token};
+use crate::workload::{ArrivalProcess, Request};
+use crate::Result;
+
+/// How the serving loop reacts to a detected fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryStrategy {
+    /// In-place recovery (`ReviveMoE::recover`): migrate, undo, fix
+    /// weight integrity, recreate domains, boundary-recompile, resume.
+    /// In-flight progress survives.
+    ReviveMoE,
+    /// The paper's §4.1 comparison point: tear the instance down and boot
+    /// a fresh one without the failed device (`baseline_reinit`). Every
+    /// outstanding request restarts from scratch on the new instance.
+    BaselineReinit,
+}
+
+impl RecoveryStrategy {
+    /// Short name used in reports and bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryStrategy::ReviveMoE => "revivemoe",
+            RecoveryStrategy::BaselineReinit => "baseline_reinit",
+        }
+    }
+}
+
+/// One finished request as the serve loop saw it.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// Arrival index (0-based order of arrival; stable across restarts).
+    pub arrival: usize,
+    /// Task family.
+    pub task: String,
+    /// Every decoded token, in order.
+    pub output: Vec<Token>,
+    /// End-to-end wall latency in ms, measured from the request's *first*
+    /// arrival into the serve loop — restarts (reinit baseline) do NOT
+    /// reset this clock, so a restarted request carries all the time its
+    /// earlier lives burned. This is what the strategy comparison uses.
+    pub latency_ms: f64,
+    /// The engine-reported latency of the completing life only (equals
+    /// `latency_ms` unless the request was restarted).
+    pub engine_latency_ms: f64,
+    /// Wall time-to-first-token in ms of the completing life, if a first
+    /// token was produced.
+    pub ttft_ms: Option<f64>,
+    /// Tick the request completed at.
+    pub completed_tick: u64,
+    /// Migrations the sequence survived (ReviveMoE strategy).
+    pub migrations: u32,
+    /// Times the request was restarted from scratch (reinit baseline).
+    pub restarts: u32,
+}
+
+/// One recovery (or reinitialization) the loop performed.
+#[derive(Clone, Debug)]
+pub struct RecoveryRecord {
+    /// Tick the fault was handled at.
+    pub tick: u64,
+    /// The failed device.
+    pub device: usize,
+    /// `"revivemoe"`, `"reinit"`, or `"revive"` (device rejoining).
+    pub kind: String,
+    /// Wall time serving was stalled by this pass, in ms.
+    pub stall_ms: f64,
+    /// Sequences migrated (recover) or resubmitted from scratch (reinit).
+    pub moved_sequences: usize,
+}
+
+/// Everything one scenario run produced.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Strategy that handled the faults.
+    pub strategy: RecoveryStrategy,
+    /// Ticks executed.
+    pub ticks: u64,
+    /// Requests that arrived.
+    pub submitted: usize,
+    /// Finished requests, in completion order.
+    pub completed: Vec<RequestOutcome>,
+    /// Requests still outstanding when the loop stopped (0 unless the
+    /// tick cap cut the run short).
+    pub incomplete: usize,
+    /// Every recovery pass, in order.
+    pub recoveries: Vec<RecoveryRecord>,
+    /// Tick-stamped, wall-clock-free log of everything that happened —
+    /// the determinism surface asserted by the integration tests.
+    pub event_log: Vec<String>,
+    /// Latency/throughput/stall statistics for the run.
+    pub stats: ServingStats,
+}
+
+impl ServeReport {
+    /// Decoded token stream per arrival index (completed requests only) —
+    /// the other half of the determinism surface.
+    pub fn token_streams(&self) -> BTreeMap<usize, Vec<Token>> {
+        self.completed.iter().map(|c| (c.arrival, c.output.clone())).collect()
+    }
+
+    /// Percentile over the restart-inclusive end-to-end request
+    /// latencies (`RequestOutcome::latency_ms`). Unlike
+    /// `stats.latency_p99()`, which measures each engine-life separately
+    /// (a reinit-restarted request's earlier lives vanish from it), this
+    /// charges restarts their full cost — use it for strategy
+    /// comparisons. `p` in [0, 1].
+    pub fn e2e_latency_pct(&self, p: f64) -> f64 {
+        let v: Vec<f64> = self.completed.iter().map(|c| c.latency_ms).collect();
+        crate::metrics::percentile(&v, p)
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}]: {} arrived, {} completed, {} incomplete over {} ticks; \
+             {} recoveries ({:.0}ms stalled); goodput {:.2} req/s, \
+             e2e_p99 {:.1}ms, ttft_p50 {:.1}ms, tpot_p50 {:.2}ms",
+            self.scenario,
+            self.strategy.name(),
+            self.submitted,
+            self.completed.len(),
+            self.incomplete,
+            self.ticks,
+            self.recoveries.len(),
+            self.stats.stall_total_ms(),
+            self.stats.goodput_req_s(),
+            self.e2e_latency_pct(0.99),
+            self.stats.ttft_p50(),
+            self.stats.tpot_p50(),
+        )
+    }
+}
+
+/// Book-keeping for one arrival: the original request (kept so the reinit
+/// baseline can resubmit it from scratch), its restart count, and the
+/// wall-clock instant it first entered the loop (the restart-inclusive
+/// latency reference).
+struct ArrivalRecord {
+    request: Request,
+    restarts: u32,
+    first_arrival: Instant,
+}
+
+/// Run one scenario to completion and return the (still live) engine plus
+/// the report. The engine comes back so callers can drive follow-up
+/// phases or shut it down; under the reinit strategy it is a *different*
+/// instance than the one passed in.
+pub fn run_scenario(
+    engine: Engine,
+    scenario: &Scenario,
+    strategy: RecoveryStrategy,
+) -> Result<(Engine, ServeReport)> {
+    let mut engine = engine;
+    let mut arrivals = ArrivalProcess::new(scenario.seed, scenario.rate, scenario.max_requests);
+    let events = scenario.sorted_events();
+    let mut next_event = 0usize;
+
+    let mut records: Vec<ArrivalRecord> = Vec::new();
+    // seq id -> arrival index, ordered so reinit resubmission is stable
+    let mut outstanding: BTreeMap<SeqId, usize> = BTreeMap::new();
+    let mut completed: Vec<RequestOutcome> = Vec::new();
+    let mut recoveries: Vec<RecoveryRecord> = Vec::new();
+    let mut log: Vec<String> = Vec::new();
+
+    engine.stats.start();
+    let mut tick: u64 = 0;
+    loop {
+        if tick >= scenario.max_ticks {
+            log.push(format!("tick {tick}: tick cap reached, stopping"));
+            break;
+        }
+        let script_done = next_event >= events.len();
+        if script_done && arrivals.exhausted() && engine.pending() == 0 {
+            break;
+        }
+
+        // 1. scripted events due this tick
+        while next_event < events.len() && events[next_event].at_tick <= tick {
+            let ev = events[next_event].event.clone();
+            next_event += 1;
+            apply_event(&mut engine, &mut arrivals, ev, tick, &mut recoveries, &mut log)?;
+        }
+
+        // 2. open-loop arrivals (they queue even mid-recovery)
+        for req in arrivals.poll(tick)? {
+            let arrival = records.len();
+            records.push(ArrivalRecord {
+                request: req.clone(),
+                restarts: 0,
+                first_arrival: Instant::now(),
+            });
+            let id = engine.submit(req)?;
+            outstanding.insert(id, arrival);
+            log.push(format!("tick {tick}: request {arrival} arrived"));
+        }
+
+        // 3. one guarded engine iteration; faults recover sequentially
+        let done = match engine.step_checked()? {
+            StepOutcome::Ran(done) => done,
+            StepOutcome::Preempted(ann) => {
+                engine = handle_faults(
+                    engine,
+                    ann,
+                    strategy,
+                    tick,
+                    &mut records,
+                    &mut outstanding,
+                    &mut recoveries,
+                    &mut log,
+                )?;
+                Vec::new()
+            }
+        };
+        for c in done {
+            record_completion(c, tick, &mut outstanding, &records, &mut completed, &mut log);
+        }
+        tick += 1;
+    }
+    engine.stats.stop();
+
+    let report = ServeReport {
+        scenario: scenario.name.clone(),
+        strategy,
+        ticks: tick,
+        submitted: records.len(),
+        incomplete: outstanding.len(),
+        completed,
+        recoveries,
+        event_log: log,
+        stats: engine.stats.clone(),
+    };
+    Ok((engine, report))
+}
+
+/// Apply one scripted event at `tick`.
+fn apply_event(
+    engine: &mut Engine,
+    arrivals: &mut ArrivalProcess,
+    ev: ScenarioEvent,
+    tick: u64,
+    recoveries: &mut Vec<RecoveryRecord>,
+    log: &mut Vec<String>,
+) -> Result<()> {
+    match ev {
+        ScenarioEvent::InjectFault { device, level, behavior } => {
+            if let Some(ex) = engine.executors.get(&device) {
+                // the same kill+annotate sequence benches and the CLI use
+                let injector = FaultInjector::new(engine.plugin.clone());
+                injector.inject(device, level, behavior, "scenario-injected", |b| {
+                    ex.handle.set_failed(b)
+                });
+                log.push(format!(
+                    "tick {tick}: inject-fault device {device} {level:?} {behavior:?}"
+                ));
+            } else {
+                // after a reinit the world is smaller; a scripted fault may
+                // target a device that no longer exists — log, don't die
+                log.push(format!("tick {tick}: inject-fault device {device} skipped (absent)"));
+            }
+        }
+        ScenarioEvent::ReviveDevice { device } => {
+            let t0 = Instant::now();
+            match ReviveMoE::revive(engine, device) {
+                Ok(rep) => {
+                    let stall = t0.elapsed();
+                    engine.stats.record_stall(stall);
+                    log.push(format!(
+                        "tick {tick}: revived device {device} (moe_rank={:?} attention={} \
+                         dense_groups={:?} graphs={})",
+                        rep.restored_moe_rank,
+                        rep.joined_attention,
+                        rep.restored_dense_groups,
+                        rep.recompiled_graphs
+                    ));
+                    recoveries.push(RecoveryRecord {
+                        tick,
+                        device,
+                        kind: "revive".into(),
+                        stall_ms: stall.as_secs_f64() * 1e3,
+                        moved_sequences: 0,
+                    });
+                }
+                Err(e) => {
+                    log.push(format!("tick {tick}: revive device {device} skipped: {e}"));
+                }
+            }
+        }
+        ScenarioEvent::RateChange { rate } => {
+            arrivals.set_rate(tick as f64, rate);
+            log.push(format!("tick {tick}: rate change to {rate}"));
+        }
+        ScenarioEvent::StopArrivals => {
+            arrivals.set_rate(tick as f64, 0.0);
+            log.push(format!("tick {tick}: arrivals stopped"));
+        }
+    }
+    Ok(())
+}
+
+/// Handle a detected fault — and any faults queued behind it — per the
+/// strategy. Returns the (possibly replaced) engine.
+#[allow(clippy::too_many_arguments)]
+fn handle_faults(
+    engine: Engine,
+    first: FaultAnnotation,
+    strategy: RecoveryStrategy,
+    tick: u64,
+    records: &mut [ArrivalRecord],
+    outstanding: &mut BTreeMap<SeqId, usize>,
+    recoveries: &mut Vec<RecoveryRecord>,
+    log: &mut Vec<String>,
+) -> Result<Engine> {
+    let mut engine = engine;
+    let mut ann = first;
+    loop {
+        log.push(format!(
+            "tick {tick}: fault detected on device {} ({})",
+            ann.device, ann.error_type
+        ));
+        match strategy {
+            RecoveryStrategy::ReviveMoE => {
+                // an Err from recover is instance-fatal (the engine stays
+                // paused); it propagates out of the serving loop
+                let report = ReviveMoE::recover(&mut engine, &ann)
+                    .map_err(|e| e.context(format!("recovering device {} failed", ann.device)))?;
+                let stall = report.total();
+                engine.stats.record_stall(stall);
+                log.push(format!(
+                    "tick {tick}: recovered device {} role={} kind={:?} migrated={} \
+                     undone={} requeued={} graphs={}",
+                    report.failed_device,
+                    report.role,
+                    report.moe_recovery,
+                    report.migrated_sequences,
+                    report.undone_block_ops,
+                    report.requeued_unprefilled,
+                    report.recompiled_graphs
+                ));
+                recoveries.push(RecoveryRecord {
+                    tick,
+                    device: report.failed_device,
+                    kind: "revivemoe".into(),
+                    stall_ms: stall.as_secs_f64() * 1e3,
+                    moved_sequences: report.migrated_sequences,
+                });
+            }
+            RecoveryStrategy::BaselineReinit => {
+                // the instance restarts: stats survive (they describe the
+                // service, not the instance), outstanding requests do not —
+                // they are resubmitted from scratch on the new engine
+                let t0 = Instant::now();
+                let saved_stats = engine.stats.clone();
+                let device = ann.device;
+                // faults queued behind this one describe *hardware* that is
+                // still broken — they must survive the instance restart, or
+                // a cascade would silently cost the baseline only one reinit
+                // while ReviveMoE pays for every fault
+                let carried: Vec<FaultAnnotation> = engine
+                    .plugin
+                    .pending_recovery()
+                    .into_iter()
+                    .filter(|p| p.device != device)
+                    .collect();
+                let (new_engine, _bd) = baseline_reinit(engine, &ann)?;
+                engine = new_engine;
+                engine.stats = saved_stats;
+                for p in carried {
+                    if let Some(ex) = engine.executors.get(&p.device) {
+                        ex.handle.set_failed(p.behavior);
+                        engine.plugin.post_fault(p.device, p.level, p.behavior, &p.error_type);
+                        log.push(format!(
+                            "tick {tick}: fault on device {} carried across reinit",
+                            p.device
+                        ));
+                    } else {
+                        log.push(format!(
+                            "tick {tick}: fault on device {} dropped by reinit (device absent \
+                             from the smaller world)",
+                            p.device
+                        ));
+                    }
+                }
+                let lost: Vec<usize> = outstanding.values().copied().collect();
+                outstanding.clear();
+                for arrival in lost.iter().copied() {
+                    records[arrival].restarts += 1;
+                    engine.stats.requests_restarted += 1;
+                    let id = engine.submit(records[arrival].request.clone())?;
+                    outstanding.insert(id, arrival);
+                }
+                let stall = t0.elapsed();
+                engine.stats.record_stall(stall);
+                log.push(format!(
+                    "tick {tick}: reinitialized without device {device}, {} requests \
+                     restarted from scratch",
+                    lost.len()
+                ));
+                recoveries.push(RecoveryRecord {
+                    tick,
+                    device,
+                    kind: "reinit".into(),
+                    stall_ms: stall.as_secs_f64() * 1e3,
+                    moved_sequences: lost.len(),
+                });
+            }
+        }
+        // a cascade queued behind this fault? handle it now, sequentially
+        match engine.detect_failure() {
+            Some(next) => ann = next,
+            None => break,
+        }
+    }
+    Ok(engine)
+}
+
+/// Fold one engine completion into the report state.
+fn record_completion(
+    c: Completion,
+    tick: u64,
+    outstanding: &mut BTreeMap<SeqId, usize>,
+    records: &[ArrivalRecord],
+    completed: &mut Vec<RequestOutcome>,
+    log: &mut Vec<String>,
+) {
+    let Some(arrival) = outstanding.remove(&c.seq_id) else {
+        // a completion for a sequence the loop no longer tracks (e.g. it
+        // finished in the same step a reinit resubmitted it) — ignore
+        return;
+    };
+    log.push(format!(
+        "tick {tick}: request {arrival} completed ({} tokens, {} migrations)",
+        c.output.len(),
+        c.migrations
+    ));
+    completed.push(RequestOutcome {
+        arrival,
+        task: c.task,
+        output: c.output,
+        latency_ms: records[arrival].first_arrival.elapsed().as_secs_f64() * 1e3,
+        engine_latency_ms: c.latency.as_secs_f64() * 1e3,
+        ttft_ms: c.ttft.map(|t| t.as_secs_f64() * 1e3),
+        completed_tick: tick,
+        migrations: c.migrations,
+        restarts: records[arrival].restarts,
+    });
+}

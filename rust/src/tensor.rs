@@ -9,46 +9,59 @@
 use crate::Result;
 use anyhow::{anyhow, bail};
 
+/// The two element types the coordinator ever moves.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
+    /// 32-bit float payload.
     F32(Vec<f32>),
+    /// 32-bit signed integer payload.
     I32(Vec<i32>),
 }
 
+/// A dense host tensor: shape plus row-major payload.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// The payload.
     pub data: TensorData,
 }
 
 impl Tensor {
+    /// Build an f32 tensor (debug-asserts the element count).
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data: TensorData::F32(data) }
     }
 
+    /// Build an i32 tensor (debug-asserts the element count).
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data: TensorData::I32(data) }
     }
 
+    /// All-zero f32 tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: TensorData::F32(vec![0.0; n]) }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Payload size in bytes (elements are 4 bytes each).
     pub fn nbytes(&self) -> usize {
         self.len() * 4
     }
 
+    /// Borrow the payload as f32 (error if i32).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
@@ -56,6 +69,7 @@ impl Tensor {
         }
     }
 
+    /// Mutably borrow the payload as f32 (error if i32).
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             TensorData::F32(v) => Ok(v),
@@ -63,6 +77,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the payload as i32 (error if f32).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             TensorData::I32(v) => Ok(v),

@@ -17,17 +17,25 @@ use crate::config::ModelMeta;
 use crate::tensor::Tensor;
 use crate::Result;
 
+/// One tensor's location within the weight blob.
 #[derive(Clone, Debug)]
 pub struct TensorEntry {
+    /// Tensor name (e.g. "layers.2.wq").
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Byte offset into the blob.
     pub offset: usize,
+    /// Byte length in the blob.
     pub nbytes: usize,
 }
 
+/// The parsed weight manifest: every tensor plus the blob size.
 #[derive(Clone, Debug)]
 pub struct WeightManifest {
+    /// Every tensor, in manifest order.
     pub tensors: Vec<TensorEntry>,
+    /// Total blob size in bytes.
     pub total_bytes: usize,
 }
 
@@ -45,6 +53,7 @@ pub const ATTN_WEIGHT_ORDER: [&str; 8] =
     ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b"];
 
 impl WeightStore {
+    /// Open a store from its manifest and blob paths.
     pub fn open(manifest_path: &Path, bin_path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(manifest_path)?;
         let j = crate::json::Json::parse(&text)?;
@@ -71,6 +80,7 @@ impl WeightStore {
         Ok(WeightStore { manifest, by_name, bin_path: bin_path.to_path_buf() })
     }
 
+    /// Manifest entry of one tensor.
     pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
         let idx = self
             .by_name
@@ -79,6 +89,7 @@ impl WeightStore {
         Ok(&self.manifest.tensors[*idx])
     }
 
+    /// Every tensor name, in manifest order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.manifest.tensors.iter().map(|t| t.name.as_str())
     }

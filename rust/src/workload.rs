@@ -16,6 +16,7 @@ use crate::Result;
 pub const ALPHABET: &str =
     "abcdefghijklmnopqrstuvwxyz0123456789:;>,.()[]{}+-*=<|#!?&%$@ /\\^";
 
+/// Encode a string into token ids (error on out-of-alphabet characters).
 pub fn encode(s: &str) -> Result<Vec<Token>> {
     s.chars()
         .map(|c| {
@@ -27,6 +28,7 @@ pub fn encode(s: &str) -> Result<Vec<Token>> {
         .collect()
 }
 
+/// Decode token ids back into a string ('?' for out-of-range ids).
 pub fn decode(ids: &[Token]) -> String {
     ids.iter()
         .map(|&i| ALPHABET.as_bytes().get(i as usize).copied().unwrap_or(b'?') as char)
@@ -42,14 +44,18 @@ pub fn eos_token() -> Token {
 // deterministic RNG (xorshift64*) — keeps workloads reproducible without a
 // rand dependency
 
+/// Seeded xorshift64* generator: deterministic workloads and arrival
+/// processes without a `rand` dependency.
 #[derive(Clone, Debug)]
 pub struct Rng(u64);
 
 impl Rng {
+    /// Seeded generator (seed 0 is mapped to 1; xorshift has no zero state).
     pub fn new(seed: u64) -> Self {
         Rng(seed.max(1))
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.0;
         x ^= x >> 12;
@@ -59,12 +65,28 @@ impl Rng {
         x.wrapping_mul(0x2545F4914F6CDD1D)
     }
 
+    /// Uniform value in `[0, n)`.
     pub fn below(&mut self, n: usize) -> usize {
         (self.next_u64() % n as u64) as usize
     }
 
+    /// Uniform value in `[lo, hi]` (inclusive).
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)` (53 mantissa bits of the raw draw).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential inter-arrival sample with mean `1/rate` (Poisson
+    /// process): the unit of time is whatever the caller's clock ticks in —
+    /// the serve loop uses engine steps.
+    pub fn exp_interval(&mut self, rate: f64) -> f64 {
+        let u = self.unit_f64();
+        // 1 - u is in (0, 1], so the log is finite
+        -(1.0 - u).ln() / rate
     }
 }
 
@@ -72,6 +94,7 @@ impl Rng {
 // task grammars (subset used for live traffic; full sets come from
 // artifacts/eval/)
 
+/// The eight task families live traffic cycles through.
 pub const TASK_NAMES: [&str; 8] =
     ["copy", "reverse", "sort", "shift", "add", "max", "count", "dyck"];
 
@@ -155,12 +178,17 @@ pub fn gen_sample(task: &str, rng: &mut Rng) -> String {
 /// A serving request: prompt up to and including '>', plus expected answer.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Task family name (one of [`TASK_NAMES`]).
     pub task: String,
+    /// Prompt token ids, ending in '>'.
     pub prompt: Vec<Token>,
+    /// Ground-truth answer text (includes the ';' terminator).
     pub expected: String,
+    /// Generation budget (answer length plus slack).
     pub max_new_tokens: usize,
 }
 
+/// Generate one request for `task` from the shared grammar.
 pub fn gen_request(task: &str, rng: &mut Rng) -> Result<Request> {
     let s = gen_sample(task, rng);
     let gt = s[2..].find('>').unwrap() + 3; // one past '>'
@@ -182,17 +210,91 @@ pub fn gen_mixed(n: usize, seed: u64) -> Result<Vec<Request>> {
 }
 
 // ---------------------------------------------------------------------------
+// open-loop arrival process
+
+/// Open-loop Poisson arrival process over the mixed task set.
+///
+/// Arrivals are generated against a *logical* clock measured in engine
+/// ticks (one tick = one `Engine::step`), not wall time, so a seeded
+/// scenario replays identically: requests keep arriving while the engine
+/// is paused for recovery and queue up, exactly like MaaS traffic that
+/// does not stop because a device died. Inter-arrival gaps are exponential
+/// with mean `1/rate`; the rate can change mid-stream (a `RateChange`
+/// scenario event), which affects only gaps drawn after the change.
+#[derive(Clone, Debug)]
+pub struct ArrivalProcess {
+    rng: Rng,
+    rate: f64,
+    next_at: f64,
+    generated: usize,
+    limit: Option<usize>,
+}
+
+impl ArrivalProcess {
+    /// A process emitting ~`rate` requests per tick, at most `limit`
+    /// requests in total (None = unbounded).
+    pub fn new(seed: u64, rate: f64, limit: Option<usize>) -> Self {
+        let mut rng = Rng::new(seed);
+        let first = if rate > 0.0 { rng.exp_interval(rate) } else { f64::INFINITY };
+        ArrivalProcess { rng, rate, next_at: first, generated: 0, limit }
+    }
+
+    /// Change the arrival rate; the *next* pending gap is rescaled so a
+    /// rate drop takes effect immediately instead of after one stale gap.
+    pub fn set_rate(&mut self, now: f64, rate: f64) {
+        if rate <= 0.0 {
+            self.next_at = f64::INFINITY;
+        } else if self.next_at.is_finite() && self.rate > 0.0 {
+            let remaining = (self.next_at - now).max(0.0);
+            self.next_at = now + remaining * (self.rate / rate);
+        } else {
+            self.next_at = now + self.rng.exp_interval(rate);
+        }
+        self.rate = rate;
+    }
+
+    /// Requests generated so far.
+    pub fn generated(&self) -> usize {
+        self.generated
+    }
+
+    /// Whether the request budget is exhausted.
+    pub fn exhausted(&self) -> bool {
+        self.limit.is_some_and(|l| self.generated >= l)
+    }
+
+    /// All requests arriving in the tick interval `[tick, tick+1)`.
+    pub fn poll(&mut self, tick: u64) -> Result<Vec<Request>> {
+        let mut out = Vec::new();
+        let end = (tick + 1) as f64;
+        while self.next_at < end && !self.exhausted() {
+            let task = TASK_NAMES[self.generated % TASK_NAMES.len()];
+            out.push(gen_request(task, &mut self.rng)?);
+            self.generated += 1;
+            self.next_at += self.rng.exp_interval(self.rate);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // eval sets exported by train.py
 
+/// One task's exported eval set (fixed-length sequences + answer masks).
 #[derive(Clone, Debug)]
 pub struct EvalSet {
+    /// Task family name.
     pub task: String,
+    /// Padded sequence length of every sample.
     pub seq_len: usize,
+    /// Token sequences, each of length `seq_len`.
     pub seqs: Vec<Vec<u16>>,
+    /// 1 where the position is part of the answer (scored), else 0.
     pub answer_masks: Vec<Vec<u8>>,
 }
 
 impl EvalSet {
+    /// Load one task's eval set from a JSON file exported by `train.py`.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         let j = crate::json::Json::parse(&text)?;
@@ -283,6 +385,56 @@ mod tests {
         let r = gen_request("copy", &mut rng).unwrap();
         assert_eq!(decode(&r.prompt).chars().last(), Some('>'));
         assert!(r.expected.ends_with(';'));
+    }
+
+    #[test]
+    fn arrivals_deterministic_and_poisson_ish() {
+        let mut a = ArrivalProcess::new(42, 0.5, Some(64));
+        let mut b = ArrivalProcess::new(42, 0.5, Some(64));
+        let mut total = 0;
+        for t in 0..400 {
+            let ra = a.poll(t).unwrap();
+            let rb = b.poll(t).unwrap();
+            assert_eq!(ra.len(), rb.len(), "same seed, same arrivals per tick");
+            for (x, y) in ra.iter().zip(&rb) {
+                assert_eq!(x.prompt, y.prompt);
+            }
+            total += ra.len();
+        }
+        assert_eq!(total, 64, "limit caps the stream");
+        assert!(a.exhausted());
+        // the mean gap should be in the ballpark of 1/rate = 2 ticks
+        // (64 arrivals in well under 400 ticks)
+        assert!(a.generated() == 64);
+    }
+
+    #[test]
+    fn rate_change_and_zero_rate() {
+        let mut a = ArrivalProcess::new(7, 1.0, None);
+        let mut before = 0;
+        for t in 0..50 {
+            before += a.poll(t).unwrap().len();
+        }
+        assert!(before > 20, "rate 1.0 yields roughly one arrival per tick");
+        a.set_rate(50.0, 0.0);
+        for t in 50..100 {
+            assert!(a.poll(t).unwrap().is_empty(), "zero rate stops arrivals");
+        }
+        a.set_rate(100.0, 2.0);
+        let mut after = 0;
+        for t in 100..150 {
+            after += a.poll(t).unwrap().len();
+        }
+        assert!(after > 50, "restored (doubled) rate resumes arrivals");
+    }
+
+    #[test]
+    fn exp_interval_positive_finite() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let x = rng.exp_interval(0.25);
+            assert!(x.is_finite() && x >= 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Online fault-scenario serving integration (acceptance criteria of the
+//! serve subsystem):
+//!
+//! 1. a seeded scenario with one mid-decode fault is **deterministic**
+//!    across two runs — identical token streams per arrival and an
+//!    identical tick-stamped event ordering;
+//! 2. a **cascading two-fault** scenario (the second device dies while the
+//!    first recovery is pending) completes with every surviving sequence
+//!    finishing and no panic/deadlock — recoveries run sequentially;
+//! 3. a fault-then-revive scenario brings the repaired device back into
+//!    the live instance with weight integrity restored;
+//! 4. the reinit baseline serves the same scenario end-to-end, restarting
+//!    outstanding requests instead of migrating them.
+//!
+//! Needs `make artifacts` (skipped loudly otherwise), like the other
+//! integration suites.
+
+use std::path::Path;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
+
+fn ready() -> bool {
+    Path::new("artifacts/hlo/manifest.json").exists()
+}
+
+fn run(scenario: &Scenario, strategy: RecoveryStrategy) -> ServeReport {
+    let (engine, _bd) =
+        Engine::boot(DeploymentConfig::disaggregated_default("artifacts")).expect("boot");
+    let (engine, report) = run_scenario(engine, scenario, strategy).expect("serve");
+    engine.shutdown();
+    report
+}
+
+#[test]
+fn single_fault_scenario_is_deterministic() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let scenario = Scenario::single_fault(21).requests(20);
+    let a = run(&scenario, RecoveryStrategy::ReviveMoE);
+    let b = run(&scenario, RecoveryStrategy::ReviveMoE);
+
+    // the fault fired and was recovered in place
+    assert_eq!(a.recoveries.len(), 1, "exactly one recovery: {:?}", a.recoveries);
+    assert_eq!(a.recoveries[0].kind, "revivemoe");
+    assert_eq!(a.incomplete, 0, "every request finishes");
+    assert_eq!(a.completed.len(), a.submitted);
+
+    // determinism surface: token streams per arrival + event ordering
+    assert_eq!(a.token_streams(), b.token_streams(), "token streams must replay");
+    assert_eq!(a.event_log, b.event_log, "event ordering must replay");
+    assert_eq!(a.ticks, b.ticks);
+}
+
+#[test]
+fn cascading_double_fault_completes_sequentially() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = Scenario::cascade(33).requests(20);
+    let report = run(&scenario, RecoveryStrategy::ReviveMoE);
+
+    // both faults recovered, one after the other, never nested
+    assert_eq!(report.recoveries.len(), 2, "two recoveries: {:?}", report.recoveries);
+    assert!(report.recoveries.iter().all(|r| r.kind == "revivemoe"));
+    assert_eq!(
+        report.recoveries[0].tick, report.recoveries[1].tick,
+        "second fault was already posted when the first recovery ran"
+    );
+    assert_eq!(report.recoveries[0].device, 5, "MoE fault handled first (older event)");
+    assert_eq!(report.recoveries[1].device, 2);
+
+    // all surviving sequences finish; nothing wedges
+    assert_eq!(report.incomplete, 0, "no request may be stranded by the cascade");
+    assert_eq!(report.completed.len(), report.submitted);
+    for c in &report.completed {
+        assert!(!c.output.is_empty(), "request {} produced no tokens", c.arrival);
+    }
+    // cascade determinism holds too
+    let again = run(&scenario, RecoveryStrategy::ReviveMoE);
+    assert_eq!(report.token_streams(), again.token_streams());
+    assert_eq!(report.event_log, again.event_log);
+}
+
+#[test]
+fn fault_then_revive_restores_the_device() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = Scenario::fault_then_revive(45).requests(20);
+    let (engine, _bd) =
+        Engine::boot(DeploymentConfig::disaggregated_default("artifacts")).expect("boot");
+    let (engine, report) = run_scenario(engine, &scenario, RecoveryStrategy::ReviveMoE)
+        .expect("serve");
+
+    assert_eq!(report.incomplete, 0);
+    let kinds: Vec<&str> = report.recoveries.iter().map(|r| r.kind.as_str()).collect();
+    assert_eq!(kinds, vec!["revivemoe", "revive"], "recovery then revival");
+
+    // the revived device is a live executor again with its MoE rank back
+    assert!(engine.executors.contains_key(&5), "device 5 rejoined");
+    let mr = engine.moe_order.iter().position(|&d| d == 5).expect("rank mapping kept");
+    assert!(engine.expert_map.is_alive(mr), "its expert rank is alive again");
+    // weight integrity is whole: nothing masked at the gate
+    assert!(engine.expert_map.missing_experts().is_empty());
+    assert!(engine.expert_map.gate_mask().iter().all(|&m| m == 0.0));
+    engine.expert_map.audit().expect("placement consistent after revive");
+    engine.shutdown();
+}
+
+#[test]
+fn reinit_baseline_serves_by_restarting_requests() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = Scenario::single_fault(57).requests(16);
+    let report = run(&scenario, RecoveryStrategy::BaselineReinit);
+
+    assert_eq!(report.recoveries.len(), 1);
+    assert_eq!(report.recoveries[0].kind, "reinit");
+    assert_eq!(report.incomplete, 0, "the reborn instance finishes everything");
+    assert_eq!(report.completed.len(), report.submitted);
+    // whatever was in flight at the fault restarted from scratch
+    assert!(
+        report.stats.requests_restarted > 0,
+        "a mid-stream reinit must restart outstanding requests"
+    );
+    assert!(report.completed.iter().any(|c| c.restarts > 0));
+    // and no sequence migrated — that is the ReviveMoE-only mechanism
+    assert!(report.completed.iter().all(|c| c.migrations == 0));
+}
