@@ -1,0 +1,207 @@
+//! **Recovery latency**: recovery and revival wall time as rank count
+//! grows, serial vs overlapped control plane, per [`RecompileScope`].
+//!
+//! The seed recovery path walked executors one at a time with blocking
+//! compile and weight-load round-trips, so recovery wall time scaled with
+//! rank count × artifact count. With the fanned-out control plane the
+//! critical path must approach the slowest single device: the acceptance
+//! bar is overlapped recovery wall time at 8 ranks <= 2x the 2-rank time
+//! (the serial baseline scales ~linearly with rank count).
+//!
+//! Each cell boots a fresh deployment (the failure mutates the engine),
+//! puts live traffic on it, fails one attention rank, recovers in place,
+//! then revives the repaired device — measuring both the per-category
+//! *work* sums (the Fig-5 stacked-bar quantities) and the critical-path
+//! *wall* time ([`Breakdown::total_wall`]) that serving actually stalls
+//! for.
+//!
+//! Run: `cargo bench --bench recovery_latency` (or
+//! `scripts/bench_recovery.sh` from the repo root, which also refreshes
+//! `BENCH_recovery_latency.json`).
+
+mod common;
+
+use revivemoe::cluster::FailureBehavior;
+use revivemoe::config::{DeploymentConfig, RecompileScope};
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::metrics::Category;
+use revivemoe::recovery::ReviveMoE;
+
+/// One measured recovery + revival cell.
+struct Cell {
+    recover_total_ms: f64,
+    recover_wall_ms: f64,
+    recover_graphs: usize,
+    compile_work_ms: f64,
+    compile_wall_ms: f64,
+    revive_total_ms: f64,
+    revive_wall_ms: f64,
+    revive_graphs: usize,
+}
+
+fn shape(ranks: usize) -> DeploymentConfig {
+    // redundancy chosen so the per-rank expert slot count matches an
+    // AOT'd grouped-FFN artifact (16 slots @2 ranks, 10 @4, 5 @8)
+    let redundant = match ranks {
+        2 => 0,
+        4 => 2,
+        _ => 1,
+    };
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.n_attn_ranks = ranks;
+    cfg.n_moe_ranks = ranks;
+    cfg.redundant_per_rank = redundant;
+    cfg.dense_tp = 2;
+    cfg.n_dense_groups = ranks / 2;
+    cfg
+}
+
+fn scope_name(scope: RecompileScope) -> &'static str {
+    match scope {
+        RecompileScope::Full => "full",
+        RecompileScope::Boundary => "boundary",
+        RecompileScope::None_ => "none",
+    }
+}
+
+/// Fail attention rank 1 with traffic in flight, recover, then revive it.
+/// `None` when the shape's AOT artifact set is missing (skipped loudly by
+/// the caller, not failed).
+fn run_cell(ranks: usize, scope: RecompileScope, serial: bool) -> Option<Cell> {
+    let mut cfg = shape(ranks);
+    cfg.recovery.recompile_scope = scope;
+    cfg.recovery.serial_recovery = serial;
+    let (mut engine, _bd) = match revivemoe::engine::Engine::boot(cfg) {
+        Ok(x) => x,
+        Err(e) => {
+            println!("DP{ranks}/EP{ranks} SKIP (boot: {e})");
+            return None;
+        }
+    };
+    common::warm_traffic(&mut engine, 2 * ranks, 7);
+
+    let ann = common::fail_device(&mut engine, 1, FailureBehavior::Erroring);
+    let report = ReviveMoE::recover(&mut engine, &ann).expect("recovery");
+
+    // keep serving between the failure and the repair, like a real window
+    for _ in 0..2 {
+        engine.step().expect("post-recovery step");
+    }
+    let revive = ReviveMoE::revive(&mut engine, 1).expect("revival");
+    // service must actually continue after both passes
+    engine.run_to_completion(20_000).expect("post-revival serving");
+    engine.shutdown();
+
+    Some(Cell {
+        recover_total_ms: report.total().as_secs_f64() * 1e3,
+        recover_wall_ms: report.wall().as_secs_f64() * 1e3,
+        recover_graphs: report.recompiled_graphs,
+        compile_work_ms: report.breakdown.get(Category::Compile).as_secs_f64() * 1e3,
+        compile_wall_ms: report.breakdown.get_wall(Category::Compile).as_secs_f64() * 1e3,
+        revive_total_ms: revive.total().as_secs_f64() * 1e3,
+        revive_wall_ms: revive.wall().as_secs_f64() * 1e3,
+        revive_graphs: revive.recompiled_graphs,
+    })
+}
+
+/// Min over reps (single-core compile timings are noisy): keep the cell
+/// whose recovery wall is smallest.
+fn best_cell(ranks: usize, scope: RecompileScope, serial: bool, reps: usize) -> Option<Cell> {
+    let mut best: Option<Cell> = None;
+    for _ in 0..reps {
+        let c = run_cell(ranks, scope, serial)?;
+        if best.as_ref().map(|b| c.recover_wall_ms < b.recover_wall_ms).unwrap_or(true) {
+            best = Some(c);
+        }
+    }
+    best
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let reps = if quick { 1 } else { 2 };
+    let scopes: &[RecompileScope] = if quick {
+        &[RecompileScope::Boundary]
+    } else {
+        &[RecompileScope::Boundary, RecompileScope::Full, RecompileScope::None_]
+    };
+
+    println!("recovery latency: serial vs overlapped control plane\n");
+    println!(
+        "{:<28} {:>14} {:>14} {:>8} | {:>14} {:>14}",
+        "shape", "recover wall", "recover work", "graphs", "revive wall", "revive work"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    // (ranks, serial) -> recovery wall ms, Boundary scope (the default)
+    let mut boundary_walls: Vec<(usize, bool, f64)> = Vec::new();
+    for &scope in scopes {
+        for serial in [true, false] {
+            for ranks in [2usize, 4, 8] {
+                let Some(cell) = best_cell(ranks, scope, serial, reps) else { continue };
+                let mode = if serial { "serial" } else { "overlapped" };
+                println!(
+                    "{:<28} {:>11.1} ms {:>11.1} ms {:>8} | {:>11.1} ms {:>11.1} ms",
+                    format!("DP{ranks}/EP{ranks} {} {mode}", scope_name(scope)),
+                    cell.recover_wall_ms,
+                    cell.recover_total_ms,
+                    cell.recover_graphs,
+                    cell.revive_wall_ms,
+                    cell.revive_total_ms,
+                );
+                if scope == RecompileScope::Boundary {
+                    boundary_walls.push((ranks, serial, cell.recover_wall_ms));
+                }
+                rows.push(obj(vec![
+                    ("ranks", num(ranks as f64)),
+                    ("scope", s(scope_name(scope))),
+                    ("mode", s(mode)),
+                    ("recover_total_ms", num(cell.recover_total_ms)),
+                    ("recover_wall_ms", num(cell.recover_wall_ms)),
+                    ("recover_graphs", num(cell.recover_graphs as f64)),
+                    ("compile_work_ms", num(cell.compile_work_ms)),
+                    ("compile_wall_ms", num(cell.compile_wall_ms)),
+                    ("revive_total_ms", num(cell.revive_total_ms)),
+                    ("revive_wall_ms", num(cell.revive_wall_ms)),
+                    ("revive_graphs", num(cell.revive_graphs as f64)),
+                ]));
+            }
+        }
+    }
+
+    // acceptance bar: overlapped Boundary recovery wall, 8 ranks vs 2
+    let wall_at = |ranks: usize, serial: bool| {
+        boundary_walls
+            .iter()
+            .find(|(r, m, _)| *r == ranks && *m == serial)
+            .map(|&(_, _, ms)| ms)
+    };
+    let ratio = |serial: bool| match (wall_at(8, serial), wall_at(2, serial)) {
+        (Some(eight), Some(two)) if two > 0.0 => eight / two,
+        _ => f64::NAN,
+    };
+    let overlap_ratio = ratio(false);
+    let serial_ratio = ratio(true);
+    if overlap_ratio.is_finite() {
+        println!(
+            "\nrecovery wall, 8 ranks / 2 ranks: overlapped {overlap_ratio:.2} (bar: <= 2.0), \
+             serial {serial_ratio:.2}"
+        );
+    }
+    let ratio_json = |r: f64| if r.is_finite() { num(r) } else { Json::Null };
+
+    let j = obj(vec![
+        ("bench", s("recovery_latency")),
+        ("quick", Json::Bool(quick)),
+        ("overlap_recover_wall_ratio_8rank_over_2rank", ratio_json(overlap_ratio)),
+        ("serial_recover_wall_ratio_8rank_over_2rank", ratio_json(serial_ratio)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("recovery_latency", &j);
+    // repo-root copy: the perf baseline every future PR compares against
+    match std::fs::write("../BENCH_recovery_latency.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_recovery_latency.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_recovery_latency.json: {e}"),
+    }
+}

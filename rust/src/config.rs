@@ -87,6 +87,20 @@ pub struct RecoveryPolicy {
     /// (paper finds 1/32 of experts may be lost, i.e. EP >= 32 ... scaled to
     /// our 32-expert model this is "at most 1/32 of experts" per failure).
     pub missing_experts_min_ep: usize,
+    /// Serialize the recovery control plane: walk executors one at a time
+    /// with blocking compile/weight-load round-trips instead of fanning
+    /// the §3.6 recompile sweep and the role-switch/revival weight
+    /// reloads out across survivors. Mirrors
+    /// [`DeploymentConfig::serial_data_plane`] as the A/B baseline for
+    /// the recovery-equivalence tests and `benches/recovery_latency.rs`;
+    /// production deployments leave this off.
+    pub serial_recovery: bool,
+    /// Deadline (ms) for a revived/replacement executor's first liveness
+    /// ping in [`crate::recovery::ReviveMoE::revive`]. Charged to the
+    /// ExecutorProcesses breakdown category; a wedged replacement NPU
+    /// fails revival after this long instead of stalling the serve tick
+    /// loop for the old hardcoded 60 s.
+    pub revive_spawn_timeout_ms: u64,
 }
 
 impl Default for RecoveryPolicy {
@@ -97,6 +111,8 @@ impl Default for RecoveryPolicy {
             allow_missing_experts: true,
             recompile_scope: RecompileScope::Boundary,
             missing_experts_min_ep: 4,
+            serial_recovery: false,
+            revive_spawn_timeout_ms: 10_000,
         }
     }
 }

@@ -28,10 +28,10 @@ use crate::cluster::{
 };
 use crate::comms::{self, DomainManager, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, ModelMeta};
-use crate::executor::{artifact_set, out1, out4, router_out, Executor};
+use crate::executor::{artifact_set, out1, out4, router_out, Executor, PendingWeights};
 use crate::metrics::{Breakdown, Category, ServingStats};
 use crate::moe::{DenseGroups, ExpertMap};
-use crate::runtime::ExecWave;
+use crate::runtime::{CompileStat, ExecWave, Pending};
 use crate::scheduler::{SeqId, SeqState, Sequence, Token};
 use crate::tensor::Tensor;
 use crate::weights::WeightStore;
@@ -201,41 +201,111 @@ impl Engine {
             None,
         )?;
         let dense = DenseGroups::layout(&moe_order, cfg.n_dense_groups, cfg.dense_tp)?;
-        {
-            let mut boot_engine_weights = || -> Result<()> {
-                for (r, &d) in attn_order.iter().enumerate() {
-                    executors.get_mut(&d).unwrap().init_attention(r, &meta, &cfg, &store)?;
+        // Each role's loads are submitted to every device first, then
+        // collected — ranks upload weights concurrently, same fan-out the
+        // recovery control plane uses. `RecoveryPolicy::serial_recovery`
+        // pins the seed's one-device-at-a-time walk (the A/B baseline;
+        // `baseline_reinit` inherits whichever mode the config carries).
+        let serial_boot = cfg.recovery.serial_recovery;
+        // device-side upload seconds of the fanned-out loads: Generator
+        // *work* the overlap hid (the serial walk observes it as elapsed
+        // time instead, so it only accumulates in overlapped mode)
+        let mut gen_device_s = 0f64;
+        let (gen_submit_elapsed, gen_barrier_elapsed) = {
+            let mut queued: HashMap<DeviceId, usize> = HashMap::new();
+            let mut in_flight: Vec<PendingWeights> = Vec::new();
+            for (r, &d) in attn_order.iter().enumerate() {
+                let q = queued.get(&d).copied().unwrap_or(0);
+                let ex = executors.get_mut(&d).unwrap();
+                let p = ex.submit_attention_weights(&meta, &store, q)?;
+                ex.attach_attention(r, &meta, &cfg);
+                if serial_boot {
+                    p.wait()?;
+                } else {
+                    *queued.entry(d).or_insert(0) += p.queued_cmds();
+                    in_flight.push(p);
                 }
-                for (r, &d) in moe_order.iter().enumerate() {
-                    let slots = expert_map.rank_slots(r).to_vec();
-                    executors.get_mut(&d).unwrap().init_moe(r, &meta, slots, &store)?;
+            }
+            for (r, &d) in moe_order.iter().enumerate() {
+                let slots = expert_map.rank_slots(r).to_vec();
+                let q = queued.get(&d).copied().unwrap_or(0);
+                let ex = executors.get_mut(&d).unwrap();
+                let p = ex.submit_expert_weights(&meta, &slots, &store, q)?;
+                ex.attach_moe(r, slots);
+                if serial_boot {
+                    p.wait()?;
+                } else {
+                    *queued.entry(d).or_insert(0) += p.queued_cmds();
+                    in_flight.push(p);
                 }
-                for (g, group) in dense.groups.iter().enumerate() {
-                    for (s, &d) in group.iter().enumerate() {
-                        executors
-                            .get_mut(&d)
-                            .unwrap()
-                            .init_dense_shard(g, s, cfg.dense_tp, &meta, &store)?;
+            }
+            for (g, group) in dense.groups.iter().enumerate() {
+                for (s, &d) in group.iter().enumerate() {
+                    let q = queued.get(&d).copied().unwrap_or(0);
+                    let ex = executors.get_mut(&d).unwrap();
+                    let p = ex.submit_dense_shard_weights(s, cfg.dense_tp, &meta, &store, q)?;
+                    ex.attach_dense_shard(g, s);
+                    if serial_boot {
+                        p.wait()?;
+                    } else {
+                        *queued.entry(d).or_insert(0) += p.queued_cmds();
+                        in_flight.push(p);
                     }
                 }
-                Ok(())
-            };
-            boot_engine_weights()?;
+            }
+            // submission elapsed measured *before* the barrier: the barrier
+            // wait is device upload time, which the work sum gets from the
+            // per-load device seconds instead (counting both would double
+            // the slowest device's uploads)
+            let submit_elapsed = t0.elapsed();
+            let t_barrier = Instant::now();
+            for p in in_flight {
+                gen_device_s += p.wait()?.device_s;
+            }
+            (submit_elapsed, t_barrier.elapsed())
+        };
+        // serial: the blocking walk's elapsed time IS the work sum (device
+        // time included, barrier empty). Overlapped: work = submission +
+        // device-side upload seconds, wall = submission + residual barrier.
+        bd.add(Category::Generator, gen_submit_elapsed);
+        if !serial_boot {
+            bd.add(Category::Generator, Duration::from_secs_f64(gen_device_s));
+            bd.add_wall(Category::Generator, gen_submit_elapsed);
+            bd.add_wall(Category::Generator, gen_barrier_elapsed);
         }
-        bd.add(Category::Generator, t0.elapsed());
 
         // -- Read Cache + Compile: per-device cached compile -------------------
+        // Same submit-all-then-collect shape: every device's compile queue
+        // drains concurrently; the wall entry records the critical path
+        // next to the per-artifact work sums.
+        let t_sweep = Instant::now();
         let mut read_s = 0f64;
         let mut compile_s = 0f64;
-        for ex in executors.values() {
-            let names = artifact_set(ex, &meta, &cfg);
-            for stat in ex.compile_set(&arts, &names)? {
+        {
+            let mut dev_ids: Vec<DeviceId> = executors.keys().copied().collect();
+            dev_ids.sort_unstable();
+            let mut in_flight: Vec<Pending<CompileStat>> = Vec::new();
+            for d in dev_ids {
+                let ex = &executors[&d];
+                let names = artifact_set(ex, &meta, &cfg);
+                let pend = ex.submit_compile_set(&arts, &names, 0)?;
+                for p in pend {
+                    if serial_boot {
+                        let stat = p.wait()?;
+                        read_s += stat.read_s;
+                        compile_s += stat.compile_s;
+                    } else {
+                        in_flight.push(p);
+                    }
+                }
+            }
+            for p in in_flight {
+                let stat = p.wait()?;
                 read_s += stat.read_s;
                 compile_s += stat.compile_s;
             }
         }
-        bd.add(Category::ReadCache, Duration::from_secs_f64(read_s));
-        bd.add(Category::Compile, Duration::from_secs_f64(compile_s));
+        bd.add_compile_sweep(read_s, compile_s, t_sweep.elapsed());
 
         // -- Other: scheduler init etc. ---------------------------------------
         let t0 = Instant::now();

@@ -14,11 +14,51 @@ use crate::config::{DeploymentConfig, ModelMeta};
 use crate::kvcache::BlockManager;
 use crate::kvpool::KvPool;
 use crate::moe::ExpertId;
-use crate::runtime::{Arg, CompileStat, DeviceHandle, PendingExec, SimDevice};
+use crate::runtime::{Arg, CompileStat, DeviceHandle, Pending, PendingExec, SimDevice};
 use crate::scheduler::{LocalScheduler, SeqId};
 use crate::tensor::Tensor;
 use crate::weights::{WeightStore, ATTN_WEIGHT_ORDER};
 use crate::Result;
+
+/// One role's weight loads, submitted to the device but not yet awaited.
+/// Produced by the `submit_*_weights` halves of the split init API
+/// ([`Executor::submit_attention_weights`] and friends); awaiting it
+/// yields the total bytes moved. The host-side disk reads already
+/// happened at submission — what is in flight is the device-side literal
+/// upload, which recovery overlaps with XCCL domain recreation and the
+/// survivor recompile sweep.
+pub struct PendingWeights {
+    loads: Vec<Pending<(usize, f64)>>,
+}
+
+/// Aggregate outcome of one role's weight loads.
+pub struct WeightLoadStats {
+    /// Total bytes moved onto the device.
+    pub bytes: usize,
+    /// Device-side upload seconds summed over the loads — the Generator
+    /// *work* an overlapped caller never blocked on (the serial path's
+    /// blocking waits observe it as elapsed time instead).
+    pub device_s: f64,
+}
+
+impl PendingWeights {
+    /// Number of load commands queued on the device (later submissions to
+    /// the same device scale their deadlines past these).
+    pub fn queued_cmds(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Await every load; returns bytes moved + device-side upload time.
+    pub fn wait(self) -> Result<WeightLoadStats> {
+        let mut stats = WeightLoadStats { bytes: 0, device_s: 0.0 };
+        for p in self.loads {
+            let (b, s) = p.wait()?;
+            stats.bytes += b;
+            stats.device_s += s;
+        }
+        Ok(stats)
+    }
+}
 
 /// Attention-role state (a DPExecutor in the paper's terms).
 pub struct AttnState {
@@ -82,19 +122,37 @@ impl Executor {
         self.moe.is_some()
     }
 
-    /// Attach the attention role: scheduler, block manager, KV pool
-    /// ("Generator" KV warmup), attention + router + head weights.
-    pub fn init_attention(
-        &mut self,
-        dp_rank: usize,
+    /// Queue-position deadline: a command entering the device queue behind
+    /// `queued_ahead` others gets `(queued_ahead + 1) * cmd_timeout`. The
+    /// clock still starts at submission (a hung device times out), but a
+    /// healthy device draining a deep queue is never misread as hung.
+    fn queued_deadline(&self, queued_ahead: usize) -> std::time::Duration {
+        self.handle.cmd_timeout * (queued_ahead as u32 + 1)
+    }
+
+    /// Submit the attention role's weight loads (common + attention +
+    /// router tensors) without waiting; host disk reads happen now, the
+    /// device upload is in flight. Pair with [`Executor::attach_attention`].
+    pub fn submit_attention_weights(
+        &self,
         meta: &ModelMeta,
-        cfg: &DeploymentConfig,
         store: &WeightStore,
-    ) -> Result<usize> {
-        let mut bytes = 0;
-        bytes += self.handle.load_weights(store.load_common()?)?;
-        bytes += self.handle.load_weights(store.load_attention(meta)?)?;
-        bytes += self.handle.load_weights(store.load_routers(meta)?)?;
+        queued_ahead: usize,
+    ) -> Result<PendingWeights> {
+        let batches =
+            [store.load_common()?, store.load_attention(meta)?, store.load_routers(meta)?];
+        let mut loads = Vec::with_capacity(batches.len());
+        for (i, b) in batches.into_iter().enumerate() {
+            let deadline = self.queued_deadline(queued_ahead + i);
+            loads.push(self.handle.submit_load_weights(b, deadline)?);
+        }
+        Ok(PendingWeights { loads })
+    }
+
+    /// Attach the attention-role host state (scheduler, block manager, KV
+    /// pool). Host-only; callers await the matching [`PendingWeights`]
+    /// before serving on this rank.
+    pub fn attach_attention(&mut self, dp_rank: usize, meta: &ModelMeta, cfg: &DeploymentConfig) {
         self.attn = Some(AttnState {
             dp_rank,
             sched: LocalScheduler::new(cfg.max_batch),
@@ -102,10 +160,44 @@ impl Executor {
             kv: KvPool::new(meta, cfg.blocks_per_rank, cfg.block_size),
             step_slots: Vec::new(),
         });
+    }
+
+    /// Attach the attention role: scheduler, block manager, KV pool
+    /// ("Generator" KV warmup), attention + router + head weights
+    /// (blocking submit-and-wait over the split halves).
+    pub fn init_attention(
+        &mut self,
+        dp_rank: usize,
+        meta: &ModelMeta,
+        cfg: &DeploymentConfig,
+        store: &WeightStore,
+    ) -> Result<usize> {
+        let bytes = self.submit_attention_weights(meta, store, 0)?.wait()?.bytes;
+        self.attach_attention(dp_rank, meta, cfg);
         Ok(bytes)
     }
 
-    /// Attach the MoE role with the given expert slot list.
+    /// Submit the MoE role's expert-slot weight loads without waiting.
+    /// Pair with [`Executor::attach_moe`].
+    pub fn submit_expert_weights(
+        &self,
+        meta: &ModelMeta,
+        slots: &[ExpertId],
+        store: &WeightStore,
+        queued_ahead: usize,
+    ) -> Result<PendingWeights> {
+        let batch = store.load_expert_slots(meta, slots)?;
+        let p = self.handle.submit_load_weights(batch, self.queued_deadline(queued_ahead))?;
+        Ok(PendingWeights { loads: vec![p] })
+    }
+
+    /// Attach the MoE-role host state (slot list). Host-only.
+    pub fn attach_moe(&mut self, moe_rank: usize, slots: Vec<ExpertId>) {
+        self.moe = Some(MoeState { moe_rank, slots });
+    }
+
+    /// Attach the MoE role with the given expert slot list (blocking
+    /// submit-and-wait over the split halves).
     pub fn init_moe(
         &mut self,
         moe_rank: usize,
@@ -113,12 +205,33 @@ impl Executor {
         slots: Vec<ExpertId>,
         store: &WeightStore,
     ) -> Result<usize> {
-        let bytes = self.handle.load_weights(store.load_expert_slots(meta, &slots)?)?;
-        self.moe = Some(MoeState { moe_rank, slots });
+        let bytes = self.submit_expert_weights(meta, &slots, store, 0)?.wait()?.bytes;
+        self.attach_moe(moe_rank, slots);
         Ok(bytes)
     }
 
-    /// Attach a dense-FFN TP shard.
+    /// Submit a dense-FFN TP shard's weight loads without waiting. Pair
+    /// with [`Executor::attach_dense_shard`].
+    pub fn submit_dense_shard_weights(
+        &self,
+        shard: usize,
+        tp: usize,
+        meta: &ModelMeta,
+        store: &WeightStore,
+        queued_ahead: usize,
+    ) -> Result<PendingWeights> {
+        let batch = store.load_dense_shard(meta, shard, tp)?;
+        let p = self.handle.submit_load_weights(batch, self.queued_deadline(queued_ahead))?;
+        Ok(PendingWeights { loads: vec![p] })
+    }
+
+    /// Attach the dense-shard host state. Host-only.
+    pub fn attach_dense_shard(&mut self, group: usize, shard: usize) {
+        self.dense_shard = Some((group, shard));
+    }
+
+    /// Attach a dense-FFN TP shard (blocking submit-and-wait over the
+    /// split halves).
     pub fn init_dense_shard(
         &mut self,
         group: usize,
@@ -127,25 +240,52 @@ impl Executor {
         meta: &ModelMeta,
         store: &WeightStore,
     ) -> Result<usize> {
-        let bytes = self.handle.load_weights(store.load_dense_shard(meta, shard, tp)?)?;
-        self.dense_shard = Some((group, shard));
+        let bytes = self.submit_dense_shard_weights(shard, tp, meta, store, 0)?.wait()?.bytes;
+        self.attach_dense_shard(group, shard);
         Ok(bytes)
     }
 
-    /// Compile a set of artifacts on this device (cached compile, §3.6).
+    /// Submit a set of cached compiles (§3.6) without waiting: one
+    /// batched cache probe (a single round-trip whatever the artifact
+    /// count), then one queued `Compile` per missing artifact. The device
+    /// thread drains the queue back-to-back — reading artifact *n+1*'s
+    /// HLO text while nothing blocks on the coordinator between compiles —
+    /// so per-device artifact work pipelines instead of paying a
+    /// round-trip per graph. `queued_ahead` counts commands already queued
+    /// on this device (e.g. in-flight weight loads) so deadlines keep
+    /// covering the whole queue.
+    pub fn submit_compile_set(
+        &self,
+        arts: &ArtifactStore,
+        names: &[String],
+        queued_ahead: usize,
+    ) -> Result<Vec<Pending<CompileStat>>> {
+        if names.is_empty() {
+            return Ok(Vec::new());
+        }
+        // the probe's reply also waits behind the queued commands ahead of
+        // it, so its deadline scales by the same queue depth
+        let cached =
+            self.handle.has_executables_within(names, self.queued_deadline(queued_ahead))?;
+        let mut out = Vec::new();
+        for (n, hit) in names.iter().zip(cached) {
+            if hit {
+                continue; // precompiled (deploy-time graph cache hit)
+            }
+            let deadline = self.queued_deadline(queued_ahead + out.len());
+            out.push(self.handle.submit_compile(n, arts.path(n)?, deadline)?);
+        }
+        Ok(out)
+    }
+
+    /// Compile a set of artifacts on this device (cached compile, §3.6),
+    /// blocking until every one is done.
     pub fn compile_set(
         &self,
         arts: &ArtifactStore,
         names: &[String],
     ) -> Result<Vec<CompileStat>> {
-        let mut out = Vec::with_capacity(names.len());
-        for n in names {
-            if self.handle.has_executable(n)? {
-                continue; // precompiled (deploy-time graph cache hit)
-            }
-            out.push(self.handle.compile(n, arts.path(n)?)?);
-        }
-        Ok(out)
+        self.submit_compile_set(arts, names, 0)?.into_iter().map(Pending::wait).collect()
     }
 
     // -- attention-role device ops -----------------------------------------

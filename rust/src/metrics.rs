@@ -62,9 +62,24 @@ impl Category {
 }
 
 /// A per-category timing breakdown for one reinit/recovery pass.
+///
+/// Two kinds of entries coexist since the recovery control plane went
+/// parallel:
+///
+/// - **work** entries ([`Breakdown::add`]) — CPU/device time summed over
+///   every rank and artifact, the paper's stacked-bar quantity. With the
+///   fan-out on, work across ranks overlaps, so these sums can exceed
+///   elapsed time.
+/// - **wall** entries ([`Breakdown::add_wall`]) — critical-path elapsed
+///   time of a phase whose work was fanned out. Recorded *alongside* the
+///   work sums for the same category; [`Breakdown::total_wall`] prefers
+///   them when present, so "what the bars stack to" (work done) and "how
+///   long recovery actually stalled serving" (wall elapsed) stay
+///   distinguishable.
 #[derive(Clone, Debug, Default)]
 pub struct Breakdown {
     entries: Vec<(Category, Duration)>,
+    wall_entries: Vec<(Category, Duration)>,
 }
 
 impl Breakdown {
@@ -76,6 +91,12 @@ impl Breakdown {
     /// File a duration under a category (categories accumulate).
     pub fn add(&mut self, cat: Category, d: Duration) {
         self.entries.push((cat, d));
+    }
+
+    /// File a phase's critical-path wall time under a category, alongside
+    /// (not instead of) its per-rank work sums.
+    pub fn add_wall(&mut self, cat: Category, d: Duration) {
+        self.wall_entries.push((cat, d));
     }
 
     /// Time `f`, file it under `cat`, and return its value.
@@ -95,26 +116,79 @@ impl Breakdown {
             .sum()
     }
 
-    /// Sum over every category.
+    /// Total wall time filed under `cat` (zero when no wall entry was
+    /// recorded; check [`Breakdown::has_wall`] to distinguish).
+    pub fn get_wall(&self, cat: Category) -> Duration {
+        self.wall_entries
+            .iter()
+            .filter(|(c, _)| *c == cat)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// Whether a wall entry was recorded for `cat`.
+    pub fn has_wall(&self, cat: Category) -> bool {
+        self.wall_entries.iter().any(|(c, _)| *c == cat)
+    }
+
+    /// Sum over every category (work entries — can exceed elapsed time
+    /// when phases were fanned out across ranks).
     pub fn total(&self) -> Duration {
         self.entries.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Critical-path total: per category, the wall entry when one was
+    /// recorded, the work sum otherwise. This is what a recovery pass
+    /// actually stalled serving for, and what the serve loop files as the
+    /// stall window.
+    pub fn total_wall(&self) -> Duration {
+        Category::ALL
+            .iter()
+            .map(|&c| if self.has_wall(c) { self.get_wall(c) } else { self.get(c) })
+            .sum()
+    }
+
+    /// File one fanned-out read+compile sweep: per-artifact work sums for
+    /// both categories plus the phase's critical-path wall. The wall
+    /// covers Read Cache + Compile *together*, so it is filed under
+    /// Compile with an explicit zero Read Cache wall — [`Self::total_wall`]
+    /// then counts the phase exactly once. Every sweep site (boot,
+    /// recovery, revival) must file through here so that invariant cannot
+    /// be dropped in a copy.
+    pub fn add_compile_sweep(&mut self, read_s: f64, compile_s: f64, wall: Duration) {
+        self.add(Category::ReadCache, Duration::from_secs_f64(read_s));
+        self.add(Category::Compile, Duration::from_secs_f64(compile_s));
+        self.add_wall(Category::Compile, wall);
+        self.add_wall(Category::ReadCache, Duration::ZERO);
     }
 
     /// Append another breakdown's entries into this one.
     pub fn merge(&mut self, other: &Breakdown) {
         self.entries.extend(other.entries.iter().cloned());
+        self.wall_entries.extend(other.wall_entries.iter().cloned());
     }
 
-    /// Paper-style table: one row per category plus total, in ms.
+    /// Paper-style table: one row per category plus total, in ms. Rows
+    /// whose phase was fanned out show the critical-path wall time next
+    /// to the work sum.
     pub fn render(&self, title: &str) -> String {
         let mut s = format!("{title}\n");
         for cat in Category::ALL {
             let d = self.get(cat);
-            if !d.is_zero() {
-                s += &format!("  {:<20} {:>10.1} ms\n", cat.name(), d.as_secs_f64() * 1e3);
+            if !d.is_zero() || self.has_wall(cat) {
+                s += &format!("  {:<20} {:>10.1} ms", cat.name(), d.as_secs_f64() * 1e3);
+                if self.has_wall(cat) {
+                    s += &format!("  (wall {:>8.1} ms)", self.get_wall(cat).as_secs_f64() * 1e3);
+                }
+                s += "\n";
             }
         }
-        s += &format!("  {:<20} {:>10.1} ms\n", "TOTAL", self.total().as_secs_f64() * 1e3);
+        s += &format!("  {:<20} {:>10.1} ms\n", "TOTAL work", self.total().as_secs_f64() * 1e3);
+        s += &format!(
+            "  {:<20} {:>10.1} ms\n",
+            "TOTAL wall",
+            self.total_wall().as_secs_f64() * 1e3
+        );
         s
     }
 }
@@ -409,12 +483,45 @@ mod tests {
     }
 
     #[test]
+    fn wall_accounting_tracks_critical_path() {
+        let mut b = Breakdown::new();
+        // fanned-out compile: 30ms of work across ranks, 12ms elapsed
+        b.add(Category::Compile, Duration::from_millis(30));
+        b.add_wall(Category::Compile, Duration::from_millis(12));
+        // sequential phase: work only
+        b.add(Category::Xccl, Duration::from_millis(5));
+        assert_eq!(b.total(), Duration::from_millis(35));
+        assert_eq!(b.total_wall(), Duration::from_millis(17));
+        assert!(b.has_wall(Category::Compile));
+        assert!(!b.has_wall(Category::Xccl));
+        assert_eq!(b.get_wall(Category::Compile), Duration::from_millis(12));
+        let r = b.render("t");
+        assert!(r.contains("wall"));
+        assert!(r.contains("TOTAL wall"));
+    }
+
+    #[test]
+    fn compile_sweep_files_wall_exactly_once() {
+        let mut b = Breakdown::new();
+        b.add_compile_sweep(0.010, 0.020, Duration::from_millis(12));
+        assert_eq!(b.get(Category::ReadCache).as_millis(), 10);
+        assert_eq!(b.get(Category::Compile).as_millis(), 20);
+        // work sums both categories; wall counts the combined phase once
+        assert_eq!(b.total().as_millis(), 30);
+        assert_eq!(b.total_wall().as_millis(), 12);
+        assert!(b.has_wall(Category::ReadCache), "explicit zero wall, not absent");
+    }
+
+    #[test]
     fn merge_combines_entries() {
         let mut a = Breakdown::new();
         a.add(Category::Engine, Duration::from_millis(1));
         let mut b = Breakdown::new();
         b.add(Category::Engine, Duration::from_millis(2));
+        b.add_wall(Category::Engine, Duration::from_millis(2));
         a.merge(&b);
         assert_eq!(a.get(Category::Engine), Duration::from_millis(3));
+        assert!(a.has_wall(Category::Engine));
+        assert_eq!(a.total_wall(), Duration::from_millis(2));
     }
 }

@@ -16,17 +16,34 @@
 //!    (GLOO/HCCL world group stays intact, §3.5);
 //! 7. read graph caches and perform the cached compile for the new
 //!    deployment shape (§3.6); resume.
+//!
+//! # The parallel recovery control plane (PR 3)
+//!
+//! Recovery wall time is the paper's headline number, so the independent
+//! stages above overlap wherever the dependency order allows (the stage
+//! DAG is drawn in docs/ARCHITECTURE.md): the §3.6 recompile sweep fans
+//! out across all surviving executors concurrently (one batched cache
+//! probe per device, per-device compiles pipelined on the command queue),
+//! and the weight reloads of a role switch or a revival stay in flight
+//! while the XCCL domains reform and the survivors recompile — domain
+//! recreation needs the member list, not the weights. Every submission
+//! carries a deadline fixed at submit time, so a survivor that hangs
+//! mid-recovery surfaces as a bounded timeout error, never a wedged pass.
+//! `RecoveryPolicy::serial_recovery` restores the one-rank-at-a-time walk
+//! as the A/B baseline (`benches/recovery_latency.rs` measures the gap;
+//! `tests/integration_recovery_overlap.rs` asserts state equivalence).
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
 
 use crate::cluster::{DeviceId, FaultAnnotation};
 use crate::comms::{ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, RecompileScope};
 use crate::engine::Engine;
-use crate::executor::{artifact_set, Executor};
+use crate::executor::{artifact_set, Executor, PendingWeights};
 use crate::metrics::{Breakdown, Category};
-use crate::moe::FailOutcome;
+use crate::moe::{ExpertId, FailOutcome};
+use crate::runtime::{CompileStat, Pending};
 use crate::Result;
 
 /// Which §3.4 weight-integrity option recovery took.
@@ -68,9 +85,16 @@ pub struct RecoveryReport {
 }
 
 impl RecoveryReport {
-    /// Total recovery wall time (sum over all categories).
+    /// Total recovery work time (sum over all categories; with the
+    /// parallel control plane this can exceed elapsed time).
     pub fn total(&self) -> Duration {
         self.breakdown.total()
+    }
+
+    /// Critical-path wall time of the pass — what serving actually
+    /// stalled for (the serve loop files this as the stall window).
+    pub fn wall(&self) -> Duration {
+        self.breakdown.total_wall()
     }
 }
 
@@ -97,9 +121,15 @@ pub struct ReviveReport {
 }
 
 impl ReviveReport {
-    /// Total revival wall time (sum over all categories).
+    /// Total revival work time (sum over all categories; with the
+    /// parallel control plane this can exceed elapsed time).
     pub fn total(&self) -> Duration {
         self.breakdown.total()
+    }
+
+    /// Critical-path wall time of the pass.
+    pub fn wall(&self) -> Duration {
+        self.breakdown.total_wall()
     }
 }
 
@@ -182,12 +212,30 @@ impl ReviveMoE {
         bd.add(Category::Other, t0.elapsed());
 
         // -- Weight integrity (§3.4, Fig 4) -----------------------------------
+        // Weight loads submitted here (a role switch's expert reload, the
+        // switched device's dense shards) stay *in flight* while the rest
+        // of recovery proceeds: XCCL domain recreation needs only the
+        // member list, and the recompile sweep needs only the HLO text —
+        // neither waits on weights. The loads are collected right before
+        // serving resumes (serialized instead under
+        // `RecoveryPolicy::serial_recovery`).
         let mut moe_recovery = None;
         let mut masked = Vec::new();
         let mut switched_device = None;
+        let mut pending_loads: Vec<PendingWeights> = Vec::new();
+        let mut switched_queued = 0usize;
         if let Some(mr) = moe_rank {
             let outcome = engine.expert_map.fail_rank(mr)?;
             let policy = engine.cfg.recovery.clone();
+            let mut do_switch = |engine: &mut Engine, bd: &mut Breakdown| -> Result<()> {
+                let (victim, pending) = Self::role_switch(engine, bd, mr)?;
+                switched_device = Some(victim);
+                if let Some(p) = pending {
+                    switched_queued += p.queued_cmds();
+                    pending_loads.push(p);
+                }
+                Ok(())
+            };
             match outcome {
                 FailOutcome::AllCovered if policy.allow_redundant_experts => {
                     // logical-to-physical map already updated; nothing to move
@@ -201,14 +249,14 @@ impl ReviveMoE {
                     let missing_ok = policy.allow_missing_experts
                         && engine.cfg.n_moe_ranks >= policy.missing_experts_min_ep;
                     if !lost.is_empty() && policy.allow_role_switch && !missing_ok {
-                        Self::role_switch(engine, &mut bd, mr, failed, &mut switched_device)?;
+                        do_switch(engine, &mut bd)?;
                         moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
                     } else if !lost.is_empty() && missing_ok {
                         engine.expert_map.mask_out(&lost);
                         masked = lost;
                         moe_recovery = Some(MoeRecoveryKind::MissingExperts);
                     } else if !lost.is_empty() && policy.allow_role_switch {
-                        Self::role_switch(engine, &mut bd, mr, failed, &mut switched_device)?;
+                        do_switch(engine, &mut bd)?;
                         moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
                     } else if lost.is_empty() {
                         moe_recovery = Some(MoeRecoveryKind::RedundantExperts);
@@ -228,7 +276,9 @@ impl ReviveMoE {
             let hit = engine.dense.fail_device(failed);
             if let Some(new_dev) = switched_device {
                 // the switched device takes over the failed rank's dense
-                // shards as well; reload them and restore the groups
+                // shards as well; their reloads queue behind the expert
+                // reload on the same device and are collected with it
+                let serial = engine.cfg.recovery.serial_recovery;
                 for g in hit {
                     let members = engine.dense.groups[g].clone();
                     for (s, &m) in members.iter().enumerate() {
@@ -236,7 +286,16 @@ impl ReviveMoE {
                             let tp = engine.cfg.dense_tp;
                             let meta = engine.meta.clone();
                             let ex = engine.executors.get_mut(&new_dev).unwrap();
-                            ex.init_dense_shard(g, s, tp, &meta, &engine.store)?;
+                            let p = ex.submit_dense_shard_weights(
+                                s, tp, &meta, &engine.store, switched_queued,
+                            )?;
+                            ex.attach_dense_shard(g, s);
+                            if serial {
+                                p.wait()?;
+                            } else {
+                                switched_queued += p.queued_cmds();
+                                pending_loads.push(p);
+                            }
                             engine.dense.groups[g][s] = new_dev;
                         }
                     }
@@ -290,15 +349,38 @@ impl ReviveMoE {
         // boundary (`Boundary`, default). Devices condemned by a *pending*
         // second fault are skipped — their graph work belongs to their own
         // recovery pass, and touching a dead device here would wedge this
-        // one.
+        // one. The sweep fans out across all survivors concurrently (one
+        // batched cache probe per device, compiles pipelined on each
+        // device's queue) unless `serial_recovery` pins the old
+        // one-rank-at-a-time walk; a hung survivor surfaces as a
+        // submission-time-deadline error, which is instance-fatal like any
+        // other `Err` from this pass — paused, never deadlocked.
         let scope = engine.cfg.recovery.recompile_scope;
         let skip: BTreeSet<DeviceId> =
             engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
         let full_set: Vec<DeviceId> = switched_device.into_iter().collect();
-        let (read_s, compile_s, recompiled) =
-            recompile_for_domain_change(engine, scope, &full_set, &skip)?;
-        bd.add(Category::ReadCache, Duration::from_secs_f64(read_s));
-        bd.add(Category::Compile, Duration::from_secs_f64(compile_s));
+        let queued: BTreeMap<DeviceId, usize> =
+            switched_device.map(|d| (d, switched_queued)).into_iter().collect();
+        let sweep = recompile_for_domain_change(engine, scope, &full_set, &skip, None, &queued)?;
+        bd.add_compile_sweep(sweep.read_s, sweep.compile_s, sweep.wall);
+        let recompiled = sweep.recompiled;
+
+        // -- Generator (residual): weight-load barrier -------------------------
+        // The role-switch expert reload and dense-shard reloads submitted
+        // above finished loading while the domains reformed and the sweep
+        // ran. The device-side upload seconds ride back with each load and
+        // are filed as Generator *work* (so serial and overlapped work sums
+        // stay comparable); whatever the barrier still waited is Generator
+        // *wall* the overlap could not hide.
+        if !pending_loads.is_empty() {
+            let t0 = Instant::now();
+            let mut device_s = 0f64;
+            for p in pending_loads {
+                device_s += p.wait()?.device_s;
+            }
+            bd.add(Category::Generator, Duration::from_secs_f64(device_s));
+            bd.add_wall(Category::Generator, t0.elapsed());
+        }
 
         // -- resume --------------------------------------------------------------
         let t0 = Instant::now();
@@ -350,13 +432,85 @@ impl ReviveMoE {
             !engine.executors.contains_key(&device),
             "device {device} is already part of the instance"
         );
+        // the spawn deadline is policy, not a constant: a wedged
+        // replacement NPU fails the revival after this long instead of
+        // stalling the serve tick loop for a hardcoded minute
+        let spawn_deadline =
+            Duration::from_millis(engine.cfg.recovery.revive_spawn_timeout_ms);
+        if engine.cfg.recovery.serial_recovery {
+            Self::revive_serial(engine, device, spawn_deadline)
+        } else {
+            Self::revive_overlapped(engine, device, spawn_deadline)
+        }
+    }
+
+    /// What a revived `device` would take back, computed host-side before
+    /// any weights move: its still-dead MoE rank (with the pre-failure
+    /// slot list the map retains — primaries *and* replicas), whether it
+    /// joins the DP attention set, the dense shards it must reload, and
+    /// the dense groups that return to rotation once every other member
+    /// is live.
+    fn revive_plan(engine: &Engine, device: DeviceId) -> Result<RevivePlan> {
+        let dead_moe_rank = engine
+            .moe_order
+            .iter()
+            .position(|&d| d == device)
+            .filter(|&r| !engine.expert_map.is_alive(r))
+            .map(|r| (r, engine.expert_map.rank_slots(r).to_vec()));
+        let was_attn = match engine.cfg.mode {
+            DeployMode::Collocated => true,
+            DeployMode::Disaggregated => device < engine.cfg.n_attn_ranks,
+        };
+        // join the DP set when the device was an attention rank, or when
+        // its MoE rank is already covered (a role switch consumed a DP
+        // rank; the revived device gives that width back)
+        let joined_attention =
+            (was_attn || dead_moe_rank.is_none()) && !engine.attn_order.contains(&device);
+        let mut dense_reloads = Vec::new();
+        let mut restored_dense_groups = Vec::new();
+        for g in 0..engine.dense.n_groups() {
+            if engine.dense.is_healthy(g) {
+                continue;
+            }
+            let members = &engine.dense.groups[g];
+            let mut reloaded = false;
+            for (s, &m) in members.iter().enumerate() {
+                if m == device {
+                    dense_reloads.push((g, s));
+                    reloaded = true;
+                }
+            }
+            // only return the group to rotation when every other shard
+            // still has a live executor (a group compromised by a second,
+            // still-dead device must stay out)
+            let all_live =
+                members.iter().all(|m| *m == device || engine.executors.contains_key(m));
+            if reloaded && all_live {
+                restored_dense_groups.push(g);
+            }
+        }
+        anyhow::ensure!(
+            dead_moe_rank.is_some() || joined_attention || !restored_dense_groups.is_empty(),
+            "device {device} has no role to revive in this deployment"
+        );
+        Ok(RevivePlan { dead_moe_rank, joined_attention, dense_reloads, restored_dense_groups })
+    }
+
+    /// The pre-PR-3 revival: every phase blocking, strictly sequential.
+    /// Kept byte-for-byte in behavior as the `serial_recovery` A/B
+    /// baseline (only the spawn deadline became policy).
+    fn revive_serial(
+        engine: &mut Engine,
+        device: DeviceId,
+        spawn_deadline: Duration,
+    ) -> Result<ReviveReport> {
         let mut bd = Breakdown::new();
 
         // -- Executor Processes: relaunch the worker --------------------------
         let t0 = Instant::now();
         let mut ex = Executor::spawn(device);
         ex.handle
-            .ping(Duration::from_secs(60))
+            .ping(spawn_deadline)
             .map_err(|e| anyhow::anyhow!("revived device {device} never came up: {e:?}"))?;
         bd.add(Category::ExecutorProcesses, t0.elapsed());
 
@@ -368,69 +522,29 @@ impl ReviveMoE {
         // it was, minus one spawned-then-dropped worker.
         let t0 = Instant::now();
         let meta = engine.meta.clone();
-        let dead_moe_rank = engine
-            .moe_order
-            .iter()
-            .position(|&d| d == device)
-            .filter(|&r| !engine.expert_map.is_alive(r));
-        if let Some(mr) = dead_moe_rank {
-            // the pre-failure slot list (primaries + replicas) is retained
-            // by the map even while the rank is dead
-            let slots = engine.expert_map.rank_slots(mr).to_vec();
-            ex.init_moe(mr, &meta, slots, &engine.store)?;
+        let plan = Self::revive_plan(engine, device)?;
+        if let Some((mr, slots)) = &plan.dead_moe_rank {
+            ex.init_moe(*mr, &meta, slots.clone(), &engine.store)?;
         }
-        let was_attn = match engine.cfg.mode {
-            DeployMode::Collocated => true,
-            DeployMode::Disaggregated => device < engine.cfg.n_attn_ranks,
-        };
-        // join the DP set when the device was an attention rank, or when
-        // its MoE rank is already covered (a role switch consumed a DP
-        // rank; the revived device gives that width back)
-        let joined_attention =
-            (was_attn || dead_moe_rank.is_none()) && !engine.attn_order.contains(&device);
-        if joined_attention {
+        if plan.joined_attention {
             let dp_rank = engine.attn_order.len();
             ex.init_attention(dp_rank, &meta, &engine.cfg, &engine.store)?;
         }
-        let mut restored_dense_groups = Vec::new();
-        for g in 0..engine.dense.n_groups() {
-            if engine.dense.is_healthy(g) {
-                continue;
-            }
-            let members = engine.dense.groups[g].clone();
-            let mut reloaded = false;
-            for (s, &m) in members.iter().enumerate() {
-                if m == device {
-                    ex.init_dense_shard(g, s, engine.cfg.dense_tp, &meta, &engine.store)?;
-                    reloaded = true;
-                }
-            }
-            // only return the group to rotation when every other shard
-            // still has a live executor (a group compromised by a second,
-            // still-dead device must stay out)
-            let all_live = members
-                .iter()
-                .all(|m| *m == device || engine.executors.contains_key(m));
-            if reloaded && all_live {
-                restored_dense_groups.push(g);
-            }
+        for &(g, s) in &plan.dense_reloads {
+            ex.init_dense_shard(g, s, engine.cfg.dense_tp, &meta, &engine.store)?;
         }
-        anyhow::ensure!(
-            dead_moe_rank.is_some() || joined_attention || !restored_dense_groups.is_empty(),
-            "device {device} has no role to revive in this deployment"
-        );
         // commit: every load succeeded, adopt the device
-        let restored_moe_rank = match dead_moe_rank {
-            Some(mr) => {
-                engine.expert_map.revive_rank(mr)?;
-                Some(mr)
+        let restored_moe_rank = match &plan.dead_moe_rank {
+            Some((mr, _)) => {
+                engine.expert_map.revive_rank(*mr)?;
+                Some(*mr)
             }
             None => None,
         };
-        if joined_attention {
+        if plan.joined_attention {
             engine.attn_order.push(device);
         }
-        for &g in &restored_dense_groups {
+        for &g in &plan.restored_dense_groups {
             engine.dense.restore_group(g);
         }
         engine.executors.insert(device, ex);
@@ -451,33 +565,204 @@ impl ReviveMoE {
             engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
         // the revived executor has an empty graph cache: it compiles its
         // full set under every scope; survivors follow the policy
-        let (read_s, compile_s, recompiled) =
-            recompile_for_domain_change(engine, scope, &[device], &skip)?;
-        bd.add(Category::ReadCache, Duration::from_secs_f64(read_s));
-        bd.add(Category::Compile, Duration::from_secs_f64(compile_s));
+        let sweep =
+            recompile_for_domain_change(engine, scope, &[device], &skip, None, &BTreeMap::new())?;
+        bd.add_compile_sweep(sweep.read_s, sweep.compile_s, sweep.wall);
 
         engine.plugin.clear(device);
         Ok(ReviveReport {
             breakdown: bd,
             device,
             restored_moe_rank,
-            joined_attention,
-            restored_dense_groups,
-            recompiled_graphs: recompiled,
+            joined_attention: plan.joined_attention,
+            restored_dense_groups: plan.restored_dense_groups,
+            recompiled_graphs: sweep.recompiled,
+        })
+    }
+
+    /// The overlapped revival. The stage DAG (docs/ARCHITECTURE.md):
+    /// weight uploads to the revived device run concurrently with the
+    /// liveness barrier, the XCCL domain recreation (which needs only the
+    /// member list), the survivor boundary recompiles, and the revived
+    /// device's own compiles (queued behind its loads on its command
+    /// queue). Engine state still only mutates after every load and
+    /// compile succeeded; a failure after the domains were recreated
+    /// rolls the membership back, so an error mid-revive leaves the
+    /// engine as it was, minus one spawned-then-dropped worker.
+    fn revive_overlapped(
+        engine: &mut Engine,
+        device: DeviceId,
+        spawn_deadline: Duration,
+    ) -> Result<ReviveReport> {
+        let mut bd = Breakdown::new();
+
+        // -- Executor Processes: relaunch + submit the liveness ping ----------
+        // The PJRT client constructs inside the device thread while the
+        // host reads weights from disk below.
+        let t0 = Instant::now();
+        let mut ex = Executor::spawn(device);
+        let ping = ex.handle.submit_ping(spawn_deadline)?;
+        bd.add(Category::ExecutorProcesses, t0.elapsed());
+
+        // -- Generator (submission half): disk reads + device queueing --------
+        let t0 = Instant::now();
+        let meta = engine.meta.clone();
+        let plan = Self::revive_plan(engine, device)?;
+        // The liveness ping queued ahead of the loads carries a budget of
+        // `spawn_deadline`, not one `cmd_timeout` — translate it into
+        // queue slots so every later deadline on this device still covers
+        // the whole queue (a replacement NPU legitimately spending its
+        // spawn budget on PJRT-client construction must not trip the
+        // loads' or the probe's deadlines).
+        let cmd_ms = ex.handle.cmd_timeout.as_millis().max(1) as u64;
+        let ping_slots = (spawn_deadline.as_millis() as u64).div_ceil(cmd_ms) as usize;
+        let mut queued = ping_slots;
+        let mut loads: Vec<PendingWeights> = Vec::new();
+        if let Some((mr, slots)) = &plan.dead_moe_rank {
+            let p = ex.submit_expert_weights(&meta, slots, &engine.store, queued)?;
+            queued += p.queued_cmds();
+            ex.attach_moe(*mr, slots.clone());
+            loads.push(p);
+        }
+        if plan.joined_attention {
+            let dp_rank = engine.attn_order.len();
+            let p = ex.submit_attention_weights(&meta, &engine.store, queued)?;
+            queued += p.queued_cmds();
+            ex.attach_attention(dp_rank, &meta, &engine.cfg);
+            loads.push(p);
+        }
+        for &(g, s) in &plan.dense_reloads {
+            let tp = engine.cfg.dense_tp;
+            let p = ex.submit_dense_shard_weights(s, tp, &meta, &engine.store, queued)?;
+            queued += p.queued_cmds();
+            ex.attach_dense_shard(g, s);
+            loads.push(p);
+        }
+        let submit_elapsed = t0.elapsed();
+        bd.add(Category::Generator, submit_elapsed);
+        bd.add_wall(Category::Generator, submit_elapsed);
+
+        // -- Executor Processes (residual): the constructor barrier -----------
+        let t0 = Instant::now();
+        let healthy = ping
+            .wait()
+            .map_err(|e| anyhow::anyhow!("revived device {device} never came up: {e}"))?;
+        anyhow::ensure!(healthy, "revived device {device} reports itself unhealthy");
+        bd.add(Category::ExecutorProcesses, t0.elapsed());
+
+        // -- XCCL: domains need the member list, not the weights --------------
+        // A failure from here on must roll the domain membership back (and
+        // reap the spawned worker) so the engine is not left with a
+        // phantom member it never adopted.
+        let t0 = Instant::now();
+        let trampoline =
+            engine.cfg.mode == DeployMode::Disaggregated && plan.dead_moe_rank.is_some();
+        if trampoline {
+            if let Err(e) = engine.domains.recreate_with_member(TRAMPOLINE_DOMAIN, device) {
+                ex.shutdown();
+                return Err(e);
+            }
+        }
+        let epoch =
+            match engine.domains.recreate_with_member(ATTN_EXPERT_DOMAIN, device).map(|d| d.epoch)
+            {
+                Ok(ep) => ep,
+                Err(e) => {
+                    if trampoline {
+                        let _ = engine.domains.recreate_without(TRAMPOLINE_DOMAIN, device);
+                    }
+                    ex.shutdown();
+                    return Err(e);
+                }
+            };
+        engine.set_epoch(epoch);
+        bd.add(Category::Xccl, t0.elapsed());
+
+        // -- Read Cache + Compile (§3.6) + the load barrier, overlapped -------
+        let overlapped = (|| -> Result<(SweepOutcome, Duration, f64)> {
+            let scope = engine.cfg.recovery.recompile_scope;
+            let skip: BTreeSet<DeviceId> =
+                engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
+            // the revived executor has an empty graph cache: it compiles
+            // its full set under every scope; survivors follow the policy
+            let sweep = recompile_for_domain_change(
+                engine,
+                scope,
+                &[device],
+                &skip,
+                Some((device, &ex, queued)),
+                &BTreeMap::new(),
+            )?;
+            let t0 = Instant::now();
+            let mut device_s = 0f64;
+            for p in loads {
+                device_s += p.wait()?.device_s;
+            }
+            Ok((sweep, t0.elapsed(), device_s))
+        })();
+        let (sweep, load_residual, load_device_s) = match overlapped {
+            Ok(x) => x,
+            Err(e) => {
+                // roll the domain membership back so the engine is not
+                // left with a phantom member it never adopted
+                if trampoline {
+                    let _ = engine.domains.recreate_without(TRAMPOLINE_DOMAIN, device);
+                }
+                let rollback_epoch =
+                    engine.domains.recreate_without(ATTN_EXPERT_DOMAIN, device).map(|d| d.epoch);
+                if let Ok(ep) = rollback_epoch {
+                    engine.set_epoch(ep);
+                }
+                ex.shutdown();
+                return Err(e);
+            }
+        };
+        bd.add_compile_sweep(sweep.read_s, sweep.compile_s, sweep.wall);
+        // device-side upload seconds are Generator *work* the overlap hid;
+        // the residual barrier wait is the Generator *wall* it could not
+        bd.add(Category::Generator, Duration::from_secs_f64(load_device_s));
+        bd.add_wall(Category::Generator, load_residual);
+
+        // -- commit: every load + compile succeeded; adopt the device ---------
+        let restored_moe_rank = match &plan.dead_moe_rank {
+            Some((mr, _)) => {
+                engine.expert_map.revive_rank(*mr)?;
+                Some(*mr)
+            }
+            None => None,
+        };
+        if plan.joined_attention {
+            engine.attn_order.push(device);
+        }
+        for &g in &plan.restored_dense_groups {
+            engine.dense.restore_group(g);
+        }
+        engine.executors.insert(device, ex);
+        engine.plugin.clear(device);
+        Ok(ReviveReport {
+            breakdown: bd,
+            device,
+            restored_moe_rank,
+            joined_attention: plan.joined_attention,
+            restored_dense_groups: plan.restored_dense_groups,
+            recompiled_graphs: sweep.recompiled,
         })
     }
 
     /// §3.4 role switch: pick the least-loaded DP rank, drain it, strip its
-    /// attention role (Role Switch) and reload the failed rank's expert +
-    /// dense weights from disk (Generator — dominates, like the paper's
-    /// 40.6 s).
+    /// attention role (Role Switch) and reload the failed rank's expert
+    /// weights from disk (Generator — dominates, like the paper's 40.6 s).
+    ///
+    /// The disk read and the device-upload *submission* happen here; the
+    /// upload itself is returned as a [`PendingWeights`] (None under
+    /// `serial_recovery`, which awaits it in place) so the caller can
+    /// overlap it with XCCL domain recreation and the survivor recompile
+    /// sweep — the domains need the member list, not the weights.
     fn role_switch(
         engine: &mut Engine,
         bd: &mut Breakdown,
         moe_rank: usize,
-        _failed: DeviceId,
-        switched_device: &mut Option<DeviceId>,
-    ) -> Result<()> {
+    ) -> Result<(DeviceId, Option<PendingWeights>)> {
         let t0 = Instant::now();
         anyhow::ensure!(
             engine.attn_order.len() > 1,
@@ -504,17 +789,46 @@ impl ReviveMoE {
 
         // Generator: the expert weights must come from disk — the only
         // copies died with the failed NPU.
+        let serial = engine.cfg.recovery.serial_recovery;
         let t0 = Instant::now();
         let slots = engine.expert_map.revive_rank(moe_rank)?.to_vec();
-        {
+        let pending = {
             let ex = engine.executors.get_mut(&victim).unwrap();
-            ex.init_moe(moe_rank, &meta, slots, &engine.store)?;
-        }
+            let p = ex.submit_expert_weights(&meta, &slots, &engine.store, 0)?;
+            ex.attach_moe(moe_rank, slots);
+            if serial {
+                p.wait()?;
+                None
+            } else {
+                Some(p)
+            }
+        };
         engine.moe_order[moe_rank] = victim;
-        bd.add(Category::Generator, t0.elapsed());
-        *switched_device = Some(victim);
-        Ok(())
+        let elapsed = t0.elapsed();
+        bd.add(Category::Generator, elapsed);
+        if !serial {
+            // overlapped: this elapsed covers disk read + submission only;
+            // it is also wall (the caller's barrier adds the device-side
+            // upload as work and the residual wait as wall)
+            bd.add_wall(Category::Generator, elapsed);
+        }
+        Ok((victim, pending))
     }
+}
+
+/// Host-side plan of what a revival restores (see
+/// [`ReviveMoE::revive`]); computed before any weight moves so the serial
+/// and overlapped paths decide identically.
+struct RevivePlan {
+    /// The still-dead MoE rank the device re-takes, with its retained
+    /// pre-failure slot list.
+    dead_moe_rank: Option<(usize, Vec<ExpertId>)>,
+    /// Whether the device (re)joins the DP attention set.
+    joined_attention: bool,
+    /// `(group, shard)` dense shards to reload onto the device.
+    dense_reloads: Vec<(usize, usize)>,
+    /// Dense groups that return to rotation once the device is back.
+    restored_dense_groups: Vec<usize>,
 }
 
 /// The boundary artifact names one executor must redo after the
@@ -544,52 +858,119 @@ fn boundary_names(ex: &Executor, cfg: &DeploymentConfig) -> Vec<String> {
     v
 }
 
+/// What one §3.6 recompile sweep did: per-artifact work sums (the Fig-5
+/// stacked-bar quantities) plus the critical-path wall time of the whole
+/// sweep — with the fan-out on, work across survivors overlaps and the
+/// sums exceed the wall.
+struct SweepOutcome {
+    /// Summed "Read Cache" seconds across every device and artifact.
+    read_s: f64,
+    /// Summed "Compile" seconds across every device and artifact.
+    compile_s: f64,
+    /// Graphs compiled.
+    recompiled: usize,
+    /// Elapsed wall time of the sweep (submission through last collect).
+    wall: Duration,
+}
+
 /// Shared §3.6 recompile sweep after an XCCL domain change (failure
 /// recovery and device revival both end with one). `full_set` devices get
 /// their complete artifact set regardless of scope (role-switched or
 /// freshly revived executors start with an empty graph cache); `skip`
 /// devices are left alone entirely (condemned by a pending fault — their
-/// own recovery pass owns their graph work). Returns
-/// `(read_s, compile_s, graphs_compiled)`.
+/// own recovery pass owns their graph work).
+///
+/// The sweep fans out: per device, a queued no-wait `drop`, one *batched*
+/// cache probe round-trip, then every missing compile queued at once —
+/// the device reads artifact *n+1*'s HLO while nothing round-trips
+/// between compiles, and all survivors' queues drain concurrently. Collection happens after
+/// every device was submitted to, so sweep wall approaches the slowest
+/// single device instead of the sum over devices. Under
+/// `RecoveryPolicy::serial_recovery` each device is awaited before the
+/// next is touched (the pre-PR-3 walk, the A/B baseline). Either way a
+/// hung device surfaces as a submission-time-deadline error, never a
+/// wedge.
+///
+/// `extra` is an executor not (yet) in the engine table — a revived
+/// device whose compiles must queue behind its in-flight weight loads
+/// (its queued-command count rides along). `queued_ahead` carries the
+/// same information for in-table devices (the role-switch victim).
 fn recompile_for_domain_change(
-    engine: &mut Engine,
+    engine: &Engine,
     scope: RecompileScope,
     full_set: &[DeviceId],
     skip: &BTreeSet<DeviceId>,
-) -> Result<(f64, f64, usize)> {
+    extra: Option<(DeviceId, &Executor, usize)>,
+    queued_ahead: &BTreeMap<DeviceId, usize>,
+) -> Result<SweepOutcome> {
+    let serial = engine.cfg.recovery.serial_recovery;
+    let t_wall = Instant::now();
     let mut read_s = 0f64;
     let mut compile_s = 0f64;
     let mut recompiled = 0usize;
+    let mut collect = |p: Pending<CompileStat>| -> Result<()> {
+        let stat = p.wait()?;
+        read_s += stat.read_s;
+        compile_s += stat.compile_s;
+        recompiled += 1;
+        Ok(())
+    };
+
     let mut device_ids: Vec<DeviceId> = engine.executors.keys().copied().collect();
+    if let Some((d, _, _)) = extra {
+        device_ids.push(d);
+    }
     device_ids.sort_unstable();
+    // Busy devices (in-flight weight loads queued ahead) go last: their
+    // cache probe waits behind their queue, and probing them first would
+    // stall the idle survivors' fan-out behind one device's uploads. The
+    // stable sort keeps id order within each group, so the walk stays
+    // deterministic.
+    let busy = |d: &DeviceId| -> bool {
+        match extra {
+            Some((xd, _, xq)) if xd == *d => xq > 0,
+            _ => queued_ahead.get(d).copied().unwrap_or(0) > 0,
+        }
+    };
+    device_ids.sort_by_key(busy);
+    let mut in_flight: Vec<Pending<CompileStat>> = Vec::new();
     for d in device_ids {
         if skip.contains(&d) {
             continue;
         }
-        let names = {
-            let ex = &engine.executors[&d];
-            if full_set.contains(&d) {
-                artifact_set(ex, &engine.meta, &engine.cfg)
-            } else {
-                match scope {
-                    RecompileScope::None_ => Vec::new(),
-                    RecompileScope::Full => artifact_set(ex, &engine.meta, &engine.cfg),
-                    RecompileScope::Boundary => boundary_names(ex, &engine.cfg),
-                }
+        let (ex, queued) = match extra {
+            Some((xd, xex, xq)) if xd == d => (xex, xq),
+            _ => (&engine.executors[&d], queued_ahead.get(&d).copied().unwrap_or(0)),
+        };
+        let names = if full_set.contains(&d) {
+            artifact_set(ex, &engine.meta, &engine.cfg)
+        } else {
+            match scope {
+                RecompileScope::None_ => Vec::new(),
+                RecompileScope::Full => artifact_set(ex, &engine.meta, &engine.cfg),
+                RecompileScope::Boundary => boundary_names(ex, &engine.cfg),
             }
         };
         if names.is_empty() {
             continue;
         }
-        let ex = engine.executors.get_mut(&d).unwrap();
-        ex.handle.drop_executables(Some(names.clone()))?;
-        for stat in ex.compile_set(&engine.arts, &names)? {
-            read_s += stat.read_s;
-            compile_s += stat.compile_s;
-            recompiled += 1;
+        // FIFO makes the queued drop visible to the probe inside
+        // `submit_compile_set` without a round-trip of its own; the drop
+        // occupies one queue slot, so the probe/compile deadlines count it
+        ex.handle.drop_executables_nowait(Some(names.clone()))?;
+        let pend = ex.submit_compile_set(&engine.arts, &names, queued + 1)?;
+        if serial {
+            for p in pend {
+                collect(p)?;
+            }
+        } else {
+            in_flight.extend(pend);
         }
     }
-    Ok((read_s, compile_s, recompiled))
+    for p in in_flight {
+        collect(p)?;
+    }
+    Ok(SweepOutcome { read_s, compile_s, recompiled, wall: t_wall.elapsed() })
 }
 
 // ---------------------------------------------------------------------------

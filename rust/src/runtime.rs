@@ -13,19 +13,27 @@
 //!
 //! Device commands come in two flavors. The blocking calls
 //! ([`DeviceHandle::execute`] and friends) submit and wait in one step.
-//! The split calls ([`DeviceHandle::submit_execute`]) return a
-//! [`PendingExec`] immediately, which the caller awaits later with
-//! [`PendingExec::wait`] (blocking, deadline-bounded) or polls with
-//! [`PendingExec::try_wait`]. The per-command timeout clock starts at
-//! *submission*, so a pending result on a hung device still surfaces as a
-//! timeout error — never an engine hang — exactly like the blocking path.
+//! The split calls ([`DeviceHandle::submit_execute`],
+//! [`DeviceHandle::submit_compile`], [`DeviceHandle::submit_load_weights`],
+//! [`DeviceHandle::submit_ping`]) return a typed [`Pending`] handle
+//! immediately, which the caller awaits later with [`Pending::wait`]
+//! (blocking, deadline-bounded) or polls with [`Pending::try_wait`]. The
+//! per-command timeout clock starts at *submission*, so a pending result
+//! on a hung device still surfaces as a timeout error — never an engine
+//! hang — exactly like the blocking path. Callers queuing *several*
+//! commands on one device pass a deadline scaled by queue depth (each
+//! command's clock still starts at its own submission; a healthy device
+//! draining a deep queue is not a hang).
 //!
-//! This split is what lets the engine overlap device work across ranks:
-//! submit one command to every DP/MoE/dense rank, then collect the
-//! results, so "parallel" ranks genuinely run concurrently instead of
-//! serializing round-trips. [`ExecWave`] packages that submit-all /
-//! collect-all pattern (with an optional serialized mode kept as the A/B
-//! baseline for correctness tests and the decode-throughput bench).
+//! This split is what lets the engine overlap device work across ranks —
+//! and, since PR 3, lets *recovery* overlap its control-plane work
+//! (compiles, weight loads, liveness pings) across survivors the same
+//! way: submit one command to every rank, then collect the results, so
+//! "parallel" ranks genuinely run concurrently instead of serializing
+//! round-trips. [`Wave`] packages that submit-all / collect-all pattern
+//! for any reply type ([`ExecWave`] is its data-plane alias), with an
+//! optional serialized mode kept as the A/B baseline for correctness
+//! tests and the throughput/recovery benches.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -81,8 +89,8 @@ enum Cmd {
     Ping { reply: Sender<bool> },
     Compile { name: String, path: PathBuf, reply: Sender<Result<CompileStat>> },
     DropExecutables { names: Option<Vec<String>>, reply: Sender<usize> },
-    HasExecutable { name: String, reply: Sender<bool> },
-    LoadWeights { tensors: Vec<(String, Tensor)>, reply: Sender<Result<usize>> },
+    HasExecutables { names: Vec<String>, reply: Sender<Vec<bool>> },
+    LoadWeights { tensors: Vec<(String, Tensor)>, reply: Sender<Result<(usize, f64)>> },
     DropWeightsPrefix { prefix: String, reply: Sender<usize> },
     Execute { exe: String, args: Vec<Arg>, reply: Sender<Result<Vec<Tensor>>> },
     Stats { reply: Sender<DeviceStats> },
@@ -174,27 +182,30 @@ impl<T> PendingReply<T> {
     }
 }
 
-/// An in-flight `Execute`: awaiting it yields the executable's outputs.
-/// Device-side errors (failed device, missing executable/weight) surface
-/// from `wait`/`try_wait` exactly as they do from the blocking
-/// [`DeviceHandle::execute`].
-pub struct PendingExec {
-    inner: PendingReply<Result<Vec<Tensor>>>,
+/// A typed in-flight fallible device command: awaiting it yields the
+/// command's value. Device-side errors (failed device, missing
+/// executable/weight, compile failure) surface from `wait`/`try_wait`
+/// exactly as they do from the blocking calls, and the submission-time
+/// deadline bounds the wait on a hung device. [`PendingExec`] (an
+/// `Execute`), compiles ([`DeviceHandle::submit_compile`]), and weight
+/// loads ([`DeviceHandle::submit_load_weights`]) are all instances.
+pub struct Pending<T> {
+    inner: PendingReply<Result<T>>,
 }
 
-impl PendingExec {
-    /// The device the execute was submitted to.
+impl<T> Pending<T> {
+    /// The device the command was submitted to.
     pub fn device(&self) -> DeviceId {
         self.inner.device()
     }
 
-    /// Block until the outputs arrive or the deadline passes.
-    pub fn wait(self) -> Result<Vec<Tensor>> {
+    /// Block until the value arrives or the deadline passes.
+    pub fn wait(self) -> Result<T> {
         self.inner.wait()?
     }
 
     /// Non-blocking poll; see [`PendingReply::try_wait`].
-    pub fn try_wait(&mut self) -> Result<Option<Vec<Tensor>>> {
+    pub fn try_wait(&mut self) -> Result<Option<T>> {
         match self.inner.try_wait()? {
             Some(r) => Ok(Some(r?)),
             None => Ok(None),
@@ -202,24 +213,33 @@ impl PendingExec {
     }
 }
 
-/// One fan-out wave of `Execute` submissions, collected in submission
+/// An in-flight `Execute`: awaiting it yields the executable's outputs.
+pub type PendingExec = Pending<Vec<Tensor>>;
+
+/// One fan-out wave of typed command submissions, collected in submission
 /// order. In `serial` mode every push awaits its result before returning —
-/// the pre-async data-plane behavior, kept as the A/B baseline for the
-/// overlap-correctness tests and the decode-throughput bench.
-pub struct ExecWave {
+/// the pre-async behavior, kept as the A/B baseline for the
+/// overlap-correctness tests and the throughput/recovery benches. The
+/// data plane uses the [`ExecWave`] alias; the recovery control plane
+/// manages its `Pending` handles directly (it needs per-device grouping
+/// and per-stat accumulation a flat wave does not model).
+pub struct Wave<T> {
     serial: bool,
-    slots: Vec<WaveSlot>,
+    slots: Vec<WaveSlot<T>>,
 }
 
-enum WaveSlot {
-    Pending(PendingExec),
-    Ready(Vec<Tensor>),
+enum WaveSlot<T> {
+    Pending(Pending<T>),
+    Ready(T),
 }
 
-impl ExecWave {
+/// The data-plane wave: a fan-out of `Execute` submissions.
+pub type ExecWave = Wave<Vec<Tensor>>;
+
+impl<T> Wave<T> {
     /// A new wave; `serial` awaits each push immediately (A/B baseline).
     pub fn new(serial: bool) -> Self {
-        ExecWave { serial, slots: Vec::new() }
+        Wave { serial, slots: Vec::new() }
     }
 
     /// Members pushed so far.
@@ -234,14 +254,14 @@ impl ExecWave {
 
     /// Add a submitted command to the wave (awaiting it immediately in
     /// serial mode).
-    pub fn push(&mut self, p: PendingExec) -> Result<()> {
+    pub fn push(&mut self, p: Pending<T>) -> Result<()> {
         let slot = if self.serial { WaveSlot::Ready(p.wait()?) } else { WaveSlot::Pending(p) };
         self.slots.push(slot);
         Ok(())
     }
 
     /// Await every in-flight member; results come back in push order.
-    pub fn collect(self) -> Result<Vec<Vec<Tensor>>> {
+    pub fn collect(self) -> Result<Vec<T>> {
         self.slots
             .into_iter()
             .map(|s| match s {
@@ -315,14 +335,19 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                 stats.executables = executables.len();
                 let _ = reply.send(n);
             }
-            Cmd::HasExecutable { name, reply } => {
-                let _ = reply.send(executables.contains_key(&name));
+            Cmd::HasExecutables { names, reply } => {
+                let hits = names.iter().map(|n| executables.contains_key(n)).collect();
+                let _ = reply.send(hits);
             }
             Cmd::LoadWeights { tensors, reply } => {
                 if failed.is_some() {
                     let _ = reply.send(Err(anyhow::anyhow!("device failed")));
                     continue;
                 }
+                // device-side upload time rides back with the byte count so
+                // an overlapped caller can still file the *work* done here
+                // under Generator even though it never blocked on it
+                let t0 = Instant::now();
                 let r = (|| -> Result<usize> {
                     let mut n = 0;
                     for (name, t) in tensors {
@@ -331,11 +356,12 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                     }
                     Ok(n)
                 })();
+                let secs = t0.elapsed().as_secs_f64();
                 if let Ok(n) = &r {
                     weight_bytes += n;
                     stats.weight_bytes = weight_bytes;
                 }
-                let _ = reply.send(r);
+                let _ = reply.send(r.map(|n| (n, secs)));
             }
             Cmd::DropWeightsPrefix { prefix, reply } => {
                 let keys: Vec<String> =
@@ -433,7 +459,11 @@ impl DeviceHandle {
     }
 
     fn wait<T>(&self, rx: Receiver<T>) -> Result<T> {
-        match rx.recv_timeout(self.cmd_timeout) {
+        self.wait_within(rx, self.cmd_timeout)
+    }
+
+    fn wait_within<T>(&self, rx: Receiver<T>, deadline: Duration) -> Result<T> {
+        match rx.recv_timeout(deadline) {
             Ok(v) => Ok(v),
             Err(RecvTimeoutError::Timeout) => {
                 anyhow::bail!("device {} command timed out (hung?)", self.id)
@@ -457,18 +487,63 @@ impl DeviceHandle {
         }
     }
 
+    /// Submit a liveness ping without waiting; the reply (`true` =
+    /// healthy) arrives through the returned deadline-bounded handle.
+    /// Lets a spawner overlap other work (host-side weight reads, queueing
+    /// follow-up commands) with the device's PJRT-client construction
+    /// instead of blocking on [`DeviceHandle::ping`].
+    pub fn submit_ping(&self, deadline: Duration) -> Result<PendingReply<bool>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::Ping { reply: tx })?;
+        Ok(PendingReply { device: self.id, rx, deadline: Instant::now() + deadline })
+    }
+
     /// Compile one HLO-text artifact into the device's graph cache.
     pub fn compile(&self, name: &str, path: PathBuf) -> Result<CompileStat> {
+        self.submit_compile(name, path, self.cmd_timeout)?.wait()
+    }
+
+    /// Submit a `Compile` without waiting. The clock starts now and runs
+    /// for `deadline`; callers queueing several compiles on one device
+    /// scale the deadline by queue position (each queued command's budget
+    /// is one `cmd_timeout`; see [`crate::executor::Executor::submit_compile_set`]).
+    pub fn submit_compile(
+        &self,
+        name: &str,
+        path: PathBuf,
+        deadline: Duration,
+    ) -> Result<Pending<CompileStat>> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::Compile { name: name.to_string(), path, reply: tx })?;
-        self.wait(rx)?
+        Ok(Pending {
+            inner: PendingReply { device: self.id, rx, deadline: Instant::now() + deadline },
+        })
     }
 
     /// Whether `name` is already in the device's graph cache.
     pub fn has_executable(&self, name: &str) -> Result<bool> {
+        Ok(self.has_executables(&[name.to_string()])?.first().copied().unwrap_or(false))
+    }
+
+    /// Batched graph-cache probe: one round-trip answers every name
+    /// (replaces a per-artifact `has_executable` loop, so a warm-cache
+    /// recovery pass costs one round-trip per device, not one per graph).
+    pub fn has_executables(&self, names: &[String]) -> Result<Vec<bool>> {
+        self.has_executables_within(names, self.cmd_timeout)
+    }
+
+    /// [`DeviceHandle::has_executables`] with an explicit reply deadline.
+    /// The probe's reply waits behind every command already queued on the
+    /// device (FIFO), so a caller probing a device with in-flight work
+    /// must scale the deadline by queue depth like any other submission.
+    pub fn has_executables_within(
+        &self,
+        names: &[String],
+        deadline: Duration,
+    ) -> Result<Vec<bool>> {
         let (tx, rx) = mpsc::channel();
-        self.send(Cmd::HasExecutable { name: name.to_string(), reply: tx })?;
-        self.wait(rx)
+        self.send(Cmd::HasExecutables { names: names.to_vec(), reply: tx })?;
+        self.wait_within(rx, deadline)
     }
 
     /// Drop cached executables (all of them when `names` is None).
@@ -478,11 +553,34 @@ impl DeviceHandle {
         self.wait(rx)
     }
 
+    /// Queue a drop without waiting for the count. Device commands are
+    /// FIFO, so the drop is visible to any command submitted after it —
+    /// the recovery sweep relies on this to queue drop → probe → compiles
+    /// in one pass without a blocking round-trip between them.
+    pub fn drop_executables_nowait(&self, names: Option<Vec<String>>) -> Result<()> {
+        let (tx, _rx) = mpsc::channel();
+        self.send(Cmd::DropExecutables { names, reply: tx })
+    }
+
     /// Load named weights into device residence; returns bytes moved.
     pub fn load_weights(&self, tensors: Vec<(String, Tensor)>) -> Result<usize> {
+        Ok(self.submit_load_weights(tensors, self.cmd_timeout)?.wait()?.0)
+    }
+
+    /// Submit a `LoadWeights` without waiting; awaiting the handle yields
+    /// `(bytes moved, device-side upload seconds)` — the seconds let an
+    /// overlapped caller account the work it never blocked on. Same
+    /// queue-depth deadline rule as [`DeviceHandle::submit_compile`].
+    pub fn submit_load_weights(
+        &self,
+        tensors: Vec<(String, Tensor)>,
+        deadline: Duration,
+    ) -> Result<Pending<(usize, f64)>> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::LoadWeights { tensors, reply: tx })?;
-        self.wait(rx)?
+        Ok(Pending {
+            inner: PendingReply { device: self.id, rx, deadline: Instant::now() + deadline },
+        })
     }
 
     /// Drop every resident weight whose name starts with `prefix`.
@@ -493,11 +591,11 @@ impl DeviceHandle {
     }
 
     /// Submit an `Execute` without waiting. The per-command timeout clock
-    /// starts now; await the returned handle with [`PendingExec::wait`].
+    /// starts now; await the returned handle with [`Pending::wait`].
     pub fn submit_execute(&self, exe: &str, args: Vec<Arg>) -> Result<PendingExec> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::Execute { exe: exe.to_string(), args, reply: tx })?;
-        Ok(PendingExec {
+        Ok(Pending {
             inner: PendingReply {
                 device: self.id,
                 rx,
@@ -634,6 +732,64 @@ mod tests {
         assert!(pending.try_wait().unwrap().is_none());
         std::thread::sleep(Duration::from_millis(120));
         assert!(pending.try_wait().unwrap_err().to_string().contains("timed out"));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn batched_probe_answers_every_name() {
+        let d = SimDevice::spawn(9);
+        let names: Vec<String> = vec!["a".into(), "b".into()];
+        assert_eq!(d.handle.has_executables(&names).unwrap(), vec![false, false]);
+        assert!(!d.handle.has_executable("a").unwrap());
+        assert_eq!(d.handle.has_executables(&[]).unwrap(), Vec::<bool>::new());
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn submitted_compile_resolves_like_blocking() {
+        let d = SimDevice::spawn(10);
+        // a missing HLO file errors at wait, not at submit
+        let p = d
+            .handle
+            .submit_compile("nope", PathBuf::from("/nonexistent.hlo"), Duration::from_secs(5))
+            .unwrap();
+        assert!(p.wait().is_err());
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn submitted_load_weights_resolves_and_times_out_when_hung() {
+        let d = SimDevice::spawn(11);
+        let t = Tensor::f32(vec![2], vec![1., 2.]);
+        let p = d
+            .handle
+            .submit_load_weights(vec![("w".into(), t)], Duration::from_secs(5))
+            .unwrap();
+        let (bytes, device_s) = p.wait().unwrap();
+        assert_eq!(bytes, 8);
+        assert!(device_s >= 0.0, "device-side upload time rides back with the bytes");
+        d.handle.set_failed(FailureBehavior::Hung);
+        let p = d
+            .handle
+            .submit_load_weights(vec![], Duration::from_millis(80))
+            .unwrap();
+        assert!(p.wait().unwrap_err().to_string().contains("timed out"));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn submitted_ping_is_deadline_bounded() {
+        let d = SimDevice::spawn(12);
+        assert!(d.handle.submit_ping(Duration::from_secs(1)).unwrap().wait().unwrap());
+        d.handle.set_failed(FailureBehavior::Hung);
+        let t0 = Instant::now();
+        let p = d.handle.submit_ping(Duration::from_millis(80)).unwrap();
+        assert!(p.wait().unwrap_err().to_string().contains("timed out"));
+        assert!(t0.elapsed() < Duration::from_secs(2));
         d.handle.shutdown();
         d.join.join().unwrap();
     }

@@ -363,7 +363,9 @@ fn handle_faults(
                 // paused); it propagates out of the serving loop
                 let report = ReviveMoE::recover(&mut engine, &ann)
                     .map_err(|e| e.context(format!("recovering device {} failed", ann.device)))?;
-                let stall = report.total();
+                // the stall window is what serving *waited*: the pass's
+                // critical-path wall time, not its fanned-out work sum
+                let stall = report.wall();
                 engine.stats.record_stall(stall);
                 log.push(format!(
                     "tick {tick}: recovered device {} role={} kind={:?} migrated={} \

@@ -1,0 +1,193 @@
+//! Parallel-vs-serial recovery equivalence: the fanned-out recovery
+//! control plane (`RecoveryPolicy::serial_recovery = false`, the default)
+//! must produce the *same engine state* as the serialized baseline — same
+//! `RecoveryReport`/`ReviveReport` counts, identical post-recovery token
+//! streams — and a survivor that hangs mid-recompile must surface as a
+//! bounded deadline error that leaves the engine paused (instance-fatal
+//! per the `recover` contract), never a deadlock.
+//!
+//! Needs `make artifacts` (skipped loudly otherwise), like the other
+//! integration suites.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use revivemoe::cluster::{FailureBehavior, FaultLevel};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::recovery::{RecoveryReport, ReviveMoE, ReviveReport};
+use revivemoe::scheduler::{SeqId, Token};
+use revivemoe::workload;
+
+fn ready() -> bool {
+    Path::new("artifacts/hlo/manifest.json").exists()
+}
+
+fn inject(engine: &mut Engine, device: usize, behavior: FailureBehavior) {
+    engine.executors[&device].handle.set_failed(behavior);
+    engine
+        .plugin
+        .post_fault(device, FaultLevel::L6, behavior, "test-injected");
+}
+
+/// Boot `cfg`, put traffic on it, fail `device`, recover (optionally
+/// revive the device afterwards), and serve everything to completion.
+/// Returns the recovery report, the revival report if requested, and
+/// every request's decoded stream keyed by sequence id — the equivalence
+/// surface the serial/overlapped comparison asserts on.
+fn run_scenario(
+    mut cfg: DeploymentConfig,
+    serial: bool,
+    device: usize,
+    revive_after: bool,
+) -> (RecoveryReport, Option<ReviveReport>, BTreeMap<SeqId, Vec<Token>>) {
+    cfg.recovery.serial_recovery = serial;
+    let (mut engine, _bd) = Engine::boot(cfg).expect("boot");
+    for r in workload::gen_mixed(12, 19).expect("workload") {
+        engine.submit(r).expect("submit");
+    }
+    let mut done = Vec::new();
+    for _ in 0..3 {
+        done.extend(engine.step().expect("pre-failure step"));
+    }
+    inject(&mut engine, device, FailureBehavior::Erroring);
+    let ann = engine.detect_failure().expect("must detect");
+    let report = ReviveMoE::recover(&mut engine, &ann).expect("recover");
+    let revive_report = if revive_after {
+        for _ in 0..2 {
+            done.extend(engine.step().expect("post-recovery step"));
+        }
+        Some(ReviveMoE::revive(&mut engine, device).expect("revive"))
+    } else {
+        None
+    };
+    done.extend(engine.run_to_completion(500).expect("serve"));
+    engine.shutdown();
+    let streams: BTreeMap<SeqId, Vec<Token>> =
+        done.into_iter().map(|c| (c.seq_id, c.output)).collect();
+    assert_eq!(streams.len(), 12, "every request must complete");
+    (report, revive_report, streams)
+}
+
+fn assert_reports_equal(serial: &RecoveryReport, overlap: &RecoveryReport) {
+    assert_eq!(serial.role, overlap.role);
+    assert_eq!(serial.moe_recovery, overlap.moe_recovery);
+    assert_eq!(serial.migrated_sequences, overlap.migrated_sequences);
+    assert_eq!(serial.undone_block_ops, overlap.undone_block_ops);
+    assert_eq!(serial.requeued_unprefilled, overlap.requeued_unprefilled);
+    assert_eq!(serial.recompiled_graphs, overlap.recompiled_graphs);
+    assert_eq!(serial.masked_experts, overlap.masked_experts);
+    assert_eq!(serial.switched_device, overlap.switched_device);
+}
+
+#[test]
+fn attention_failure_parallel_matches_serial() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let (rs, _, streams_s) = run_scenario(cfg.clone(), true, 2, false);
+    let (rp, _, streams_p) = run_scenario(cfg, false, 2, false);
+    assert_reports_equal(&rs, &rp);
+    assert!(rp.migrated_sequences > 0, "the failed DP rank had work to migrate");
+    assert_eq!(
+        streams_s, streams_p,
+        "overlapped recovery diverged from the serial baseline"
+    );
+}
+
+#[test]
+fn role_switch_and_revive_parallel_match_serial() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // redundancy off + missing-experts forbidden forces the role switch —
+    // the case whose Generator weight reload the overlapped path keeps in
+    // flight behind XCCL recreation and the survivor recompiles
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.redundant_per_rank = 0;
+    cfg.recovery.allow_missing_experts = false;
+    let (rs, vs, streams_s) = run_scenario(cfg.clone(), true, 7, true);
+    let (rp, vp, streams_p) = run_scenario(cfg, false, 7, true);
+    assert_reports_equal(&rs, &rp);
+    assert!(rs.switched_device.is_some(), "a DP rank must have switched");
+    let (vs, vp) = (vs.unwrap(), vp.unwrap());
+    assert_eq!(vs.restored_moe_rank, vp.restored_moe_rank);
+    assert_eq!(vs.joined_attention, vp.joined_attention);
+    assert_eq!(vs.restored_dense_groups, vp.restored_dense_groups);
+    assert_eq!(vs.recompiled_graphs, vp.recompiled_graphs);
+    assert!(vp.joined_attention, "the revived device restores the consumed DP width");
+    assert_eq!(
+        streams_s, streams_p,
+        "overlapped role-switch/revival diverged from the serial baseline"
+    );
+}
+
+#[test]
+fn wall_accounting_bounded_by_work_on_both_paths() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = DeploymentConfig::disaggregated_default("artifacts");
+    for serial in [true, false] {
+        let (report, _, _) = run_scenario(cfg.clone(), serial, 2, false);
+        // wall never exceeds work by more than scheduling noise: the work
+        // sums count every rank's compile/read time, the wall only the
+        // critical path
+        let work = report.total().as_secs_f64();
+        let wall = report.wall().as_secs_f64();
+        assert!(wall > 0.0, "wall accounting must be populated (serial={serial})");
+        assert!(
+            wall <= work * 1.5 + 0.25,
+            "wall {wall:.3}s inconsistent with work {work:.3}s (serial={serial})"
+        );
+    }
+}
+
+#[test]
+fn hung_survivor_mid_recompile_times_out_and_leaves_engine_paused() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let (mut engine, _bd) =
+        Engine::boot(DeploymentConfig::disaggregated_default("artifacts")).expect("boot");
+    for r in workload::gen_mixed(8, 23).expect("workload") {
+        engine.submit(r).expect("submit");
+    }
+    engine.step().expect("healthy step");
+
+    // fail an attention rank (the fault recovery is for)...
+    inject(&mut engine, 2, FailureBehavior::Erroring);
+    let ann = engine.detect_failure().expect("must detect");
+    // ...then hang a survivor WITHOUT any annotation: the recompile
+    // fan-out hits it mid-sweep. Shorten every per-command deadline so
+    // the test is fast (correctness, not the constant, is what we assert).
+    for ex in engine.executors.values_mut() {
+        ex.handle.cmd_timeout = Duration::from_millis(300);
+    }
+    engine.executors[&3].handle.set_failed(FailureBehavior::Hung);
+
+    let t0 = Instant::now();
+    let err = ReviveMoE::recover(&mut engine, &ann)
+        .expect_err("a hung survivor must fail the pass, not wedge it");
+    let elapsed = t0.elapsed();
+    assert!(
+        err.to_string().contains("timed out"),
+        "expected a deadline error, got: {err}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "timeout must be deadline-bounded, took {elapsed:?}"
+    );
+    assert!(
+        engine.paused,
+        "a failed recovery pass is instance-fatal: the engine must stay paused"
+    );
+    assert!(!engine.recovering, "the re-entrancy guard must be released on error");
+    engine.shutdown();
+}

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Regenerate the recovery-latency perf baseline.
+#
+# Runs the serial-vs-overlapped recovery bench (fail + recover + revive)
+# over the 2/4/8-rank disaggregated shapes per RecompileScope and
+# refreshes BENCH_recovery_latency.json at the repo root (the bench also
+# writes rust/bench_results/recovery_latency.json).
+#
+# Usage: scripts/bench_recovery.sh [QUICK=1 for a smoke run]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ ! -f rust/artifacts/hlo/manifest.json ]; then
+    echo "ERROR: AOT artifacts missing — run \`make artifacts\` first" >&2
+    exit 1
+fi
+
+# a placeholder baseline is checked in, so existence proves nothing:
+# require the file's mtime to advance across the bench run
+before=$(stat -c %Y BENCH_recovery_latency.json 2>/dev/null || echo 0)
+
+(cd rust && cargo bench --bench recovery_latency)
+
+after=$(stat -c %Y BENCH_recovery_latency.json 2>/dev/null || echo 0)
+if [ "$after" -le "$before" ]; then
+    # the bench's repo-root write failed (it warns on stderr); fall back
+    # to the bench_results artifact it writes from inside rust/
+    cp rust/bench_results/recovery_latency.json BENCH_recovery_latency.json
+    echo "BENCH_recovery_latency.json copied from rust/bench_results/"
+fi
+echo "BENCH_recovery_latency.json refreshed:"
+head -c 400 BENCH_recovery_latency.json; echo
