@@ -1,14 +1,27 @@
 //! **Serve scenarios**: goodput and tail latency under live open-loop
-//! traffic with injected faults — ReviveMoE in-place recovery vs the
-//! cached-reinitialization baseline under *identical* seeded scenarios.
+//! traffic with injected faults — ReviveMoE in-place recovery (blocking
+//! *and* degraded-serving modes) vs the cached-reinitialization baseline
+//! under *identical* seeded scenarios.
 //!
 //! This is the online counterpart of `fig5_recovery_times`: instead of
 //! timing a recovery pass against an idle engine, each run drives the
 //! serving loop (`serve::run_scenario`) with Poisson arrivals, detects the
 //! scripted fault mid-stream, recovers while arrivals keep queuing, and
-//! drains. Reported per (scenario, strategy): completed/incomplete
-//! requests, recovery count, stall wall time, goodput (completed req/s),
-//! latency p99, TTFT/TPOT p50s — the Tarragon/FailSafe-style resilience
+//! drains. The three modes per scenario:
+//!
+//! - `revivemoe` — in-place recovery, blocking: every rank stalls for the
+//!   pass's wall time (the pre-degraded behavior, the A/B baseline);
+//! - `revivemoe-degraded` — fault-domain quarantine + the resumable
+//!   `RecoveryTask` driven one stage per tick: surviving DP ranks keep
+//!   decoding through attention-rank faults (`full_stall_ticks`,
+//!   `degraded_ticks`, and `degraded_tok_per_tick` quantify the gap);
+//! - `baseline_reinit` — tear down and reboot, restarting every
+//!   outstanding request.
+//!
+//! Reported per (scenario, mode): completed/incomplete requests, recovery
+//! count, stall wall time, degraded-window wall time, tick counters,
+//! goodput (completed req/s), latency p99 in wall ms *and* deterministic
+//! logical ticks, TTFT/TPOT p50s — the Tarragon/FailSafe-style resilience
 //! framing (goodput under continuous load with failures).
 //!
 //! Run: `cargo bench --bench serve_scenarios` (or
@@ -31,52 +44,75 @@ fn scenarios(quick: bool) -> Vec<Scenario> {
         Scenario::single_fault(seed).requests(n),
         Scenario::cascade(seed).requests(n),
         Scenario::fault_then_revive(seed).requests(n),
+        Scenario::fault_under_surge(seed).requests(n),
+        Scenario::cascade_while_degraded(seed).requests(n),
     ]
 }
+
+/// (strategy, degraded_serving, row label)
+const MODES: [(RecoveryStrategy, bool, &str); 3] = [
+    (RecoveryStrategy::ReviveMoE, false, "revivemoe"),
+    (RecoveryStrategy::ReviveMoE, true, "revivemoe-degraded"),
+    (RecoveryStrategy::BaselineReinit, false, "baseline_reinit"),
+];
 
 fn main() {
     common::ensure_artifacts();
     let quick = common::quick();
-    let strategies = [RecoveryStrategy::ReviveMoE, RecoveryStrategy::BaselineReinit];
 
     let mut rows: Vec<Json> = Vec::new();
-    println!("online fault scenarios: ReviveMoE vs baseline reinit\n");
+    println!("online fault scenarios: ReviveMoE (blocking | degraded) vs baseline reinit\n");
     println!(
-        "{:<14} {:<16} {:>5} {:>5} {:>4} {:>9} {:>9} {:>8} {:>8}",
-        "scenario", "strategy", "done", "inc", "rec", "stall_ms", "goodput", "e2e_p99", "tpot_ms"
+        "{:<16} {:<19} {:>5} {:>5} {:>4} {:>9} {:>9} {:>6} {:>9} {:>8} {:>9}",
+        "scenario",
+        "mode",
+        "done",
+        "inc",
+        "rec",
+        "stall_ms",
+        "degr_ms",
+        "dticks",
+        "goodput",
+        "e2e_p99",
+        "p99_ticks"
     );
     for scenario in scenarios(quick) {
-        for strategy in strategies {
-            let (engine, _bd) =
-                match Engine::boot(DeploymentConfig::disaggregated_default("artifacts")) {
-                    Ok(x) => x,
-                    Err(e) => {
-                        println!("{:<14} SKIP (boot: {e})", scenario.name);
-                        continue;
-                    }
-                };
+        for (strategy, degraded, label) in MODES {
+            let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+            cfg.recovery.degraded_serving = degraded;
+            let (engine, _bd) = match Engine::boot(cfg) {
+                Ok(x) => x,
+                Err(e) => {
+                    println!("{:<16} SKIP (boot: {e})", scenario.name);
+                    continue;
+                }
+            };
             let (engine, report) = match run_scenario(engine, &scenario, strategy) {
                 Ok(x) => x,
                 Err(e) => {
-                    println!("{:<14} {:<16} FAILED: {e}", scenario.name, strategy.name());
+                    println!("{:<16} {:<19} FAILED: {e}", scenario.name, label);
                     continue;
                 }
             };
             println!(
-                "{:<14} {:<16} {:>5} {:>5} {:>4} {:>9.0} {:>9.2} {:>8.1} {:>8.2}",
+                "{:<16} {:<19} {:>5} {:>5} {:>4} {:>9.0} {:>9.0} {:>6} {:>9.2} {:>8.1} {:>9.0}",
                 report.scenario,
-                report.strategy.name(),
+                label,
                 report.completed.len(),
                 report.incomplete,
                 report.recoveries.len(),
                 report.stats.stall_total_ms(),
+                report.stats.degraded_total_ms(),
+                report.stats.degraded_ticks,
                 report.stats.goodput_req_s(),
                 report.e2e_latency_pct(0.99),
-                report.stats.tpot_p50(),
+                report.e2e_latency_ticks_pct(0.99),
             );
             rows.push(obj(vec![
                 ("scenario", s(&report.scenario)),
                 ("strategy", s(report.strategy.name())),
+                ("mode", s(label)),
+                ("degraded_serving", Json::Bool(degraded)),
                 ("submitted", num(report.submitted as f64)),
                 ("completed", num(report.completed.len() as f64)),
                 ("incomplete", num(report.incomplete as f64)),
@@ -85,13 +121,24 @@ fn main() {
                 ("requests_restarted", num(report.stats.requests_restarted as f64)),
                 ("stall_total_ms", num(report.stats.stall_total_ms())),
                 ("stall_max_ms", num(report.stats.stall_max_ms())),
+                ("degraded_total_ms", num(report.stats.degraded_total_ms())),
+                ("full_stall_ticks", num(report.stats.full_stall_ticks as f64)),
+                ("degraded_ticks", num(report.stats.degraded_ticks as f64)),
+                ("degraded_tokens", num(report.stats.degraded_tokens as f64)),
+                ("degraded_tok_per_tick", num(report.stats.degraded_tok_per_tick())),
                 ("goodput_req_s", num(report.stats.goodput_req_s())),
                 ("throughput_tok_s", num(report.stats.throughput_tok_s())),
                 // e2e latencies are restart-inclusive (a reinit-restarted
                 // request keeps its original arrival clock); the stats
-                // percentiles measure each engine-life separately
+                // percentiles measure each engine-life separately. The
+                // `_ticks` variants are logical-tick latencies — free of
+                // wall-clock noise, though a degraded run's cascade
+                // promotion / held revivals happen at wall-dependent
+                // ticks (see serve.rs module docs for the replay caveat).
                 ("latency_e2e_p50_ms", num(report.e2e_latency_pct(0.50))),
                 ("latency_e2e_p99_ms", num(report.e2e_latency_pct(0.99))),
+                ("latency_e2e_p50_ticks", num(report.e2e_latency_ticks_pct(0.50))),
+                ("latency_e2e_p99_ticks", num(report.e2e_latency_ticks_pct(0.99))),
                 ("latency_p50_ms", num(report.stats.latency_p50())),
                 ("latency_p99_ms", num(report.stats.latency_p99())),
                 ("ttft_p50_ms", num(report.stats.ttft_p50())),

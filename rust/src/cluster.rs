@@ -123,9 +123,18 @@ impl DevicePlugin {
     /// multi-failure recovery processes faults in a deterministic arrival
     /// order (the annotation map itself is unordered).
     pub fn poll(&self) -> Option<FaultAnnotation> {
+        self.poll_excluding(&[])
+    }
+
+    /// [`DevicePlugin::poll`] ignoring the annotations of `skip` devices.
+    /// Degraded-mode serving uses this to keep already-condemned cascade
+    /// faults (queued behind the active recovery) from re-surfacing as new
+    /// faults every tick.
+    pub fn poll_excluding(&self, skip: &[DeviceId]) -> Option<FaultAnnotation> {
         let st = self.inner.lock().unwrap();
         st.annotations
             .values()
+            .filter(|a| !skip.contains(&a.device))
             .max_by_key(|a| (a.level, std::cmp::Reverse(a.event_id)))
             .cloned()
     }
@@ -301,6 +310,16 @@ mod tests {
         assert_eq!(pending.len(), 2, "L2 needs no recovery");
         assert_eq!(pending[0].device, 7);
         assert_eq!(pending[1].device, 3);
+    }
+
+    #[test]
+    fn poll_excluding_skips_condemned_devices() {
+        let p = DevicePlugin::new();
+        p.post_fault(5, FaultLevel::L6, FailureBehavior::Erroring, "active");
+        p.post_fault(2, FaultLevel::L5, FailureBehavior::Erroring, "queued");
+        assert_eq!(p.poll().unwrap().device, 5);
+        assert_eq!(p.poll_excluding(&[5]).unwrap().device, 2);
+        assert!(p.poll_excluding(&[5, 2]).is_none());
     }
 
     #[test]

@@ -101,6 +101,20 @@ pub struct RecoveryPolicy {
     /// fails revival after this long instead of stalling the serve tick
     /// loop for the old hardcoded 60 s.
     pub revive_spawn_timeout_ms: u64,
+    /// Serve *through* recovery at degraded capacity: an attention-rank
+    /// fault quarantines only its own DP rank
+    /// ([`crate::engine::FaultDomainKind::AttentionRank`]) while every
+    /// other rank keeps admitting, prefilling, and decoding, and the
+    /// recovery pass advances one stage per serve tick
+    /// ([`crate::engine::Engine::poll_recovery`]) instead of blocking the
+    /// tick loop. Faults touching the shared expert/dense plane still
+    /// stall the whole instance until their domain is rebuilt. Off
+    /// (default) = the pre-degraded blocking path, kept as the A/B
+    /// baseline exactly like [`RecoveryPolicy::serial_recovery`]:
+    /// `tests/integration_serve_degraded.rs` asserts the two modes produce
+    /// identical token streams and `benches/serve_scenarios.rs` measures
+    /// the goodput gap.
+    pub degraded_serving: bool,
 }
 
 impl Default for RecoveryPolicy {
@@ -113,6 +127,7 @@ impl Default for RecoveryPolicy {
             missing_experts_min_ep: 4,
             serial_recovery: false,
             revive_spawn_timeout_ms: 10_000,
+            degraded_serving: false,
         }
     }
 }

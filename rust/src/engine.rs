@@ -15,10 +15,19 @@
 //! round-trips (the A/B baseline used by the overlap-correctness tests
 //! and `benches/decode_throughput.rs`).
 //!
+//! Failure handling is *partitioned*, not global: each device carries a
+//! [`DeviceHealth`] and recovery quarantines only the failed device's
+//! [`FaultDomainKind`]. An attention-rank fault leaves every other DP rank
+//! admitting, prefilling, and decoding while a resumable
+//! [`crate::recovery::RecoveryTask`] advances one stage per
+//! [`Engine::poll_recovery`] call (degraded-mode serving); faults touching
+//! the shared expert/dense plane block the instance
+//! ([`Engine::serving_blocked`]) until the domain is rebuilt.
+//!
 //! `Engine::boot` produces the Figure-1 style initialization breakdown;
 //! every timing category matches Table 1.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::time::{Duration, Instant};
 
 use crate::artifacts::ArtifactStore;
@@ -31,6 +40,7 @@ use crate::config::{DeployMode, DeploymentConfig, ModelMeta};
 use crate::executor::{artifact_set, out1, out4, router_out, Executor, PendingWeights};
 use crate::metrics::{Breakdown, Category, ServingStats};
 use crate::moe::{DenseGroups, ExpertMap};
+use crate::recovery::{RecoveryPoll, RecoveryReport, RecoveryTask};
 use crate::runtime::{CompileStat, ExecWave, Pending};
 use crate::scheduler::{SeqId, SeqState, Sequence, Token};
 use crate::tensor::Tensor;
@@ -70,6 +80,40 @@ pub enum StepOutcome {
     /// no token was recorded for the aborted step, so
     /// `ReviveMoE::recover` + re-decode resumes cleanly.
     Preempted(FaultAnnotation),
+}
+
+/// Which serving resources a device fault takes down with it — the
+/// distinction that decides whether recovery can serve *through* the
+/// failure at degraded capacity or must stall the whole instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDomainKind {
+    /// Only the device's own DP attention rank is lost: its sequences
+    /// migrate and every other DP rank keeps admitting, prefilling, and
+    /// decoding while the domain is rebuilt (capacity degrades, serving
+    /// does not stop).
+    AttentionRank,
+    /// The shared expert/dense data plane is touched (a MoE rank, a dense
+    /// TP shard, or a collocated device): every decoded token crosses it,
+    /// so serving must fully stall until the domain is rebuilt.
+    ExpertPlane,
+}
+
+/// Per-device health driving the serving partition (the tentpole of the
+/// degraded-serving refactor). Devices without an entry are healthy; the
+/// serve loops skip anything else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceHealth {
+    /// Serving normally.
+    Healthy,
+    /// Excluded from serving while the in-flight [`RecoveryTask`] rebuilds
+    /// its fault domain. An `ExpertPlane` quarantine blocks every rank
+    /// ([`Engine::serving_blocked`]); an `AttentionRank` quarantine only
+    /// removes the one rank.
+    Quarantined(FaultDomainKind),
+    /// Known-failed but not yet recovered — a cascade fault queued behind
+    /// the active recovery. Skipped by scheduling, decode, heartbeat
+    /// sweeps, and graph work until its own recovery pass runs.
+    Condemned,
 }
 
 /// Engine-side bookkeeping for one in-flight request. The prompt is NOT
@@ -120,8 +164,14 @@ pub struct Engine {
     /// `monitor.interval`; annotation polls are free and happen every
     /// `detect_failure` call).
     last_sweep: Option<Instant>,
-    /// True while the engine is paused for recovery; `step` refuses to run.
-    pub paused: bool,
+    /// Per-device health (absent = [`DeviceHealth::Healthy`]). Replaces
+    /// the old global `paused` flag: recovery quarantines the failed
+    /// device's *fault domain* instead of freezing every rank, and `step`
+    /// partitions work around the entries.
+    health: BTreeMap<DeviceId, DeviceHealth>,
+    /// The in-flight degraded-mode recovery, advanced one stage per
+    /// [`Engine::poll_recovery`] call.
+    recovery_task: Option<RecoveryTask>,
     /// Re-entrancy guard: true while a recovery pass is executing. A
     /// second fault arriving during recovery must *queue* (the plugin
     /// keeps its annotation) and recover afterwards, never nest.
@@ -329,7 +379,8 @@ impl Engine {
             next_seq: 1,
             epoch,
             last_sweep: None,
-            paused: false,
+            health: BTreeMap::new(),
+            recovery_task: None,
             recovering: false,
         };
         bd.add(Category::Other, t0.elapsed());
@@ -392,7 +443,7 @@ impl Engine {
         self.attn_order
             .iter()
             .copied()
-            .filter(|d| !flagged.contains(d))
+            .filter(|d| !flagged.contains(d) && self.rank_serving(*d))
             .min_by_key(|&d| self.attn_load_of(d))
     }
 
@@ -458,16 +509,195 @@ impl Engine {
             .sum()
     }
 
+    // -- device health / degraded-mode recovery -------------------------------
+
+    /// Health of one device ([`DeviceHealth::Healthy`] when untracked).
+    pub fn device_health(&self, d: DeviceId) -> DeviceHealth {
+        self.health.get(&d).copied().unwrap_or(DeviceHealth::Healthy)
+    }
+
+    /// Set a device's health (setting `Healthy` drops the entry).
+    pub fn set_device_health(&mut self, d: DeviceId, h: DeviceHealth) {
+        match h {
+            DeviceHealth::Healthy => {
+                self.health.remove(&d);
+            }
+            other => {
+                self.health.insert(d, other);
+            }
+        }
+    }
+
+    /// Which fault domain a failure of `d` takes down: an attention-only
+    /// device loses just its DP rank; anything hosting experts or dense
+    /// shards (including every collocated device) takes the shared expert
+    /// plane with it. Consults the *current* role assignments, so call it
+    /// before recovery strips the device.
+    pub fn fault_domain_of(&self, d: DeviceId) -> FaultDomainKind {
+        let (is_attn, moe_rank, hosts_dense) = self.device_role(d);
+        if is_attn && moe_rank.is_none() && !hosts_dense {
+            FaultDomainKind::AttentionRank
+        } else {
+            FaultDomainKind::ExpertPlane
+        }
+    }
+
+    /// Whether serving must fully stall: true while any expert-plane
+    /// device is quarantined or condemned (every token crosses that
+    /// plane). Attention-rank entries never block the instance — the
+    /// remaining DP ranks serve around them.
+    pub fn serving_blocked(&self) -> bool {
+        self.health.iter().any(|(d, h)| match h {
+            DeviceHealth::Quarantined(scope) => *scope == FaultDomainKind::ExpertPlane,
+            DeviceHealth::Condemned => self.fault_domain_of(*d) == FaultDomainKind::ExpertPlane,
+            DeviceHealth::Healthy => false,
+        })
+    }
+
+    /// Whether rank `d` participates in this tick's serving partition.
+    fn rank_serving(&self, d: DeviceId) -> bool {
+        self.device_health(d) == DeviceHealth::Healthy
+    }
+
+    /// Start a resumable recovery for `ann` and run its Drain stage
+    /// immediately (quarantine, migration, undo, weight-integrity
+    /// submission, executor teardown), so engine state is consistent
+    /// before the next serving step. Later stages advance one per
+    /// [`Engine::poll_recovery`] call. An `Err` here is instance-fatal
+    /// exactly like one from the blocking [`crate::recovery::ReviveMoE::recover`]:
+    /// the quarantine stays in place.
+    pub fn begin_recovery(&mut self, ann: &FaultAnnotation) -> Result<()> {
+        anyhow::ensure!(
+            !self.recovering,
+            "recovery already in progress; queue the fault and retry after it completes"
+        );
+        self.recovering = true;
+        let mut task = RecoveryTask::new(ann.clone());
+        match task.poll(self, false) {
+            Ok(RecoveryPoll::InProgress) => {
+                self.recovery_task = Some(task);
+                Ok(())
+            }
+            // the first poll runs Drain, which never completes a pass —
+            // reaching this arm means the stage machine changed shape and
+            // the report above was about to be silently discarded
+            Ok(RecoveryPoll::Complete(_)) => {
+                self.recovering = false;
+                anyhow::bail!("recovery completed on its first poll; Drain must not finish a pass")
+            }
+            Err(e) => {
+                self.fail_recovery(task.device());
+                Err(e)
+            }
+        }
+    }
+
+    /// Advance the in-flight recovery by one stage. `Ok(None)` while work
+    /// remains (or none is in flight); `Ok(Some(report))` on completion.
+    /// An `Err` is instance-fatal: the task is dropped, the guard
+    /// released, and the quarantine *escalated to expert-plane scope* so
+    /// a partially-recovered instance can never keep serving.
+    pub fn poll_recovery(&mut self) -> Result<Option<RecoveryReport>> {
+        self.poll_recovery_inner(false)
+    }
+
+    /// Like [`Engine::poll_recovery`] but with blocking waits. Used when
+    /// [`Engine::serving_blocked`] is already true (expert-plane
+    /// quarantine): nothing can serve between polls anyway, so spinning
+    /// non-blocking `try_wait`s once per tick would only stretch the
+    /// stall across wall time the blocking path finishes in one go.
+    pub fn poll_recovery_blocking(&mut self) -> Result<Option<RecoveryReport>> {
+        self.poll_recovery_inner(true)
+    }
+
+    fn poll_recovery_inner(&mut self, block: bool) -> Result<Option<RecoveryReport>> {
+        let Some(mut task) = self.recovery_task.take() else {
+            return Ok(None);
+        };
+        match task.poll(self, block) {
+            Ok(RecoveryPoll::InProgress) => {
+                self.recovery_task = Some(task);
+                Ok(None)
+            }
+            Ok(RecoveryPoll::Complete(report)) => {
+                self.recovering = false;
+                Ok(Some(report))
+            }
+            Err(e) => {
+                self.fail_recovery(task.device());
+                Err(e)
+            }
+        }
+    }
+
+    /// Roll back the block-table state of an *aborted* step on every
+    /// attention rank (§3.3): undo uncommitted page ops, audit, and
+    /// demote sequences whose prefill reservations were just rolled away
+    /// (Running without KV) back to the waiting queue. Returns
+    /// `(undone_ops, requeued_unprefilled)`. A no-op after a fully
+    /// committed step (its `begin_step` already cleared the logs), so it
+    /// is always safe to call when a fault preempts a tick — the
+    /// recovery Drain stage and the degraded-mode cascade-condemn path
+    /// both run it *before* the next step's `begin_step` wipes the logs.
+    pub fn rollback_aborted_step(&mut self) -> Result<(usize, usize)> {
+        let mut undone = 0;
+        let mut requeued = 0;
+        let mut i = 0;
+        while i < self.attn_order.len() {
+            let d = self.attn_order[i];
+            i += 1;
+            let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+            undone += a.blocks.undo_step()?;
+            a.blocks.audit()?;
+            let (sched, blocks) = (&mut a.sched, &a.blocks);
+            requeued += sched.demote_running(|s| blocks.table(s.id).is_none());
+        }
+        Ok((undone, requeued))
+    }
+
+    /// Instance-fatal recovery failure: release the re-entrancy guard and
+    /// escalate the failed device's quarantine to expert-plane scope. An
+    /// attention-rank quarantine must not survive the escalation — the
+    /// pass died half-way (domains possibly rebuilt, graphs possibly
+    /// dropped), and serving over that state would corrupt sequences.
+    pub(crate) fn fail_recovery(&mut self, device: DeviceId) {
+        self.recovering = false;
+        self.set_device_health(
+            device,
+            DeviceHealth::Quarantined(FaultDomainKind::ExpertPlane),
+        );
+    }
+
+    /// Whether a degraded-mode recovery is currently in flight.
+    pub fn recovery_in_flight(&self) -> bool {
+        self.recovery_task.is_some()
+    }
+
     // -- serving loop ----------------------------------------------------------
 
-    /// One global iteration: admissions (+prefill) then one decode step.
-    /// Returns completions.
+    /// One global iteration: admissions (+prefill) then one decode step
+    /// across every serving (healthy) DP rank. Returns completions.
+    ///
+    /// Quarantined and condemned ranks are simply excluded from the
+    /// partition; only an expert-plane quarantine (or the blocking A/B
+    /// path, which quarantines every fault at that scope) refuses the
+    /// whole step.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
-        anyhow::ensure!(!self.paused, "engine is paused for recovery");
+        anyhow::ensure!(
+            !self.serving_blocked(),
+            "engine is paused for recovery (expert-plane fault domain quarantined)"
+        );
         let mut done = Vec::new();
 
-        // admissions + prefill (per DP rank)
-        for &d in &self.attn_order.clone() {
+        // admissions + prefill (per serving DP rank); indexed iteration —
+        // attn_order is stable across a step, so no per-tick clone
+        let mut i = 0;
+        while i < self.attn_order.len() {
+            let d = self.attn_order[i];
+            i += 1;
+            if !self.rank_serving(d) {
+                continue;
+            }
             let admitted = {
                 let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
                 a.sched.admit()
@@ -483,7 +713,13 @@ impl Engine {
         self.stats.decode_steps += 1;
 
         // reap completions
-        for &d in &self.attn_order.clone() {
+        let mut i = 0;
+        while i < self.attn_order.len() {
+            let d = self.attn_order[i];
+            i += 1;
+            if !self.rank_serving(d) {
+                continue;
+            }
             let finished = {
                 let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
                 a.sched.reap()
@@ -657,6 +893,9 @@ impl Engine {
     fn decode_batches(&self) -> Vec<(DeviceId, Vec<SeqId>, usize)> {
         let mut out = Vec::new();
         for &d in &self.attn_order {
+            if !self.rank_serving(d) {
+                continue;
+            }
             let Some(a) = self.executors[&d].attn.as_ref() else { continue };
             let ids: Vec<SeqId> = a
                 .sched
@@ -1013,7 +1252,16 @@ impl Engine {
     /// tick — the serve loop does — pays ping traffic at the configured
     /// cadence rather than per tick. The first call always sweeps.
     pub fn detect_failure(&mut self) -> Option<FaultAnnotation> {
-        if let Some(ann) = self.plugin.poll() {
+        // condemned devices are already queued behind the active recovery:
+        // their annotations are known, not new faults, and re-surfacing
+        // them every tick would preempt every degraded serving step
+        let condemned: Vec<DeviceId> = self
+            .health
+            .iter()
+            .filter(|(_, h)| **h == DeviceHealth::Condemned)
+            .map(|(d, _)| *d)
+            .collect();
+        if let Some(ann) = self.plugin.poll_excluding(&condemned) {
             if ann.level.needs_recovery() {
                 return Some(ann);
             }
@@ -1024,7 +1272,12 @@ impl Engine {
             return None;
         }
         self.last_sweep = Some(Instant::now());
-        let mut devices: Vec<DeviceId> = self.executors.keys().copied().collect();
+        let mut devices: Vec<DeviceId> = self
+            .executors
+            .keys()
+            .copied()
+            .filter(|d| self.device_health(*d) == DeviceHealth::Healthy)
+            .collect();
         // deterministic sweep order: with several devices down at once the
         // heartbeat must always flag the same one first (scenario replays
         // depend on it; the executor map itself is unordered)

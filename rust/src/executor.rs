@@ -29,9 +29,11 @@ use crate::Result;
 /// survivor recompile sweep.
 pub struct PendingWeights {
     loads: Vec<Pending<(usize, f64)>>,
+    done: WeightLoadStats,
 }
 
 /// Aggregate outcome of one role's weight loads.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct WeightLoadStats {
     /// Total bytes moved onto the device.
     pub bytes: usize,
@@ -42,6 +44,10 @@ pub struct WeightLoadStats {
 }
 
 impl PendingWeights {
+    fn of(loads: Vec<Pending<(usize, f64)>>) -> Self {
+        PendingWeights { loads, done: WeightLoadStats::default() }
+    }
+
     /// Number of load commands queued on the device (later submissions to
     /// the same device scale their deadlines past these).
     pub fn queued_cmds(&self) -> usize {
@@ -49,14 +55,33 @@ impl PendingWeights {
     }
 
     /// Await every load; returns bytes moved + device-side upload time.
-    pub fn wait(self) -> Result<WeightLoadStats> {
-        let mut stats = WeightLoadStats { bytes: 0, device_s: 0.0 };
-        for p in self.loads {
+    pub fn wait(mut self) -> Result<WeightLoadStats> {
+        for p in std::mem::take(&mut self.loads) {
             let (b, s) = p.wait()?;
-            stats.bytes += b;
-            stats.device_s += s;
+            self.done.bytes += b;
+            self.done.device_s += s;
         }
-        Ok(stats)
+        Ok(self.done)
+    }
+
+    /// Non-blocking poll: folds finished loads into the running totals and
+    /// returns `Some(stats)` once every load has landed (`None` while any
+    /// is still in flight). Device errors and submission-time deadlines
+    /// surface exactly as from [`PendingWeights::wait`]. The resumable
+    /// recovery task advances its WeightReload stage on this each tick.
+    pub fn try_wait(&mut self) -> Result<Option<WeightLoadStats>> {
+        let mut still = Vec::with_capacity(self.loads.len());
+        for mut p in std::mem::take(&mut self.loads) {
+            match p.try_wait()? {
+                Some((b, s)) => {
+                    self.done.bytes += b;
+                    self.done.device_s += s;
+                }
+                None => still.push(p),
+            }
+        }
+        self.loads = still;
+        if self.loads.is_empty() { Ok(Some(self.done)) } else { Ok(None) }
     }
 }
 
@@ -146,7 +171,7 @@ impl Executor {
             let deadline = self.queued_deadline(queued_ahead + i);
             loads.push(self.handle.submit_load_weights(b, deadline)?);
         }
-        Ok(PendingWeights { loads })
+        Ok(PendingWeights::of(loads))
     }
 
     /// Attach the attention-role host state (scheduler, block manager, KV
@@ -188,7 +213,7 @@ impl Executor {
     ) -> Result<PendingWeights> {
         let batch = store.load_expert_slots(meta, slots)?;
         let p = self.handle.submit_load_weights(batch, self.queued_deadline(queued_ahead))?;
-        Ok(PendingWeights { loads: vec![p] })
+        Ok(PendingWeights::of(vec![p]))
     }
 
     /// Attach the MoE-role host state (slot list). Host-only.
@@ -222,7 +247,7 @@ impl Executor {
     ) -> Result<PendingWeights> {
         let batch = store.load_dense_shard(meta, shard, tp)?;
         let p = self.handle.submit_load_weights(batch, self.queued_deadline(queued_ahead))?;
-        Ok(PendingWeights { loads: vec![p] })
+        Ok(PendingWeights::of(vec![p]))
     }
 
     /// Attach the dense-shard host state. Host-only.

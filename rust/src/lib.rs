@@ -59,8 +59,8 @@ pub mod weights;
 pub mod workload;
 
 pub use config::{DeployMode, DeploymentConfig, ModelMeta, RecoveryPolicy};
-pub use engine::Engine;
-pub use recovery::{RecoveryReport, ReviveMoE};
+pub use engine::{DeviceHealth, Engine, FaultDomainKind};
+pub use recovery::{RecoveryPoll, RecoveryReport, RecoveryStage, RecoveryTask, ReviveMoE};
 pub use scenario::Scenario;
 pub use serve::{run_scenario, RecoveryStrategy, ServeReport};
 

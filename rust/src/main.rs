@@ -4,13 +4,17 @@
 //!   revivemoe [--artifacts DIR] [--mode disaggregated|collocated] <command>
 //!
 //! Commands:
-//!   serve     [--scenario NAME] [--strategy revivemoe|reinit]
+//!   serve     [--scenario NAME] [--strategy revivemoe|reinit] [--degraded]
 //!             [--rate R] [--requests N] [--ticks T] [--seed S] [--log]
 //!                                            online open-loop serving under
 //!                                            a deterministic fault scenario
 //!                                            (steady | single-fault |
 //!                                            cascade | fault-revive |
-//!                                            rate-surge)
+//!                                            rate-surge | fault-surge |
+//!                                            cascade-degraded); --degraded
+//!                                            serves through recovery at
+//!                                            reduced capacity instead of
+//!                                            stalling the tick loop
 //!   failover  [--device D] [--requests N] [--hung]
 //!                                            serve, inject a failure,
 //!                                            recover with ReviveMoE, finish
@@ -116,6 +120,10 @@ fn main() -> Result<()> {
                 Some("reinit" | "baseline_reinit") => RecoveryStrategy::BaselineReinit,
                 _ => RecoveryStrategy::ReviveMoE,
             };
+            let mut cfg = cfg;
+            if args.flag_bool("degraded") {
+                cfg.recovery.degraded_serving = true;
+            }
             let (engine, bd) = Engine::boot(cfg)?;
             println!("{}", bd.render("boot breakdown"));
             let (engine, report) = run_scenario(engine, &scenario, strategy)?;

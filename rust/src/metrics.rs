@@ -238,11 +238,23 @@ pub struct ServingStats {
     pub recoveries: usize,
     /// Requests restarted from scratch by a baseline reinitialization.
     pub requests_restarted: usize,
+    /// Ticks during which no rank could serve: the expert-plane fault
+    /// domain was quarantined, so the tick produced nothing (degraded
+    /// mode only; the blocking path stalls inside one tick and files a
+    /// wall window instead).
+    pub full_stall_ticks: u64,
+    /// Ticks served at reduced capacity while a recovery was in flight —
+    /// the healthy DP ranks kept admitting, prefilling, and decoding.
+    pub degraded_ticks: u64,
+    /// Tokens decoded during degraded ticks: the work a blocking recovery
+    /// would have thrown away (the degraded-goodput numerator).
+    pub degraded_tokens: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     tpot_ms: Vec<f64>,
     decode_step_ms: Vec<f64>,
     stall_ms: Vec<f64>,
+    degraded_ms: Vec<f64>,
     started: Option<Instant>,
     /// Measured wall-clock window (accumulated across start/stop pairs).
     pub wall: Duration,
@@ -283,21 +295,60 @@ impl ServingStats {
         }
     }
 
-    /// Record one recovery-induced stall window (engine paused or, for
-    /// the reinit baseline, being rebooted).
+    /// Record one recovery-induced *full* stall window (engine blocked or,
+    /// for the reinit baseline, being rebooted — no rank served).
     pub fn record_stall(&mut self, stall: Duration) {
         self.recoveries += 1;
         self.stall_ms.push(stall.as_secs_f64() * 1e3);
     }
 
-    /// Total stalled wall time in milliseconds.
+    /// Record one *degraded* recovery window: the pass's critical-path
+    /// wall, during which surviving ranks kept serving instead of
+    /// stalling. Counted as a recovery but kept out of
+    /// [`ServingStats::stall_total_ms`] — that figure means "no one was
+    /// served", which is exactly what degraded mode avoids.
+    pub fn record_degraded_recovery(&mut self, wall: Duration) {
+        self.recoveries += 1;
+        self.degraded_ms.push(wall.as_secs_f64() * 1e3);
+    }
+
+    /// One tick during which the expert-plane quarantine blocked serving.
+    pub fn record_full_stall_tick(&mut self) {
+        self.full_stall_ticks += 1;
+    }
+
+    /// One tick served at degraded capacity; `tokens` is how many tokens
+    /// the surviving ranks decoded in it.
+    pub fn record_degraded_tick(&mut self, tokens: usize) {
+        self.degraded_ticks += 1;
+        self.degraded_tokens += tokens;
+    }
+
+    /// Total *fully stalled* wall time in milliseconds (blocking
+    /// recoveries, reinits, revivals).
     pub fn stall_total_ms(&self) -> f64 {
         self.stall_ms.iter().sum()
     }
 
-    /// The longest single stall window in milliseconds.
+    /// The longest single full-stall window in milliseconds.
     pub fn stall_max_ms(&self) -> f64 {
         self.stall_ms.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Total wall time spent in *degraded* recovery windows (serving
+    /// continued throughout), in milliseconds.
+    pub fn degraded_total_ms(&self) -> f64 {
+        self.degraded_ms.iter().sum()
+    }
+
+    /// Degraded goodput: tokens decoded per degraded tick. Zero when no
+    /// degraded tick was served. Compare against the steady-state
+    /// tokens-per-tick to see how much capacity the quarantine cost.
+    pub fn degraded_tok_per_tick(&self) -> f64 {
+        if self.degraded_ticks == 0 {
+            return 0.0;
+        }
+        self.degraded_tokens as f64 / self.degraded_ticks as f64
     }
 
     /// Wall time of one global decode step (all ranks). The overlap work
@@ -387,7 +438,9 @@ impl ServingStats {
             "requests={} tokens={} steps={} prefills={} wall={:.2}s \
              tput={:.1} tok/s goodput={:.2} req/s p50={:.1}ms p99={:.1}ms \
              ttft_p50={:.1}ms tpot_p50={:.2}ms step_p50={:.2}ms \
-             recoveries={} stall={:.0}ms dispatched={}B combined={}B",
+             recoveries={} stall={:.0}ms degraded={:.0}ms \
+             full_stall_ticks={} degraded_ticks={} degraded_tok/tick={:.2} \
+             dispatched={}B combined={}B",
             self.requests_completed,
             self.tokens_generated,
             self.decode_steps,
@@ -402,6 +455,10 @@ impl ServingStats {
             self.decode_step_p50(),
             self.recoveries,
             self.stall_total_ms(),
+            self.degraded_total_ms(),
+            self.full_stall_ticks,
+            self.degraded_ticks,
+            self.degraded_tok_per_tick(),
             self.bytes_dispatched,
             self.bytes_combined,
         )
@@ -480,6 +537,29 @@ mod tests {
         assert!((s.stall_max_ms() - 120.0).abs() < 1e-9);
         let r = s.report();
         assert!(r.contains("recoveries=2"));
+    }
+
+    #[test]
+    fn degraded_accounting_separates_from_full_stalls() {
+        let mut s = ServingStats::default();
+        s.record_stall(Duration::from_millis(100));
+        s.record_degraded_recovery(Duration::from_millis(40));
+        // a degraded recovery counts as a recovery but not as stall time
+        assert_eq!(s.recoveries, 2);
+        assert!((s.stall_total_ms() - 100.0).abs() < 1e-9);
+        assert!((s.degraded_total_ms() - 40.0).abs() < 1e-9);
+
+        assert_eq!(s.degraded_tok_per_tick(), 0.0, "no degraded ticks yet");
+        s.record_full_stall_tick();
+        s.record_degraded_tick(3);
+        s.record_degraded_tick(5);
+        assert_eq!(s.full_stall_ticks, 1);
+        assert_eq!(s.degraded_ticks, 2);
+        assert_eq!(s.degraded_tokens, 8);
+        assert!((s.degraded_tok_per_tick() - 4.0).abs() < 1e-9);
+        let r = s.report();
+        assert!(r.contains("degraded_ticks=2"));
+        assert!(r.contains("full_stall_ticks=1"));
     }
 
     #[test]

@@ -32,6 +32,20 @@
 //! `RecoveryPolicy::serial_recovery` restores the one-rank-at-a-time walk
 //! as the A/B baseline (`benches/recovery_latency.rs` measures the gap;
 //! `tests/integration_recovery_overlap.rs` asserts state equivalence).
+//!
+//! # The resumable state machine (PR 4)
+//!
+//! The pass itself is a [`RecoveryTask`]: the Fig-3 procedure as explicit
+//! [`RecoveryStage`]s (Drain → DomainRebuild → Recompile → WeightReload →
+//! Resume) whose `poll()` advances on the already-in-flight `Pending`
+//! handles instead of blocking on them. [`ReviveMoE::recover`] drives it
+//! to completion with blocking waits (the classic call); with
+//! `RecoveryPolicy::degraded_serving` on, the serve loop drives the same
+//! machine one stage per tick via `Engine::poll_recovery` while the
+//! healthy DP ranks keep decoding — the failed device is *quarantined*
+//! per its fault domain ([`crate::engine::DeviceHealth`] /
+//! [`crate::engine::FaultDomainKind`]) rather than the whole engine
+//! being paused.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
@@ -39,7 +53,7 @@ use std::time::{Duration, Instant};
 use crate::cluster::{DeviceId, FaultAnnotation};
 use crate::comms::{ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, RecompileScope};
-use crate::engine::Engine;
+use crate::engine::{DeviceHealth, Engine, FaultDomainKind};
 use crate::executor::{artifact_set, Executor, PendingWeights};
 use crate::metrics::{Breakdown, Category};
 use crate::moe::{ExpertId, FailOutcome};
@@ -148,257 +162,38 @@ impl ReviveMoE {
     /// by this pass (no scheduling onto them, no graph work on them).
     ///
     /// An `Err` from this function is **instance-fatal**: the engine is
-    /// deliberately left paused (serving over half-recovered state would
-    /// corrupt sequences), and the caller's options are a full
+    /// deliberately left quarantined (serving over half-recovered state
+    /// would corrupt sequences), and the caller's options are a full
     /// [`baseline_reinit`] or shutdown. It is not retryable in place.
+    ///
+    /// Internally this drives a [`RecoveryTask`] to completion with
+    /// blocking waits — the same state machine the degraded-serving path
+    /// advances one stage per tick via
+    /// [`crate::engine::Engine::poll_recovery`] — so the two paths cannot
+    /// diverge in what they do, only in when they wait.
     pub fn recover(engine: &mut Engine, ann: &FaultAnnotation) -> Result<RecoveryReport> {
         anyhow::ensure!(
             !engine.recovering,
             "recovery already in progress; queue the fault and retry after it completes"
         );
         engine.recovering = true;
-        let out = Self::recover_locked(engine, ann);
-        engine.recovering = false;
-        out
-    }
-
-    fn recover_locked(engine: &mut Engine, ann: &FaultAnnotation) -> Result<RecoveryReport> {
-        let mut bd = Breakdown::new();
-        let failed = ann.device;
-        let (is_attn, moe_rank, hosts_dense) = engine.device_role(failed);
-        anyhow::ensure!(
-            is_attn || moe_rank.is_some(),
-            "device {failed} plays no role in this deployment"
-        );
-        let role = match (is_attn, moe_rank) {
-            (true, Some(_)) => "collocated",
-            (true, None) => "attention",
-            (false, Some(_)) => "moe",
-            _ => unreachable!(),
-        }
-        .to_string();
-
-        // -- Other: pause + task cancellation --------------------------------
-        let t0 = Instant::now();
-        engine.paused = true;
-        bd.add(Category::Other, t0.elapsed());
-
-        // -- Other: sequence migration (§3.2) + block-table undo (§3.3) ------
-        let t0 = Instant::now();
-        let mut migrated = 0;
-        if is_attn {
-            let seqs = engine.drain_for_migration(failed)?;
-            // remove from DP set *before* requeue so nothing lands back on it
-            engine.attn_order.retain(|&d| d != failed);
-            anyhow::ensure!(
-                !engine.attn_order.is_empty(),
-                "last attention rank failed; instance cannot continue"
-            );
-            migrated = engine.requeue(seqs)?;
-        }
-        let mut undone = 0;
-        let mut requeued_unprefilled = 0;
-        for &d in &engine.attn_order.clone() {
-            let a = engine.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
-            undone += a.blocks.undo_step()?;
-            a.blocks.audit()?;
-            // A sequence admitted in the very step the failure aborted is
-            // Running but its prefill page reservations were just rolled
-            // away — decoding it would read KV that does not exist. Send
-            // it back to the head of the waiting queue for a re-prefill.
-            let (sched, blocks) = (&mut a.sched, &a.blocks);
-            requeued_unprefilled += sched.demote_running(|s| blocks.table(s.id).is_none());
-        }
-        bd.add(Category::Other, t0.elapsed());
-
-        // -- Weight integrity (§3.4, Fig 4) -----------------------------------
-        // Weight loads submitted here (a role switch's expert reload, the
-        // switched device's dense shards) stay *in flight* while the rest
-        // of recovery proceeds: XCCL domain recreation needs only the
-        // member list, and the recompile sweep needs only the HLO text —
-        // neither waits on weights. The loads are collected right before
-        // serving resumes (serialized instead under
-        // `RecoveryPolicy::serial_recovery`).
-        let mut moe_recovery = None;
-        let mut masked = Vec::new();
-        let mut switched_device = None;
-        let mut pending_loads: Vec<PendingWeights> = Vec::new();
-        let mut switched_queued = 0usize;
-        if let Some(mr) = moe_rank {
-            let outcome = engine.expert_map.fail_rank(mr)?;
-            let policy = engine.cfg.recovery.clone();
-            let mut do_switch = |engine: &mut Engine, bd: &mut Breakdown| -> Result<()> {
-                let (victim, pending) = Self::role_switch(engine, bd, mr)?;
-                switched_device = Some(victim);
-                if let Some(p) = pending {
-                    switched_queued += p.queued_cmds();
-                    pending_loads.push(p);
-                }
-                Ok(())
-            };
-            match outcome {
-                FailOutcome::AllCovered if policy.allow_redundant_experts => {
-                    // logical-to-physical map already updated; nothing to move
-                    moe_recovery = Some(MoeRecoveryKind::RedundantExperts);
-                }
-                outcome => {
-                    let lost = match outcome {
-                        FailOutcome::AllCovered => Vec::new(), // policy forbids relying on replicas
-                        FailOutcome::LostExperts(l) => l,
-                    };
-                    let missing_ok = policy.allow_missing_experts
-                        && engine.cfg.n_moe_ranks >= policy.missing_experts_min_ep;
-                    if !lost.is_empty() && policy.allow_role_switch && !missing_ok {
-                        do_switch(engine, &mut bd)?;
-                        moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
-                    } else if !lost.is_empty() && missing_ok {
-                        engine.expert_map.mask_out(&lost);
-                        masked = lost;
-                        moe_recovery = Some(MoeRecoveryKind::MissingExperts);
-                    } else if !lost.is_empty() && policy.allow_role_switch {
-                        do_switch(engine, &mut bd)?;
-                        moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
-                    } else if lost.is_empty() {
-                        moe_recovery = Some(MoeRecoveryKind::RedundantExperts);
-                    } else {
-                        anyhow::bail!(
-                            "experts {lost:?} lost and no recovery option permitted by policy"
-                        );
-                    }
-                }
+        let mut task = RecoveryTask::new(ann.clone());
+        let out = loop {
+            match task.poll(engine, true) {
+                Ok(RecoveryPoll::InProgress) => continue,
+                Ok(RecoveryPoll::Complete(r)) => break Ok(r),
+                Err(e) => break Err(e),
             }
-            engine.expert_map.audit()?;
-        }
-
-        // -- dense-FFN TP groups (§3.4 last para) ------------------------------
-        let t0 = Instant::now();
-        if hosts_dense {
-            let hit = engine.dense.fail_device(failed);
-            if let Some(new_dev) = switched_device {
-                // the switched device takes over the failed rank's dense
-                // shards as well; their reloads queue behind the expert
-                // reload on the same device and are collected with it
-                let serial = engine.cfg.recovery.serial_recovery;
-                for g in hit {
-                    let members = engine.dense.groups[g].clone();
-                    for (s, &m) in members.iter().enumerate() {
-                        if m == failed {
-                            let tp = engine.cfg.dense_tp;
-                            let meta = engine.meta.clone();
-                            let ex = engine.executors.get_mut(&new_dev).unwrap();
-                            let p = ex.submit_dense_shard_weights(
-                                s, tp, &meta, &engine.store, switched_queued,
-                            )?;
-                            ex.attach_dense_shard(g, s);
-                            if serial {
-                                p.wait()?;
-                            } else {
-                                switched_queued += p.queued_cmds();
-                                pending_loads.push(p);
-                            }
-                            engine.dense.groups[g][s] = new_dev;
-                        }
-                    }
-                    engine.dense.restore_group(g);
-                }
-            } else {
-                anyhow::ensure!(
-                    !engine.dense.healthy_groups().is_empty(),
-                    "all dense-FFN TP groups compromised"
-                );
-            }
-        }
-        bd.add(Category::Other, t0.elapsed());
-
-        // -- terminate the failed executor process -----------------------------
-        let t0 = Instant::now();
-        if let Some(ex) = engine.executors.remove(&failed) {
-            ex.shutdown();
-        }
-        engine.plugin.clear(failed);
-        bd.add(Category::Other, t0.elapsed());
-
-        // -- XCCL: destroy + recreate domains with rank compaction (§3.5) ------
-        let t0 = Instant::now();
-        if engine.cfg.mode == DeployMode::Disaggregated {
-            // trampoline (between experts) goes first
-            if let Some(new_dev) = switched_device {
-                engine
-                    .domains
-                    .recreate_with_switch(TRAMPOLINE_DOMAIN, failed, new_dev)?;
-            } else if moe_rank.is_some() {
-                engine.domains.recreate_without(TRAMPOLINE_DOMAIN, failed)?;
-            }
-        }
-        let epoch = if let Some(new_dev) = switched_device {
-            engine
-                .domains
-                .recreate_with_switch(ATTN_EXPERT_DOMAIN, failed, new_dev)?
-                .epoch
-        } else {
-            engine.domains.recreate_without(ATTN_EXPERT_DOMAIN, failed)?.epoch
         };
-        engine.set_epoch(epoch);
-        bd.add(Category::Xccl, t0.elapsed());
-
-        // -- Read Cache + Compile: cached compile for the new shape (§3.6) -----
-        // What must recompile depends on how domain-entangled the graphs
-        // are (see [`RecompileScope`]): the paper's fused Ascend graphs bake
-        // the whole communication domain in (`Full`); our decomposed AOT
-        // artifacts only entangle the graphs at the dispatch/combine
-        // boundary (`Boundary`, default). Devices condemned by a *pending*
-        // second fault are skipped — their graph work belongs to their own
-        // recovery pass, and touching a dead device here would wedge this
-        // one. The sweep fans out across all survivors concurrently (one
-        // batched cache probe per device, compiles pipelined on each
-        // device's queue) unless `serial_recovery` pins the old
-        // one-rank-at-a-time walk; a hung survivor surfaces as a
-        // submission-time-deadline error, which is instance-fatal like any
-        // other `Err` from this pass — paused, never deadlocked.
-        let scope = engine.cfg.recovery.recompile_scope;
-        let skip: BTreeSet<DeviceId> =
-            engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
-        let full_set: Vec<DeviceId> = switched_device.into_iter().collect();
-        let queued: BTreeMap<DeviceId, usize> =
-            switched_device.map(|d| (d, switched_queued)).into_iter().collect();
-        let sweep = recompile_for_domain_change(engine, scope, &full_set, &skip, None, &queued)?;
-        bd.add_compile_sweep(sweep.read_s, sweep.compile_s, sweep.wall);
-        let recompiled = sweep.recompiled;
-
-        // -- Generator (residual): weight-load barrier -------------------------
-        // The role-switch expert reload and dense-shard reloads submitted
-        // above finished loading while the domains reformed and the sweep
-        // ran. The device-side upload seconds ride back with each load and
-        // are filed as Generator *work* (so serial and overlapped work sums
-        // stay comparable); whatever the barrier still waited is Generator
-        // *wall* the overlap could not hide.
-        if !pending_loads.is_empty() {
-            let t0 = Instant::now();
-            let mut device_s = 0f64;
-            for p in pending_loads {
-                device_s += p.wait()?.device_s;
-            }
-            bd.add(Category::Generator, Duration::from_secs_f64(device_s));
-            bd.add_wall(Category::Generator, t0.elapsed());
+        if out.is_err() {
+            // instance-fatal: release the guard and escalate the
+            // quarantine to expert-plane scope (shared with the degraded
+            // driver, so the two error paths cannot drift)
+            engine.fail_recovery(task.device());
+        } else {
+            engine.recovering = false;
         }
-
-        // -- resume --------------------------------------------------------------
-        let t0 = Instant::now();
-        engine.paused = false;
-        bd.add(Category::Other, t0.elapsed());
-
-        Ok(RecoveryReport {
-            breakdown: bd,
-            failed_device: failed,
-            role,
-            moe_recovery,
-            migrated_sequences: migrated,
-            undone_block_ops: undone,
-            requeued_unprefilled,
-            recompiled_graphs: recompiled,
-            masked_experts: masked,
-            switched_device,
-        })
+        out
     }
 
     /// Bring a repaired (or replacement) NPU back into the live instance —
@@ -570,6 +365,7 @@ impl ReviveMoE {
         bd.add_compile_sweep(sweep.read_s, sweep.compile_s, sweep.wall);
 
         engine.plugin.clear(device);
+        engine.set_device_health(device, DeviceHealth::Healthy);
         Ok(ReviveReport {
             breakdown: bd,
             device,
@@ -739,6 +535,7 @@ impl ReviveMoE {
         }
         engine.executors.insert(device, ex);
         engine.plugin.clear(device);
+        engine.set_device_health(device, DeviceHealth::Healthy);
         Ok(ReviveReport {
             breakdown: bd,
             device,
@@ -816,6 +613,456 @@ impl ReviveMoE {
     }
 }
 
+/// The explicit stages of one recovery pass, in dependency order (the
+/// DAG behind them is drawn in docs/ARCHITECTURE.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryStage {
+    /// Quarantine the fault domain, migrate sequences off the failed rank,
+    /// roll back the aborted step's block ops, decide + submit the §3.4
+    /// weight-integrity work, and terminate the failed executor. All
+    /// host-side; runs in the same tick the fault is detected so engine
+    /// state is consistent before the next serving step.
+    Drain,
+    /// Destroy + recreate the XCCL domains with compacted ranks (§3.5).
+    DomainRebuild,
+    /// Fan the §3.6 recompile sweep out across survivors, then advance on
+    /// the in-flight [`Pending`] compile handles until every one lands.
+    Recompile,
+    /// Barrier on the weight reloads submitted during Drain (a role
+    /// switch's experts + dense shards) — they were in flight behind the
+    /// domain rebuild and the sweep the whole time.
+    WeightReload,
+    /// Lift the quarantine and emit the [`RecoveryReport`].
+    Resume,
+}
+
+impl RecoveryStage {
+    /// Stage name for logs and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryStage::Drain => "drain",
+            RecoveryStage::DomainRebuild => "domain-rebuild",
+            RecoveryStage::Recompile => "recompile",
+            RecoveryStage::WeightReload => "weight-reload",
+            RecoveryStage::Resume => "resume",
+        }
+    }
+}
+
+/// What one [`RecoveryTask::poll`] call observed.
+#[derive(Debug)]
+pub enum RecoveryPoll {
+    /// Work remains; poll again (next tick in degraded mode).
+    InProgress,
+    /// The pass finished; the engine is serving at full capacity again.
+    Complete(RecoveryReport),
+}
+
+/// A resumable recovery pass: the Fig-3 procedure as an explicit state
+/// machine ([`RecoveryStage`]) instead of one blocking call.
+///
+/// Each [`RecoveryTask::poll`] advances at most one stage. The
+/// synchronous stages (Drain, DomainRebuild, Resume) complete in a single
+/// poll; the asynchronous ones (Recompile, WeightReload) *submit* on
+/// entry and then advance on their already-in-flight [`Pending`] /
+/// [`PendingWeights`] handles — `try_wait` in degraded mode (the serve
+/// loop keeps ticking healthy ranks between polls), blocking `wait` when
+/// driven by [`ReviveMoE::recover`]. Both drivers execute the identical
+/// stage bodies, which is what makes the degraded and blocking paths
+/// equivalent by construction on everything but waiting.
+///
+/// A compile that dies because its *device* died mid-sweep is tolerated
+/// when that device has a needs-recovery annotation posted (its own,
+/// queued recovery pass owns the redo); any other error is instance-fatal
+/// exactly like the blocking contract — quarantine left in place.
+pub struct RecoveryTask {
+    ann: FaultAnnotation,
+    stage: RecoveryStage,
+    bd: Breakdown,
+    role: String,
+    moe_rank: Option<usize>,
+    migrated: usize,
+    undone: usize,
+    requeued_unprefilled: usize,
+    moe_recovery: Option<MoeRecoveryKind>,
+    masked: Vec<usize>,
+    switched_device: Option<DeviceId>,
+    pending_loads: Vec<PendingWeights>,
+    switched_queued: usize,
+    // Recompile-stage state: submission timestamp + in-flight handles +
+    // the accumulating per-artifact work sums.
+    sweep_t0: Option<Instant>,
+    compiles: Vec<Pending<CompileStat>>,
+    sweep: SweepAcc,
+    // WeightReload-stage state: barrier timestamp + device-side seconds.
+    loads_t0: Option<Instant>,
+    load_device_s: f64,
+}
+
+impl RecoveryTask {
+    /// A fresh task for `ann`; nothing runs until the first poll.
+    pub fn new(ann: FaultAnnotation) -> Self {
+        RecoveryTask {
+            ann,
+            stage: RecoveryStage::Drain,
+            bd: Breakdown::new(),
+            role: String::new(),
+            moe_rank: None,
+            migrated: 0,
+            undone: 0,
+            requeued_unprefilled: 0,
+            moe_recovery: None,
+            masked: Vec::new(),
+            switched_device: None,
+            pending_loads: Vec::new(),
+            switched_queued: 0,
+            sweep_t0: None,
+            compiles: Vec::new(),
+            sweep: SweepAcc::default(),
+            loads_t0: None,
+            load_device_s: 0.0,
+        }
+    }
+
+    /// The device this pass is recovering.
+    pub fn device(&self) -> DeviceId {
+        self.ann.device
+    }
+
+    /// The stage the next poll will work on.
+    pub fn stage(&self) -> RecoveryStage {
+        self.stage
+    }
+
+    /// Advance the pass. `block` selects blocking waits (the
+    /// [`ReviveMoE::recover`] driver) vs non-blocking `try_wait` polls
+    /// (the per-tick degraded driver).
+    pub fn poll(&mut self, engine: &mut Engine, block: bool) -> Result<RecoveryPoll> {
+        match self.stage {
+            RecoveryStage::Drain => {
+                self.stage_drain(engine)?;
+                self.stage = RecoveryStage::DomainRebuild;
+                Ok(RecoveryPoll::InProgress)
+            }
+            RecoveryStage::DomainRebuild => {
+                self.stage_domain_rebuild(engine)?;
+                self.stage = RecoveryStage::Recompile;
+                Ok(RecoveryPoll::InProgress)
+            }
+            RecoveryStage::Recompile => {
+                if self.sweep_t0.is_none() {
+                    self.submit_recompiles(engine)?;
+                }
+                if self.advance_compiles(engine, block)? {
+                    let wall = self.sweep_t0.unwrap().elapsed();
+                    self.bd.add_compile_sweep(self.sweep.read_s, self.sweep.compile_s, wall);
+                    self.stage = RecoveryStage::WeightReload;
+                }
+                Ok(RecoveryPoll::InProgress)
+            }
+            RecoveryStage::WeightReload => {
+                if self.pending_loads.is_empty() && self.loads_t0.is_none() {
+                    // nothing was submitted (no role switch): skip the
+                    // barrier entirely, like the pre-refactor pass did
+                    self.stage = RecoveryStage::Resume;
+                    return Ok(RecoveryPoll::InProgress);
+                }
+                if self.loads_t0.is_none() {
+                    self.loads_t0 = Some(Instant::now());
+                }
+                if self.advance_loads(block)? {
+                    // device-side upload seconds are Generator *work* the
+                    // overlap hid; the residual barrier wait is the wall
+                    self.bd
+                        .add(Category::Generator, Duration::from_secs_f64(self.load_device_s));
+                    self.bd.add_wall(Category::Generator, self.loads_t0.unwrap().elapsed());
+                    self.stage = RecoveryStage::Resume;
+                }
+                Ok(RecoveryPoll::InProgress)
+            }
+            RecoveryStage::Resume => Ok(RecoveryPoll::Complete(self.finish(engine))),
+        }
+    }
+
+    /// Drain: quarantine, classify, migrate (§3.2), undo (§3.3), decide +
+    /// submit the §3.4 weight-integrity work, handle dense TP groups, and
+    /// terminate the failed executor. Everything here is host-side or a
+    /// fire-and-forget submission, so the stage completes in one poll.
+    fn stage_drain(&mut self, engine: &mut Engine) -> Result<()> {
+        let failed = self.ann.device;
+        let (is_attn, moe_rank, hosts_dense) = engine.device_role(failed);
+        anyhow::ensure!(
+            is_attn || moe_rank.is_some(),
+            "device {failed} plays no role in this deployment"
+        );
+        self.moe_rank = moe_rank;
+        self.role = match (is_attn, moe_rank) {
+            (true, Some(_)) => "collocated",
+            (true, None) => "attention",
+            (false, Some(_)) => "moe",
+            _ => unreachable!(),
+        }
+        .to_string();
+
+        // -- Other: quarantine the fault domain (was: the global pause) ------
+        // The scope encodes the serve-through-vs-stall decision: an
+        // attention-rank quarantine leaves every other DP rank serving;
+        // an expert-plane quarantine blocks the instance. The blocking
+        // A/B baseline (`degraded_serving = false`) quarantines every
+        // fault at expert-plane scope — exactly the old `paused` flag.
+        let t0 = Instant::now();
+        let scope = if engine.cfg.recovery.degraded_serving {
+            engine.fault_domain_of(failed)
+        } else {
+            FaultDomainKind::ExpertPlane
+        };
+        engine.set_device_health(failed, DeviceHealth::Quarantined(scope));
+        self.bd.add(Category::Other, t0.elapsed());
+
+        // -- Other: sequence migration (§3.2) + block-table undo (§3.3) ------
+        let t0 = Instant::now();
+        if is_attn {
+            let seqs = engine.drain_for_migration(failed)?;
+            // remove from DP set *before* requeue so nothing lands back on it
+            engine.attn_order.retain(|&d| d != failed);
+            anyhow::ensure!(
+                !engine.attn_order.is_empty(),
+                "last attention rank failed; instance cannot continue"
+            );
+            self.migrated = engine.requeue(seqs)?;
+        }
+        // Undo the aborted step's page ops and requeue any sequence whose
+        // prefill was rolled away (Running without KV — decoding it would
+        // read KV that does not exist). A no-op when the degraded-mode
+        // condemn path already rolled this fault's step back at detection.
+        let (undone, requeued) = engine.rollback_aborted_step()?;
+        self.undone += undone;
+        self.requeued_unprefilled += requeued;
+        self.bd.add(Category::Other, t0.elapsed());
+
+        // -- Weight integrity (§3.4, Fig 4) -----------------------------------
+        // Weight loads submitted here (a role switch's expert reload, the
+        // switched device's dense shards) stay *in flight* while the rest
+        // of the pass proceeds: XCCL domain recreation needs only the
+        // member list, and the recompile sweep needs only the HLO text —
+        // neither waits on weights. The WeightReload stage barriers on
+        // them right before Resume (serialized instead under
+        // `RecoveryPolicy::serial_recovery`).
+        if let Some(mr) = moe_rank {
+            let outcome = engine.expert_map.fail_rank(mr)?;
+            let policy = engine.cfg.recovery.clone();
+            match outcome {
+                FailOutcome::AllCovered if policy.allow_redundant_experts => {
+                    // logical-to-physical map already updated; nothing to move
+                    self.moe_recovery = Some(MoeRecoveryKind::RedundantExperts);
+                }
+                outcome => {
+                    let lost = match outcome {
+                        FailOutcome::AllCovered => Vec::new(), // policy forbids relying on replicas
+                        FailOutcome::LostExperts(l) => l,
+                    };
+                    let missing_ok = policy.allow_missing_experts
+                        && engine.cfg.n_moe_ranks >= policy.missing_experts_min_ep;
+                    if !lost.is_empty() && policy.allow_role_switch && !missing_ok {
+                        self.do_role_switch(engine, mr)?;
+                        self.moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
+                    } else if !lost.is_empty() && missing_ok {
+                        engine.expert_map.mask_out(&lost);
+                        self.masked = lost;
+                        self.moe_recovery = Some(MoeRecoveryKind::MissingExperts);
+                    } else if !lost.is_empty() && policy.allow_role_switch {
+                        self.do_role_switch(engine, mr)?;
+                        self.moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
+                    } else if lost.is_empty() {
+                        self.moe_recovery = Some(MoeRecoveryKind::RedundantExperts);
+                    } else {
+                        anyhow::bail!(
+                            "experts {lost:?} lost and no recovery option permitted by policy"
+                        );
+                    }
+                }
+            }
+            engine.expert_map.audit()?;
+        }
+
+        // -- dense-FFN TP groups (§3.4 last para) ------------------------------
+        let t0 = Instant::now();
+        if hosts_dense {
+            let hit = engine.dense.fail_device(failed);
+            if let Some(new_dev) = self.switched_device {
+                // the switched device takes over the failed rank's dense
+                // shards as well; their reloads queue behind the expert
+                // reload on the same device and are collected with it
+                let serial = engine.cfg.recovery.serial_recovery;
+                for g in hit {
+                    let members = engine.dense.groups[g].clone();
+                    for (s, &m) in members.iter().enumerate() {
+                        if m == failed {
+                            let tp = engine.cfg.dense_tp;
+                            let meta = engine.meta.clone();
+                            let ex = engine.executors.get_mut(&new_dev).unwrap();
+                            let p = ex.submit_dense_shard_weights(
+                                s,
+                                tp,
+                                &meta,
+                                &engine.store,
+                                self.switched_queued,
+                            )?;
+                            ex.attach_dense_shard(g, s);
+                            if serial {
+                                p.wait()?;
+                            } else {
+                                self.switched_queued += p.queued_cmds();
+                                self.pending_loads.push(p);
+                            }
+                            engine.dense.groups[g][s] = new_dev;
+                        }
+                    }
+                    engine.dense.restore_group(g);
+                }
+            } else {
+                anyhow::ensure!(
+                    !engine.dense.healthy_groups().is_empty(),
+                    "all dense-FFN TP groups compromised"
+                );
+            }
+        }
+        self.bd.add(Category::Other, t0.elapsed());
+
+        // -- terminate the failed executor process -----------------------------
+        let t0 = Instant::now();
+        if let Some(ex) = engine.executors.remove(&failed) {
+            ex.shutdown();
+        }
+        engine.plugin.clear(failed);
+        self.bd.add(Category::Other, t0.elapsed());
+        Ok(())
+    }
+
+    /// The §3.4 role switch, folding its outcome into the task.
+    fn do_role_switch(&mut self, engine: &mut Engine, moe_rank: usize) -> Result<()> {
+        let (victim, pending) = ReviveMoE::role_switch(engine, &mut self.bd, moe_rank)?;
+        self.switched_device = Some(victim);
+        if let Some(p) = pending {
+            self.switched_queued += p.queued_cmds();
+            self.pending_loads.push(p);
+        }
+        Ok(())
+    }
+
+    /// DomainRebuild: destroy + recreate the XCCL domains with rank
+    /// compaction (§3.5). Needs only the member lists decided in Drain —
+    /// the in-flight weight uploads never enter domain formation.
+    fn stage_domain_rebuild(&mut self, engine: &mut Engine) -> Result<()> {
+        let failed = self.ann.device;
+        let t0 = Instant::now();
+        if engine.cfg.mode == DeployMode::Disaggregated {
+            // trampoline (between experts) goes first
+            if let Some(new_dev) = self.switched_device {
+                engine.domains.recreate_with_switch(TRAMPOLINE_DOMAIN, failed, new_dev)?;
+            } else if self.moe_rank.is_some() {
+                engine.domains.recreate_without(TRAMPOLINE_DOMAIN, failed)?;
+            }
+        }
+        let epoch = if let Some(new_dev) = self.switched_device {
+            engine.domains.recreate_with_switch(ATTN_EXPERT_DOMAIN, failed, new_dev)?.epoch
+        } else {
+            engine.domains.recreate_without(ATTN_EXPERT_DOMAIN, failed)?.epoch
+        };
+        engine.set_epoch(epoch);
+        self.bd.add(Category::Xccl, t0.elapsed());
+        Ok(())
+    }
+
+    /// Recompile submission (§3.6): what must recompile depends on how
+    /// domain-entangled the graphs are (see [`RecompileScope`]). Devices
+    /// condemned by a *pending* second fault are skipped — their graph
+    /// work belongs to their own recovery pass. The sweep fans out across
+    /// all survivors concurrently (one batched cache probe per device,
+    /// compiles pipelined on each device's queue) unless `serial_recovery`
+    /// pins the old one-rank-at-a-time walk (which collects inline here).
+    /// Serving ticks submitted after this poll queue *behind* the compiles
+    /// on each device (FIFO), so degraded-mode decodes never race a
+    /// half-rebuilt graph cache.
+    fn submit_recompiles(&mut self, engine: &Engine) -> Result<()> {
+        self.sweep_t0 = Some(Instant::now());
+        let scope = engine.cfg.recovery.recompile_scope;
+        let skip: BTreeSet<DeviceId> =
+            engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
+        let full_set: Vec<DeviceId> = self.switched_device.into_iter().collect();
+        let queued: BTreeMap<DeviceId, usize> =
+            self.switched_device.map(|d| (d, self.switched_queued)).into_iter().collect();
+        self.compiles = submit_domain_recompiles(
+            engine,
+            scope,
+            &full_set,
+            &skip,
+            None,
+            &queued,
+            &mut self.sweep,
+        )?;
+        Ok(())
+    }
+
+    /// Advance the in-flight compiles; true once every one landed. A hung
+    /// survivor surfaces as its submission-time-deadline error — bounded,
+    /// instance-fatal, never a wedge.
+    fn advance_compiles(&mut self, engine: &Engine, block: bool) -> Result<bool> {
+        if block {
+            for p in std::mem::take(&mut self.compiles) {
+                self.sweep.collect_wait(p, engine)?;
+            }
+            return Ok(true);
+        }
+        let mut still = Vec::with_capacity(self.compiles.len());
+        for p in std::mem::take(&mut self.compiles) {
+            if let Some(p) = self.sweep.collect_try(p, engine)? {
+                still.push(p);
+            }
+        }
+        self.compiles = still;
+        Ok(self.compiles.is_empty())
+    }
+
+    /// Advance the weight-load barrier; true once every reload landed.
+    fn advance_loads(&mut self, block: bool) -> Result<bool> {
+        if block {
+            for p in std::mem::take(&mut self.pending_loads) {
+                self.load_device_s += p.wait()?.device_s;
+            }
+            return Ok(true);
+        }
+        let mut still = Vec::with_capacity(self.pending_loads.len());
+        for mut p in std::mem::take(&mut self.pending_loads) {
+            match p.try_wait()? {
+                Some(stats) => self.load_device_s += stats.device_s,
+                None => still.push(p),
+            }
+        }
+        self.pending_loads = still;
+        Ok(self.pending_loads.is_empty())
+    }
+
+    /// Resume: lift the quarantine and emit the report.
+    fn finish(&mut self, engine: &mut Engine) -> RecoveryReport {
+        let t0 = Instant::now();
+        engine.set_device_health(self.ann.device, DeviceHealth::Healthy);
+        self.bd.add(Category::Other, t0.elapsed());
+        RecoveryReport {
+            breakdown: std::mem::take(&mut self.bd),
+            failed_device: self.ann.device,
+            role: std::mem::take(&mut self.role),
+            moe_recovery: self.moe_recovery,
+            migrated_sequences: self.migrated,
+            undone_block_ops: self.undone,
+            requeued_unprefilled: self.requeued_unprefilled,
+            recompiled_graphs: self.sweep.recompiled,
+            masked_experts: std::mem::take(&mut self.masked),
+            switched_device: self.switched_device,
+        }
+    }
+}
+
 /// Host-side plan of what a revival restores (see
 /// [`ReviveMoE::revive`]); computed before any weight moves so the serial
 /// and overlapped paths decide identically.
@@ -873,49 +1120,100 @@ struct SweepOutcome {
     wall: Duration,
 }
 
-/// Shared §3.6 recompile sweep after an XCCL domain change (failure
-/// recovery and device revival both end with one). `full_set` devices get
-/// their complete artifact set regardless of scope (role-switched or
-/// freshly revived executors start with an empty graph cache); `skip`
-/// devices are left alone entirely (condemned by a pending fault — their
-/// own recovery pass owns their graph work).
+/// Accumulating per-artifact sums of a recompile sweep, shared by the
+/// blocking sweep helper and the [`RecoveryTask`] Recompile stage.
+#[derive(Default)]
+struct SweepAcc {
+    read_s: f64,
+    compile_s: f64,
+    recompiled: usize,
+}
+
+impl SweepAcc {
+    fn file(&mut self, stat: &CompileStat) {
+        self.read_s += stat.read_s;
+        self.compile_s += stat.compile_s;
+        self.recompiled += 1;
+    }
+
+    /// Blocking collect of one in-flight compile. A device that died
+    /// mid-sweep *with a needs-recovery annotation posted* is tolerated:
+    /// its graph work belongs to the queued recovery pass that owns it
+    /// (the cascade-while-recovering case); its stats are simply dropped.
+    /// Every other error — notably a hung survivor's deadline — is fatal.
+    fn collect_wait(&mut self, p: Pending<CompileStat>, engine: &Engine) -> Result<()> {
+        let dev = p.device();
+        match p.wait() {
+            Ok(stat) => {
+                self.file(&stat);
+                Ok(())
+            }
+            Err(e) => tolerate_condemned(dev, e, engine),
+        }
+    }
+
+    /// Non-blocking collect: `Ok(Some(p))` hands an unfinished handle
+    /// back, `Ok(None)` means the compile landed (or was tolerated away).
+    fn collect_try(
+        &mut self,
+        mut p: Pending<CompileStat>,
+        engine: &Engine,
+    ) -> Result<Option<Pending<CompileStat>>> {
+        let dev = p.device();
+        match p.try_wait() {
+            Ok(Some(stat)) => {
+                self.file(&stat);
+                Ok(None)
+            }
+            Ok(None) => Ok(Some(p)),
+            Err(e) => tolerate_condemned(dev, e, engine).map(|()| None),
+        }
+    }
+}
+
+/// Swallow a compile/collect error when `dev` carries a needs-recovery
+/// annotation (it died mid-sweep and its own queued pass will redo the
+/// work); propagate anything else.
+fn tolerate_condemned(dev: DeviceId, e: anyhow::Error, engine: &Engine) -> Result<()> {
+    if engine.plugin.annotation_for(dev).is_some_and(|a| a.level.needs_recovery()) {
+        Ok(())
+    } else {
+        Err(e)
+    }
+}
+
+/// Submission half of the shared §3.6 recompile sweep after an XCCL
+/// domain change (failure recovery and device revival both end with one).
+/// `full_set` devices get their complete artifact set regardless of scope
+/// (role-switched or freshly revived executors start with an empty graph
+/// cache); `skip` devices are left alone entirely (condemned by a pending
+/// fault — their own recovery pass owns their graph work).
 ///
 /// The sweep fans out: per device, a queued no-wait `drop`, one *batched*
 /// cache probe round-trip, then every missing compile queued at once —
 /// the device reads artifact *n+1*'s HLO while nothing round-trips
-/// between compiles, and all survivors' queues drain concurrently. Collection happens after
-/// every device was submitted to, so sweep wall approaches the slowest
-/// single device instead of the sum over devices. Under
+/// between compiles, and all survivors' queues drain concurrently.
+/// Returns the in-flight handles for the caller to collect (all at once,
+/// or incrementally across serve ticks in degraded mode). Under
 /// `RecoveryPolicy::serial_recovery` each device is awaited before the
-/// next is touched (the pre-PR-3 walk, the A/B baseline). Either way a
-/// hung device surfaces as a submission-time-deadline error, never a
-/// wedge.
+/// next is touched (the pre-PR-3 walk, the A/B baseline) and the returned
+/// vec is empty. Either way a hung device surfaces as a
+/// submission-time-deadline error, never a wedge.
 ///
 /// `extra` is an executor not (yet) in the engine table — a revived
 /// device whose compiles must queue behind its in-flight weight loads
 /// (its queued-command count rides along). `queued_ahead` carries the
 /// same information for in-table devices (the role-switch victim).
-fn recompile_for_domain_change(
+fn submit_domain_recompiles(
     engine: &Engine,
     scope: RecompileScope,
     full_set: &[DeviceId],
     skip: &BTreeSet<DeviceId>,
     extra: Option<(DeviceId, &Executor, usize)>,
     queued_ahead: &BTreeMap<DeviceId, usize>,
-) -> Result<SweepOutcome> {
+    acc: &mut SweepAcc,
+) -> Result<Vec<Pending<CompileStat>>> {
     let serial = engine.cfg.recovery.serial_recovery;
-    let t_wall = Instant::now();
-    let mut read_s = 0f64;
-    let mut compile_s = 0f64;
-    let mut recompiled = 0usize;
-    let mut collect = |p: Pending<CompileStat>| -> Result<()> {
-        let stat = p.wait()?;
-        read_s += stat.read_s;
-        compile_s += stat.compile_s;
-        recompiled += 1;
-        Ok(())
-    };
-
     let mut device_ids: Vec<DeviceId> = engine.executors.keys().copied().collect();
     if let Some((d, _, _)) = extra {
         device_ids.push(d);
@@ -961,16 +1259,39 @@ fn recompile_for_domain_change(
         let pend = ex.submit_compile_set(&engine.arts, &names, queued + 1)?;
         if serial {
             for p in pend {
-                collect(p)?;
+                acc.collect_wait(p, engine)?;
             }
         } else {
             in_flight.extend(pend);
         }
     }
+    Ok(in_flight)
+}
+
+/// Blocking §3.6 sweep: submit, then collect everything. The revival
+/// paths use this; failure recovery goes through the [`RecoveryTask`]
+/// Recompile stage, which collects the same handles incrementally.
+fn recompile_for_domain_change(
+    engine: &Engine,
+    scope: RecompileScope,
+    full_set: &[DeviceId],
+    skip: &BTreeSet<DeviceId>,
+    extra: Option<(DeviceId, &Executor, usize)>,
+    queued_ahead: &BTreeMap<DeviceId, usize>,
+) -> Result<SweepOutcome> {
+    let t_wall = Instant::now();
+    let mut acc = SweepAcc::default();
+    let in_flight =
+        submit_domain_recompiles(engine, scope, full_set, skip, extra, queued_ahead, &mut acc)?;
     for p in in_flight {
-        collect(p)?;
+        acc.collect_wait(p, engine)?;
     }
-    Ok(SweepOutcome { read_s, compile_s, recompiled, wall: t_wall.elapsed() })
+    Ok(SweepOutcome {
+        read_s: acc.read_s,
+        compile_s: acc.compile_s,
+        recompiled: acc.recompiled,
+        wall: t_wall.elapsed(),
+    })
 }
 
 // ---------------------------------------------------------------------------

@@ -13,8 +13,12 @@
 //! here: a single mid-decode fault ([`Scenario::single_fault`]), a
 //! cascading double fault where the second device dies while the first
 //! recovery is still pending ([`Scenario::cascade`]), a fault followed by
-//! the repaired device rejoining ([`Scenario::fault_then_revive`]), and a
-//! load surge ([`Scenario::rate_surge`]). Device ids in the canned
+//! the repaired device rejoining ([`Scenario::fault_then_revive`]), a
+//! load surge ([`Scenario::rate_surge`]), an attention fault landing
+//! *inside* a load surge ([`Scenario::fault_under_surge`] — the
+//! degraded-serving showcase), and a second fault arriving while the
+//! first degraded recovery is still advancing tick-by-tick
+//! ([`Scenario::cascade_while_degraded`]). Device ids in the canned
 //! scenarios assume the default 8-device MA-disaggregated shape
 //! (devices 0–3 attention, 4–7 MoE).
 
@@ -196,6 +200,30 @@ impl Scenario {
             .rate_change(25, 0.5)
     }
 
+    /// An attention NPU dies right as the arrival rate quadruples — the
+    /// situation degraded serving exists for: capacity drops while
+    /// pressure rises, so stalling every healthy rank behind the recovery
+    /// (the blocking path) piles maximal queue depth onto the instance.
+    pub fn fault_under_surge(seed: u64) -> Self {
+        Scenario::new("fault-surge", seed)
+            .rate(0.5)
+            .rate_change(8, 2.0)
+            .inject_fault(10, 2, FaultLevel::L6, FailureBehavior::Erroring)
+            .rate_change(30, 0.5)
+    }
+
+    /// A second attention NPU dies a few ticks after the first — while
+    /// the first recovery is still advancing stage-by-stage in degraded
+    /// mode, so the cascade arrives *mid-recovery* and must be condemned
+    /// and handled sequentially afterwards. (The blocking path has long
+    /// recovered by tick 9 and simply sees a fresh fault; either way the
+    /// final token streams are identical.)
+    pub fn cascade_while_degraded(seed: u64) -> Self {
+        Scenario::new("cascade-degraded", seed)
+            .inject_fault(6, 2, FaultLevel::L6, FailureBehavior::Erroring)
+            .inject_fault(9, 1, FaultLevel::L5, FailureBehavior::Erroring)
+    }
+
     /// Look a canned scenario up by name (the `serve` CLI mode's
     /// `--scenario` flag).
     pub fn by_name(name: &str, seed: u64) -> Option<Self> {
@@ -205,13 +233,22 @@ impl Scenario {
             "cascade" => Some(Self::cascade(seed)),
             "fault-revive" => Some(Self::fault_then_revive(seed)),
             "rate-surge" => Some(Self::rate_surge(seed)),
+            "fault-surge" => Some(Self::fault_under_surge(seed)),
+            "cascade-degraded" => Some(Self::cascade_while_degraded(seed)),
             _ => None,
         }
     }
 
     /// Every canned scenario name, for CLI help and the bench sweep.
-    pub const CANNED: [&str; 5] =
-        ["steady", "single-fault", "cascade", "fault-revive", "rate-surge"];
+    pub const CANNED: [&str; 7] = [
+        "steady",
+        "single-fault",
+        "cascade",
+        "fault-revive",
+        "rate-surge",
+        "fault-surge",
+        "cascade-degraded",
+    ];
 }
 
 #[cfg(test)]

@@ -23,18 +23,41 @@
 //! condemned-but-unrecovered devices, so the cascade cannot corrupt
 //! engine state.
 //!
+//! # Degraded-mode serving (PR 4)
+//!
+//! With [`crate::config::RecoveryPolicy::degraded_serving`] on, a fault no
+//! longer freezes the tick loop: the loop calls `Engine::begin_recovery`
+//! (which quarantines the fault domain and drains the failed rank in the
+//! same tick) and then drives `Engine::poll_recovery` one stage per tick
+//! while the healthy DP ranks keep admitting, prefilling, and decoding —
+//! arrivals are *served*, not just queued, during recovery. Faults
+//! touching the shared expert/dense plane still stall every tick until
+//! their domain is rebuilt (`Engine::serving_blocked`); a cascade fault
+//! arriving mid-recovery is condemned and recovered sequentially after
+//! the active pass completes. Off (the default), every fault takes the
+//! pre-PR-4 blocking path below, byte-for-byte.
+//!
 //! Everything observable is tick-stamped, so a seeded [`Scenario`] replays
 //! deterministically: identical token streams per arrival and an
 //! identical event log across runs (wall-clock latencies of course vary;
-//! they are reported but never part of the determinism surface).
+//! they are reported but never part of the determinism surface). One
+//! carve-out: *which tick* a degraded recovery stage completes at depends
+//! on real compile/load wall time, so in degraded runs the recovery log
+//! lines may shift between runs — and anything *gated* on the completion
+//! tick (promotion of a condemned cascade fault, a held `ReviveDevice`
+//! event) shifts with them, which can move the migration/requeue ticks of
+//! the condemned rank's sequences. Token streams always replay; tick
+//! latencies replay for degraded runs without those gates (a single
+//! attention fault is tick-identical to the blocking run, which is what
+//! the degraded integration tests assert).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::cluster::{FaultAnnotation, FaultInjector};
-use crate::engine::{Completion, Engine, StepOutcome};
+use crate::engine::{Completion, DeviceHealth, Engine, StepOutcome};
 use crate::metrics::ServingStats;
-use crate::recovery::{baseline_reinit, ReviveMoE};
+use crate::recovery::{baseline_reinit, RecoveryReport, ReviveMoE};
 use crate::scenario::{Scenario, ScenarioEvent};
 use crate::scheduler::{SeqId, Token};
 use crate::workload::{ArrivalProcess, Request};
@@ -83,12 +106,27 @@ pub struct RequestOutcome {
     /// Wall time-to-first-token in ms of the completing life, if a first
     /// token was produced.
     pub ttft_ms: Option<f64>,
+    /// Tick the request *first* arrived at (restarts do not reset it).
+    /// With `completed_tick` this gives a latency in logical ticks —
+    /// free of wall-clock noise, and fully replayable except where a
+    /// degraded run's wall-dependent recovery-completion tick gates later
+    /// serving (cascade promotion, held revivals; see the module docs).
+    pub arrival_tick: u64,
     /// Tick the request completed at.
     pub completed_tick: u64,
     /// Migrations the sequence survived (ReviveMoE strategy).
     pub migrations: u32,
     /// Times the request was restarted from scratch (reinit baseline).
     pub restarts: u32,
+}
+
+impl RequestOutcome {
+    /// End-to-end latency in logical ticks (arrival through completion,
+    /// restart-inclusive) — the deterministic counterpart of
+    /// [`RequestOutcome::latency_ms`].
+    pub fn latency_ticks(&self) -> u64 {
+        self.completed_tick - self.arrival_tick
+    }
 }
 
 /// One recovery (or reinitialization) the loop performed.
@@ -100,10 +138,15 @@ pub struct RecoveryRecord {
     pub device: usize,
     /// `"revivemoe"`, `"reinit"`, or `"revive"` (device rejoining).
     pub kind: String,
-    /// Wall time serving was stalled by this pass, in ms.
+    /// Wall time of the pass, in ms. For a blocking pass this is how long
+    /// serving stalled; for a degraded pass serving continued throughout
+    /// and this is just the pass's critical-path wall.
     pub stall_ms: f64,
     /// Sequences migrated (recover) or resubmitted from scratch (reinit).
     pub moved_sequences: usize,
+    /// Whether healthy ranks kept serving through this pass
+    /// (degraded-mode recovery) instead of stalling behind it.
+    pub degraded: bool,
 }
 
 /// Everything one scenario run produced.
@@ -149,12 +192,22 @@ impl ServeReport {
         crate::metrics::percentile(&v, p)
     }
 
+    /// Percentile over the restart-inclusive end-to-end latencies in
+    /// *logical ticks* ([`RequestOutcome::latency_ticks`]) — the figure
+    /// to use when comparing strategies without wall-clock noise (see
+    /// [`RequestOutcome::arrival_tick`] for the degraded-run replay
+    /// caveat). `p` in [0, 1].
+    pub fn e2e_latency_ticks_pct(&self, p: f64) -> f64 {
+        let v: Vec<f64> = self.completed.iter().map(|c| c.latency_ticks() as f64).collect();
+        crate::metrics::percentile(&v, p)
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
             "{} [{}]: {} arrived, {} completed, {} incomplete over {} ticks; \
-             {} recoveries ({:.0}ms stalled); goodput {:.2} req/s, \
-             e2e_p99 {:.1}ms, ttft_p50 {:.1}ms, tpot_p50 {:.2}ms",
+             {} recoveries ({:.0}ms stalled, {:.0}ms degraded); goodput {:.2} req/s, \
+             e2e_p99 {:.1}ms ({:.0} ticks), ttft_p50 {:.1}ms, tpot_p50 {:.2}ms",
             self.scenario,
             self.strategy.name(),
             self.submitted,
@@ -163,8 +216,10 @@ impl ServeReport {
             self.ticks,
             self.recoveries.len(),
             self.stats.stall_total_ms(),
+            self.stats.degraded_total_ms(),
             self.stats.goodput_req_s(),
             self.e2e_latency_pct(0.99),
+            self.e2e_latency_ticks_pct(0.99),
             self.stats.ttft_p50(),
             self.stats.tpot_p50(),
         )
@@ -173,12 +228,13 @@ impl ServeReport {
 
 /// Book-keeping for one arrival: the original request (kept so the reinit
 /// baseline can resubmit it from scratch), its restart count, and the
-/// wall-clock instant it first entered the loop (the restart-inclusive
-/// latency reference).
+/// instant + tick it first entered the loop (the restart-inclusive
+/// latency references — wall for reporting, tick for determinism).
 struct ArrivalRecord {
     request: Request,
     restarts: u32,
     first_arrival: Instant,
+    arrival_tick: u64,
 }
 
 /// Run one scenario to completion and return the (still live) engine plus
@@ -210,47 +266,122 @@ pub fn run_scenario(
             break;
         }
         let script_done = next_event >= events.len();
-        if script_done && arrivals.exhausted() && engine.pending() == 0 {
+        if script_done
+            && arrivals.exhausted()
+            && engine.pending() == 0
+            && !engine.recovery_in_flight()
+        {
             break;
         }
 
         // 1. scripted events due this tick
         while next_event < events.len() && events[next_event].at_tick <= tick {
+            // a scripted revival cannot run while a degraded recovery is
+            // in flight (`revive` refuses re-entrancy and would be
+            // dropped); hold it — and everything scripted after it, to
+            // preserve event order — until the pass completes
+            if matches!(events[next_event].event, ScenarioEvent::ReviveDevice { .. })
+                && engine.recovery_in_flight()
+            {
+                break;
+            }
             let ev = events[next_event].event.clone();
             next_event += 1;
             apply_event(&mut engine, &mut arrivals, ev, tick, &mut recoveries, &mut log)?;
         }
 
-        // 2. open-loop arrivals (they queue even mid-recovery)
+        // 2. open-loop arrivals (they queue even mid-recovery — and in
+        //    degraded mode they are *served* mid-recovery)
         for req in arrivals.poll(tick)? {
             let arrival = records.len();
             records.push(ArrivalRecord {
                 request: req.clone(),
                 restarts: 0,
                 first_arrival: Instant::now(),
+                arrival_tick: tick,
             });
             let id = engine.submit(req)?;
             outstanding.insert(id, arrival);
             log.push(format!("tick {tick}: request {arrival} arrived"));
         }
 
-        // 3. one guarded engine iteration; faults recover sequentially
-        let done = match engine.step_checked()? {
-            StepOutcome::Ran(done) => done,
-            StepOutcome::Preempted(ann) => {
-                engine = handle_faults(
-                    engine,
-                    ann,
-                    strategy,
-                    tick,
-                    &mut records,
-                    &mut outstanding,
-                    &mut recoveries,
-                    &mut log,
-                )?;
-                Vec::new()
+        // 3. advance any in-flight degraded recovery by one stage, then
+        //    run one guarded engine iteration on the serving partition;
+        //    faults recover sequentially either way
+        if engine.recovery_in_flight() {
+            let polled = if engine.serving_blocked() {
+                // nothing can serve while the expert plane is quarantined:
+                // wait for the stage like the blocking path would, instead
+                // of spinning wall time away one try_wait per tick
+                engine.poll_recovery_blocking()
+            } else {
+                engine.poll_recovery()
+            };
+            if let Some(report) =
+                polled.map_err(|e| e.context("degraded recovery failed (instance-fatal)"))?
+            {
+                record_degraded_recovery(&mut engine, report, tick, &mut recoveries, &mut log);
+                // a cascade condemned behind this pass starts now — most
+                // severe first, oldest among equals, the same order the
+                // blocking loop recovers in
+                if let Some(next) = engine
+                    .plugin
+                    .pending_recovery()
+                    .into_iter()
+                    .max_by_key(|a| (a.level, std::cmp::Reverse(a.event_id)))
+                {
+                    log.push(format!(
+                        "tick {tick}: queued fault on device {} promoted to recovery",
+                        next.device
+                    ));
+                    engine.begin_recovery(&next).map_err(|e| {
+                        e.context(format!("recovering device {} failed", next.device))
+                    })?;
+                }
+            }
+        }
+        let recovering_tick = engine.recovery_in_flight();
+        let tokens_before = engine.stats.tokens_generated;
+        let mut served = false;
+        let done = if engine.serving_blocked() {
+            // the quarantined fault domain is the shared expert plane: no
+            // rank can serve this tick (arrivals above still queued)
+            engine.stats.record_full_stall_tick();
+            Vec::new()
+        } else {
+            match engine.step_checked()? {
+                StepOutcome::Ran(done) => {
+                    served = true;
+                    done
+                }
+                StepOutcome::Preempted(ann) => {
+                    let degraded = strategy == RecoveryStrategy::ReviveMoE
+                        && engine.cfg.recovery.degraded_serving;
+                    if degraded {
+                        handle_fault_degraded(&mut engine, ann, tick, &mut log)?;
+                    } else {
+                        engine = handle_faults(
+                            engine,
+                            ann,
+                            strategy,
+                            tick,
+                            &mut records,
+                            &mut outstanding,
+                            &mut recoveries,
+                            &mut log,
+                        )?;
+                    }
+                    Vec::new()
+                }
             }
         };
+        // only a tick the step actually ran in counts as a degraded
+        // *served* tick — a preempted tick served no one, and counting it
+        // would deflate degraded_tok_per_tick
+        if recovering_tick && served {
+            let produced = engine.stats.tokens_generated - tokens_before;
+            engine.stats.record_degraded_tick(produced);
+        }
         for c in done {
             record_completion(c, tick, &mut outstanding, &records, &mut completed, &mut log);
         }
@@ -318,6 +449,7 @@ fn apply_event(
                         kind: "revive".into(),
                         stall_ms: stall.as_secs_f64() * 1e3,
                         moved_sequences: 0,
+                        degraded: false,
                     });
                 }
                 Err(e) => {
@@ -335,6 +467,77 @@ fn apply_event(
         }
     }
     Ok(())
+}
+
+/// Degraded-mode fault handling: start a resumable recovery (its Drain
+/// stage runs now, so the failed rank is out of the serving partition
+/// before the next step), or — when one is already in flight — condemn
+/// the device so it is skipped everywhere and recovered sequentially
+/// after the active pass.
+fn handle_fault_degraded(
+    engine: &mut Engine,
+    ann: FaultAnnotation,
+    tick: u64,
+    log: &mut Vec<String>,
+) -> Result<()> {
+    log.push(format!(
+        "tick {tick}: fault detected on device {} ({})",
+        ann.device, ann.error_type
+    ));
+    if engine.recovery_in_flight() {
+        engine.set_device_health(ann.device, DeviceHealth::Condemned);
+        // the fault may have aborted this tick's step mid-flight on ranks
+        // that already reserved pages — roll those ops back NOW, before
+        // the next tick's `begin_step` wipes the undo logs and makes the
+        // partial mutations permanent (the promoted Drain would then be
+        // too late; in the non-cascade paths Drain itself does this)
+        let (undone, requeued) = engine.rollback_aborted_step()?;
+        log.push(format!(
+            "tick {tick}: fault on device {} condemned behind the active recovery \
+             (undone={undone} requeued={requeued})",
+            ann.device
+        ));
+    } else {
+        engine
+            .begin_recovery(&ann)
+            .map_err(|e| e.context(format!("recovering device {} failed", ann.device)))?;
+        log.push(format!(
+            "tick {tick}: degraded recovery of device {} started (surviving ranks keep serving)",
+            ann.device
+        ));
+    }
+    Ok(())
+}
+
+/// File one completed degraded recovery into the stats/records/log.
+fn record_degraded_recovery(
+    engine: &mut Engine,
+    report: RecoveryReport,
+    tick: u64,
+    recoveries: &mut Vec<RecoveryRecord>,
+    log: &mut Vec<String>,
+) {
+    let wall = report.wall();
+    engine.stats.record_degraded_recovery(wall);
+    log.push(format!(
+        "tick {tick}: degraded recovery of device {} complete role={} kind={:?} migrated={} \
+         undone={} requeued={} graphs={}",
+        report.failed_device,
+        report.role,
+        report.moe_recovery,
+        report.migrated_sequences,
+        report.undone_block_ops,
+        report.requeued_unprefilled,
+        report.recompiled_graphs
+    ));
+    recoveries.push(RecoveryRecord {
+        tick,
+        device: report.failed_device,
+        kind: "revivemoe".into(),
+        stall_ms: wall.as_secs_f64() * 1e3,
+        moved_sequences: report.migrated_sequences,
+        degraded: true,
+    });
 }
 
 /// Handle a detected fault — and any faults queued behind it — per the
@@ -384,6 +587,7 @@ fn handle_faults(
                     kind: "revivemoe".into(),
                     stall_ms: stall.as_secs_f64() * 1e3,
                     moved_sequences: report.migrated_sequences,
+                    degraded: false,
                 });
             }
             RecoveryStrategy::BaselineReinit => {
@@ -443,6 +647,7 @@ fn handle_faults(
                     kind: "reinit".into(),
                     stall_ms: stall.as_secs_f64() * 1e3,
                     moved_sequences: lost.len(),
+                    degraded: false,
                 });
             }
         }
@@ -481,6 +686,7 @@ fn record_completion(
         latency_ms: records[arrival].first_arrival.elapsed().as_secs_f64() * 1e3,
         engine_latency_ms: c.latency.as_secs_f64() * 1e3,
         ttft_ms: c.ttft.map(|t| t.as_secs_f64() * 1e3),
+        arrival_tick: records[arrival].arrival_tick,
         completed_tick: tick,
         migrations: c.migrations,
         restarts: records[arrival].restarts,

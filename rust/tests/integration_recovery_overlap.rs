@@ -185,8 +185,8 @@ fn hung_survivor_mid_recompile_times_out_and_leaves_engine_paused() {
         "timeout must be deadline-bounded, took {elapsed:?}"
     );
     assert!(
-        engine.paused,
-        "a failed recovery pass is instance-fatal: the engine must stay paused"
+        engine.serving_blocked(),
+        "a failed recovery pass is instance-fatal: the quarantine must stay in place"
     );
     assert!(!engine.recovering, "the re-entrancy guard must be released on error");
     engine.shutdown();

@@ -1,0 +1,178 @@
+//! Degraded-mode serving (acceptance criteria of the fault-domain
+//! quarantine + resumable `RecoveryTask` refactor):
+//!
+//! 1. with `degraded_serving=true`, an attention-rank fault under live
+//!    Poisson traffic is recovered *while the surviving DP ranks keep
+//!    decoding* — at least one token lands during recovery ticks — and
+//!    the final token streams and completion counts are **identical** to
+//!    the blocking baseline (`degraded_serving=false`);
+//! 2. the blocking baseline itself still replays deterministically (its
+//!    event log is unchanged by the refactor — two runs agree line for
+//!    line) and records no degraded ticks;
+//! 3. a fault touching the shared expert plane (a MoE rank) fully stalls
+//!    serving even in degraded mode — the distinction lives in the health
+//!    model, not the loop — and still matches the blocking streams;
+//! 4. a cascade arriving *mid-degraded-recovery* is condemned, handled
+//!    sequentially after the active pass, and every request completes.
+//!
+//! Token-stream equality across modes is the strong claim: for attention
+//! faults the Drain stage runs in the same tick the fault is detected in
+//! both modes, so migration points — and therefore every re-prefill —
+//! are identical; the modes differ only in *when* recovery work waits.
+//! Tick counts and recovery log lines are wall-time dependent in degraded
+//! runs and deliberately not asserted.
+//!
+//! Needs `make artifacts` (skipped loudly otherwise), like the other
+//! integration suites.
+
+use std::path::Path;
+
+use revivemoe::cluster::{FailureBehavior, FaultLevel};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
+
+fn ready() -> bool {
+    Path::new("artifacts/hlo/manifest.json").exists()
+}
+
+/// One attention-rank fault (device 2) under live traffic — the shape the
+/// degraded path exists for.
+fn attn_fault_scenario(seed: u64) -> Scenario {
+    Scenario::new("attn-fault", seed).requests(20).inject_fault(
+        6,
+        2,
+        FaultLevel::L6,
+        FailureBehavior::Erroring,
+    )
+}
+
+fn run(scenario: &Scenario, degraded: bool) -> ServeReport {
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.recovery.degraded_serving = degraded;
+    let (engine, _bd) = Engine::boot(cfg).expect("boot");
+    let (engine, report) =
+        run_scenario(engine, scenario, RecoveryStrategy::ReviveMoE).expect("serve");
+    engine.shutdown();
+    report
+}
+
+#[test]
+fn degraded_attention_fault_serves_through_recovery_and_matches_blocking() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let scenario = attn_fault_scenario(21);
+    let blocking = run(&scenario, false);
+    let degraded = run(&scenario, true);
+
+    // the blocking run stalls; the degraded run serves through recovery
+    assert_eq!(blocking.recoveries.len(), 1);
+    assert!(!blocking.recoveries[0].degraded);
+    assert_eq!(degraded.recoveries.len(), 1);
+    assert!(degraded.recoveries[0].degraded, "recovery must run in degraded mode");
+    assert_eq!(degraded.recoveries[0].kind, "revivemoe");
+    assert!(
+        degraded.stats.degraded_ticks > 0,
+        "an attention fault must not stall the surviving DP ranks"
+    );
+    // the acceptance bar: >= 1 token decoded by survivors during recovery
+    assert!(
+        degraded.stats.degraded_tokens >= 1,
+        "surviving ranks produced no tokens during recovery ticks"
+    );
+    assert_eq!(
+        degraded.stats.full_stall_ticks, 0,
+        "an attention-rank quarantine never blocks the instance"
+    );
+    assert_eq!(blocking.stats.degraded_ticks, 0, "blocking mode has no degraded ticks");
+
+    // equivalence: the two modes do identical work, they just wait
+    // differently — token streams and completion counts must agree
+    assert_eq!(blocking.incomplete, 0);
+    assert_eq!(degraded.incomplete, 0);
+    assert_eq!(blocking.completed.len(), blocking.submitted);
+    assert_eq!(degraded.completed.len(), blocking.completed.len());
+    assert_eq!(
+        blocking.token_streams(),
+        degraded.token_streams(),
+        "degraded serving changed a token stream"
+    );
+    // migration points are tick-identical, so tick latencies agree too
+    assert_eq!(
+        blocking.e2e_latency_ticks_pct(0.99),
+        degraded.e2e_latency_ticks_pct(0.99),
+        "per-request tick latencies must be unaffected by how recovery waits"
+    );
+}
+
+#[test]
+fn blocking_baseline_replays_deterministically() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = attn_fault_scenario(33);
+    let a = run(&scenario, false);
+    let b = run(&scenario, false);
+    assert_eq!(a.event_log, b.event_log, "the blocking A/B baseline must replay exactly");
+    assert_eq!(a.token_streams(), b.token_streams());
+    assert_eq!(a.ticks, b.ticks);
+    // the blocking path files its recovery as a full stall window
+    assert!(a.stats.stall_total_ms() > 0.0);
+    assert_eq!(a.stats.degraded_total_ms(), 0.0);
+}
+
+#[test]
+fn expert_plane_fault_still_fully_stalls_in_degraded_mode() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    // single_fault kills device 5 — a MoE rank, i.e. the shared expert
+    // plane: every token crosses it, so degraded mode must stall anyway
+    let scenario = Scenario::single_fault(45).requests(16);
+    let blocking = run(&scenario, false);
+    let degraded = run(&scenario, true);
+
+    assert!(degraded.stats.full_stall_ticks > 0, "expert-plane recovery must stall ticks");
+    assert_eq!(
+        degraded.stats.degraded_tokens, 0,
+        "no rank may decode while the expert plane is quarantined"
+    );
+    assert_eq!(degraded.incomplete, 0);
+    assert_eq!(degraded.completed.len(), degraded.submitted);
+    assert_eq!(
+        blocking.token_streams(),
+        degraded.token_streams(),
+        "stall scheduling must not change token content"
+    );
+}
+
+#[test]
+fn cascade_arriving_mid_degraded_recovery_recovers_sequentially() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = Scenario::cascade_while_degraded(57).requests(24);
+    let blocking = run(&scenario, false);
+    let degraded = run(&scenario, true);
+
+    assert_eq!(degraded.recoveries.len(), 2, "both faults recover: {:?}", degraded.recoveries);
+    assert!(degraded.recoveries.iter().all(|r| r.kind == "revivemoe" && r.degraded));
+    assert!(
+        degraded.recoveries[0].tick < degraded.recoveries[1].tick,
+        "the condemned cascade fault must wait for the active pass (sequential, never nested)"
+    );
+    assert_eq!(degraded.recoveries[0].device, 2);
+    assert_eq!(degraded.recoveries[1].device, 1);
+
+    // nothing stranded, and the cascade changes no token content
+    assert_eq!(degraded.incomplete, 0, "no request may be stranded by the cascade");
+    assert_eq!(degraded.completed.len(), degraded.submitted);
+    assert_eq!(blocking.incomplete, 0);
+    assert_eq!(blocking.token_streams(), degraded.token_streams());
+}

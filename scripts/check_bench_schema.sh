@@ -1,0 +1,112 @@
+#!/usr/bin/env bash
+# Validate the repo-root BENCH_*.json baselines against the shared
+# placeholder/real-run convention, so the checked-in files cannot rot
+# silently (wired into ci.yml).
+#
+# The convention (shared by all three benches):
+#   - every file is valid JSON with a "bench" name and a "rows" array;
+#     decode_throughput predates "rows" and uses "shapes" instead;
+#   - a *placeholder* (no toolchain ran the bench) declares
+#     "status": "not-run", explains itself in "note", names its
+#     "regenerate" wrapper script (which must exist and be executable),
+#     and carries only-null metric values in its rows;
+#   - a *real* run drops "status"/"note" and has no null metrics — a
+#     mixed file (claiming not-run but carrying numbers, or claiming run
+#     while still full of nulls) fails the check.
+#
+# Usage: scripts/check_bench_schema.sh   (from anywhere; cds to repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python3 - <<'EOF'
+import json
+import os
+import sys
+
+FILES = [
+    "BENCH_decode_throughput.json",
+    "BENCH_serve_scenarios.json",
+    "BENCH_recovery_latency.json",
+]
+
+failures = []
+
+
+def rows_of(doc):
+    # decode_throughput predates the "rows" convention and uses "shapes"
+    for key in ("rows", "shapes"):
+        if key in doc:
+            if not isinstance(doc[key], list) or not doc[key]:
+                return key, None
+            return key, doc[key]
+    return None, None
+
+
+def null_metrics(rows):
+    """(nulls, non_nulls) over every non-identity field of every row."""
+    identity = {"scenario", "strategy", "mode", "label", "ranks", "scope",
+                "degraded_serving", "attn_ranks"}
+    nulls = non_nulls = 0
+    for row in rows:
+        if not isinstance(row, dict):
+            return None
+        for k, v in row.items():
+            if k in identity or isinstance(v, (str, bool)):
+                continue
+            if v is None:
+                nulls += 1
+            else:
+                non_nulls += 1
+    return nulls, non_nulls
+
+
+for path in FILES:
+    if not os.path.exists(path):
+        failures.append(f"{path}: missing")
+        continue
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except json.JSONDecodeError as e:
+        failures.append(f"{path}: invalid JSON ({e})")
+        continue
+    if "bench" not in doc:
+        failures.append(f"{path}: no \"bench\" name")
+        continue
+    key, rows = rows_of(doc)
+    if rows is None:
+        failures.append(f"{path}: no non-empty \"rows\"/\"shapes\" array")
+        continue
+    counted = null_metrics(rows)
+    if counted is None:
+        failures.append(f"{path}: {key} entries must be objects")
+        continue
+    nulls, non_nulls = counted
+    placeholder = doc.get("status") == "not-run"
+    if placeholder:
+        if "note" not in doc:
+            failures.append(f"{path}: placeholder without a \"note\"")
+        regen = doc.get("regenerate")
+        if not regen:
+            failures.append(f"{path}: placeholder without a \"regenerate\" wrapper")
+        elif not os.access(regen, os.X_OK):
+            failures.append(f"{path}: regenerate wrapper {regen!r} missing or not executable")
+        if non_nulls:
+            failures.append(
+                f"{path}: claims \"status\": \"not-run\" but carries {non_nulls} "
+                "non-null metric value(s) — stale placeholder marker?")
+    else:
+        if nulls:
+            failures.append(
+                f"{path}: claims a real run but still has {nulls} null metric "
+                "value(s) — regenerate or mark \"status\": \"not-run\"")
+    state = "placeholder" if placeholder else "real run"
+    print(f"  {path}: {state}, {len(rows)} {key}")
+
+if failures:
+    print("\nBENCH schema check FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+print("BENCH schema check OK")
+EOF
