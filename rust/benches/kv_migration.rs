@@ -1,0 +1,166 @@
+//! **KV migration**: recovery cost of migrated sequences as a function
+//! of context length — the lossy re-prefill baseline vs the two
+//! lossless paths (live role-switch transfer, host-mirror restore).
+//!
+//! The paper's premise is recovery *without redundant work*, yet the
+//! lossy §3.2 migration recomputes every migrated sequence's context
+//! from token 0 — cost scaling with context length. This bench sweeps
+//! context length × attention-rank count × mode over two fault
+//! families, with in-flight sequences built up before the fault:
+//!
+//! - **role-switch** (a MoE rank dies, redundancy off, masking off, so a
+//!   healthy DP rank is stripped): `reprefill` vs `live-migrate`
+//!   (`RecoveryPolicy::kv_live_migration` — export → P2P → import +
+//!   adopt, zero recompute);
+//! - **attn-fail** (an attention rank dies): `reprefill` vs
+//!   `host-mirror` (`RecoveryPolicy::kv_host_mirror` — restore from the
+//!   host-side mirror).
+//!
+//! Reported per row: recovery wall/work ms, sequences moved losslessly
+//! vs re-prefilled, recomputed tokens (the redundancy), KV bytes moved,
+//! post-recovery completions, and the mirror's host-memory footprint.
+//! Expectation: `reprefill` recomputed tokens grow linearly with ctx
+//! while both lossless modes pin them at zero, with recovery wall no
+//! worse than the baseline's.
+//!
+//! Run: `cargo bench --bench kv_migration` (or `scripts/bench_kv.sh`
+//! from the repo root, which also refreshes `BENCH_kv_migration.json`).
+
+mod common;
+
+use revivemoe::cluster::FailureBehavior;
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::recovery::ReviveMoE;
+use revivemoe::scheduler::Token;
+use revivemoe::workload::Request;
+
+/// (scenario label, lossless mode label)
+const FAMILIES: [(&str, &str); 2] =
+    [("role-switch", "live-migrate"), ("attn-fail", "host-mirror")];
+
+fn cfg_for(scenario: &str, mode: &str, attn_ranks: usize) -> DeploymentConfig {
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.n_attn_ranks = attn_ranks;
+    if scenario == "role-switch" {
+        // force the §3.4 role switch: no redundancy, no masking
+        cfg.redundant_per_rank = 0;
+        cfg.recovery.allow_missing_experts = false;
+    }
+    cfg.recovery.kv_live_migration = mode == "live-migrate";
+    cfg.recovery.kv_host_mirror = mode == "host-mirror";
+    cfg
+}
+
+/// Long-context requests: `n` prompts of `ctx` tokens, tiny decode tail.
+fn long_requests(n: usize, ctx: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            task: "bench".into(),
+            prompt: vec![(1 + i % 60) as Token; ctx],
+            expected: String::new(),
+            max_new_tokens: 6,
+        })
+        .collect()
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let ctxs: &[usize] = if quick { &[24, 120] } else { &[24, 56, 120] };
+    let ranks: &[usize] = if quick { &[4] } else { &[2, 4] };
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("KV migration: re-prefill baseline vs live-migrate / host-mirror\n");
+    println!(
+        "{:<12} {:<13} {:>4} {:>6} {:>9} {:>9} {:>7} {:>7} {:>9} {:>10} {:>5}",
+        "scenario", "mode", "ctx", "ranks", "wall_ms", "work_ms", "kv_mov", "repref",
+        "recomp_tok", "kv_bytes", "done"
+    );
+    for &(scenario, lossless) in &FAMILIES {
+        for mode in ["reprefill", lossless] {
+            for &ctx in ctxs {
+                for &r in ranks {
+                    let cfg = cfg_for(scenario, mode, r);
+                    // role-switch kills a MoE device (first MoE rank);
+                    // attn-fail kills the first attention rank
+                    let victim = if scenario == "role-switch" { r } else { 0 };
+                    let (mut engine, _bd) = match Engine::boot(cfg) {
+                        Ok(x) => x,
+                        Err(e) => {
+                            println!("{scenario:<12} {mode:<13} SKIP (boot: {e})");
+                            continue;
+                        }
+                    };
+                    // build real in-flight context: prefill + a few decodes
+                    for req in long_requests(2 * r, ctx) {
+                        engine.submit(req).expect("submit");
+                    }
+                    for _ in 0..3 {
+                        engine.step().expect("warm step");
+                    }
+                    let ann = common::fail_device(&mut engine, victim, FailureBehavior::Erroring);
+                    let report = match ReviveMoE::recover(&mut engine, &ann) {
+                        Ok(rep) => rep,
+                        Err(e) => {
+                            println!("{scenario:<12} {mode:<13} FAILED: {e}");
+                            engine.shutdown();
+                            continue;
+                        }
+                    };
+                    let done = engine.run_to_completion(10_000).expect("drain").len();
+                    let (mirror_seqs, mirror_bytes) = engine.kv_mirror_footprint();
+                    let wall_ms = report.wall().as_secs_f64() * 1e3;
+                    let work_ms = report.total().as_secs_f64() * 1e3;
+                    let kv_moved =
+                        report.kv_migrated_sequences + report.kv_restored_sequences;
+                    println!(
+                        "{:<12} {:<13} {:>4} {:>6} {:>9.1} {:>9.1} {:>7} {:>7} {:>9} {:>10} {:>5}",
+                        scenario,
+                        mode,
+                        ctx,
+                        r,
+                        wall_ms,
+                        work_ms,
+                        kv_moved,
+                        report.reprefilled_sequences,
+                        engine.stats.recomputed_tokens,
+                        report.kv_bytes_moved,
+                        done
+                    );
+                    rows.push(obj(vec![
+                        ("scenario", s(scenario)),
+                        ("mode", s(mode)),
+                        ("ctx", num(ctx as f64)),
+                        ("attn_ranks", num(r as f64)),
+                        ("recovery_wall_ms", num(wall_ms)),
+                        ("recovery_work_ms", num(work_ms)),
+                        ("kv_migrated", num(report.kv_migrated_sequences as f64)),
+                        ("kv_restored", num(report.kv_restored_sequences as f64)),
+                        ("reprefilled", num(report.reprefilled_sequences as f64)),
+                        ("recomputed_tokens", num(engine.stats.recomputed_tokens as f64)),
+                        ("kv_bytes_moved", num(report.kv_bytes_moved as f64)),
+                        ("migrated_sequences", num(report.migrated_sequences as f64)),
+                        ("completed", num(done as f64)),
+                        ("mirror_seqs", num(mirror_seqs as f64)),
+                        ("mirror_bytes", num(mirror_bytes as f64)),
+                    ]));
+                    engine.shutdown();
+                }
+            }
+        }
+    }
+
+    let j = obj(vec![
+        ("bench", s("kv_migration")),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("kv_migration", &j);
+    // repo-root copy: the KV-migration baseline future PRs compare to
+    match std::fs::write("../BENCH_kv_migration.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_kv_migration.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_kv_migration.json: {e}"),
+    }
+}

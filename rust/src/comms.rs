@@ -217,6 +217,48 @@ impl DomainManager {
 }
 
 // ---------------------------------------------------------------------------
+// point-to-point: the attention-rank KV transfer channel
+
+/// Receipt of one point-to-point transfer between two domain members —
+/// the KV hop of a live role-switch migration (the victim's pages move
+/// to the destination attention rank instead of being recomputed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct P2pReceipt {
+    /// Sender's logical rank in the domain.
+    pub src_rank: usize,
+    /// Receiver's logical rank in the domain.
+    pub dst_rank: usize,
+    /// Bytes moved.
+    pub bytes: usize,
+    /// Epoch the transfer was stamped with.
+    pub epoch: u64,
+}
+
+/// XCCL point-to-point send/recv between two members of `domain` —
+/// the transfer channel live KV migration rides (attention rank →
+/// attention rank). Like every data-plane op it is epoch-stamped: a
+/// transfer prepared before a recovery's domain recreation is rejected
+/// rather than delivered into a stale world, and both endpoints must be
+/// current members.
+pub fn p2p_kv_transfer(
+    domain: &CommDomain,
+    epoch: u64,
+    src: DeviceId,
+    dst: DeviceId,
+    bytes: usize,
+) -> Result<P2pReceipt> {
+    domain.check_epoch(epoch)?;
+    anyhow::ensure!(src != dst, "p2p transfer from device {src} to itself");
+    let src_rank = domain
+        .logical_rank_of(src)
+        .ok_or_else(|| anyhow::anyhow!("p2p src {src} not in domain '{}'", domain.name))?;
+    let dst_rank = domain
+        .logical_rank_of(dst)
+        .ok_or_else(|| anyhow::anyhow!("p2p dst {dst} not in domain '{}'", domain.name))?;
+    Ok(P2pReceipt { src_rank, dst_rank, bytes, epoch })
+}
+
+// ---------------------------------------------------------------------------
 // data plane: dispatch / combine (and their A2E / E2A aliases)
 
 /// Where one (token, expert-choice) landed: which MoE rank, which local
@@ -568,6 +610,17 @@ mod tests {
         assert_eq!(disp.per_rank[0].grouped.shape, vec![3, 8, 2]);
         let total: usize = disp.per_rank.iter().map(|p| p.assigns.len()).sum();
         assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn p2p_transfer_validates_membership_and_epoch() {
+        let dom = domain(); // members [0, 1, 2, 3], epoch 1
+        let r = p2p_kv_transfer(&dom, 1, 3, 1, 4096).unwrap();
+        assert_eq!(r, P2pReceipt { src_rank: 3, dst_rank: 1, bytes: 4096, epoch: 1 });
+        assert!(p2p_kv_transfer(&dom, 2, 3, 1, 64).is_err(), "stale epoch rejected");
+        assert!(p2p_kv_transfer(&dom, 1, 9, 1, 64).is_err(), "non-member src rejected");
+        assert!(p2p_kv_transfer(&dom, 1, 1, 9, 64).is_err(), "non-member dst rejected");
+        assert!(p2p_kv_transfer(&dom, 1, 2, 2, 64).is_err(), "self transfer rejected");
     }
 
     #[test]

@@ -115,6 +115,27 @@ pub struct RecoveryPolicy {
     /// identical token streams and `benches/serve_scenarios.rs` measures
     /// the goodput gap.
     pub degraded_serving: bool,
+    /// Lossless role-switch migration: when the §3.4 role switch strips a
+    /// *healthy* attention rank, its in-flight sequences move **with
+    /// their KV pages** (host-side export → P2P transfer on the rebuilt
+    /// attention-expert domain → import + block-table adoption on the
+    /// destination, the `KvRestore` stage) and resume decoding at
+    /// position, instead of folding decoded tokens into the prompt and
+    /// re-prefilling from token 0 — so migration cost stops scaling with
+    /// context length. Off (default) keeps the re-prefill path
+    /// byte-for-byte as the A/B baseline
+    /// (`tests/integration_kv_migration.rs` asserts identical token
+    /// streams; `benches/kv_migration.rs` measures the recompute gap).
+    pub kv_live_migration: bool,
+    /// Host-side KV mirroring (FailSafe-style): prefill and decode
+    /// incrementally copy each committed KV row into a coordinator-memory
+    /// mirror, so when an attention rank *dies* its sequences restore
+    /// from the mirror (host→HBM upload on a surviving rank, the
+    /// `KvRestore` stage) instead of re-prefilling their whole context.
+    /// Costs host memory and a per-row copy on the decode path while on.
+    /// Off (default) reproduces the lossy §3.2 migration as the A/B
+    /// baseline.
+    pub kv_host_mirror: bool,
 }
 
 impl Default for RecoveryPolicy {
@@ -128,6 +149,8 @@ impl Default for RecoveryPolicy {
             serial_recovery: false,
             revive_spawn_timeout_ms: 10_000,
             degraded_serving: false,
+            kv_live_migration: false,
+            kv_host_mirror: false,
         }
     }
 }

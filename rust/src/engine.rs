@@ -38,6 +38,7 @@ use crate::cluster::{
 use crate::comms::{self, DomainManager, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, ModelMeta};
 use crate::executor::{artifact_set, out1, out4, router_out, Executor, PendingWeights};
+use crate::kvpool::{KvMirror, KvPayload};
 use crate::metrics::{Breakdown, Category, ServingStats};
 use crate::moe::{DenseGroups, ExpertMap};
 use crate::recovery::{RecoveryPoll, RecoveryReport, RecoveryTask};
@@ -80,6 +81,19 @@ pub enum StepOutcome {
     /// no token was recorded for the aborted step, so
     /// `ReviveMoE::recover` + re-decode resumes cleanly.
     Preempted(FaultAnnotation),
+}
+
+/// One running sequence leaving a healthy role-switch victim with its KV
+/// export DMA in flight — the lossless half of the migration split
+/// ([`Engine::live_migrate_kv`]). The recovery `KvRestore` stage collects
+/// the export, routes it over the attention-rank P2P channel, and adopts
+/// it on a destination rank.
+pub struct KvExportInFlight {
+    /// The sequence, unchanged: prompt and decoded tokens stay split, so
+    /// it resumes at position instead of re-prefilling.
+    pub seq: Sequence,
+    /// The victim's device-side export (deadline fixed at submission).
+    pub pending: Pending<KvPayload>,
 }
 
 /// Which serving resources a device fault takes down with it — the
@@ -172,6 +186,12 @@ pub struct Engine {
     /// The in-flight degraded-mode recovery, advanced one stage per
     /// [`Engine::poll_recovery`] call.
     recovery_task: Option<RecoveryTask>,
+    /// Host-side incremental KV mirror (`Some` iff
+    /// `RecoveryPolicy::kv_host_mirror`): prefill and decode copy each
+    /// committed KV row here so a dead attention rank's sequences
+    /// restore instead of re-prefilling. Keyed by sequence, not device —
+    /// entries follow their sequence across migrations.
+    kv_mirror: Option<KvMirror>,
     /// Re-entrancy guard: true while a recovery pass is executing. A
     /// second fault arriving during recovery must *queue* (the plugin
     /// keeps its annotation) and recover afterwards, never nest.
@@ -360,6 +380,7 @@ impl Engine {
         // -- Other: scheduler init etc. ---------------------------------------
         let t0 = Instant::now();
         let activation_counts = vec![0; meta.n_experts];
+        let kv_mirror = cfg.recovery.kv_host_mirror.then(|| KvMirror::new(&meta));
         let engine = Engine {
             cfg,
             meta,
@@ -381,6 +402,7 @@ impl Engine {
             last_sweep: None,
             health: BTreeMap::new(),
             recovery_task: None,
+            kv_mirror,
             recovering: false,
         };
         bd.add(Category::Other, t0.elapsed());
@@ -434,6 +456,14 @@ impl Engine {
     /// condemned but not yet recovered. `None` when no healthy attention
     /// rank remains.
     pub fn least_loaded_healthy_attn(&self) -> Option<DeviceId> {
+        self.healthy_attn_candidates().min_by_key(|&d| self.attn_load_of(d))
+    }
+
+    /// The shared candidate filter behind every attention-rank placement
+    /// decision — fresh submissions, migration targets, role-switch
+    /// victims, and KV adoptions: serving (healthy) ranks without an
+    /// un-cleared needs-recovery annotation, in DP order.
+    fn healthy_attn_candidates(&self) -> impl Iterator<Item = DeviceId> + '_ {
         let flagged: Vec<DeviceId> = self
             .plugin
             .pending_recovery()
@@ -443,8 +473,7 @@ impl Engine {
         self.attn_order
             .iter()
             .copied()
-            .filter(|d| !flagged.contains(d) && self.rank_serving(*d))
-            .min_by_key(|&d| self.attn_load_of(d))
+            .filter(move |d| !flagged.contains(d) && self.rank_serving(*d))
     }
 
     /// The one load metric rank placement uses (waiting + running; MAX for
@@ -465,29 +494,48 @@ impl Engine {
     }
 
     /// Drain every sequence off a (failed or role-switching) attention
-    /// rank for migration (§3.2), banking already-decoded tokens into the
-    /// request records before the migration view folds them into the
-    /// prompt.
+    /// rank for the lossy §3.2 migration: decoded tokens are banked into
+    /// the request records and folded into the prompt, so the receiving
+    /// rank re-prefills the whole context. This is the baseline path (and
+    /// the fallback of both lossless paths); the redundant recompute it
+    /// pays is counted in [`ServingStats`].
     pub fn drain_for_migration(&mut self, dev: DeviceId) -> Result<Vec<Sequence>> {
-        let (running, waiting) = {
-            let a = self
-                .executors
-                .get_mut(&dev)
-                .ok_or_else(|| anyhow::anyhow!("no executor on device {dev}"))?
-                .attn
-                .as_mut()
-                .ok_or_else(|| anyhow::anyhow!("device {dev} is not an attention rank"))?;
-            a.sched.take_all()
-        };
+        let (running, waiting) = self.take_all_from(dev)?;
         let mut drained = Vec::with_capacity(running.len() + waiting.len());
         for s in running {
-            if let Some(rec) = self.records.get_mut(&s.id) {
-                rec.output.extend_from_slice(&s.decoded);
-            }
-            drained.push(s.into_migration_view());
+            let view = self.bank_for_reprefill(s);
+            drained.push(view);
         }
         drained.extend(waiting);
         Ok(drained)
+    }
+
+    /// Empty a rank's scheduler, running and waiting separately.
+    fn take_all_from(&mut self, dev: DeviceId) -> Result<(Vec<Sequence>, Vec<Sequence>)> {
+        let a = self
+            .executors
+            .get_mut(&dev)
+            .ok_or_else(|| anyhow::anyhow!("no executor on device {dev}"))?
+            .attn
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("device {dev} is not an attention rank"))?;
+        Ok(a.sched.take_all())
+    }
+
+    /// Bank a running sequence's decoded tokens into its request record
+    /// and fold them into the prompt for the lossy re-prefill path,
+    /// counting the redundant recompute the lossless paths exist to
+    /// avoid. (A sequence whose prefill never committed has nothing
+    /// resident to recompute and is not counted.)
+    fn bank_for_reprefill(&mut self, s: Sequence) -> Sequence {
+        if !s.decoded.is_empty() {
+            self.stats.seqs_reprefilled += 1;
+            self.stats.recomputed_tokens += s.kv_rows();
+        }
+        if let Some(rec) = self.records.get_mut(&s.id) {
+            rec.output.extend_from_slice(&s.decoded);
+        }
+        s.into_migration_view()
     }
 
     /// Re-queue migrated sequences on surviving ranks (recovery §3.2).
@@ -498,6 +546,177 @@ impl Engine {
             self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap().sched.submit(s);
         }
         Ok(n)
+    }
+
+    // -- KV-preserving migration (live transfer + host-mirror restore) --------
+
+    /// The lossless half of the migration split: take every sequence off
+    /// a *healthy* victim rank (a §3.4 role-switch victim — its KV pages
+    /// sit intact in the pool), export each running sequence's pages
+    /// host-side, and submit the device-side export DMA on the victim
+    /// (deadline fixed at submission, scaled by queue position, like
+    /// every other command). Returns the in-flight exports plus the
+    /// leftovers — waiting sequences and any running sequence without a
+    /// committed table — which take the lossy re-prefill requeue as
+    /// before. The caller (the recovery `KvRestore` stage) collects the
+    /// exports, routes them over the rebuilt domain's P2P channel, and
+    /// adopts them on destination ranks; the exports stay in flight
+    /// behind XCCL domain recreation and the recompile sweep the whole
+    /// time.
+    pub fn live_migrate_kv(
+        &mut self,
+        victim: DeviceId,
+    ) -> Result<(Vec<KvExportInFlight>, Vec<Sequence>)> {
+        let (running, waiting) = self.take_all_from(victim)?;
+        let mut exports = Vec::new();
+        let mut leftovers = Vec::new();
+        for s in running {
+            let payload = {
+                let a = self.executors[&victim].attn.as_ref().unwrap();
+                match a.blocks.table(s.id) {
+                    Some(t) => Some(a.kv.export_blocks(t)?),
+                    None => None,
+                }
+            };
+            match payload {
+                Some(payload) => {
+                    let handle = &self.executors[&victim].handle;
+                    let deadline = handle.queued_deadline(exports.len());
+                    let pending = handle.submit_kv_export(payload, deadline)?;
+                    exports.push(KvExportInFlight { seq: s, pending });
+                }
+                None => {
+                    // admitted in an aborted step, prefill rolled away:
+                    // nothing resident to move — lossy path
+                    let view = self.bank_for_reprefill(s);
+                    leftovers.push(view);
+                }
+            }
+        }
+        leftovers.extend(waiting);
+        Ok((exports, leftovers))
+    }
+
+    /// FailSafe-style drain of a *dead* attention rank when
+    /// `RecoveryPolicy::kv_host_mirror` is on: running sequences whose
+    /// host mirror fully covers their committed context come back as
+    /// `(sequence, payload)` restore candidates for the `KvRestore`
+    /// stage; everything else — waiting sequences, sequences the mirror
+    /// cannot cover — takes the lossy re-prefill path. Mirror entries
+    /// are truncated to the committed row count here, so rows a mid-step
+    /// abort half-mirrored can never interleave with later appends.
+    pub fn drain_with_mirror(
+        &mut self,
+        dev: DeviceId,
+    ) -> Result<(Vec<(Sequence, KvPayload)>, Vec<Sequence>)> {
+        let (running, waiting) = self.take_all_from(dev)?;
+        let mut restores = Vec::new();
+        let mut lossy = Vec::new();
+        for s in running {
+            let payload = if s.decoded.is_empty() {
+                // prefill never committed: nothing restorable
+                None
+            } else {
+                let n = s.kv_rows();
+                self.kv_mirror.as_mut().and_then(|m| {
+                    m.truncate(s.id, n);
+                    m.payload(s.id, n)
+                })
+            };
+            match payload {
+                Some(p) => restores.push((s, p)),
+                None => {
+                    let view = self.bank_for_reprefill(s);
+                    lossy.push(view);
+                }
+            }
+        }
+        lossy.extend(waiting);
+        Ok((restores, lossy))
+    }
+
+    /// Destination rank for a KV adoption: the least-loaded healthy
+    /// attention rank with decode-batch room (adopted sequences skip the
+    /// waiting queue, so `max_batch` is enforced here), skipping ranks
+    /// condemned by a pending fault annotation. `reserved` counts
+    /// adoptions already submitted but not yet landed per device — the
+    /// in-flight imports of one recovery pass — so a batch of moves
+    /// spreads across ranks instead of overshooting one destination's
+    /// batch room and spuriously falling back. `None` when every serving
+    /// rank is full.
+    pub fn kv_adoption_target(&self, reserved: &BTreeMap<DeviceId, usize>) -> Option<DeviceId> {
+        self.healthy_attn_candidates()
+            .filter(|d| {
+                let r = reserved.get(d).copied().unwrap_or(0);
+                self.executors
+                    .get(d)
+                    .and_then(|e| e.attn.as_ref())
+                    .is_some_and(|a| a.sched.n_running() + r < a.sched.max_batch)
+            })
+            .min_by_key(|&d| {
+                self.attn_load_of(d).saturating_add(reserved.get(&d).copied().unwrap_or(0))
+            })
+    }
+
+    /// Finish one KV move: adopt `seq`'s pages onto `dst` and resume it
+    /// in place in the running set. `Ok(Err(seq))` hands the sequence
+    /// back for the lossy fallback when the destination cannot take it
+    /// (gone, unhealthy, full, shape mismatch, or a rolled-back pool
+    /// OOM); the outer `Err` is reserved for state corruption and is
+    /// instance-fatal.
+    #[allow(clippy::result_large_err)]
+    pub fn adopt_with_kv(
+        &mut self,
+        dst: DeviceId,
+        seq: Sequence,
+        payload: &KvPayload,
+    ) -> Result<std::result::Result<(), Sequence>> {
+        if self.device_health(dst) != DeviceHealth::Healthy
+            || !self.attn_order.contains(&dst)
+            || payload.n_tokens != seq.kv_rows()
+        {
+            return Ok(Err(seq));
+        }
+        let Some(ex) = self.executors.get_mut(&dst) else {
+            return Ok(Err(seq));
+        };
+        if ex.adopt_kv(seq.id, payload)? {
+            ex.attn.as_mut().unwrap().sched.adopt_running(seq.resume_with_kv());
+            Ok(Ok(()))
+        } else {
+            Ok(Err(seq))
+        }
+    }
+
+    /// Lossy fallback for a KV move that could not complete: bank and
+    /// fold the sequence, then requeue it for re-prefill on a surviving
+    /// rank.
+    pub fn requeue_lossy(&mut self, seq: Sequence) -> Result<()> {
+        let view = self.bank_for_reprefill(seq);
+        self.requeue(vec![view])?;
+        Ok(())
+    }
+
+    /// Audit every serving rank's block-manager invariants (refcounts vs
+    /// tables vs free list). The serve tick runs this under
+    /// `debug_assertions` — and recovery after every undo — so
+    /// refcount/undo-log corruption fails loudly at the tick it happens
+    /// instead of surfacing later as wrong tokens.
+    pub fn audit_kv_state(&self) -> Result<()> {
+        for &d in &self.attn_order {
+            if let Some(a) = self.executors.get(&d).and_then(|e| e.attn.as_ref()) {
+                a.blocks
+                    .audit()
+                    .map_err(|e| e.context(format!("block audit failed on device {d}")))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Sequences + bytes currently held by the host KV mirror (zero when
+    /// `kv_host_mirror` is off).
+    pub fn kv_mirror_footprint(&self) -> (usize, usize) {
+        self.kv_mirror.as_ref().map(|m| (m.len(), m.bytes())).unwrap_or((0, 0))
     }
 
     /// Sequences still in the system (waiting + running) across all ranks.
@@ -651,6 +870,25 @@ impl Engine {
             a.blocks.audit()?;
             let (sched, blocks) = (&mut a.sched, &a.blocks);
             requeued += sched.demote_running(|s| blocks.table(s.id).is_none());
+            if self.kv_mirror.is_some() {
+                // the aborted step may have mirrored rows (possibly for a
+                // subset of layers) that the undo just rolled out of the
+                // pool — truncate each survivor back to its committed row
+                // count so later appends stay position-aligned
+                let committed: Vec<(SeqId, usize)> = self.executors[&d]
+                    .attn
+                    .as_ref()
+                    .unwrap()
+                    .sched
+                    .running
+                    .iter()
+                    .map(|s| (s.id, s.kv_rows()))
+                    .collect();
+                let m = self.kv_mirror.as_mut().unwrap();
+                for (id, n) in committed {
+                    m.truncate(id, n);
+                }
+            }
         }
         Ok((undone, requeued))
     }
@@ -729,6 +967,9 @@ impl Engine {
                 let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
                 if a.blocks.table(seq.id).is_some() {
                     a.blocks.drop_sequence(seq.id)?;
+                }
+                if let Some(m) = self.kv_mirror.as_mut() {
+                    m.drop_seq(seq.id);
                 }
                 if let Some(rec) = self.records.remove(&seq.id) {
                     let latency = rec.submitted.elapsed();
@@ -856,6 +1097,11 @@ impl Engine {
                 let table = a.blocks.table(seq_id).unwrap().clone();
                 a.kv.scatter_prefill(li, &table, ctx, &k, &v)?;
             }
+            if let Some(m) = self.kv_mirror.as_mut() {
+                // host mirror: a re-prefill (lossy migration) rewrites the
+                // whole entry, so stale rows can never linger
+                m.record_prefill(seq_id, li, ctx, &k, &v)?;
+            }
             let ffn_out = if is_dense {
                 Self::collect_dense(wave)?
             } else {
@@ -966,9 +1212,24 @@ impl Engine {
             }
             let mut hs: Vec<Tensor> = Vec::with_capacity(batches.len());
             let mut ffns: Vec<Tensor> = Vec::with_capacity(batches.len());
-            for ((d, _, _), out) in batches.iter().zip(wave.collect()?) {
+            for ((d, ids, _), out) in batches.iter().zip(wave.collect()?) {
                 let (h, ffn_in, nk, nv) = out4(out)?;
                 self.executors.get_mut(d).unwrap().write_new_kv(li, &nk, &nv)?;
+                if let Some(m) = self.kv_mirror.as_mut() {
+                    // mirror the step's new rows host-side, position order,
+                    // exactly as write_new_kv scattered them into the pool
+                    let row = nk.shape[1] * nk.shape[2];
+                    let kd = nk.as_f32()?;
+                    let vd = nv.as_f32()?;
+                    for (i, id) in ids.iter().enumerate() {
+                        m.record_row(
+                            *id,
+                            li,
+                            &kd[i * row..(i + 1) * row],
+                            &vd[i * row..(i + 1) * row],
+                        )?;
+                    }
+                }
                 hs.push(h);
                 ffns.push(ffn_in);
             }

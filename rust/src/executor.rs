@@ -12,7 +12,7 @@ use crate::artifacts::{self, ArtifactStore};
 use crate::cluster::DeviceId;
 use crate::config::{DeploymentConfig, ModelMeta};
 use crate::kvcache::BlockManager;
-use crate::kvpool::KvPool;
+use crate::kvpool::{KvPayload, KvPool};
 use crate::moe::ExpertId;
 use crate::runtime::{Arg, CompileStat, DeviceHandle, Pending, PendingExec, SimDevice};
 use crate::scheduler::{LocalScheduler, SeqId};
@@ -147,12 +147,10 @@ impl Executor {
         self.moe.is_some()
     }
 
-    /// Queue-position deadline: a command entering the device queue behind
-    /// `queued_ahead` others gets `(queued_ahead + 1) * cmd_timeout`. The
-    /// clock still starts at submission (a hung device times out), but a
-    /// healthy device draining a deep queue is never misread as hung.
+    /// Queue-position deadline for this executor's device (see
+    /// [`DeviceHandle::queued_deadline`], the convention's one home).
     fn queued_deadline(&self, queued_ahead: usize) -> std::time::Duration {
-        self.handle.cmd_timeout * (queued_ahead as u32 + 1)
+        self.handle.queued_deadline(queued_ahead)
     }
 
     /// Submit the attention role's weight loads (common + attention +
@@ -489,6 +487,45 @@ impl Executor {
             Arg::Weight(format!("layers.{layer}.d_w2.s{shard}")),
         ];
         self.handle.submit_execute(&artifacts::dense_ffn(tp, t_bucket), args)
+    }
+
+    /// Adopt a migrated sequence's KV onto this attention rank:
+    /// reconstruct its block table under the undo-log discipline
+    /// ([`BlockManager::adopt_table`]) and scatter the payload into the
+    /// paged pool. Atomic: `Ok(true)` means table + pages are committed
+    /// (their ops cleared from the undo log, like a committed step);
+    /// `Ok(false)` means the rank cleanly declined — no attention role,
+    /// no batch room, a table already present, or a pool OOM rolled back
+    /// — and the caller falls back to the lossy re-prefill path. `Err`
+    /// is reserved for state corruption (a failed rollback or audit) and
+    /// is instance-fatal.
+    pub fn adopt_kv(&mut self, seq_id: SeqId, payload: &KvPayload) -> Result<bool> {
+        let Some(st) = self.attn.as_mut() else { return Ok(false) };
+        if !st.sched.has_room() || st.blocks.table(seq_id).is_some() {
+            return Ok(false);
+        }
+        // the adoption is its own undo-log step; callers run between
+        // committed steps (recovery after rollback, or between serve
+        // ticks), so the log is empty and this boundary is a no-op
+        st.blocks.begin_step();
+        let imported = st
+            .blocks
+            .adopt_table(seq_id, payload.n_tokens)
+            .and_then(|table| st.kv.import_blocks(&table, payload));
+        match imported {
+            Ok(()) => {
+                st.blocks.begin_step(); // committed: clear the adoption ops
+                st.blocks.audit()?;
+                Ok(true)
+            }
+            Err(_) => {
+                st.blocks
+                    .undo_step()
+                    .map_err(|e| e.context("rolling back a failed KV adoption"))?;
+                st.blocks.audit()?;
+                Ok(false)
+            }
+        }
     }
 
     // -- role switch (§3.4) ---------------------------------------------------

@@ -268,6 +268,26 @@ impl BlockManager {
         Ok(())
     }
 
+    /// Reconstruct a migrated sequence's page table on this (destination)
+    /// manager: allocate pages for `n_tokens` positions through the normal
+    /// logged ops, so a failure mid-adoption rolls back cleanly with
+    /// [`BlockManager::undo_step`] like any other step (§3.3). The caller
+    /// scatters the matching [`crate::kvpool::KvPayload`] into the
+    /// returned table. Fails (leaving partial logged ops for the caller
+    /// to undo) when the pool runs out of blocks; refuses a sequence that
+    /// already holds a table here.
+    pub fn adopt_table(&mut self, seq: SeqId, n_tokens: usize) -> Result<BlockTable> {
+        anyhow::ensure!(
+            !self.tables.contains_key(&seq),
+            "adopt_table: seq {seq} already has a table"
+        );
+        anyhow::ensure!(n_tokens > 0, "adopt_table: nothing to adopt");
+        for _ in 0..n_tokens {
+            self.append_token(seq)?;
+        }
+        Ok(self.tables.get(&seq).unwrap().clone())
+    }
+
     /// Drop a sequence's entire table (finished or migrated away).
     pub fn drop_sequence(&mut self, seq: SeqId) -> Result<()> {
         let Some(t) = self.tables.remove(&seq) else {
@@ -419,6 +439,36 @@ mod tests {
         m.logging_enabled = false;
         m.append_token(1).unwrap();
         assert_eq!(m.log_len(), 0);
+    }
+
+    #[test]
+    fn adopt_table_is_logged_and_undoable() {
+        let mut m = BlockManager::new(8, 4);
+        for _ in 0..3 {
+            m.append_token(1).unwrap();
+        }
+        m.begin_step();
+        let snap = m.snapshot();
+        let t = m.adopt_table(2, 6).unwrap();
+        assert_eq!(t.n_tokens(4), 6);
+        assert_eq!(t.blocks.len(), 2);
+        assert_eq!(t.last_fill, 2);
+        // duplicate adoption refused
+        assert!(m.adopt_table(2, 1).is_err());
+        m.undo_step().unwrap();
+        assert_eq!(m.snapshot(), snap, "adoption must roll back to step start");
+        m.audit().unwrap();
+    }
+
+    #[test]
+    fn adopt_table_oom_rolls_back() {
+        let mut m = BlockManager::new(2, 4);
+        m.begin_step();
+        let snap = m.snapshot();
+        assert!(m.adopt_table(7, 12).is_err(), "3 blocks needed, 2 exist");
+        m.undo_step().unwrap();
+        assert_eq!(m.snapshot(), snap);
+        m.audit().unwrap();
     }
 
     #[test]

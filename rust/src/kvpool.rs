@@ -1,4 +1,5 @@
-//! The KV tensor pool behind the block table: per-layer paged K/V storage.
+//! The KV tensor pool behind the block table: per-layer paged K/V storage,
+//! plus the migratable forms of that state ([`KvPayload`], [`KvMirror`]).
 //!
 //! In the real system this memory lives in NPU HBM; here it lives inside
 //! the owning executor so that a device failure (which destroys the
@@ -7,11 +8,62 @@
 //! coordinator gathers a sequence's pages into the contiguous
 //! `[B, S, H, Dh]` layout the `attn_decode_*` artifacts read, and scatters
 //! each step's new K/V row back into the right page.
+//!
+//! Since the KV-preserving migration work, KV is also a first-class
+//! *migratable* resource:
+//!
+//! - [`KvPool::export_blocks`] serializes one block table's pages into a
+//!   [`KvPayload`] (contiguous per-layer row runs) and
+//!   [`KvPool::import_blocks`] scatters a payload into a freshly adopted
+//!   table on the destination rank — the data plane of the lossless
+//!   role-switch migration (a healthy victim's sequences move *with*
+//!   their KV instead of re-prefilling from token 0);
+//! - [`KvMirror`] is the FailSafe-style host-side copy: decode and
+//!   prefill incrementally mirror KV rows into host memory (behind
+//!   `RecoveryPolicy::kv_host_mirror`), so a *dead* attention rank's
+//!   sequences restore from the mirror instead of recomputing their
+//!   whole context.
+//!
+//! Blocks are contiguous in the pool, so every bulk path here —
+//! `gather`, `scatter_prefill`, export, import — copies whole block runs
+//! rather than one row per token.
+
+use std::collections::HashMap;
 
 use crate::config::ModelMeta;
-use crate::kvcache::BlockTable;
+use crate::kvcache::{BlockTable, SeqId};
 use crate::tensor::Tensor;
 use crate::Result;
+
+/// One sequence's K/V pages serialized for migration or host-mirrored
+/// restore: per-layer contiguous row payloads covering `n_tokens`
+/// committed positions (the block-table row count — the latest decoded
+/// token's row is written by the *next* decode step and is not part of
+/// resident KV state).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvPayload {
+    /// Token positions covered (rows per layer).
+    pub n_tokens: usize,
+    /// Floats per token per layer (`H * Dh`).
+    pub row: usize,
+    /// Per-layer K rows, `n_tokens * row` floats each.
+    pub k: Vec<Vec<f32>>,
+    /// Per-layer V rows, `n_tokens * row` floats each.
+    pub v: Vec<Vec<f32>>,
+}
+
+impl KvPayload {
+    /// Number of layers the payload carries.
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Payload size in bytes (K + V, all layers) — what the P2P transfer
+    /// or host→HBM upload actually moves.
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers() * self.n_tokens * self.row * 4
+    }
+}
 
 /// Per-layer paged K/V storage owned by one attention executor.
 pub struct KvPool {
@@ -74,11 +126,33 @@ impl KvPool {
         Ok(())
     }
 
+    /// `(block, run_rows)` pairs covering the first `len` tokens of a
+    /// table — the whole-block copy runs every bulk path below walks
+    /// (blocks are contiguous in the pool, so per-token row loops are
+    /// pure overhead). Self-free so the write paths can iterate lazily
+    /// while mutating the pool's buffers.
+    fn block_runs(
+        block_size: usize,
+        table: &BlockTable,
+        len: usize,
+    ) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let mut remaining = len;
+        table.blocks.iter().map_while(move |&blk| {
+            if remaining == 0 {
+                return None;
+            }
+            let run = remaining.min(block_size);
+            remaining -= run;
+            Some((blk, run))
+        })
+    }
+
     /// Gather the pages of `tables` (one per batch element) into contiguous
     /// `[B, max_seq, H, Dh]` K and V tensors padded with zeros. `lens[i]`
     /// tokens are valid for element i. (The decode-attention kernel masks
     /// positions >= len, so the padding content is irrelevant — covered by
     /// `test_cache_content_beyond_len_irrelevant` on the python side.)
+    /// Copies whole contiguous block runs, not one row per token.
     pub fn gather(
         &self,
         layer: usize,
@@ -87,16 +161,25 @@ impl KvPool {
         max_seq: usize,
     ) -> Result<(Tensor, Tensor)> {
         let b = tables.len();
-        let mut kd = vec![0.0f32; b * max_seq * self.row];
-        let mut vd = vec![0.0f32; b * max_seq * self.row];
+        let row = self.row;
+        let mut kd = vec![0.0f32; b * max_seq * row];
+        let mut vd = vec![0.0f32; b * max_seq * row];
         for (i, (t, &len)) in tables.iter().zip(lens).enumerate() {
             anyhow::ensure!(len <= max_seq, "sequence longer than max_seq");
-            for tok in 0..len {
-                let blk = t.blocks[tok / self.block_size];
-                let o = self.off(blk, tok % self.block_size);
-                let dst = (i * max_seq + tok) * self.row;
-                kd[dst..dst + self.row].copy_from_slice(&self.k[layer][o..o + self.row]);
-                vd[dst..dst + self.row].copy_from_slice(&self.v[layer][o..o + self.row]);
+            // a len past the table's coverage is a scheduler/table desync;
+            // fail loudly instead of silently zero-padding the tail (the
+            // block-run walk below stops at the last block either way)
+            anyhow::ensure!(
+                len <= t.n_tokens(self.block_size),
+                "gather: len {len} exceeds the table's {} resident tokens",
+                t.n_tokens(self.block_size)
+            );
+            let mut dst = i * max_seq * row;
+            for (blk, run) in Self::block_runs(self.block_size, t, len) {
+                let o = blk * self.block_size * row;
+                kd[dst..dst + run * row].copy_from_slice(&self.k[layer][o..o + run * row]);
+                vd[dst..dst + run * row].copy_from_slice(&self.v[layer][o..o + run * row]);
+                dst += run * row;
             }
         }
         let shape = vec![b, max_seq, self.h, self.dh];
@@ -104,7 +187,7 @@ impl KvPool {
     }
 
     /// Scatter a prefill's `[1, S, H, Dh]` K/V tensors into pages
-    /// (positions `0..len`).
+    /// (positions `0..len`). Copies whole contiguous block runs.
     pub fn scatter_prefill(
         &mut self,
         layer: usize,
@@ -115,15 +198,230 @@ impl KvPool {
     ) -> Result<()> {
         let kv = k.as_f32()?;
         let vv = v.as_f32()?;
-        anyhow::ensure!(kv.len() >= len * self.row, "prefill K too small");
-        for tok in 0..len {
-            let blk = table.blocks[tok / self.block_size];
-            let o = self.off(blk, tok % self.block_size);
-            let src = tok * self.row;
-            self.k[layer][o..o + self.row].copy_from_slice(&kv[src..src + self.row]);
-            self.v[layer][o..o + self.row].copy_from_slice(&vv[src..src + self.row]);
+        let row = self.row;
+        anyhow::ensure!(
+            kv.len() >= len * row && vv.len() >= len * row,
+            "prefill K/V too small"
+        );
+        // same fail-loud guard as gather: never silently drop trailing rows
+        anyhow::ensure!(
+            len <= table.n_tokens(self.block_size),
+            "scatter_prefill: len {len} exceeds the table's {} resident tokens",
+            table.n_tokens(self.block_size)
+        );
+        let mut src = 0usize;
+        for (blk, run) in Self::block_runs(self.block_size, table, len) {
+            let o = blk * self.block_size * row;
+            self.k[layer][o..o + run * row].copy_from_slice(&kv[src..src + run * row]);
+            self.v[layer][o..o + run * row].copy_from_slice(&vv[src..src + run * row]);
+            src += run * row;
         }
         Ok(())
+    }
+
+    /// Serialize every resident K/V row of `table` into a [`KvPayload`]
+    /// — the export half of a lossless migration. Whole contiguous
+    /// block runs are copied per layer; the partial last block copies
+    /// only its `last_fill` rows.
+    pub fn export_blocks(&self, table: &BlockTable) -> Result<KvPayload> {
+        let n_tokens = table.n_tokens(self.block_size);
+        anyhow::ensure!(n_tokens > 0, "export_blocks: empty table");
+        let row = self.row;
+        // collected once: the same runs are replayed for every layer
+        let runs: Vec<(usize, usize)> = Self::block_runs(self.block_size, table, n_tokens).collect();
+        let mut k = Vec::with_capacity(self.n_layers);
+        let mut v = Vec::with_capacity(self.n_layers);
+        for layer in 0..self.n_layers {
+            let mut kl = Vec::with_capacity(n_tokens * row);
+            let mut vl = Vec::with_capacity(n_tokens * row);
+            for &(blk, run) in &runs {
+                anyhow::ensure!(blk < self.n_blocks, "export_blocks: block {blk} out of range");
+                let o = blk * self.block_size * row;
+                kl.extend_from_slice(&self.k[layer][o..o + run * row]);
+                vl.extend_from_slice(&self.v[layer][o..o + run * row]);
+            }
+            k.push(kl);
+            v.push(vl);
+        }
+        Ok(KvPayload { n_tokens, row, k, v })
+    }
+
+    /// Scatter a [`KvPayload`] into `table`'s pages — the import half of
+    /// a lossless migration, run on the destination rank after
+    /// `BlockManager::adopt_table` reconstructed the table. The payload
+    /// shape must match the table exactly.
+    pub fn import_blocks(&mut self, table: &BlockTable, payload: &KvPayload) -> Result<()> {
+        anyhow::ensure!(payload.row == self.row, "import_blocks: row width mismatch");
+        anyhow::ensure!(
+            payload.n_layers() == self.n_layers,
+            "import_blocks: layer count mismatch"
+        );
+        anyhow::ensure!(
+            table.n_tokens(self.block_size) == payload.n_tokens,
+            "import_blocks: table covers {} tokens, payload {}",
+            table.n_tokens(self.block_size),
+            payload.n_tokens
+        );
+        let row = self.row;
+        // collected once: the same runs are replayed for every layer
+        let runs: Vec<(usize, usize)> =
+            Self::block_runs(self.block_size, table, payload.n_tokens).collect();
+        for layer in 0..self.n_layers {
+            anyhow::ensure!(
+                payload.k[layer].len() >= payload.n_tokens * row
+                    && payload.v[layer].len() >= payload.n_tokens * row,
+                "import_blocks: short payload for layer {layer}"
+            );
+            let mut src = 0usize;
+            for &(blk, run) in &runs {
+                anyhow::ensure!(blk < self.n_blocks, "import_blocks: block {blk} out of range");
+                let o = blk * self.block_size * row;
+                self.k[layer][o..o + run * row]
+                    .copy_from_slice(&payload.k[layer][src..src + run * row]);
+                self.v[layer][o..o + run * row]
+                    .copy_from_slice(&payload.v[layer][src..src + run * row]);
+                src += run * row;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Host-side incremental KV mirror (FailSafe-style): a per-sequence copy
+/// of every *committed* KV row, living in coordinator memory so it
+/// survives the device that computed it. Behind
+/// `RecoveryPolicy::kv_host_mirror`, prefill and decode append rows here
+/// as they scatter them into the pool; when an attention rank dies, its
+/// sequences restore from the mirror (a host→HBM upload on the new rank)
+/// instead of re-prefilling their whole context.
+///
+/// Consistency: a fault can abort a decode step after some layers'
+/// rows were mirrored but not others, so restore always goes through
+/// [`KvMirror::payload`] with the sequence's *committed* row count —
+/// trailing partial rows are truncated away, and
+/// `Engine::rollback_aborted_step` truncates survivors the same way so
+/// later appends can never interleave with stale rows.
+pub struct KvMirror {
+    n_layers: usize,
+    row: usize,
+    entries: HashMap<SeqId, MirrorEntry>,
+}
+
+struct MirrorEntry {
+    /// `[layer][rows * row]`, rows appended in position order.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvMirror {
+    /// An empty mirror for `meta`'s layer count and head geometry.
+    pub fn new(meta: &ModelMeta) -> Self {
+        KvMirror {
+            n_layers: meta.n_layers,
+            row: meta.n_heads * meta.d_head,
+            entries: HashMap::new(),
+        }
+    }
+
+    fn entry(&mut self, seq: SeqId) -> &mut MirrorEntry {
+        let n = self.n_layers;
+        self.entries.entry(seq).or_insert_with(|| MirrorEntry {
+            k: vec![Vec::new(); n],
+            v: vec![Vec::new(); n],
+        })
+    }
+
+    /// Mirror one layer of a prefill: rows `0..len` replace whatever the
+    /// entry held for that layer (a re-prefill after a lossy migration
+    /// rewrites the whole context). `k`/`v` are the prefill's
+    /// `[1, S, H, Dh]` tensors, bucket-padded past `len`.
+    pub fn record_prefill(
+        &mut self,
+        seq: SeqId,
+        layer: usize,
+        len: usize,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Result<()> {
+        let row = self.row;
+        let kd = k.as_f32()?;
+        let vd = v.as_f32()?;
+        anyhow::ensure!(kd.len() >= len * row && vd.len() >= len * row, "short prefill KV");
+        let e = self.entry(seq);
+        e.k[layer].clear();
+        e.k[layer].extend_from_slice(&kd[..len * row]);
+        e.v[layer].clear();
+        e.v[layer].extend_from_slice(&vd[..len * row]);
+        Ok(())
+    }
+
+    /// Mirror one decode step's new row for one layer (appended in
+    /// position order, exactly as the pool's `write_row` sees it).
+    pub fn record_row(&mut self, seq: SeqId, layer: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        anyhow::ensure!(k.len() == self.row && v.len() == self.row, "bad mirror row width");
+        let e = self.entry(seq);
+        e.k[layer].extend_from_slice(k);
+        e.v[layer].extend_from_slice(v);
+        Ok(())
+    }
+
+    /// Drop every row past `n_tokens` for `seq` — called when an aborted
+    /// step's block ops are rolled back, so the mirror tracks exactly the
+    /// committed rows and later appends stay position-aligned.
+    pub fn truncate(&mut self, seq: SeqId, n_tokens: usize) {
+        let row = self.row;
+        if let Some(e) = self.entries.get_mut(&seq) {
+            for l in 0..self.n_layers {
+                e.k[l].truncate(n_tokens * row);
+                e.v[l].truncate(n_tokens * row);
+            }
+        }
+    }
+
+    /// Build the restore payload covering `seq`'s first `n_tokens`
+    /// committed rows. `None` when the mirror does not fully cover them
+    /// (no entry, or an aborted prefill left some layer short) — the
+    /// caller falls back to the lossy re-prefill path.
+    pub fn payload(&self, seq: SeqId, n_tokens: usize) -> Option<KvPayload> {
+        if n_tokens == 0 {
+            return None;
+        }
+        let row = self.row;
+        let e = self.entries.get(&seq)?;
+        let need = n_tokens * row;
+        if e.k.iter().chain(e.v.iter()).any(|l| l.len() < need) {
+            return None;
+        }
+        Some(KvPayload {
+            n_tokens,
+            row,
+            k: e.k.iter().map(|l| l[..need].to_vec()).collect(),
+            v: e.v.iter().map(|l| l[..need].to_vec()).collect(),
+        })
+    }
+
+    /// Forget a finished (or abandoned) sequence.
+    pub fn drop_seq(&mut self, seq: SeqId) {
+        self.entries.remove(&seq);
+    }
+
+    /// Sequences currently mirrored.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the mirror holds no sequences.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Host bytes held by the mirror (the cost knob of
+    /// `kv_host_mirror`).
+    pub fn bytes(&self) -> usize {
+        self.entries
+            .values()
+            .map(|e| e.k.iter().chain(e.v.iter()).map(|l| l.len() * 4).sum::<usize>())
+            .sum()
     }
 }
 
@@ -199,5 +497,115 @@ mod tests {
         let kd = k.as_f32().unwrap();
         assert_eq!(kd[0], 1.0);
         assert_eq!(kd[4 * 64], 3.0); // second batch element starts at S*row
+    }
+
+    #[test]
+    fn export_import_roundtrips_across_pools() {
+        let m = meta();
+        let mut src_pool = KvPool::new(&m, 8, 4);
+        let mut src_bm = BlockManager::new(8, 4);
+        // 7 tokens: one full block + a partial last block
+        for i in 0..7 {
+            let (blk, slot) = src_bm.append_token(9).unwrap();
+            let k: Vec<f32> = (0..64).map(|x| (i * 10 + x) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+            for layer in 0..2 {
+                src_pool.write_row(layer, blk, slot, &k, &v).unwrap();
+            }
+        }
+        let src_t = src_bm.table(9).unwrap().clone();
+        let payload = src_pool.export_blocks(&src_t).unwrap();
+        assert_eq!(payload.n_tokens, 7);
+        assert_eq!(payload.bytes(), 2 * 2 * 7 * 64 * 4);
+
+        // destination: different block layout entirely
+        let mut dst_pool = KvPool::new(&m, 16, 4);
+        let mut dst_bm = BlockManager::new(16, 4);
+        dst_bm.append_token(1).unwrap(); // occupy a block so layouts differ
+        let dst_t = dst_bm.adopt_table(9, 7).unwrap();
+        dst_pool.import_blocks(&dst_t, &payload).unwrap();
+
+        let (sk, sv) = src_pool.gather(0, &[&src_t], &[7], 8).unwrap();
+        let (dk, dv) = dst_pool.gather(0, &[&dst_t], &[7], 8).unwrap();
+        assert_eq!(sk.as_f32().unwrap(), dk.as_f32().unwrap());
+        assert_eq!(sv.as_f32().unwrap(), dv.as_f32().unwrap());
+    }
+
+    #[test]
+    fn import_rejects_shape_mismatch() {
+        let m = meta();
+        let mut pool = KvPool::new(&m, 8, 4);
+        let mut bm = BlockManager::new(8, 4);
+        for _ in 0..5 {
+            bm.append_token(3).unwrap();
+        }
+        let t = bm.table(3).unwrap().clone();
+        let mut payload = pool.export_blocks(&t).unwrap();
+        payload.n_tokens = 4; // lie about coverage
+        assert!(pool.import_blocks(&t, &payload).is_err());
+    }
+
+    #[test]
+    fn mirror_payload_matches_pool_export() {
+        let m = meta();
+        let mut pool = KvPool::new(&m, 8, 4);
+        let mut bm = BlockManager::new(8, 4);
+        let mut mirror = KvMirror::new(&m);
+        for i in 0..6 {
+            let (blk, slot) = bm.append_token(4).unwrap();
+            let k: Vec<f32> = (0..64).map(|x| (i * 7 + x) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            for layer in 0..2 {
+                pool.write_row(layer, blk, slot, &k, &v).unwrap();
+                mirror.record_row(4, layer, &k, &v).unwrap();
+            }
+        }
+        let t = bm.table(4).unwrap();
+        let exported = pool.export_blocks(t).unwrap();
+        let mirrored = mirror.payload(4, 6).expect("mirror covers all rows");
+        assert_eq!(exported, mirrored);
+        assert!(mirror.bytes() > 0);
+    }
+
+    #[test]
+    fn mirror_truncates_partial_step_rows() {
+        let m = meta();
+        let mut mirror = KvMirror::new(&m);
+        let row = vec![1.0f32; 64];
+        for _ in 0..3 {
+            for layer in 0..2 {
+                mirror.record_row(5, layer, &row, &row).unwrap();
+            }
+        }
+        // an aborted step mirrored layer 0 only
+        mirror.record_row(5, 0, &row, &row).unwrap();
+        assert!(mirror.payload(5, 4).is_none(), "layer 1 is short — not restorable at 4");
+        let p = mirror.payload(5, 3).expect("committed rows restorable");
+        assert_eq!(p.n_tokens, 3);
+        mirror.truncate(5, 3);
+        assert_eq!(mirror.payload(5, 3).unwrap(), p);
+        mirror.drop_seq(5);
+        assert!(mirror.is_empty());
+        assert!(mirror.payload(5, 1).is_none());
+    }
+
+    #[test]
+    fn mirror_prefill_overwrites_entry() {
+        let m = meta();
+        let mut mirror = KvMirror::new(&m);
+        let stale = vec![9.0f32; 64];
+        for layer in 0..2 {
+            mirror.record_row(6, layer, &stale, &stale).unwrap();
+        }
+        // a re-prefill (lossy migration) rewrites the whole context
+        let k = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| x as f32).collect());
+        let v = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| (x * 3) as f32).collect());
+        for layer in 0..2 {
+            mirror.record_prefill(6, layer, 5, &k, &v).unwrap();
+        }
+        let p = mirror.payload(6, 5).unwrap();
+        assert_eq!(p.k[0], k.as_f32().unwrap()[..5 * 64].to_vec());
+        assert_eq!(p.v[1], v.as_f32().unwrap()[..5 * 64].to_vec());
+        assert!(mirror.payload(6, 6).is_none(), "old rows must not linger past the prefill");
     }
 }

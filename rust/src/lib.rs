@@ -19,7 +19,8 @@
 //! - [`runtime`]    PJRT device threads, artifact store, graph cache (§3.6)
 //! - [`comms`]      XCCL-sim: domains, rank compaction, dispatch/combine,
 //!                  A2E/E2A (§2.3, §3.5)
-//! - [`kvcache`]    paged KV block manager + log-based undo recovery (§3.3)
+//! - [`kvcache`]    paged KV block manager + log-based undo recovery (§3.3),
+//!                  table adoption for KV-preserving migration
 //! - [`moe`]        expert placement, redundancy, missing-expert masks,
 //!                  dense-FFN TP groups (§3.4)
 //! - [`scheduler`]  sequences + per-rank continuous batching (§3.2)
@@ -60,6 +61,7 @@ pub mod workload;
 
 pub use config::{DeployMode, DeploymentConfig, ModelMeta, RecoveryPolicy};
 pub use engine::{DeviceHealth, Engine, FaultDomainKind};
+pub use kvpool::{KvMirror, KvPayload};
 pub use recovery::{RecoveryPoll, RecoveryReport, RecoveryStage, RecoveryTask, ReviveMoE};
 pub use scenario::Scenario;
 pub use serve::{run_scenario, RecoveryStrategy, ServeReport};

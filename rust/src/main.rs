@@ -5,6 +5,7 @@
 //!
 //! Commands:
 //!   serve     [--scenario NAME] [--strategy revivemoe|reinit] [--degraded]
+//!             [--kv-live] [--kv-mirror]
 //!             [--rate R] [--requests N] [--ticks T] [--seed S] [--log]
 //!                                            online open-loop serving under
 //!                                            a deterministic fault scenario
@@ -14,7 +15,13 @@
 //!                                            cascade-degraded); --degraded
 //!                                            serves through recovery at
 //!                                            reduced capacity instead of
-//!                                            stalling the tick loop
+//!                                            stalling the tick loop;
+//!                                            --kv-live moves a role-switch
+//!                                            victim's sequences with their
+//!                                            KV (no re-prefill); --kv-mirror
+//!                                            restores a dead attention
+//!                                            rank's sequences from the
+//!                                            host-side KV mirror
 //!   failover  [--device D] [--requests N] [--hung]
 //!                                            serve, inject a failure,
 //!                                            recover with ReviveMoE, finish
@@ -124,6 +131,12 @@ fn main() -> Result<()> {
             if args.flag_bool("degraded") {
                 cfg.recovery.degraded_serving = true;
             }
+            if args.flag_bool("kv-live") {
+                cfg.recovery.kv_live_migration = true;
+            }
+            if args.flag_bool("kv-mirror") {
+                cfg.recovery.kv_host_mirror = true;
+            }
             let (engine, bd) = Engine::boot(cfg)?;
             println!("{}", bd.render("boot breakdown"));
             let (engine, report) = run_scenario(engine, &scenario, strategy)?;
@@ -167,12 +180,17 @@ fn main() -> Result<()> {
             let report = ReviveMoE::recover(&mut engine, &ann)?;
             println!("{}", report.breakdown.render("ReviveMoE recovery"));
             println!(
-                "role={} recovery={:?} migrated={} undone_ops={} recompiled={}",
+                "role={} recovery={:?} migrated={} undone_ops={} recompiled={} \
+                 kv_migrated={} kv_restored={} reprefilled={} kv_bytes={}",
                 report.role,
                 report.moe_recovery,
                 report.migrated_sequences,
                 report.undone_block_ops,
-                report.recompiled_graphs
+                report.recompiled_graphs,
+                report.kv_migrated_sequences,
+                report.kv_restored_sequences,
+                report.reprefilled_sequences,
+                report.kv_bytes_moved
             );
             let done = engine.run_to_completion(10_000)?;
             engine.stats.stop();

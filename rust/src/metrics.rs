@@ -249,6 +249,22 @@ pub struct ServingStats {
     /// Tokens decoded during degraded ticks: the work a blocking recovery
     /// would have thrown away (the degraded-goodput numerator).
     pub degraded_tokens: usize,
+    /// Sequences migrated losslessly with their KV pages (live
+    /// role-switch migration, `RecoveryPolicy::kv_live_migration`).
+    pub seqs_kv_migrated: usize,
+    /// Sequences restored from the host KV mirror after their attention
+    /// rank died (`RecoveryPolicy::kv_host_mirror`).
+    pub seqs_kv_restored: usize,
+    /// Sequences migrated the lossy way: decoded tokens folded into the
+    /// prompt and the whole context re-prefilled from token 0 (§3.2
+    /// partial recomputation — the baseline both KV paths replace).
+    pub seqs_reprefilled: usize,
+    /// Tokens whose KV those re-prefills recomputed — the redundant work
+    /// the lossless paths avoid; lossy recovery cost scales with this.
+    pub recomputed_tokens: usize,
+    /// KV bytes moved by the lossless paths (P2P transfers between
+    /// attention ranks + host-mirror uploads).
+    pub kv_bytes_moved: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     tpot_ms: Vec<f64>,
@@ -440,6 +456,7 @@ impl ServingStats {
              ttft_p50={:.1}ms tpot_p50={:.2}ms step_p50={:.2}ms \
              recoveries={} stall={:.0}ms degraded={:.0}ms \
              full_stall_ticks={} degraded_ticks={} degraded_tok/tick={:.2} \
+             kv_migrated={} kv_restored={} reprefilled={} recomputed_tok={} kv_bytes={} \
              dispatched={}B combined={}B",
             self.requests_completed,
             self.tokens_generated,
@@ -459,6 +476,11 @@ impl ServingStats {
             self.full_stall_ticks,
             self.degraded_ticks,
             self.degraded_tok_per_tick(),
+            self.seqs_kv_migrated,
+            self.seqs_kv_restored,
+            self.seqs_reprefilled,
+            self.recomputed_tokens,
+            self.kv_bytes_moved,
             self.bytes_dispatched,
             self.bytes_combined,
         )

@@ -37,27 +37,54 @@
 //!
 //! The pass itself is a [`RecoveryTask`]: the Fig-3 procedure as explicit
 //! [`RecoveryStage`]s (Drain → DomainRebuild → Recompile → WeightReload →
-//! Resume) whose `poll()` advances on the already-in-flight `Pending`
-//! handles instead of blocking on them. [`ReviveMoE::recover`] drives it
-//! to completion with blocking waits (the classic call); with
+//! KvRestore → Resume) whose `poll()` advances on the already-in-flight
+//! `Pending` handles instead of blocking on them. [`ReviveMoE::recover`]
+//! drives it to completion with blocking waits (the classic call); with
 //! `RecoveryPolicy::degraded_serving` on, the serve loop drives the same
 //! machine one stage per tick via `Engine::poll_recovery` while the
 //! healthy DP ranks keep decoding — the failed device is *quarantined*
 //! per its fault domain ([`crate::engine::DeviceHealth`] /
 //! [`crate::engine::FaultDomainKind`]) rather than the whole engine
 //! being paused.
+//!
+//! # KV-preserving migration (the lossless paths)
+//!
+//! The lossy §3.2 migration re-prefills a migrated sequence from token 0,
+//! so its cost scales with context length. Two policy knobs remove that
+//! redundancy (both default off, keeping the re-prefill path as the A/B
+//! baseline):
+//!
+//! - `RecoveryPolicy::kv_live_migration` — a §3.4 role-switch victim is
+//!   *healthy*: its KV pages sit intact in the pool. Drain exports them
+//!   ([`Engine::live_migrate_kv`]) and the exports ride the victim's
+//!   command queue through DomainRebuild/Recompile/WeightReload; the
+//!   KvRestore stage routes each payload over the rebuilt domain's P2P
+//!   channel (`comms::p2p_kv_transfer`), uploads it on a destination
+//!   rank, adopts the block table under the undo-log discipline, and the
+//!   sequence resumes decoding *at position* — zero recomputed tokens.
+//! - `RecoveryPolicy::kv_host_mirror` — a *dead* attention rank's pool
+//!   is gone, but decode mirrored every committed KV row host-side
+//!   (`kvpool::KvMirror`, FailSafe-style). Drain pulls restore payloads
+//!   from the mirror and KvRestore uploads them onto survivors instead
+//!   of re-prefilling.
+//!
+//! Any move that cannot complete (victim died mid-export, no destination
+//! with batch room, import refused) falls back to the lossy requeue —
+//! the pass never fails because a KV optimization did.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
 
 use crate::cluster::{DeviceId, FaultAnnotation};
-use crate::comms::{ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
+use crate::comms::{self, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, RecompileScope};
-use crate::engine::{DeviceHealth, Engine, FaultDomainKind};
+use crate::engine::{DeviceHealth, Engine, FaultDomainKind, KvExportInFlight};
 use crate::executor::{artifact_set, Executor, PendingWeights};
+use crate::kvpool::KvPayload;
 use crate::metrics::{Breakdown, Category};
 use crate::moe::{ExpertId, FailOutcome};
 use crate::runtime::{CompileStat, Pending};
+use crate::scheduler::Sequence;
 use crate::Result;
 
 /// Which §3.4 weight-integrity option recovery took.
@@ -96,6 +123,18 @@ pub struct RecoveryReport {
     pub masked_experts: Vec<usize>,
     /// The DP device consumed by a role switch, if one happened.
     pub switched_device: Option<DeviceId>,
+    /// Sequences moved losslessly with their KV pages (live role-switch
+    /// migration, `RecoveryPolicy::kv_live_migration`).
+    pub kv_migrated_sequences: usize,
+    /// Sequences restored from the host KV mirror after their rank died
+    /// (`RecoveryPolicy::kv_host_mirror`).
+    pub kv_restored_sequences: usize,
+    /// Sequences this pass sent down the lossy re-prefill path (the
+    /// whole count when both KV knobs are off; the fallbacks otherwise).
+    pub reprefilled_sequences: usize,
+    /// KV bytes the lossless paths moved (P2P transfers + mirror
+    /// uploads).
+    pub kv_bytes_moved: usize,
 }
 
 impl RecoveryReport {
@@ -550,6 +589,14 @@ impl ReviveMoE {
     /// attention role (Role Switch) and reload the failed rank's expert
     /// weights from disk (Generator — dominates, like the paper's 40.6 s).
     ///
+    /// The victim is *healthy* — its KV pages sit intact in the pool — so
+    /// with `RecoveryPolicy::kv_live_migration` on, its running sequences
+    /// leave as in-flight KV exports ([`Engine::live_migrate_kv`],
+    /// returned for the `KvRestore` stage to land) instead of folding
+    /// their decoded tokens back for a re-prefill; the exports ride the
+    /// victim's command queue behind nothing and stay in flight while the
+    /// domains reform and the survivors recompile.
+    ///
     /// The disk read and the device-upload *submission* happen here; the
     /// upload itself is returned as a [`PendingWeights`] (None under
     /// `serial_recovery`, which awaits it in place) so the caller can
@@ -559,7 +606,7 @@ impl ReviveMoE {
         engine: &mut Engine,
         bd: &mut Breakdown,
         moe_rank: usize,
-    ) -> Result<(DeviceId, Option<PendingWeights>)> {
+    ) -> Result<(DeviceId, Option<PendingWeights>, Vec<KvMove>)> {
         let t0 = Instant::now();
         anyhow::ensure!(
             engine.attn_order.len() > 1,
@@ -574,9 +621,18 @@ impl ReviveMoE {
         let victim = engine.least_loaded_healthy_attn().ok_or_else(|| {
             anyhow::anyhow!("no healthy attention rank available for a role switch")
         })?;
-        let seqs = engine.drain_for_migration(victim)?;
+        let (exports, leftovers) = if engine.cfg.recovery.kv_live_migration {
+            engine.live_migrate_kv(victim)?
+        } else {
+            (Vec::new(), engine.drain_for_migration(victim)?)
+        };
         engine.attn_order.retain(|&d| d != victim);
-        engine.requeue(seqs)?;
+        engine.requeue(leftovers)?;
+        let moves: Vec<KvMove> = exports
+            .into_iter()
+            .map(|KvExportInFlight { seq, pending }| KvMove::AwaitExport { seq, pending })
+            .collect();
+        let n_exports = moves.len();
         let meta = engine.meta.clone();
         {
             let ex = engine.executors.get_mut(&victim).unwrap();
@@ -585,13 +641,15 @@ impl ReviveMoE {
         bd.add(Category::RoleSwitch, t0.elapsed());
 
         // Generator: the expert weights must come from disk — the only
-        // copies died with the failed NPU.
+        // copies died with the failed NPU. The KV exports occupy the
+        // victim's queue ahead of this load, so its deadline scales past
+        // them.
         let serial = engine.cfg.recovery.serial_recovery;
         let t0 = Instant::now();
         let slots = engine.expert_map.revive_rank(moe_rank)?.to_vec();
         let pending = {
             let ex = engine.executors.get_mut(&victim).unwrap();
-            let p = ex.submit_expert_weights(&meta, &slots, &engine.store, 0)?;
+            let p = ex.submit_expert_weights(&meta, &slots, &engine.store, n_exports)?;
             ex.attach_moe(moe_rank, slots);
             if serial {
                 p.wait()?;
@@ -609,7 +667,7 @@ impl ReviveMoE {
             // upload as work and the residual wait as wall)
             bd.add_wall(Category::Generator, elapsed);
         }
-        Ok((victim, pending))
+        Ok((victim, pending, moves))
     }
 }
 
@@ -632,6 +690,15 @@ pub enum RecoveryStage {
     /// switch's experts + dense shards) — they were in flight behind the
     /// domain rebuild and the sweep the whole time.
     WeightReload,
+    /// Land the in-flight KV moves: collect the live-migration exports
+    /// submitted during Drain (they rode the victim's queue behind the
+    /// whole pass), route them over the rebuilt domain's P2P channel,
+    /// submit the destination imports (host→HBM upload for mirror
+    /// restores), and adopt each sequence at position on its new rank. A
+    /// move that cannot complete falls back to the lossy re-prefill
+    /// requeue. Skipped entirely — zero polls — when no KV knob queued
+    /// work.
+    KvRestore,
     /// Lift the quarantine and emit the [`RecoveryReport`].
     Resume,
 }
@@ -644,6 +711,7 @@ impl RecoveryStage {
             RecoveryStage::DomainRebuild => "domain-rebuild",
             RecoveryStage::Recompile => "recompile",
             RecoveryStage::WeightReload => "weight-reload",
+            RecoveryStage::KvRestore => "kv-restore",
             RecoveryStage::Resume => "resume",
         }
     }
@@ -697,6 +765,61 @@ pub struct RecoveryTask {
     // WeightReload-stage state: barrier timestamp + device-side seconds.
     loads_t0: Option<Instant>,
     load_device_s: f64,
+    // KvRestore-stage state: in-flight KV moves + outcome counters.
+    kv_moves: Vec<KvMove>,
+    kv_migrated: usize,
+    kv_restored: usize,
+    kv_bytes: usize,
+    kv_t0: Option<Instant>,
+    kv_work: Duration,
+    // engine-wide re-prefill count at Drain entry; finish() reports the
+    // delta, so the pass's own lossy migrations (and KV fallbacks) are
+    // attributed to it without double bookkeeping
+    reprefill_mark: usize,
+}
+
+/// How many degraded-mode polls a routable payload may wait for a
+/// destination batch slot before falling back to the lossy path. Room
+/// frees as survivors complete sequences between polls, so transient
+/// fullness right after absorbing a dead rank's load should not cost a
+/// full-context re-prefill; the bound keeps the pass from holding the
+/// recovery slot forever when the instance is genuinely saturated.
+const KV_ROOM_RETRY_POLLS: u32 = 32;
+
+/// One in-flight lossless KV move, advanced by the KvRestore stage.
+enum KvMove {
+    /// Awaiting the victim's device-side export DMA (live migration).
+    AwaitExport { seq: Sequence, pending: Pending<KvPayload> },
+    /// A payload in hand (mirror restore, or a landed live export — the
+    /// `live` flag keeps them apart for P2P routing and accounting)
+    /// awaiting import submission. `tries` counts degraded-mode polls
+    /// spent waiting for a destination with batch room.
+    PayloadReady { seq: Sequence, payload: KvPayload, live: bool, tries: u32 },
+    /// Awaiting the destination's import upload; `live` distinguishes a
+    /// P2P-transferred migration from a mirror restore for accounting.
+    AwaitImport { seq: Sequence, dst: DeviceId, live: bool, pending: Pending<KvPayload> },
+}
+
+/// Outcome of polling one in-flight KV handle (see
+/// [`RecoveryTask::resolve_kv`]).
+enum KvResolved {
+    /// The command landed (or errored); the handle is consumed.
+    Ready(Result<KvPayload>),
+    /// Still in flight (non-blocking mode): the handle rides to the next
+    /// poll.
+    InFlight(Pending<KvPayload>),
+}
+
+/// Outcome of routing one payload toward a destination (see
+/// [`RecoveryTask::submit_import`]).
+enum RouteOutcome {
+    /// Import submitted; await the returned move.
+    Submitted(KvMove),
+    /// No destination currently has batch room — retryable: the payload
+    /// comes back intact.
+    NoRoom(Sequence, KvPayload),
+    /// Unroutable (P2P refused, destination thread gone) — lossy path.
+    Fallback(Sequence),
 }
 
 impl RecoveryTask {
@@ -721,6 +844,13 @@ impl RecoveryTask {
             sweep: SweepAcc::default(),
             loads_t0: None,
             load_device_s: 0.0,
+            kv_moves: Vec::new(),
+            kv_migrated: 0,
+            kv_restored: 0,
+            kv_bytes: 0,
+            kv_t0: None,
+            kv_work: Duration::ZERO,
+            reprefill_mark: 0,
         }
     }
 
@@ -764,7 +894,7 @@ impl RecoveryTask {
                 if self.pending_loads.is_empty() && self.loads_t0.is_none() {
                     // nothing was submitted (no role switch): skip the
                     // barrier entirely, like the pre-refactor pass did
-                    self.stage = RecoveryStage::Resume;
+                    self.stage = self.after_weight_reload();
                     return Ok(RecoveryPoll::InProgress);
                 }
                 if self.loads_t0.is_none() {
@@ -776,6 +906,26 @@ impl RecoveryTask {
                     self.bd
                         .add(Category::Generator, Duration::from_secs_f64(self.load_device_s));
                     self.bd.add_wall(Category::Generator, self.loads_t0.unwrap().elapsed());
+                    self.stage = self.after_weight_reload();
+                }
+                Ok(RecoveryPoll::InProgress)
+            }
+            RecoveryStage::KvRestore => {
+                if self.kv_t0.is_none() {
+                    self.kv_t0 = Some(Instant::now());
+                }
+                let t_poll = Instant::now();
+                let done = self.advance_kv(engine, block)?;
+                self.kv_work += t_poll.elapsed();
+                if done {
+                    // per-poll processing time is the pass's KV *work*
+                    // (under the blocking driver that includes the waits,
+                    // like every serial phase); the stage's start-to-end
+                    // elapsed is its *wall* — in degraded mode it spans
+                    // serve ticks the pass did not stall, which must not
+                    // inflate the work bars
+                    self.bd.add(Category::Other, self.kv_work);
+                    self.bd.add_wall(Category::Other, self.kv_t0.unwrap().elapsed());
                     self.stage = RecoveryStage::Resume;
                 }
                 Ok(RecoveryPoll::InProgress)
@@ -784,12 +934,25 @@ impl RecoveryTask {
         }
     }
 
+    /// File a sequential host-side phase under `Other`: its elapsed time
+    /// is both work and wall (nothing is fanned out in these phases, so
+    /// the two views coincide). Filing the wall explicitly keeps
+    /// [`crate::metrics::Breakdown::total_wall`] exact once the KvRestore
+    /// stage adds a wall-only entry under the same category — a wall
+    /// entry for a category replaces its work sum in the wall total, so
+    /// every `Other` contributor must file one.
+    fn add_other(&mut self, d: Duration) {
+        self.bd.add(Category::Other, d);
+        self.bd.add_wall(Category::Other, d);
+    }
+
     /// Drain: quarantine, classify, migrate (§3.2), undo (§3.3), decide +
     /// submit the §3.4 weight-integrity work, handle dense TP groups, and
     /// terminate the failed executor. Everything here is host-side or a
     /// fire-and-forget submission, so the stage completes in one poll.
     fn stage_drain(&mut self, engine: &mut Engine) -> Result<()> {
         let failed = self.ann.device;
+        self.reprefill_mark = engine.stats.seqs_reprefilled;
         let (is_attn, moe_rank, hosts_dense) = engine.device_role(failed);
         anyhow::ensure!(
             is_attn || moe_rank.is_some(),
@@ -817,19 +980,30 @@ impl RecoveryTask {
             FaultDomainKind::ExpertPlane
         };
         engine.set_device_health(failed, DeviceHealth::Quarantined(scope));
-        self.bd.add(Category::Other, t0.elapsed());
+        self.add_other(t0.elapsed());
 
         // -- Other: sequence migration (§3.2) + block-table undo (§3.3) ------
         let t0 = Instant::now();
         if is_attn {
-            let seqs = engine.drain_for_migration(failed)?;
+            // the migration split: with the host mirror on, a *dead* rank's
+            // sequences restore from the mirror (KvRestore stage) instead
+            // of re-prefilling; everything the mirror cannot cover — and
+            // the whole set when the knob is off — takes the lossy path
+            let (restores, lossy) = if engine.cfg.recovery.kv_host_mirror {
+                engine.drain_with_mirror(failed)?
+            } else {
+                (Vec::new(), engine.drain_for_migration(failed)?)
+            };
             // remove from DP set *before* requeue so nothing lands back on it
             engine.attn_order.retain(|&d| d != failed);
             anyhow::ensure!(
                 !engine.attn_order.is_empty(),
                 "last attention rank failed; instance cannot continue"
             );
-            self.migrated = engine.requeue(seqs)?;
+            self.migrated = engine.requeue(lossy)? + restores.len();
+            self.kv_moves.extend(restores.into_iter().map(|(seq, payload)| {
+                KvMove::PayloadReady { seq, payload, live: false, tries: 0 }
+            }));
         }
         // Undo the aborted step's page ops and requeue any sequence whose
         // prefill was rolled away (Running without KV — decoding it would
@@ -838,7 +1012,7 @@ impl RecoveryTask {
         let (undone, requeued) = engine.rollback_aborted_step()?;
         self.undone += undone;
         self.requeued_unprefilled += requeued;
-        self.bd.add(Category::Other, t0.elapsed());
+        self.add_other(t0.elapsed());
 
         // -- Weight integrity (§3.4, Fig 4) -----------------------------------
         // Weight loads submitted here (a role switch's expert reload, the
@@ -927,7 +1101,7 @@ impl RecoveryTask {
                 );
             }
         }
-        self.bd.add(Category::Other, t0.elapsed());
+        self.add_other(t0.elapsed());
 
         // -- terminate the failed executor process -----------------------------
         let t0 = Instant::now();
@@ -935,14 +1109,18 @@ impl RecoveryTask {
             ex.shutdown();
         }
         engine.plugin.clear(failed);
-        self.bd.add(Category::Other, t0.elapsed());
+        self.add_other(t0.elapsed());
         Ok(())
     }
 
     /// The §3.4 role switch, folding its outcome into the task.
     fn do_role_switch(&mut self, engine: &mut Engine, moe_rank: usize) -> Result<()> {
-        let (victim, pending) = ReviveMoE::role_switch(engine, &mut self.bd, moe_rank)?;
+        let (victim, pending, moves) = ReviveMoE::role_switch(engine, &mut self.bd, moe_rank)?;
         self.switched_device = Some(victim);
+        // the in-flight KV exports occupy the victim's command queue, so
+        // every later deadline on that device scales past them too
+        self.switched_queued += moves.len();
+        self.kv_moves.extend(moves);
         if let Some(p) = pending {
             self.switched_queued += p.queued_cmds();
             self.pending_loads.push(p);
@@ -1043,11 +1221,176 @@ impl RecoveryTask {
         Ok(self.pending_loads.is_empty())
     }
 
+    /// Where the pass goes after the weight barrier: straight to Resume
+    /// when no KV move is in flight (both knobs off, or nothing was
+    /// restorable), so the stage count — and the degraded poll-per-tick
+    /// cadence — is unchanged from the pre-KV machine.
+    fn after_weight_reload(&self) -> RecoveryStage {
+        if self.kv_moves.is_empty() {
+            RecoveryStage::Resume
+        } else {
+            RecoveryStage::KvRestore
+        }
+    }
+
+    /// Advance every in-flight KV move one step; true once none remain.
+    /// A move that cannot complete — export dead with its victim, no
+    /// destination with room, import refused or timed out — falls back
+    /// to the lossy re-prefill requeue, never failing the pass; `Err` is
+    /// reserved for engine-state corruption.
+    fn advance_kv(&mut self, engine: &mut Engine, block: bool) -> Result<bool> {
+        // imports submitted but not yet landed, per destination — keeps a
+        // batch of moves spread across ranks instead of overshooting one
+        // destination's batch room (adoption only bumps its load later)
+        let mut reserved: BTreeMap<DeviceId, usize> = BTreeMap::new();
+        for mv in &self.kv_moves {
+            if let KvMove::AwaitImport { dst, .. } = mv {
+                *reserved.entry(*dst).or_insert(0) += 1;
+            }
+        }
+        let mut still = Vec::with_capacity(self.kv_moves.len());
+        for mv in std::mem::take(&mut self.kv_moves) {
+            match mv {
+                KvMove::AwaitExport { seq, pending } => match Self::resolve_kv(block, pending) {
+                    KvResolved::InFlight(pending) => {
+                        still.push(KvMove::AwaitExport { seq, pending });
+                    }
+                    KvResolved::Ready(Ok(payload)) => {
+                        still.push(KvMove::PayloadReady { seq, payload, live: true, tries: 0 });
+                    }
+                    // the victim died or hung mid-pass: its KV is gone,
+                    // the sequence still has its tokens — lossy path
+                    KvResolved::Ready(Err(_)) => engine.requeue_lossy(seq)?,
+                },
+                KvMove::PayloadReady { seq, payload, live, tries } => {
+                    let src = if live { self.switched_device } else { None };
+                    match Self::submit_import(engine, seq, payload, src, &reserved)? {
+                        RouteOutcome::Submitted(m) => {
+                            if let KvMove::AwaitImport { dst, .. } = &m {
+                                *reserved.entry(*dst).or_insert(0) += 1;
+                            }
+                            still.push(m);
+                        }
+                        RouteOutcome::NoRoom(seq, payload) => {
+                            if !block && tries < KV_ROOM_RETRY_POLLS {
+                                // transient fullness in degraded mode: a
+                                // slot frees as survivors complete between
+                                // polls — a bounded wait beats paying a
+                                // full-context re-prefill
+                                still.push(KvMove::PayloadReady {
+                                    seq,
+                                    payload,
+                                    live,
+                                    tries: tries + 1,
+                                });
+                            } else {
+                                engine.requeue_lossy(seq)?;
+                            }
+                        }
+                        RouteOutcome::Fallback(seq) => engine.requeue_lossy(seq)?,
+                    }
+                }
+                KvMove::AwaitImport { seq, dst, live, pending } => {
+                    match Self::resolve_kv(block, pending) {
+                        KvResolved::InFlight(pending) => {
+                            still.push(KvMove::AwaitImport { seq, dst, live, pending });
+                        }
+                        KvResolved::Ready(result) => {
+                            // the import resolved one way or the other:
+                            // release its destination reservation (adoption,
+                            // if it happens, shows up in the real load)
+                            if let Some(r) = reserved.get_mut(&dst) {
+                                *r = r.saturating_sub(1);
+                            }
+                            match result {
+                                Ok(payload) => match engine.adopt_with_kv(dst, seq, &payload)? {
+                                    Ok(()) => {
+                                        let bytes = payload.bytes();
+                                        self.kv_bytes += bytes;
+                                        engine.stats.kv_bytes_moved += bytes;
+                                        if live {
+                                            self.kv_migrated += 1;
+                                            engine.stats.seqs_kv_migrated += 1;
+                                        } else {
+                                            self.kv_restored += 1;
+                                            engine.stats.seqs_kv_restored += 1;
+                                        }
+                                    }
+                                    Err(seq) => engine.requeue_lossy(seq)?,
+                                },
+                                Err(_) => engine.requeue_lossy(seq)?,
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.kv_moves = still;
+        Ok(self.kv_moves.is_empty())
+    }
+
+    /// Poll one in-flight KV handle: blocking `wait` under the
+    /// [`ReviveMoE::recover`] driver, a single `try_wait` under the
+    /// per-tick degraded driver — the one resolution rule every
+    /// [`KvMove`] state shares.
+    fn resolve_kv(block: bool, mut pending: Pending<KvPayload>) -> KvResolved {
+        if block {
+            KvResolved::Ready(pending.wait())
+        } else {
+            match pending.try_wait() {
+                Ok(Some(p)) => KvResolved::Ready(Ok(p)),
+                Ok(None) => KvResolved::InFlight(pending),
+                Err(e) => KvResolved::Ready(Err(e)),
+            }
+        }
+    }
+
+    /// Route one landed payload to a destination rank and submit the
+    /// device-side import upload. For a live migration (`live_src` is the
+    /// role-switch victim) the hop first crosses the rebuilt
+    /// attention-expert domain's P2P channel — a stale epoch or a
+    /// non-member endpoint declines to the lossy path instead of failing
+    /// the pass; a transiently full instance hands the payload back
+    /// intact for a bounded retry.
+    fn submit_import(
+        engine: &Engine,
+        seq: Sequence,
+        payload: KvPayload,
+        live_src: Option<DeviceId>,
+        reserved: &BTreeMap<DeviceId, usize>,
+    ) -> Result<RouteOutcome> {
+        let Some(dst) = engine.kv_adoption_target(reserved) else {
+            return Ok(RouteOutcome::NoRoom(seq, payload));
+        };
+        let live = live_src.is_some();
+        if let Some(src) = live_src {
+            let routed = engine
+                .domains
+                .get(ATTN_EXPERT_DOMAIN)
+                .and_then(|d| comms::p2p_kv_transfer(d, engine.epoch(), src, dst, payload.bytes()));
+            if routed.is_err() {
+                return Ok(RouteOutcome::Fallback(seq));
+            }
+        }
+        let handle = &engine.executors[&dst].handle;
+        // earlier imports of this pass already occupy the destination's
+        // queue: scale the deadline past them (the usual queue-depth
+        // convention), so a loaded destination is never misread as hung
+        let deadline = handle.queued_deadline(reserved.get(&dst).copied().unwrap_or(0));
+        match handle.submit_kv_import(payload, deadline) {
+            Ok(pending) => {
+                Ok(RouteOutcome::Submitted(KvMove::AwaitImport { seq, dst, live, pending }))
+            }
+            // destination thread gone (it died this instant): fall back
+            Err(_) => Ok(RouteOutcome::Fallback(seq)),
+        }
+    }
+
     /// Resume: lift the quarantine and emit the report.
     fn finish(&mut self, engine: &mut Engine) -> RecoveryReport {
         let t0 = Instant::now();
         engine.set_device_health(self.ann.device, DeviceHealth::Healthy);
-        self.bd.add(Category::Other, t0.elapsed());
+        self.add_other(t0.elapsed());
         RecoveryReport {
             breakdown: std::mem::take(&mut self.bd),
             failed_device: self.ann.device,
@@ -1059,6 +1402,13 @@ impl RecoveryTask {
             recompiled_graphs: self.sweep.recompiled,
             masked_experts: std::mem::take(&mut self.masked),
             switched_device: self.switched_device,
+            kv_migrated_sequences: self.kv_migrated,
+            kv_restored_sequences: self.kv_restored,
+            reprefilled_sequences: engine
+                .stats
+                .seqs_reprefilled
+                .saturating_sub(self.reprefill_mark),
+            kv_bytes_moved: self.kv_bytes,
         }
     }
 }
@@ -1344,6 +1694,10 @@ mod tests {
             recompiled_graphs: 0,
             masked_experts: vec![],
             switched_device: None,
+            kv_migrated_sequences: 0,
+            kv_restored_sequences: 0,
+            reprefilled_sequences: 0,
+            kv_bytes_moved: 0,
         };
         assert_eq!(r.total(), Duration::from_millis(12));
     }

@@ -42,6 +42,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cluster::{DeviceId, FailureBehavior, ProbeError};
+use crate::kvpool::KvPayload;
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -83,6 +84,12 @@ pub struct DeviceStats {
     pub weight_bytes: usize,
     /// Executables in the graph cache.
     pub executables: usize,
+    /// KV bytes DMA'd off the device by `KvExport` commands (live
+    /// migration reads).
+    pub kv_bytes_exported: usize,
+    /// KV bytes uploaded by `KvImport` commands (migration/restore
+    /// writes).
+    pub kv_bytes_imported: usize,
 }
 
 enum Cmd {
@@ -93,6 +100,8 @@ enum Cmd {
     LoadWeights { tensors: Vec<(String, Tensor)>, reply: Sender<Result<(usize, f64)>> },
     DropWeightsPrefix { prefix: String, reply: Sender<usize> },
     Execute { exe: String, args: Vec<Arg>, reply: Sender<Result<Vec<Tensor>>> },
+    KvExport { payload: KvPayload, reply: Sender<Result<KvPayload>> },
+    KvImport { payload: KvPayload, reply: Sender<Result<KvPayload>> },
     Stats { reply: Sender<DeviceStats> },
     SetFailed { behavior: FailureBehavior },
     Shutdown,
@@ -385,6 +394,30 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                 }
                 let _ = reply.send(r);
             }
+            Cmd::KvExport { payload, reply } => {
+                // models the HBM→host DMA of a live KV migration: the page
+                // contents live host-side in the executor's pool (see
+                // kvpool.rs), so the device only validates liveness and
+                // meters the bytes — a failed device cannot export (its
+                // KV is gone), and a hung one times out at the caller.
+                if failed.is_some() {
+                    let _ = reply.send(Err(anyhow::anyhow!("device failed")));
+                    continue;
+                }
+                stats.kv_bytes_exported += payload.bytes();
+                let _ = reply.send(Ok(payload));
+            }
+            Cmd::KvImport { payload, reply } => {
+                // models the host→HBM upload on the destination rank; the
+                // payload rides back so the coordinator scatters it into
+                // the destination pool only after the device confirmed.
+                if failed.is_some() {
+                    let _ = reply.send(Err(anyhow::anyhow!("device failed")));
+                    continue;
+                }
+                stats.kv_bytes_imported += payload.bytes();
+                let _ = reply.send(Ok(payload));
+            }
             Cmd::Stats { reply } => {
                 let _ = reply.send(stats.clone());
             }
@@ -454,6 +487,16 @@ fn do_execute(
 }
 
 impl DeviceHandle {
+    /// Queue-position deadline: a command entering this device's queue
+    /// behind `queued_ahead` others gets `(queued_ahead + 1) *
+    /// cmd_timeout`. The clock still starts at submission (a hung device
+    /// times out), but a healthy device draining a deep queue is never
+    /// misread as hung. The one place the queue-depth convention lives —
+    /// every submission site scales through here.
+    pub fn queued_deadline(&self, queued_ahead: usize) -> Duration {
+        self.cmd_timeout * (queued_ahead as u32 + 1)
+    }
+
     fn send(&self, cmd: Cmd) -> Result<()> {
         self.tx.send(cmd).map_err(|_| anyhow::anyhow!("device {} thread gone", self.id))
     }
@@ -607,6 +650,42 @@ impl DeviceHandle {
     /// Blocking execute: submit then await in one call.
     pub fn execute(&self, exe: &str, args: Vec<Arg>) -> Result<Vec<Tensor>> {
         self.submit_execute(exe, args)?.wait()
+    }
+
+    /// Submit a `KvExport` without waiting: the device-side DMA of a live
+    /// KV migration's read half. The payload (gathered host-side from the
+    /// executor's pool) rides through the device thread and back, so a
+    /// failed device errors the export and a hung one surfaces as the
+    /// submission-time deadline — the same convention as every other
+    /// command. Callers queueing several exports on one device scale
+    /// `deadline` by queue position.
+    pub fn submit_kv_export(
+        &self,
+        payload: KvPayload,
+        deadline: Duration,
+    ) -> Result<Pending<KvPayload>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::KvExport { payload, reply: tx })?;
+        Ok(Pending {
+            inner: PendingReply { device: self.id, rx, deadline: Instant::now() + deadline },
+        })
+    }
+
+    /// Submit a `KvImport` without waiting: the destination rank's
+    /// host→HBM upload. Awaiting the handle yields the payload back once
+    /// the device confirmed, so the coordinator scatters it into the
+    /// destination pool only after the upload "landed". Same deadline
+    /// convention as [`DeviceHandle::submit_kv_export`].
+    pub fn submit_kv_import(
+        &self,
+        payload: KvPayload,
+        deadline: Duration,
+    ) -> Result<Pending<KvPayload>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::KvImport { payload, reply: tx })?;
+        Ok(Pending {
+            inner: PendingReply { device: self.id, rx, deadline: Instant::now() + deadline },
+        })
     }
 
     /// Fetch the device's rolling counters.
@@ -790,6 +869,59 @@ mod tests {
         let p = d.handle.submit_ping(Duration::from_millis(80)).unwrap();
         assert!(p.wait().unwrap_err().to_string().contains("timed out"));
         assert!(t0.elapsed() < Duration::from_secs(2));
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    fn tiny_payload() -> KvPayload {
+        KvPayload { n_tokens: 2, row: 4, k: vec![vec![1.0; 8]], v: vec![vec![2.0; 8]] }
+    }
+
+    #[test]
+    fn kv_export_import_roundtrip_and_meter() {
+        let d = SimDevice::spawn(30);
+        let p = tiny_payload();
+        let bytes = p.bytes();
+        let out = d
+            .handle
+            .submit_kv_export(p.clone(), Duration::from_secs(1))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out, p, "the export DMA hands the payload back intact");
+        let out = d
+            .handle
+            .submit_kv_import(p.clone(), Duration::from_secs(1))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out, p);
+        let stats = d.handle.stats().unwrap();
+        assert_eq!(stats.kv_bytes_exported, bytes);
+        assert_eq!(stats.kv_bytes_imported, bytes);
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn kv_commands_fail_on_dead_and_time_out_on_hung() {
+        let d = SimDevice::spawn(31);
+        d.handle.set_failed(FailureBehavior::Erroring);
+        let e = d
+            .handle
+            .submit_kv_export(tiny_payload(), Duration::from_secs(1))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(e.to_string().contains("failed"), "a dead device's KV is gone: {e}");
+        d.handle.set_failed(FailureBehavior::Hung);
+        let e = d
+            .handle
+            .submit_kv_import(tiny_payload(), Duration::from_millis(60))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(e.to_string().contains("timed out"), "hung device must hit the deadline: {e}");
         d.handle.shutdown();
         d.join.join().unwrap();
     }

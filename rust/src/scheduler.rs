@@ -111,6 +111,29 @@ impl Sequence {
         self.clone().into_migration_view()
     }
 
+    /// KV rows resident for this sequence between committed steps: every
+    /// context position except the latest decoded token, whose row is
+    /// written by the *next* decode step. This is the exact page count a
+    /// lossless migration moves (and the redundant recompute a lossy
+    /// re-prefill pays). Meaningful only once prefill committed
+    /// (`decoded` non-empty).
+    pub fn kv_rows(&self) -> usize {
+        self.n_context().saturating_sub(1)
+    }
+
+    /// The lossless counterpart of [`Self::into_migration_view`]: the
+    /// sequence resumes decoding *at its current position* on the
+    /// destination rank, its KV pages adopted there — prompt and decoded
+    /// tokens stay split (nothing is folded back for a re-prefill), the
+    /// generation budget is untouched, and only the migration counter
+    /// advances. Callers place it directly into the running set
+    /// ([`LocalScheduler::adopt_running`]) after importing its KV.
+    pub fn resume_with_kv(mut self) -> Sequence {
+        self.state = SeqState::Running;
+        self.migrations += 1;
+        self
+    }
+
     /// Owning variant of [`Self::migration_view`]: moves `prompt` and
     /// `decoded` instead of cloning them (this runs on the recovery hot
     /// path, once per in-flight sequence on the failed rank).
@@ -225,6 +248,24 @@ impl LocalScheduler {
             self.waiting.push_front(s);
         }
         n
+    }
+
+    /// Whether the running set has room for one more sequence — the
+    /// adoption guard for KV-preserving migration (an adopted sequence
+    /// skips the waiting queue, so `max_batch` must be enforced here).
+    pub fn has_room(&self) -> bool {
+        self.running.len() < self.max_batch
+    }
+
+    /// Place an already-running sequence (KV resident, mid-generation)
+    /// directly into the running set, skipping admission and prefill —
+    /// the destination half of a lossless migration. Callers check
+    /// [`LocalScheduler::has_room`] first and convert through
+    /// [`Sequence::resume_with_kv`].
+    pub fn adopt_running(&mut self, seq: Sequence) {
+        debug_assert_eq!(seq.state, SeqState::Running, "adopt a running sequence");
+        debug_assert!(self.has_room(), "adoption past max_batch");
+        self.running.push(seq);
     }
 
     /// Remove every sequence (running and waiting separately) without any
@@ -394,6 +435,39 @@ mod tests {
         let adm = s.admit();
         assert_eq!(adm.len(), 2, "re-submitted sequences admit normally");
         assert_eq!(s.queue_depth(), 2);
+    }
+
+    #[test]
+    fn resume_with_kv_keeps_position_and_budget() {
+        let mut q = Sequence::new(8, vec![10, 11, 12], 8, Some(0));
+        q.state = SeqState::Running;
+        q.push_token(13);
+        q.push_token(14);
+        assert_eq!(q.kv_rows(), 4, "latest token's row is written next step");
+        let r = q.resume_with_kv();
+        assert_eq!(r.state, SeqState::Running);
+        assert_eq!(r.prompt, vec![10, 11, 12], "prompt untouched — no fold-back");
+        assert_eq!(r.decoded, vec![13, 14], "decoded tail survives the move");
+        assert_eq!(r.max_new_tokens, 8, "budget untouched — nothing re-decodes");
+        assert_eq!(r.migrations, 1);
+        assert_eq!(r.n_context(), 5);
+    }
+
+    #[test]
+    fn adopt_running_skips_admission() {
+        let mut s = LocalScheduler::new(2);
+        s.submit(seq(1, 2));
+        s.admit();
+        assert!(s.has_room());
+        let mut q = seq(9, 3);
+        q.state = SeqState::Running;
+        q.push_token(5);
+        s.adopt_running(q.resume_with_kv());
+        assert_eq!(s.n_running(), 2);
+        assert!(!s.has_room());
+        // the adopted sequence is immediately part of the decode set
+        assert!(s.get_running_mut(9).is_some());
+        assert_eq!(s.queue_depth(), 0, "adoption never touches the waiting queue");
     }
 
     #[test]

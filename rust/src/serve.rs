@@ -385,6 +385,14 @@ pub fn run_scenario(
         for c in done {
             record_completion(c, tick, &mut outstanding, &records, &mut completed, &mut log);
         }
+        // block-manager invariants checked every tick in debug builds, so
+        // refcount/undo-log corruption (including a botched KV adoption)
+        // fails loudly at the tick it happens instead of surfacing later
+        // as wrong tokens
+        #[cfg(debug_assertions)]
+        engine
+            .audit_kv_state()
+            .map_err(|e| e.context(format!("tick {tick}: block-table audit failed")))?;
         tick += 1;
     }
     engine.stats.stop();
@@ -521,14 +529,17 @@ fn record_degraded_recovery(
     engine.stats.record_degraded_recovery(wall);
     log.push(format!(
         "tick {tick}: degraded recovery of device {} complete role={} kind={:?} migrated={} \
-         undone={} requeued={} graphs={}",
+         undone={} requeued={} graphs={} kv_migrated={} kv_restored={} reprefilled={}",
         report.failed_device,
         report.role,
         report.moe_recovery,
         report.migrated_sequences,
         report.undone_block_ops,
         report.requeued_unprefilled,
-        report.recompiled_graphs
+        report.recompiled_graphs,
+        report.kv_migrated_sequences,
+        report.kv_restored_sequences,
+        report.reprefilled_sequences
     ));
     recoveries.push(RecoveryRecord {
         tick,
@@ -572,14 +583,18 @@ fn handle_faults(
                 engine.stats.record_stall(stall);
                 log.push(format!(
                     "tick {tick}: recovered device {} role={} kind={:?} migrated={} \
-                     undone={} requeued={} graphs={}",
+                     undone={} requeued={} graphs={} kv_migrated={} kv_restored={} \
+                     reprefilled={}",
                     report.failed_device,
                     report.role,
                     report.moe_recovery,
                     report.migrated_sequences,
                     report.undone_block_ops,
                     report.requeued_unprefilled,
-                    report.recompiled_graphs
+                    report.recompiled_graphs,
+                    report.kv_migrated_sequences,
+                    report.kv_restored_sequences,
+                    report.reprefilled_sequences
                 ));
                 recoveries.push(RecoveryRecord {
                     tick,

@@ -1,0 +1,183 @@
+//! KV-preserving request migration (acceptance criteria of the
+//! migration-split refactor):
+//!
+//! 1. with `RecoveryPolicy::kv_live_migration` on, a role-switch scenario
+//!    (expert-plane fault, healthy victim) produces token streams
+//!    **identical** to the re-prefill baseline, with **zero recomputed
+//!    tokens** for the victim's sequences — they moved with their KV and
+//!    resumed at position;
+//! 2. with `RecoveryPolicy::kv_host_mirror` on, an attention-rank
+//!    *failure* scenario completes with **zero re-prefilled sequences**
+//!    (the dead rank's sequences restore from the host mirror), again
+//!    stream-identical to the baseline;
+//! 3. both knobs off reproduces the baseline event logs byte-for-byte
+//!    (two runs agree line for line, and no KV counter ever ticks) —
+//!    the A/B convention shared with PRs 1/3/4.
+//!
+//! Needs `make artifacts` (skipped loudly otherwise), like the other
+//! integration suites.
+
+use std::path::Path;
+
+use revivemoe::cluster::{FailureBehavior, FaultLevel};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
+
+fn ready() -> bool {
+    Path::new("artifacts/hlo/manifest.json").exists()
+}
+
+/// A MoE-rank fault that forces the §3.4 role switch (no redundancy, no
+/// missing-experts masking), late enough that the victim DP rank is
+/// mid-decode with real context built up.
+fn role_switch_scenario(seed: u64) -> Scenario {
+    Scenario::new("role-switch-kv", seed).requests(24).inject_fault(
+        12,
+        5,
+        FaultLevel::L6,
+        FailureBehavior::Erroring,
+    )
+}
+
+/// An attention-rank death under live traffic — the host-mirror case.
+fn attn_fault_scenario(seed: u64) -> Scenario {
+    Scenario::new("attn-fault-kv", seed).requests(20).inject_fault(
+        8,
+        2,
+        FaultLevel::L6,
+        FailureBehavior::Erroring,
+    )
+}
+
+fn role_switch_cfg(live: bool) -> DeploymentConfig {
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.redundant_per_rank = 0;
+    cfg.recovery.allow_missing_experts = false; // force the switch
+    cfg.recovery.kv_live_migration = live;
+    cfg
+}
+
+fn run(cfg: DeploymentConfig, scenario: &Scenario) -> ServeReport {
+    let (engine, _bd) = Engine::boot(cfg).expect("boot");
+    let (engine, report) =
+        run_scenario(engine, scenario, RecoveryStrategy::ReviveMoE).expect("serve");
+    engine.shutdown();
+    report
+}
+
+#[test]
+fn live_migration_matches_reprefill_with_zero_recompute() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let scenario = role_switch_scenario(21);
+    let baseline = run(role_switch_cfg(false), &scenario);
+    let live = run(role_switch_cfg(true), &scenario);
+
+    // both complete everything, and the streams are identical: live
+    // migration changes *how* KV gets to the destination, never a token
+    assert_eq!(baseline.incomplete, 0);
+    assert_eq!(live.incomplete, 0);
+    assert_eq!(baseline.completed.len(), baseline.submitted);
+    assert_eq!(live.completed.len(), baseline.completed.len());
+    assert_eq!(
+        baseline.token_streams(),
+        live.token_streams(),
+        "live KV migration changed a token stream"
+    );
+
+    // the acceptance bar: the victim's sequences moved with their KV —
+    // nothing re-prefilled, zero tokens recomputed
+    assert_eq!(live.recoveries.len(), 1);
+    assert!(
+        live.stats.seqs_kv_migrated >= 1,
+        "the role-switch victim had running sequences to move: {:?}",
+        live.stats
+    );
+    assert_eq!(live.stats.seqs_reprefilled, 0, "no victim sequence may re-prefill");
+    assert_eq!(live.stats.recomputed_tokens, 0, "zero recomputed tokens for victim sequences");
+    assert!(live.stats.kv_bytes_moved > 0, "the P2P transfer moved real pages");
+
+    // the baseline paid the redundancy the lossless path removed
+    assert_eq!(baseline.stats.seqs_kv_migrated, 0);
+    assert!(baseline.stats.seqs_reprefilled >= 1);
+    assert!(baseline.stats.recomputed_tokens > 0);
+    // migrated sequences survive with their full output either way
+    let migrated: u32 = live.completed.iter().map(|c| c.migrations).sum();
+    assert!(migrated >= 1, "migration counters must tick on the moved sequences");
+}
+
+#[test]
+fn host_mirror_restores_dead_rank_without_reprefill() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = attn_fault_scenario(33);
+    let mut base_cfg = DeploymentConfig::disaggregated_default("artifacts");
+    base_cfg.recovery.kv_host_mirror = false;
+    let mut mirror_cfg = DeploymentConfig::disaggregated_default("artifacts");
+    mirror_cfg.recovery.kv_host_mirror = true;
+    let baseline = run(base_cfg, &scenario);
+    let mirrored = run(mirror_cfg, &scenario);
+
+    assert_eq!(mirrored.incomplete, 0);
+    assert_eq!(mirrored.completed.len(), mirrored.submitted);
+    assert_eq!(
+        baseline.token_streams(),
+        mirrored.token_streams(),
+        "mirror restore changed a token stream"
+    );
+    // the acceptance bar: an attention-rank *failure* completes with
+    // zero re-prefilled sequences — every resident context restored
+    assert_eq!(mirrored.stats.seqs_reprefilled, 0, "{:?}", mirrored.stats);
+    assert_eq!(mirrored.stats.recomputed_tokens, 0);
+    assert!(
+        mirrored.stats.seqs_kv_restored >= 1,
+        "the dead rank's sequences restore from the mirror"
+    );
+    assert!(mirrored.stats.kv_bytes_moved > 0);
+    assert_eq!(baseline.stats.seqs_kv_restored, 0, "baseline never touches the mirror");
+}
+
+#[test]
+fn mirror_restores_under_degraded_serving_too() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    // same fault, but recovery advances one stage per tick while the
+    // surviving DP ranks keep serving — the restore lands mid-stream
+    // through the try_wait path instead of blocking waits
+    let scenario = attn_fault_scenario(45);
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.recovery.kv_host_mirror = true;
+    cfg.recovery.degraded_serving = true;
+    let report = run(cfg, &scenario);
+    assert_eq!(report.incomplete, 0);
+    assert_eq!(report.completed.len(), report.submitted);
+    assert_eq!(report.stats.seqs_reprefilled, 0, "{:?}", report.stats);
+    assert!(report.stats.seqs_kv_restored >= 1);
+    assert!(report.stats.degraded_ticks > 0, "survivors served through the restore");
+}
+
+#[test]
+fn knobs_off_reproduces_baseline_event_log_byte_for_byte() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = role_switch_scenario(57);
+    let a = run(role_switch_cfg(false), &scenario);
+    let b = run(role_switch_cfg(false), &scenario);
+    assert_eq!(a.event_log, b.event_log, "knobs-off must replay exactly");
+    assert_eq!(a.token_streams(), b.token_streams());
+    assert_eq!(a.ticks, b.ticks);
+    // and no KV machinery ever engages
+    assert_eq!(a.stats.seqs_kv_migrated, 0);
+    assert_eq!(a.stats.seqs_kv_restored, 0);
+    assert_eq!(a.stats.kv_bytes_moved, 0);
+}

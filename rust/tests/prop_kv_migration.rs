@@ -1,0 +1,200 @@
+//! Property tests for the KV export→import roundtrip behind
+//! KV-preserving migration (live role-switch transfer + host-mirror
+//! restore), alongside `prop_kvcache.rs`'s undo-log properties.
+//!
+//! Like the other property suites, randomness comes from the in-tree
+//! deterministic xorshift generator (the offline build carries no
+//! proptest crate). The properties:
+//!
+//! 1. for arbitrary table shapes — any token count, partial last blocks,
+//!    fragmented source layouts, shared-prefix refcounts on the source —
+//!    `export_blocks` → `adopt_table` → `import_blocks` reproduces the
+//!    source rows exactly on a destination pool with a different layout;
+//! 2. adoption obeys the undo-log discipline: rolling the destination
+//!    back after an adoption restores its exact pre-adoption state;
+//! 3. the host mirror fed row-by-row (decode order) produces the same
+//!    payload as a pool export of the same rows, and truncation after a
+//!    partial step keeps it consistent.
+
+use revivemoe::config::ModelMeta;
+use revivemoe::kvcache::BlockManager;
+use revivemoe::kvpool::{KvMirror, KvPool};
+use revivemoe::workload::Rng;
+
+fn meta(n_layers: usize) -> ModelMeta {
+    ModelMeta {
+        vocab: 64,
+        d_model: 32,
+        n_heads: 2,
+        d_head: 8,
+        n_layers,
+        n_dense_layers: 1,
+        n_experts: 8,
+        top_k: 2,
+        d_ff: 32,
+        max_seq: 256,
+        ln_eps: 1e-5,
+    }
+}
+
+/// Deterministic per-(seq, layer, position) row so mismatches localize.
+fn row_of(seq: u64, layer: usize, pos: usize, width: usize, neg: bool) -> Vec<f32> {
+    (0..width)
+        .map(|x| {
+            let v = (seq as f32) * 1000.0 + (layer as f32) * 100.0 + (pos as f32) + x as f32 * 1e-3;
+            if neg {
+                -v
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn export_import_roundtrips_arbitrary_shapes() {
+    for trial in 0..120u64 {
+        let mut rng = Rng::new(0xBEEF + trial);
+        let n_layers = 1 + rng.below(3);
+        let m = meta(n_layers);
+        let row = m.n_heads * m.d_head;
+        let block_size = [2, 4, 8][rng.below(3)];
+        let mut src_bm = BlockManager::new(64, block_size);
+        let mut src_pool = KvPool::new(&m, 64, block_size);
+
+        // fragment the source layout: allocate and drop scratch sequences
+        // so the migrated table's blocks are non-contiguous block ids
+        for s in 100..(100 + rng.below(6) as u64) {
+            for _ in 0..rng.below(3 * block_size) + 1 {
+                src_bm.append_token(s).unwrap();
+            }
+        }
+        let seq = 7u64;
+        let n_tokens = rng.below(5 * block_size) + 1; // partial last blocks included
+        for pos in 0..n_tokens {
+            let (blk, slot) = src_bm.append_token(seq).unwrap();
+            for layer in 0..n_layers {
+                let k = row_of(seq, layer, pos, row, false);
+                let v = row_of(seq, layer, pos, row, true);
+                src_pool.write_row(layer, blk, slot, &k, &v).unwrap();
+            }
+        }
+        // shared-prefix refcounts: bump some of the exported table's
+        // blocks — export is read-only and must not care
+        let blocks = src_bm.table(seq).unwrap().blocks.clone();
+        for &b in blocks.iter().take(rng.below(blocks.len() + 1)) {
+            src_bm.ref_inc(b).unwrap();
+        }
+
+        let src_table = src_bm.table(seq).unwrap().clone();
+        let payload = src_pool.export_blocks(&src_table).unwrap();
+        assert_eq!(payload.n_tokens, n_tokens, "trial {trial}");
+        assert_eq!(payload.bytes(), 2 * n_layers * n_tokens * row * 4);
+
+        // destination with a different shape and its own resident work
+        let dst_blocks = 96;
+        let mut dst_bm = BlockManager::new(dst_blocks, block_size);
+        let mut dst_pool = KvPool::new(&m, dst_blocks, block_size);
+        for _ in 0..rng.below(2 * block_size) + 1 {
+            dst_bm.append_token(42).unwrap();
+        }
+        dst_bm.begin_step();
+        let dst_table = dst_bm.adopt_table(seq, n_tokens).unwrap();
+        dst_pool.import_blocks(&dst_table, &payload).unwrap();
+        dst_bm.begin_step(); // commit, like Executor::adopt_kv
+        dst_bm.audit().unwrap();
+
+        // every row of every layer must match the source exactly
+        let max_seq = n_tokens.next_multiple_of(block_size);
+        for layer in 0..n_layers {
+            let (sk, sv) = src_pool.gather(layer, &[&src_table], &[n_tokens], max_seq).unwrap();
+            let (dk, dv) = dst_pool.gather(layer, &[&dst_table], &[n_tokens], max_seq).unwrap();
+            assert_eq!(
+                sk.as_f32().unwrap(),
+                dk.as_f32().unwrap(),
+                "trial {trial} layer {layer}: K rows diverged"
+            );
+            assert_eq!(sv.as_f32().unwrap(), dv.as_f32().unwrap());
+        }
+    }
+}
+
+#[test]
+fn adoption_rolls_back_under_undo_log() {
+    for trial in 0..80u64 {
+        let mut rng = Rng::new(0xFACE + trial);
+        let block_size = [2, 4][rng.below(2)];
+        let mut bm = BlockManager::new(16, block_size);
+        // resident pre-state
+        for _ in 0..rng.below(8) + 1 {
+            bm.append_token(1).unwrap();
+        }
+        bm.begin_step();
+        let snap = bm.snapshot();
+        let n = rng.below(4 * block_size) + 1;
+        match bm.adopt_table(9, n) {
+            Ok(t) => assert_eq!(t.n_tokens(block_size), n),
+            Err(_) => { /* pool OOM mid-adoption: partial ops logged */ }
+        }
+        bm.undo_step().unwrap();
+        assert_eq!(bm.snapshot(), snap, "trial {trial}: adoption must be fully reversible");
+        bm.audit().unwrap();
+    }
+}
+
+#[test]
+fn mirror_tracks_pool_under_random_decode_traces() {
+    for trial in 0..60u64 {
+        let mut rng = Rng::new(0xD1CE + trial);
+        let n_layers = 1 + rng.below(3);
+        let m = meta(n_layers);
+        let row = m.n_heads * m.d_head;
+        let mut bm = BlockManager::new(64, 4);
+        let mut pool = KvPool::new(&m, 64, 4);
+        let mut mirror = KvMirror::new(&m);
+
+        let seq = 3u64;
+        let committed = rng.below(20) + 1;
+        for pos in 0..committed {
+            let (blk, slot) = bm.append_token(seq).unwrap();
+            for layer in 0..n_layers {
+                let k = row_of(seq, layer, pos, row, false);
+                let v = row_of(seq, layer, pos, row, true);
+                pool.write_row(layer, blk, slot, &k, &v).unwrap();
+                mirror.record_row(seq, layer, &k, &v).unwrap();
+            }
+        }
+        // an aborted step mirrors a strict prefix of the layers
+        let aborted_layers = rng.below(n_layers);
+        for layer in 0..aborted_layers {
+            let k = row_of(seq, layer, committed, row, false);
+            mirror.record_row(seq, layer, &k, &k).unwrap();
+        }
+
+        // the restore payload covers exactly the committed rows and
+        // matches the pool's export byte for byte
+        let table = bm.table(seq).unwrap().clone();
+        let exported = pool.export_blocks(&table).unwrap();
+        let restored = mirror.payload(seq, committed).expect("committed rows covered");
+        assert_eq!(exported, restored, "trial {trial}");
+        if aborted_layers > 0 {
+            assert!(
+                mirror.payload(seq, committed + 1).is_none(),
+                "trial {trial}: a half-mirrored step must not be restorable"
+            );
+        }
+
+        // rollback truncation re-aligns the mirror for future appends
+        mirror.truncate(seq, committed);
+        for layer in 0..n_layers {
+            let k = row_of(seq, layer, committed, row, false);
+            mirror.record_row(seq, layer, &k, &k).unwrap();
+        }
+        let p = mirror.payload(seq, committed + 1).expect("appends aligned after truncate");
+        assert_eq!(
+            &p.k[0][committed * row..],
+            row_of(seq, 0, committed, row, false).as_slice(),
+            "trial {trial}: post-truncate append lands at the committed position"
+        );
+    }
+}

@@ -19,17 +19,18 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python3 - <<'EOF'
+import glob
 import json
 import os
 import sys
 
-FILES = [
-    "BENCH_decode_throughput.json",
-    "BENCH_serve_scenarios.json",
-    "BENCH_recovery_latency.json",
-]
+# every repo-root baseline is validated — a glob, not a hardcoded list,
+# so a newly added BENCH_*.json cannot silently escape the check
+FILES = sorted(glob.glob("BENCH_*.json"))
 
 failures = []
+if not FILES:
+    failures.append("no BENCH_*.json baselines found at the repo root")
 
 
 def rows_of(doc):
@@ -45,7 +46,7 @@ def rows_of(doc):
 def null_metrics(rows):
     """(nulls, non_nulls) over every non-identity field of every row."""
     identity = {"scenario", "strategy", "mode", "label", "ranks", "scope",
-                "degraded_serving", "attn_ranks"}
+                "degraded_serving", "attn_ranks", "ctx"}
     nulls = non_nulls = 0
     for row in rows:
         if not isinstance(row, dict):
