@@ -1,0 +1,183 @@
+//! **Prefill chunking**: serve-tick latency under continuous batching
+//! with chunked prefill and KV-pressure preemption.
+//!
+//! Monolithic prefill makes every decode step behind an admission wait
+//! for the whole prompt's forward — head-of-line blocking that shows up
+//! as TPOT spikes whenever a long prompt lands mid-surge. Chunked
+//! prefill (`prefill_chunk_tokens`) splits each prompt into fixed-size
+//! chunks interleaved with decode, and the per-tick token budget
+//! (`tick_token_budget`) caps how much prefill work a tick admits, so
+//! decode latency stays flat while prefill streams in. This bench
+//! measures both effects plus the preemption path:
+//!
+//! - **scenario sweep**: the rate-surge and fault-surge canned scenarios
+//!   under monolithic vs chunked vs chunked+budgeted serving — TTFT
+//!   (split into queue wait and prefill execution), TPOT, decode step
+//!   p50, chunk/preemption counters, completions;
+//! - **KV pressure**: long prompts against a deliberately small pool so
+//!   decode must preempt — mirror spill/restore (lossless) vs the lossy
+//!   re-prefill fallback, counting recomputed tokens.
+//!
+//! Run: `cargo bench --bench prefill_chunking` (or
+//! `scripts/bench_chunking.sh` from the repo root, which also refreshes
+//! `BENCH_prefill_chunking.json`).
+
+mod common;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::scenario::Scenario;
+use revivemoe::scheduler::Token;
+use revivemoe::serve::{run_scenario, RecoveryStrategy};
+use revivemoe::workload::Request;
+
+/// (label, prefill_chunk_tokens, tick_token_budget)
+const KNOBS: [(&str, usize, usize); 3] =
+    [("monolithic", 0, 0), ("chunk32", 32, 0), ("chunk32+budget64", 32, 64)];
+
+fn cfg_with(chunk: usize, budget: usize) -> DeploymentConfig {
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.prefill_chunk_tokens = chunk;
+    cfg.tick_token_budget = budget;
+    cfg
+}
+
+/// Long-context requests with a tiny decode tail, the pressure workload.
+fn long_requests(n: usize, ctx: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            task: "bench".into(),
+            prompt: vec![(1 + i % 60) as Token; ctx],
+            expected: String::new(),
+            max_new_tokens: 6,
+        })
+        .collect()
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let scenarios: &[&str] = if quick { &["rate-surge"] } else { &["rate-surge", "fault-surge"] };
+    let requests = if quick { 12 } else { 24 };
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("Prefill chunking: serve-tick latency, monolithic vs chunked vs budgeted\n");
+    println!(
+        "{:<12} {:<18} {:>9} {:>9} {:>11} {:>9} {:>9} {:>7} {:>7} {:>5}",
+        "scenario", "label", "ttft_p50", "queue_p50", "prefill_p50", "tpot_p50", "step_p50",
+        "chunks", "preempt", "done"
+    );
+    for &name in scenarios {
+        for &(label, chunk, budget) in &KNOBS {
+            let scenario = Scenario::by_name(name, 21).expect("canned").requests(requests);
+            let (engine, _bd) = match Engine::boot(cfg_with(chunk, budget)) {
+                Ok(x) => x,
+                Err(e) => {
+                    println!("{name:<12} {label:<18} SKIP (boot: {e})");
+                    continue;
+                }
+            };
+            let (engine, report) =
+                match run_scenario(engine, &scenario, RecoveryStrategy::ReviveMoE) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        println!("{name:<12} {label:<18} FAILED: {e}");
+                        continue;
+                    }
+                };
+            let st = &report.stats;
+            println!(
+                "{:<12} {:<18} {:>9.1} {:>9.1} {:>11.1} {:>9.2} {:>9.2} {:>7} {:>7} {:>5}",
+                name,
+                label,
+                st.ttft_p50(),
+                st.ttft_queue_p50(),
+                st.ttft_prefill_p50(),
+                st.tpot_p50(),
+                st.decode_step_p50(),
+                st.chunks_prefilled,
+                st.seqs_preempted,
+                report.completed.len()
+            );
+            rows.push(obj(vec![
+                ("scenario", s(name)),
+                ("label", s(label)),
+                ("ttft_p50_ms", num(st.ttft_p50())),
+                ("ttft_p99_ms", num(st.ttft_p99())),
+                ("ttft_queue_p50_ms", num(st.ttft_queue_p50())),
+                ("ttft_prefill_p50_ms", num(st.ttft_prefill_p50())),
+                ("tpot_p50_ms", num(st.tpot_p50())),
+                ("tpot_p99_ms", num(st.tpot_p99())),
+                ("decode_step_p50_ms", num(st.decode_step_p50())),
+                ("e2e_p99_ticks", num(report.e2e_latency_ticks_pct(0.99))),
+                ("chunks_prefilled", num(st.chunks_prefilled as f64)),
+                ("seqs_preempted", num(st.seqs_preempted as f64)),
+                ("completed", num(report.completed.len() as f64)),
+                ("incomplete", num(report.incomplete as f64)),
+                ("ticks", num(report.ticks as f64)),
+            ]));
+            engine.shutdown();
+        }
+    }
+
+    // KV pressure: a pool too small for the resident set, so decode must
+    // preempt — mirror spill/restore vs the lossy re-prefill fallback
+    let ctx = 128;
+    println!("\nKV-pressure preemption: 12-block pool, ctx={ctx} prompts\n");
+    println!(
+        "{:<12} {:<18} {:>7} {:>7} {:>10} {:>10} {:>5}",
+        "scenario", "label", "preempt", "repref", "recomp_tok", "kv_bytes", "done"
+    );
+    for (label, mirror) in [("mirror-spill", true), ("lossy-requeue", false)] {
+        let mut cfg = cfg_with(64, 0);
+        cfg.blocks_per_rank = 12;
+        cfg.recovery.kv_host_mirror = mirror;
+        let (mut engine, _bd) = match Engine::boot(cfg) {
+            Ok(x) => x,
+            Err(e) => {
+                println!("{:<12} {label:<18} SKIP (boot: {e})", "kv-pressure");
+                continue;
+            }
+        };
+        engine.stats.start();
+        for req in long_requests(8, ctx) {
+            engine.submit(req).expect("submit");
+        }
+        let done = engine.run_to_completion(10_000).expect("drain").len();
+        let st = &engine.stats;
+        println!(
+            "{:<12} {:<18} {:>7} {:>7} {:>10} {:>10} {:>5}",
+            "kv-pressure",
+            label,
+            st.seqs_preempted,
+            st.seqs_reprefilled,
+            st.recomputed_tokens,
+            st.kv_bytes_moved,
+            done
+        );
+        rows.push(obj(vec![
+            ("scenario", s("kv-pressure")),
+            ("label", s(label)),
+            ("ctx", num(ctx as f64)),
+            ("seqs_preempted", num(st.seqs_preempted as f64)),
+            ("seqs_reprefilled", num(st.seqs_reprefilled as f64)),
+            ("recomputed_tokens", num(st.recomputed_tokens as f64)),
+            ("kv_bytes_moved", num(st.kv_bytes_moved as f64)),
+            ("completed", num(done as f64)),
+        ]));
+        engine.shutdown();
+    }
+
+    let j = obj(vec![
+        ("bench", s("prefill_chunking")),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("prefill_chunking", &j);
+    // repo-root copy: the chunking baseline future PRs compare to
+    match std::fs::write("../BENCH_prefill_chunking.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_prefill_chunking.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_prefill_chunking.json: {e}"),
+    }
+}

@@ -244,6 +244,27 @@ pub struct DeploymentConfig {
     /// the overlap-correctness tests and the decode-throughput bench;
     /// production deployments leave this off.
     pub serial_data_plane: bool,
+    /// Chunked prefill: split each prompt's prefill into chunks of at
+    /// most this many tokens, each chunk its own committed undo-log step,
+    /// interleaved with decode ticks (a sequence sits in
+    /// [`crate::scheduler::SeqState::Prefilling`] between chunks). Greedy
+    /// decoding is position-causal, so the produced token streams are
+    /// identical to a monolithic prefill — only TTFT/TPOT scheduling
+    /// changes. 0 (default) = monolithic lockstep prefill, the A/B
+    /// baseline (`tests/integration_chunked_prefill.rs` equivalence-gates
+    /// the two; `benches/prefill_chunking.rs` measures the latency gap).
+    pub prefill_chunk_tokens: usize,
+    /// Continuous-batching token budget per serve tick and attention
+    /// rank: decode tokens (one per running sequence) are charged first,
+    /// then prefill chunks fill the remainder, admitting mid-batch
+    /// instead of lockstep. A chunk is never split below
+    /// [`DeploymentConfig::prefill_chunk_tokens`], so the budget is a
+    /// soft target that may overshoot by one chunk. Also arms
+    /// KV-pressure preemption: on pool exhaustion the youngest decoding
+    /// sequence spills to the host mirror (lossless, needs
+    /// [`RecoveryPolicy::kv_host_mirror`]) or requeues lossily. 0
+    /// (default) = unbounded lockstep ticks, the A/B baseline.
+    pub tick_token_budget: usize,
 }
 
 impl DeploymentConfig {
@@ -270,6 +291,8 @@ impl DeploymentConfig {
             artifacts_dir: artifacts_dir.into(),
             graph_mode: false,
             serial_data_plane: false,
+            prefill_chunk_tokens: 0,
+            tick_token_budget: 0,
         }
     }
 

@@ -27,7 +27,7 @@
 //! `Engine::boot` produces the Figure-1 style initialization breakdown;
 //! every timing category matches Table 1.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use crate::artifacts::ArtifactStore;
@@ -192,10 +192,58 @@ pub struct Engine {
     /// restore instead of re-prefilling. Keyed by sequence, not device —
     /// entries follow their sequence across migrations.
     kv_mirror: Option<KvMirror>,
+    /// Sequences preempted under KV pressure with their device pages
+    /// dropped and their KV retained host-side by the mirror
+    /// ([`Engine::preempt_one`]). [`Engine::restore_spilled`] re-adopts
+    /// them, oldest first, whenever a tick starts with batch room and
+    /// pool capacity — the PR-5 restore path reused as a scheduling
+    /// primitive. Only the chunked/budgeted serve path populates this.
+    spilled: VecDeque<Sequence>,
+    /// Reusable decode-tick assembly buffers (ROADMAP "zero-allocation
+    /// decode tick", first slice): cleared and refilled every tick
+    /// instead of reallocated.
+    scratch: DecodeScratch,
     /// Re-entrancy guard: true while a recovery pass is executing. A
     /// second fault arriving during recovery must *queue* (the plugin
     /// keeps its annotation) and recover afterwards, never nest.
     pub recovering: bool,
+}
+
+/// Reusable decode-tick assembly buffers (ROADMAP "zero-allocation decode
+/// tick", first slice). One instance lives on the [`Engine`]; every tick
+/// clears and refills it, recycling the per-rank id/len vectors through
+/// pools, so steady-state decode performs no batch-assembly allocations.
+#[derive(Debug, Default)]
+struct DecodeScratch {
+    /// Per-rank decode batches: (device, seq ids, batch bucket).
+    batches: Vec<(DeviceId, Vec<SeqId>, usize)>,
+    /// Recycled id vectors for `batches`.
+    ids_pool: Vec<Vec<SeqId>>,
+    /// Per-batch current lengths (this step's row position per sequence).
+    lens: Vec<Vec<usize>>,
+    /// Recycled length vectors for `lens`.
+    lens_pool: Vec<Vec<usize>>,
+    /// Token-id staging for one rank's embed submission (bucket-padded).
+    toks: Vec<i32>,
+    /// Position staging for one rank's embed submission (bucket-padded).
+    pos: Vec<i32>,
+}
+
+impl DecodeScratch {
+    /// Return every per-batch vector to its pool and clear the staging
+    /// buffers, retaining all capacity for the next tick.
+    fn reset(&mut self) {
+        for (_, mut ids, _) in self.batches.drain(..) {
+            ids.clear();
+            self.ids_pool.push(ids);
+        }
+        for mut ls in self.lens.drain(..) {
+            ls.clear();
+            self.lens_pool.push(ls);
+        }
+        self.toks.clear();
+        self.pos.clear();
+    }
 }
 
 impl Engine {
@@ -403,6 +451,8 @@ impl Engine {
             health: BTreeMap::new(),
             recovery_task: None,
             kv_mirror,
+            spilled: VecDeque::new(),
+            scratch: DecodeScratch::default(),
             recovering: false,
         };
         bd.add(Category::Other, t0.elapsed());
@@ -719,13 +769,16 @@ impl Engine {
         self.kv_mirror.as_ref().map(|m| (m.len(), m.bytes())).unwrap_or((0, 0))
     }
 
-    /// Sequences still in the system (waiting + running) across all ranks.
+    /// Sequences still in the system across all ranks: waiting + running,
+    /// plus any preempted sequence spilled to the host mirror and awaiting
+    /// restore (those hold no rank slot but are very much in flight).
     pub fn pending(&self) -> usize {
         self.attn_order
             .iter()
             .filter_map(|d| self.executors[d].attn.as_ref())
             .map(|a| a.sched.load())
-            .sum()
+            .sum::<usize>()
+            + self.spilled.len()
     }
 
     // -- device health / degraded-mode recovery -------------------------------
@@ -874,7 +927,9 @@ impl Engine {
                 // the aborted step may have mirrored rows (possibly for a
                 // subset of layers) that the undo just rolled out of the
                 // pool — truncate each survivor back to its committed row
-                // count so later appends stay position-aligned
+                // count so later appends stay position-aligned. A
+                // mid-prefill sequence's committed rows are its finished
+                // chunks (`next_row`), not the full-context `kv_rows`.
                 let committed: Vec<(SeqId, usize)> = self.executors[&d]
                     .attn
                     .as_ref()
@@ -882,7 +937,7 @@ impl Engine {
                     .sched
                     .running
                     .iter()
-                    .map(|s| (s.id, s.kv_rows()))
+                    .map(|s| (s.id, s.committed_rows()))
                     .collect();
                 let m = self.kv_mirror.as_mut().unwrap();
                 for (id, n) in committed {
@@ -927,22 +982,34 @@ impl Engine {
         );
         let mut done = Vec::new();
 
-        // admissions + prefill (per serving DP rank); indexed iteration —
-        // attn_order is stable across a step, so no per-tick clone
-        let mut i = 0;
-        while i < self.attn_order.len() {
-            let d = self.attn_order[i];
-            i += 1;
-            if !self.rank_serving(d) {
-                continue;
-            }
-            let admitted = {
-                let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
-                a.sched.admit()
-            };
-            for seq_id in admitted {
-                self.prefill(d, seq_id)?;
-                self.stats.prefills += 1;
+        if self.chunked_path() {
+            // continuous-batching path: spilled sequences restore first
+            // (the PR-5 adoption path reused as a scheduling primitive),
+            // then admissions and prefill chunks are charged against the
+            // tick token budget
+            self.restore_spilled()?;
+            self.admit_and_prefill_chunked()?;
+        } else {
+            // lockstep path (the A/B baseline): admissions + monolithic
+            // prefill (per serving DP rank); indexed iteration —
+            // attn_order is stable across a step, so no per-tick clone
+            let mut i = 0;
+            while i < self.attn_order.len() {
+                let d = self.attn_order[i];
+                i += 1;
+                if !self.rank_serving(d) {
+                    continue;
+                }
+                let admitted = {
+                    let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                    a.sched.admit()
+                };
+                for seq_id in admitted {
+                    self.prefill(d, seq_id)?;
+                    self.stats.prefills += 1;
+                    // counter invariant: a monolithic prefill is one chunk
+                    self.stats.chunks_prefilled += 1;
+                }
             }
         }
 
@@ -1044,27 +1111,305 @@ impl Engine {
         Ok(all)
     }
 
-    // -- prefill ---------------------------------------------------------------
+    // -- chunked serve path (continuous batching + KV-pressure preemption) -----
 
-    fn prefill(&mut self, dev: DeviceId, seq_id: SeqId) -> Result<()> {
-        let (prompt, ctx) = {
+    /// Whether the chunked/budgeted serve path is active (either knob
+    /// set). With both knobs zero — the default — every tick takes the
+    /// pre-PR lockstep path byte-for-byte.
+    fn chunked_path(&self) -> bool {
+        self.cfg.prefill_chunk_tokens > 0 || self.cfg.tick_token_budget > 0
+    }
+
+    /// Budget-aware admissions + chunked prefill for one tick. Per
+    /// serving rank: decode tokens are charged against
+    /// `tick_token_budget` first (every decodable sequence generates one
+    /// token this tick; decode itself is never throttled), in-flight
+    /// [`SeqState::Prefilling`] sequences then advance one chunk each,
+    /// and whatever budget remains admits waiting sequences chunk by
+    /// chunk. A budget of 0 is unlimited; the last chunk started may
+    /// overshoot the budget by up to `chunk - 1` tokens — progress is
+    /// never throttled to zero, so the path cannot livelock.
+    fn admit_and_prefill_chunked(&mut self) -> Result<()> {
+        let budget = self.cfg.tick_token_budget;
+        let chunk = self.cfg.prefill_chunk_tokens;
+        let mut i = 0;
+        while i < self.attn_order.len() {
+            let d = self.attn_order[i];
+            i += 1;
+            if !self.rank_serving(d) {
+                continue;
+            }
+            let (mut spent, in_flight) = {
+                let a = self.executors[&d].attn.as_ref().unwrap();
+                let decode_tokens = a
+                    .sched
+                    .running
+                    .iter()
+                    .filter(|s| s.state == SeqState::Running && !s.is_finished())
+                    .count();
+                let chunks: Vec<(SeqId, usize, usize)> = a
+                    .sched
+                    .running
+                    .iter()
+                    .filter_map(|s| match s.state {
+                        SeqState::Prefilling { next_row } => {
+                            Some((s.id, next_row, s.prompt.len()))
+                        }
+                        _ => None,
+                    })
+                    .collect();
+                (decode_tokens, chunks)
+            };
+            // 1. advance every in-flight prefill by one chunk, in running
+            //    order (oldest admission first)
+            for (id, next_row, ctx) in in_flight {
+                if budget > 0 && spent >= budget {
+                    break;
+                }
+                let end = if chunk > 0 { ctx.min(next_row + chunk) } else { ctx };
+                if self.prefill_range(d, id, next_row, end)? {
+                    self.stats.chunks_prefilled += 1;
+                    spent += end - next_row;
+                }
+            }
+            // 2. admissions fill what remains of the budget
+            while budget == 0 || spent < budget {
+                let admitted = {
+                    let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                    a.sched.admit_prefilling()
+                };
+                let Some(id) = admitted else { break };
+                let ctx = {
+                    let a = self.executors[&d].attn.as_ref().unwrap();
+                    a.sched.running.iter().find(|s| s.id == id).unwrap().prompt.len()
+                };
+                let end = if chunk > 0 { ctx.min(chunk) } else { ctx };
+                if self.prefill_range(d, id, 0, end)? {
+                    self.stats.prefills += 1;
+                    self.stats.chunks_prefilled += 1;
+                    spent += end;
+                } else {
+                    // the pool cannot take even a first chunk right now;
+                    // stop admitting on this rank for the tick (the demoted
+                    // sequence is back in a waiting queue already)
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Spill one victim off rank `dev` to relieve KV pressure: the
+    /// youngest Running sequence (max id — least sunk cost under FIFO
+    /// ids) with a committed table. Its device pages are dropped as a
+    /// committed undo-log step of their own, so no later rollback can
+    /// resurrect them. With the host mirror on and covering, the victim
+    /// parks in the engine's spill queue and
+    /// [`Engine::restore_spilled`] later re-adopts it with zero
+    /// recomputed tokens; otherwise it takes the lossy re-prefill
+    /// requeue ([`Engine::requeue_lossy`]). Returns false when the rank
+    /// has no preemptible sequence (the caller propagates its OOM).
+    fn preempt_one(&mut self, dev: DeviceId) -> Result<bool> {
+        let victim = {
             let a = self.executors[&dev].attn.as_ref().unwrap();
-            let s = a.sched.running.iter().find(|s| s.id == seq_id).unwrap();
-            (s.prompt.clone(), s.prompt.len())
+            a.sched
+                .running
+                .iter()
+                .filter(|s| {
+                    s.state == SeqState::Running && !s.is_finished() && !s.decoded.is_empty()
+                })
+                .filter(|s| a.blocks.table(s.id).is_some())
+                .max_by_key(|s| s.id)
+                .map(|s| s.id)
         };
-        let s_bucket = self
-            .cfg
-            .prefill_bucket(ctx)
-            .ok_or_else(|| anyhow::anyhow!("prompt longer than any prefill bucket"))?;
-        let mut toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
-        toks.resize(s_bucket, 0);
-
-        // reserve pages for every prompt position (its own undo-log step)
+        let Some(vid) = victim else { return Ok(false) };
+        let seq = {
+            let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+            let pos = a.sched.running.iter().position(|s| s.id == vid).unwrap();
+            a.sched.running.remove(pos)
+        };
         {
             let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
             a.blocks.begin_step();
-            for _ in 0..ctx {
-                a.blocks.append_token(seq_id)?;
+            a.blocks.drop_sequence(vid)?;
+            a.blocks.begin_step();
+            a.blocks.audit()?;
+        }
+        self.stats.seqs_preempted += 1;
+        let n = seq.kv_rows();
+        let covered = self.kv_mirror.as_mut().is_some_and(|m| {
+            // defensive: committed boundaries keep mirror rows == kv_rows
+            // already, but a truncate here costs nothing and guarantees
+            // the restore payload is position-exact
+            m.truncate(vid, n);
+            m.covers(vid, n)
+        });
+        if covered {
+            self.spilled.push_back(seq);
+        } else {
+            self.requeue_lossy(seq)?;
+        }
+        Ok(true)
+    }
+
+    /// Re-adopt spilled sequences, oldest first, onto serving ranks with
+    /// batch room and pool capacity, replaying their host-mirrored KV —
+    /// the PR-5 restore path ([`Engine::adopt_with_kv`]) reused as a
+    /// scheduling primitive. A sequence that cannot land this tick (no
+    /// target, no capacity, adoption declined) stays spilled and retries
+    /// next tick; [`Engine::pending`] counts it, so the serve loop never
+    /// exits with spilled work outstanding.
+    fn restore_spilled(&mut self) -> Result<()> {
+        let mut remaining = self.spilled.len();
+        while remaining > 0 {
+            remaining -= 1;
+            let Some(seq) = self.spilled.pop_front() else { break };
+            let n = seq.kv_rows();
+            let payload = self.kv_mirror.as_mut().and_then(|m| {
+                m.truncate(seq.id, n);
+                m.payload(seq.id, n)
+            });
+            let Some(payload) = payload else {
+                // mirror lost coverage (should not happen for a spill the
+                // mirror accepted): lossy fallback rather than losing the
+                // sequence
+                self.requeue_lossy(seq)?;
+                continue;
+            };
+            let dst = self.kv_adoption_target(&BTreeMap::new()).filter(|d| {
+                self.executors[d]
+                    .attn
+                    .as_ref()
+                    .is_some_and(|a| a.blocks.free_token_capacity(seq.id) >= n)
+            });
+            let Some(dst) = dst else {
+                // pressure has not eased yet; keep queue order and retry
+                // next tick
+                self.spilled.push_front(seq);
+                break;
+            };
+            match self.adopt_with_kv(dst, seq, &payload)? {
+                Ok(()) => {
+                    self.stats.kv_bytes_moved += payload.bytes();
+                }
+                Err(seq) => {
+                    self.spilled.push_back(seq);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- prefill ---------------------------------------------------------------
+
+    /// Monolithic prefill of `seq_id`'s whole prompt (the lockstep path).
+    fn prefill(&mut self, dev: DeviceId, seq_id: SeqId) -> Result<()> {
+        let ctx = {
+            let a = self.executors[&dev].attn.as_ref().unwrap();
+            a.sched.running.iter().find(|s| s.id == seq_id).unwrap().prompt.len()
+        };
+        self.prefill_range(dev, seq_id, 0, ctx).map(|_| ())
+    }
+
+    /// Run the prefill forward for prompt rows `[start, end)` of `seq_id`
+    /// on rank `dev` and scatter their KV. The forward recomputes the
+    /// full prefix `[0, end)` — there is no incremental-prefill HLO
+    /// artifact, and causal masking makes the recomputed rows
+    /// bit-identical to the pass that originally committed them — but
+    /// only the new rows are reserved, scattered, and mirrored, so each
+    /// chunk is one undo-logged step exactly like a monolithic prefill.
+    /// When `end` covers the whole prompt, the head runs and the first
+    /// token is recorded (flipping a [`SeqState::Prefilling`] sequence to
+    /// Running); otherwise the sequence stays `Prefilling` at
+    /// `next_row = end`.
+    ///
+    /// Under the chunked path a failed page reservation spills a victim
+    /// ([`Engine::preempt_one`]) and retries; with both knobs off the
+    /// allocation error propagates untouched (the pre-PR behavior).
+    /// Returns `Ok(true)` when the chunk ran, `Ok(false)` when the
+    /// sequence was demoted under unrelievable KV pressure (chunked path
+    /// only; it re-queues for a fresh prefill once pressure eases).
+    fn prefill_range(
+        &mut self,
+        dev: DeviceId,
+        seq_id: SeqId,
+        start: usize,
+        end: usize,
+    ) -> Result<bool> {
+        let (mut toks, ctx) = {
+            let a = self.executors[&dev].attn.as_ref().unwrap();
+            let s = a.sched.running.iter().find(|s| s.id == seq_id).unwrap();
+            let t: Vec<i32> = s.prompt[..end].iter().map(|&t| t as i32).collect();
+            (t, s.prompt.len())
+        };
+        let s_bucket = self
+            .cfg
+            .prefill_bucket(end)
+            .ok_or_else(|| anyhow::anyhow!("prompt longer than any prefill bucket"))?;
+        toks.resize(s_bucket, 0);
+
+        // reserve pages for the chunk's rows (its own undo-log step);
+        // under KV pressure the chunked path spills a victim and retries
+        let chunked = self.chunked_path();
+        loop {
+            let reserved = {
+                let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+                a.blocks.begin_step();
+                let mut r = Ok(());
+                for _ in start..end {
+                    if let Err(e) = a.blocks.append_token(seq_id) {
+                        r = Err(e);
+                        break;
+                    }
+                }
+                r
+            };
+            match reserved {
+                Ok(()) => break,
+                Err(e) => {
+                    if !chunked {
+                        return Err(e);
+                    }
+                    {
+                        let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+                        a.blocks.undo_step()?;
+                        a.blocks.audit()?;
+                    }
+                    if !self.preempt_one(dev)? {
+                        // no decodable victim — the pool is held entirely by
+                        // other in-flight prefills. Demote *this* sequence
+                        // instead of failing the tick: it has decoded
+                        // nothing, so dropping its committed rows and
+                        // re-queueing it for a fresh prefill loses no work
+                        // (and banks no recompute counters). The survivors'
+                        // chunks advance, so the rank always makes progress.
+                        let seq = {
+                            let a =
+                                self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+                            let pos =
+                                a.sched.running.iter().position(|s| s.id == seq_id).unwrap();
+                            a.sched.running.remove(pos)
+                        };
+                        {
+                            let a =
+                                self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+                            if a.blocks.table(seq_id).is_some() {
+                                // a committed drop step of its own, like
+                                // preempt_one's — immune to later rollbacks
+                                a.blocks.begin_step();
+                                a.blocks.drop_sequence(seq_id)?;
+                                a.blocks.begin_step();
+                                a.blocks.audit()?;
+                            }
+                        }
+                        if let Some(m) = self.kv_mirror.as_mut() {
+                            m.drop_seq(seq_id);
+                        }
+                        self.stats.seqs_preempted += 1;
+                        self.requeue_lossy(seq)?;
+                        return Ok(false);
+                    }
+                }
             }
         }
 
@@ -1095,23 +1440,35 @@ impl Engine {
             {
                 let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
                 let table = a.blocks.table(seq_id).unwrap().clone();
-                a.kv.scatter_prefill(li, &table, ctx, &k, &v)?;
+                // only the chunk's new rows land in the pool; the prefix
+                // rows the forward recomputed are already resident
+                a.kv.scatter_rows(li, &table, start, end - start, &k, &v)?;
             }
             if let Some(m) = self.kv_mirror.as_mut() {
-                // host mirror: a re-prefill (lossy migration) rewrites the
-                // whole entry, so stale rows can never linger
-                m.record_prefill(seq_id, li, ctx, &k, &v)?;
+                // host mirror: the first chunk (or a whole re-prefill
+                // after a lossy migration) rewrites the entry, so stale
+                // rows can never linger; later chunks append in order
+                m.record_prefill_range(seq_id, li, start, end, &k, &v)?;
             }
             let ffn_out = if is_dense {
                 Self::collect_dense(wave)?
             } else {
                 let (idx, wt) = router_out(wave.collect()?.pop().unwrap())?;
-                self.moe_routed_valid(li, &flat, &idx, &wt, ctx, s_bucket)?
+                self.moe_routed_valid(li, &flat, &idx, &wt, end, s_bucket)?
             };
             let mut hx = h;
             // x = h + ffn_out (zero-copy broadcast back to [1,s,d])
             hx.add_assign(&ffn_out.into_shape(vec![1, s_bucket, d_model])?)?;
             x = hx;
+        }
+        if end < ctx {
+            // mid-prefill chunk: no head, no token — commit the chunk and
+            // record where the next one picks up
+            let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+            let s = a.sched.get_running_mut(seq_id).unwrap();
+            s.state = SeqState::Prefilling { next_row: end };
+            a.blocks.begin_step(); // chunk committed: clear its undo log
+            return Ok(true);
         }
         // head over all positions; the first generated token comes from the
         // last *valid* position
@@ -1123,79 +1480,169 @@ impl Engine {
         let next = logits.argmax_rows()?[ctx - 1] as Token;
         let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
         let s = a.sched.get_running_mut(seq_id).unwrap();
+        // the final chunk leaves the Prefilling phase — set Running BEFORE
+        // push_token so a first-token EOS/budget Finish is not overwritten
+        // (a no-op on the lockstep path, which admits straight to Running)
+        s.state = SeqState::Running;
         s.push_token(next);
+        let (arrived, admitted_at) = (s.arrived, s.admitted_at);
         a.blocks.begin_step(); // prefill committed: clear its undo log
         if let Some(rec) = self.records.get_mut(&seq_id) {
             if rec.output.is_empty() {
                 self.stats.record_ttft(rec.submitted.elapsed());
+                if let Some(adm) = admitted_at {
+                    self.stats.record_ttft_split(adm.duration_since(arrived), adm.elapsed());
+                }
             }
         }
-        Ok(())
+        Ok(true)
     }
 
     // -- decode step -------------------------------------------------------------
 
-    /// Per-rank decode batches: (device, seq_ids, bucket).
-    fn decode_batches(&self) -> Vec<(DeviceId, Vec<SeqId>, usize)> {
-        let mut out = Vec::new();
+    /// Assemble the per-rank decode batches `(device, seq_ids, bucket)`
+    /// into the reusable scratch, recycling id/len vectors from its pools.
+    fn decode_batches_into(&self, scratch: &mut DecodeScratch) {
         for &d in &self.attn_order {
             if !self.rank_serving(d) {
                 continue;
             }
             let Some(a) = self.executors[&d].attn.as_ref() else { continue };
-            let ids: Vec<SeqId> = a
-                .sched
-                .running
-                .iter()
-                .filter(|s| s.state == SeqState::Running && !s.is_finished())
-                .map(|s| s.id)
-                .collect();
+            let mut ids = scratch.ids_pool.pop().unwrap_or_default();
+            ids.extend(
+                a.sched
+                    .running
+                    .iter()
+                    .filter(|s| s.state == SeqState::Running && !s.is_finished())
+                    .map(|s| s.id),
+            );
             if ids.is_empty() {
+                scratch.ids_pool.push(ids);
                 continue;
             }
             let bucket = self.cfg.batch_bucket(ids.len()).unwrap_or(ids.len());
-            out.push((d, ids, bucket));
+            scratch.batches.push((d, ids, bucket));
         }
-        out
+        for _ in 0..scratch.batches.len() {
+            scratch.lens.push(scratch.lens_pool.pop().unwrap_or_default());
+        }
     }
 
     fn decode_step(&mut self) -> Result<()> {
+        // the scratch leaves the engine for the duration of the step so
+        // the borrow checker sees its buffers and the executors as
+        // disjoint; it is restored even when the step errors out, keeping
+        // its capacity across fault-preempted ticks
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let r = self.decode_step_inner(&mut scratch);
+        self.scratch = scratch;
+        r
+    }
+
+    fn decode_step_inner(&mut self, scratch: &mut DecodeScratch) -> Result<()> {
         let t_step = Instant::now();
-        let batches = self.decode_batches();
-        if batches.is_empty() {
+        scratch.reset();
+        self.decode_batches_into(scratch);
+        if scratch.batches.is_empty() {
             return Ok(());
         }
         let serial = self.cfg.serial_data_plane;
+        let chunked = self.chunked_path();
 
         // step begin: page reservation per rank (undo-log step boundary
         // §3.3), then the embed fan-out — every DP rank's embed is in
-        // flight before any result is collected.
-        let mut lens: Vec<Vec<usize>> = Vec::with_capacity(batches.len());
+        // flight before any result is collected. Under the chunked path a
+        // rank whose pool cannot take this step's rows spills a victim
+        // and rebuilds its batch; with knobs off the allocation error
+        // propagates untouched.
         let mut wave = ExecWave::new(serial);
-        for (d, ids, bucket) in &batches {
-            let mut toks: Vec<i32> = Vec::with_capacity(*bucket);
-            let mut pos: Vec<i32> = Vec::with_capacity(*bucket);
-            let mut ls = Vec::with_capacity(ids.len());
-            {
-                let a = self.executors.get_mut(d).unwrap().attn.as_mut().unwrap();
-                a.blocks.begin_step();
-                a.step_slots.clear();
-                for id in ids {
-                    let (t, p) = {
-                        let s = a.sched.running.iter().find(|s| s.id == *id).unwrap();
-                        (s.last_token(), s.next_pos() - 1)
-                    };
-                    let (blk, slot) = a.blocks.append_token(*id)?;
-                    a.step_slots.push((*id, blk, slot));
-                    toks.push(t as i32);
-                    pos.push(p as i32);
-                    ls.push(p); // cur_len = position
+        let mut bi = 0;
+        while bi < scratch.batches.len() {
+            let d = scratch.batches[bi].0;
+            loop {
+                let reserved = {
+                    let ids = &scratch.batches[bi].1;
+                    scratch.toks.clear();
+                    scratch.pos.clear();
+                    let ls = &mut scratch.lens[bi];
+                    ls.clear();
+                    let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                    a.blocks.begin_step();
+                    a.step_slots.clear();
+                    let mut r = Ok(());
+                    for id in ids {
+                        let (t, p) = {
+                            let s = a.sched.running.iter().find(|s| s.id == *id).unwrap();
+                            (s.last_token(), s.next_pos() - 1)
+                        };
+                        match a.blocks.append_token(*id) {
+                            Ok((blk, slot)) => {
+                                a.step_slots.push((*id, blk, slot));
+                                scratch.toks.push(t as i32);
+                                scratch.pos.push(p as i32);
+                                ls.push(p); // cur_len = position
+                            }
+                            Err(e) => {
+                                r = Err(e);
+                                break;
+                            }
+                        }
+                    }
+                    r
+                };
+                match reserved {
+                    Ok(()) => break,
+                    Err(e) => {
+                        if !chunked {
+                            return Err(e);
+                        }
+                        {
+                            let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                            a.blocks.undo_step()?;
+                            a.blocks.audit()?;
+                        }
+                        if !self.preempt_one(d)? {
+                            return Err(e);
+                        }
+                        // the victim may have sat in this very batch:
+                        // rebuild the rank's decode set before retrying
+                        let (_, ids, bucket) = &mut scratch.batches[bi];
+                        ids.clear();
+                        if let Some(a) = self.executors[&d].attn.as_ref() {
+                            ids.extend(
+                                a.sched
+                                    .running
+                                    .iter()
+                                    .filter(|s| {
+                                        s.state == SeqState::Running && !s.is_finished()
+                                    })
+                                    .map(|s| s.id),
+                            );
+                        }
+                        *bucket = self.cfg.batch_bucket(ids.len()).unwrap_or(ids.len());
+                    }
                 }
             }
-            toks.resize(*bucket, 0);
-            pos.resize(*bucket, 0);
-            wave.push(self.executors[d].submit_embed_decode(*bucket, &toks, &pos)?)?;
-            lens.push(ls);
+            if scratch.batches[bi].1.is_empty() {
+                // the rank spilled its last decodable sequence: no batch
+                let (_, ids, _) = scratch.batches.remove(bi);
+                scratch.ids_pool.push(ids);
+                let ls = scratch.lens.remove(bi);
+                scratch.lens_pool.push(ls);
+                continue;
+            }
+            let bucket = scratch.batches[bi].2;
+            scratch.toks.resize(bucket, 0);
+            scratch.pos.resize(bucket, 0);
+            wave.push(self.executors[&d].submit_embed_decode(
+                bucket,
+                &scratch.toks,
+                &scratch.pos,
+            )?)?;
+            bi += 1;
+        }
+        if scratch.batches.is_empty() {
+            return Ok(());
         }
         let mut xs: Vec<Tensor> =
             wave.collect()?.into_iter().map(out1).collect::<Result<Vec<_>>>()?;
@@ -1205,14 +1652,19 @@ impl Engine {
             // attention halves: all DP ranks submitted before any collect
             let max_seq = self.meta.max_seq;
             let mut wave = ExecWave::new(serial);
-            for (bi, (d, ids, bucket)) in batches.iter().enumerate() {
+            for (bi, (d, ids, bucket)) in scratch.batches.iter().enumerate() {
                 wave.push(self.executors[d].submit_attn_decode(
-                    li, *bucket, &xs[bi], ids, &lens[bi], max_seq,
+                    li,
+                    *bucket,
+                    &xs[bi],
+                    ids,
+                    &scratch.lens[bi],
+                    max_seq,
                 )?)?;
             }
-            let mut hs: Vec<Tensor> = Vec::with_capacity(batches.len());
-            let mut ffns: Vec<Tensor> = Vec::with_capacity(batches.len());
-            for ((d, ids, _), out) in batches.iter().zip(wave.collect()?) {
+            let mut hs: Vec<Tensor> = Vec::with_capacity(scratch.batches.len());
+            let mut ffns: Vec<Tensor> = Vec::with_capacity(scratch.batches.len());
+            for ((d, ids, _), out) in scratch.batches.iter().zip(wave.collect()?) {
                 let (h, ffn_in, nk, nv) = out4(out)?;
                 self.executors.get_mut(d).unwrap().write_new_kv(li, &nk, &nv)?;
                 if let Some(m) = self.kv_mirror.as_mut() {
@@ -1235,7 +1687,7 @@ impl Engine {
             }
 
             // FFN half over the *global* token set
-            let valid: Vec<usize> = batches.iter().map(|(_, ids, _)| ids.len()).collect();
+            let valid: Vec<usize> = scratch.batches.iter().map(|(_, ids, _)| ids.len()).collect();
             let cat = concat_valid_rows(&ffns, &valid, self.meta.d_model)?;
             let t_total: usize = valid.iter().sum();
             let out = if li < self.meta.n_dense_layers {
@@ -1247,13 +1699,13 @@ impl Engine {
                 // ranks overlapped
                 let mask = self.expert_map.gate_mask();
                 let mut wave = ExecWave::new(serial);
-                for (bi, (d, _, bucket)) in batches.iter().enumerate() {
+                for (bi, (d, _, bucket)) in scratch.batches.iter().enumerate() {
                     wave.push(self.executors[d].submit_router(*bucket, li, &ffns[bi], &mask)?)?;
                 }
                 let k = self.meta.top_k;
                 let mut idx_cat: Vec<i32> = Vec::with_capacity(t_total * k);
                 let mut wt_cat: Vec<f32> = Vec::with_capacity(t_total * k);
-                for ((_, ids, _), out) in batches.iter().zip(wave.collect()?) {
+                for ((_, ids, _), out) in scratch.batches.iter().zip(wave.collect()?) {
                     let (idx, wt) = router_out(out)?;
                     idx_cat.extend_from_slice(&idx[..ids.len() * k]);
                     wt_cat.extend_from_slice(&wt[..ids.len() * k]);
@@ -1263,7 +1715,7 @@ impl Engine {
             // x = h + out, split back per rank through a borrowed row view
             // (no per-rank clone + element loop)
             let mut row = 0usize;
-            for (bi, ((_, ids, _), mut x)) in batches.iter().zip(hs).enumerate() {
+            for (bi, ((_, ids, _), mut x)) in scratch.batches.iter().zip(hs).enumerate() {
                 x.add_slice(out.rows(row, ids.len())?)?;
                 row += ids.len();
                 xs[bi] = x;
@@ -1272,10 +1724,10 @@ impl Engine {
 
         // heads + sampling per rank: submit every rank's head, then sample
         let mut wave = ExecWave::new(serial);
-        for (bi, (d, _, bucket)) in batches.iter().enumerate() {
+        for (bi, (d, _, bucket)) in scratch.batches.iter().enumerate() {
             wave.push(self.executors[d].submit_lm_head(*bucket, &xs[bi])?)?;
         }
-        for ((d, ids, _), out) in batches.iter().zip(wave.collect()?) {
+        for ((d, ids, _), out) in scratch.batches.iter().zip(wave.collect()?) {
             let logits = out1(out)?;
             let am = logits.argmax_rows()?;
             let a = self.executors.get_mut(d).unwrap().attn.as_mut().unwrap();
@@ -1605,5 +2057,40 @@ mod tests {
         let c = concat_valid_rows(&[a, b], &[1, 2], 2).unwrap();
         assert_eq!(c.shape, vec![3, 2]);
         assert_eq!(c.as_f32().unwrap(), &[1., 2., 5., 6., 7., 8.]);
+    }
+
+    #[test]
+    fn decode_scratch_retains_capacity_across_ticks() {
+        let mut sc = DecodeScratch::default();
+
+        // tick 1: two ranks' worth of batch-assembly buffers
+        sc.batches.push((0, vec![1, 2, 3, 4], 4));
+        sc.batches.push((1, vec![5, 6], 4));
+        sc.lens.push(vec![10, 11, 12, 13]);
+        sc.lens.push(vec![20, 21]);
+        sc.toks.extend_from_slice(&[7; 8]);
+        sc.pos.extend_from_slice(&[9; 8]);
+        let toks_cap = sc.toks.capacity();
+        let pos_cap = sc.pos.capacity();
+
+        sc.reset();
+        assert!(sc.batches.is_empty() && sc.lens.is_empty());
+        assert!(sc.toks.is_empty() && sc.pos.is_empty());
+        // the id/len vectors moved into the pools with their capacity intact
+        assert_eq!(sc.ids_pool.len(), 2);
+        assert_eq!(sc.lens_pool.len(), 2);
+        assert!(sc.ids_pool.iter().any(|v| v.capacity() >= 4));
+        assert!(sc.lens_pool.iter().any(|v| v.capacity() >= 4));
+        assert_eq!(sc.toks.capacity(), toks_cap);
+        assert_eq!(sc.pos.capacity(), pos_cap);
+
+        // tick 2 recycles a pooled vector instead of allocating a fresh one
+        let ids = sc.ids_pool.pop().unwrap();
+        assert!(ids.is_empty() && ids.capacity() > 0);
+        sc.batches.push((0, ids, 4));
+        sc.lens.push(sc.lens_pool.pop().unwrap());
+        sc.reset();
+        assert_eq!(sc.ids_pool.len(), 2);
+        assert_eq!(sc.lens_pool.len(), 2);
     }
 }

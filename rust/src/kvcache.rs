@@ -102,6 +102,27 @@ impl BlockManager {
         self.n_blocks
     }
 
+    /// How many more tokens can be appended for `seq` before the pool
+    /// runs out: every free block plus the unused tail of the sequence's
+    /// last block. The KV-pressure scheduling path uses this to decide
+    /// whether a spilled sequence's restore (or a prefill chunk) can land
+    /// without preempting anyone. A sequence without a table gets the
+    /// bare free-block capacity — exactly what a table adoption can use.
+    pub fn free_token_capacity(&self, seq: SeqId) -> usize {
+        let tail = self
+            .tables
+            .get(&seq)
+            .map(|t| {
+                if t.blocks.is_empty() {
+                    0
+                } else {
+                    self.block_size - t.last_fill
+                }
+            })
+            .unwrap_or(0);
+        self.free.len() * self.block_size + tail
+    }
+
     /// Reference count of one block.
     pub fn refcount(&self, b: BlockId) -> u32 {
         self.refcnt[b]
@@ -469,6 +490,21 @@ mod tests {
         m.undo_step().unwrap();
         assert_eq!(m.snapshot(), snap);
         m.audit().unwrap();
+    }
+
+    #[test]
+    fn free_token_capacity_counts_free_blocks_and_tail() {
+        let mut m = BlockManager::new(4, 4);
+        assert_eq!(m.free_token_capacity(1), 16, "empty pool: all blocks");
+        for _ in 0..3 {
+            m.append_token(1).unwrap();
+        }
+        // 3 free blocks plus 1 unused slot in seq 1's last block
+        assert_eq!(m.free_token_capacity(1), 13);
+        // another sequence cannot use seq 1's tail
+        assert_eq!(m.free_token_capacity(2), 12);
+        m.append_token(1).unwrap(); // last block now full
+        assert_eq!(m.free_token_capacity(1), 12);
     }
 
     #[test]

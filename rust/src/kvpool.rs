@@ -196,25 +196,52 @@ impl KvPool {
         k: &Tensor,
         v: &Tensor,
     ) -> Result<()> {
+        self.scatter_rows(layer, table, 0, len, k, v)
+    }
+
+    /// Scatter prefill rows `[start, start+n)` of `[1, S, H, Dh]` K/V
+    /// tensors into their pages — the per-chunk half of chunked prefill.
+    /// The tensors cover the whole prefix (causal attention recomputes
+    /// rows `0..start` identically, so only the chunk's own rows need
+    /// scattering); `scatter_prefill` is the `start == 0` case. Walks the
+    /// same [`KvPool::block_runs`] as every bulk path, skipping the rows
+    /// earlier chunks already committed.
+    pub fn scatter_rows(
+        &mut self,
+        layer: usize,
+        table: &BlockTable,
+        start: usize,
+        n: usize,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Result<()> {
         let kv = k.as_f32()?;
         let vv = v.as_f32()?;
         let row = self.row;
+        let end = start + n;
         anyhow::ensure!(
-            kv.len() >= len * row && vv.len() >= len * row,
+            kv.len() >= end * row && vv.len() >= end * row,
             "prefill K/V too small"
         );
         // same fail-loud guard as gather: never silently drop trailing rows
         anyhow::ensure!(
-            len <= table.n_tokens(self.block_size),
-            "scatter_prefill: len {len} exceeds the table's {} resident tokens",
+            end <= table.n_tokens(self.block_size),
+            "scatter_rows: rows {start}..{end} exceed the table's {} resident tokens",
             table.n_tokens(self.block_size)
         );
-        let mut src = 0usize;
-        for (blk, run) in Self::block_runs(self.block_size, table, len) {
-            let o = blk * self.block_size * row;
-            self.k[layer][o..o + run * row].copy_from_slice(&kv[src..src + run * row]);
-            self.v[layer][o..o + run * row].copy_from_slice(&vv[src..src + run * row]);
-            src += run * row;
+        let mut covered = 0usize; // rows walked so far, from position 0
+        for (blk, run) in Self::block_runs(self.block_size, table, end) {
+            let run_start = covered;
+            covered += run;
+            if covered <= start {
+                continue; // run lies entirely in earlier chunks
+            }
+            let skip = start.saturating_sub(run_start);
+            let o = blk * self.block_size * row + skip * row;
+            let src = (run_start + skip) * row;
+            let cnt = (run - skip) * row;
+            self.k[layer][o..o + cnt].copy_from_slice(&kv[src..src + cnt]);
+            self.v[layer][o..o + cnt].copy_from_slice(&vv[src..src + cnt]);
         }
         Ok(())
     }
@@ -355,6 +382,38 @@ impl KvMirror {
         Ok(())
     }
 
+    /// Mirror one layer of a prefill *chunk*: rows `[start, end)` of the
+    /// chunk's prefix tensors replace everything the entry held from
+    /// `start` on for that layer. The first chunk (`start == 0`) behaves
+    /// exactly like [`KvMirror::record_prefill`]; later chunks append
+    /// their rows in position order. Fails loudly on a gap — the caller
+    /// must have mirrored (and kept, modulo rollback truncation) rows
+    /// `0..start` already.
+    pub fn record_prefill_range(
+        &mut self,
+        seq: SeqId,
+        layer: usize,
+        start: usize,
+        end: usize,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Result<()> {
+        let row = self.row;
+        let kd = k.as_f32()?;
+        let vd = v.as_f32()?;
+        anyhow::ensure!(kd.len() >= end * row && vd.len() >= end * row, "short prefill KV");
+        let e = self.entry(seq);
+        anyhow::ensure!(
+            e.k[layer].len() >= start * row && e.v[layer].len() >= start * row,
+            "mirror gap: chunk starts at row {start} but layer {layer} holds fewer rows"
+        );
+        e.k[layer].truncate(start * row);
+        e.k[layer].extend_from_slice(&kd[start * row..end * row]);
+        e.v[layer].truncate(start * row);
+        e.v[layer].extend_from_slice(&vd[start * row..end * row]);
+        Ok(())
+    }
+
     /// Mirror one decode step's new row for one layer (appended in
     /// position order, exactly as the pool's `write_row` sees it).
     pub fn record_row(&mut self, seq: SeqId, layer: usize, k: &[f32], v: &[f32]) -> Result<()> {
@@ -398,6 +457,20 @@ impl KvMirror {
             k: e.k.iter().map(|l| l[..need].to_vec()).collect(),
             v: e.v.iter().map(|l| l[..need].to_vec()).collect(),
         })
+    }
+
+    /// Whether the mirror fully covers `seq`'s first `n_tokens` rows on
+    /// every layer — the allocation-free probe behind the preemption
+    /// spill decision ([`KvMirror::payload`] clones the rows; a spill
+    /// only needs to know a later restore is possible).
+    pub fn covers(&self, seq: SeqId, n_tokens: usize) -> bool {
+        if n_tokens == 0 {
+            return false;
+        }
+        let need = n_tokens * self.row;
+        self.entries
+            .get(&seq)
+            .is_some_and(|e| e.k.iter().chain(e.v.iter()).all(|l| l.len() >= need))
     }
 
     /// Forget a finished (or abandoned) sequence.
@@ -480,6 +553,31 @@ mod tests {
         let (gk, gv) = pool.gather(0, &[&t], &[5], 8).unwrap();
         assert_eq!(&gk.as_f32().unwrap()[..5 * 64], &k.as_f32().unwrap()[..5 * 64]);
         assert_eq!(&gv.as_f32().unwrap()[..5 * 64], &v.as_f32().unwrap()[..5 * 64]);
+    }
+
+    #[test]
+    fn scatter_rows_in_chunks_matches_monolithic() {
+        let m = meta();
+        let mut mono = KvPool::new(&m, 8, 4);
+        let mut chunked = KvPool::new(&m, 8, 4);
+        let mut bm = BlockManager::new(8, 4);
+        // 7 tokens: chunk boundaries straddle the 4-row block boundary
+        for _ in 0..7 {
+            bm.append_token(2).unwrap();
+        }
+        let t = bm.table(2).unwrap().clone();
+        let k = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| x as f32).collect());
+        let v = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| (x * 2) as f32).collect());
+        mono.scatter_prefill(0, &t, 7, &k, &v).unwrap();
+        for (start, end) in [(0, 3), (3, 6), (6, 7)] {
+            chunked.scatter_rows(0, &t, start, end - start, &k, &v).unwrap();
+        }
+        let (mk, mv) = mono.gather(0, &[&t], &[7], 8).unwrap();
+        let (ck, cv) = chunked.gather(0, &[&t], &[7], 8).unwrap();
+        assert_eq!(mk.as_f32().unwrap(), ck.as_f32().unwrap());
+        assert_eq!(mv.as_f32().unwrap(), cv.as_f32().unwrap());
+        // out-of-coverage chunks still fail loudly
+        assert!(chunked.scatter_rows(0, &t, 6, 2, &k, &v).is_err());
     }
 
     #[test]
@@ -587,6 +685,31 @@ mod tests {
         mirror.drop_seq(5);
         assert!(mirror.is_empty());
         assert!(mirror.payload(5, 1).is_none());
+    }
+
+    #[test]
+    fn mirror_prefill_range_appends_chunks_in_order() {
+        let m = meta();
+        let mut mono = KvMirror::new(&m);
+        let mut chunked = KvMirror::new(&m);
+        let k = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| x as f32).collect());
+        let v = Tensor::f32(vec![1, 8, 4, 16], (0..512).map(|x| (x * 3) as f32).collect());
+        for layer in 0..2 {
+            mono.record_prefill(7, layer, 7, &k, &v).unwrap();
+            for (start, end) in [(0, 3), (3, 6), (6, 7)] {
+                chunked.record_prefill_range(7, layer, start, end, &k, &v).unwrap();
+            }
+        }
+        assert_eq!(mono.payload(7, 7), chunked.payload(7, 7));
+        // a rolled-back chunk re-records its range without duplicating rows
+        for layer in 0..2 {
+            chunked.record_prefill_range(7, layer, 3, 6, &k, &v).unwrap();
+        }
+        assert_eq!(chunked.payload(7, 6), mono.payload(7, 6));
+        assert!(chunked.payload(7, 7).is_none(), "re-recording truncates the tail");
+        // a gap (rows 0..start missing) fails loudly
+        let mut gap = KvMirror::new(&m);
+        assert!(gap.record_prefill_range(8, 0, 3, 6, &k, &v).is_err());
     }
 
     #[test]

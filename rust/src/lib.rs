@@ -23,7 +23,8 @@
 //!                  table adoption for KV-preserving migration
 //! - [`moe`]        expert placement, redundancy, missing-expert masks,
 //!                  dense-FFN TP groups (§3.4)
-//! - [`scheduler`]  sequences + per-rank continuous batching (§3.2)
+//! - [`scheduler`]  sequences + per-rank continuous batching incl.
+//!                  chunked-prefill states (§3.2)
 //! - [`weights`]    weight manifest loading / expert slicing
 //! - [`executor`]   DPExecutor / MoEExecutor / generator layer loop (§2.2)
 //! - [`engine`]     global engine: intake, dispatch, serving loop

@@ -6,6 +6,7 @@
 //! Commands:
 //!   serve     [--scenario NAME] [--strategy revivemoe|reinit] [--degraded]
 //!             [--kv-live] [--kv-mirror]
+//!             [--prefill-chunk C] [--tick-budget B]
 //!             [--rate R] [--requests N] [--ticks T] [--seed S] [--log]
 //!                                            online open-loop serving under
 //!                                            a deterministic fault scenario
@@ -21,7 +22,16 @@
 //!                                            KV (no re-prefill); --kv-mirror
 //!                                            restores a dead attention
 //!                                            rank's sequences from the
-//!                                            host-side KV mirror
+//!                                            host-side KV mirror;
+//!                                            --prefill-chunk splits prefills
+//!                                            into C-token chunks interleaved
+//!                                            with decode; --tick-budget caps
+//!                                            prefill admission at B tokens
+//!                                            per tick (decode always runs);
+//!                                            either knob also arms
+//!                                            KV-pressure preemption (spill
+//!                                            to the host mirror when on,
+//!                                            lossy requeue otherwise)
 //!   failover  [--device D] [--requests N] [--hung]
 //!                                            serve, inject a failure,
 //!                                            recover with ReviveMoE, finish
@@ -136,6 +146,12 @@ fn main() -> Result<()> {
             }
             if args.flag_bool("kv-mirror") {
                 cfg.recovery.kv_host_mirror = true;
+            }
+            if args.flags.contains_key("prefill-chunk") {
+                cfg.prefill_chunk_tokens = args.flag_usize("prefill-chunk", 0);
+            }
+            if args.flags.contains_key("tick-budget") {
+                cfg.tick_token_budget = args.flag_usize("tick-budget", 0);
             }
             let (engine, bd) = Engine::boot(cfg)?;
             println!("{}", bd.render("boot breakdown"));

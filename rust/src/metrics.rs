@@ -265,8 +265,17 @@ pub struct ServingStats {
     /// KV bytes moved by the lossless paths (P2P transfers between
     /// attention ranks + host-mirror uploads).
     pub kv_bytes_moved: usize,
+    /// Sequences evicted from a running set under KV pool pressure
+    /// (mirror spill or lossy requeue — the chunked/budgeted serve tick's
+    /// preemption path).
+    pub seqs_preempted: usize,
+    /// Prefill chunks executed (equals `prefills` when chunking is off:
+    /// every monolithic prefill counts as one chunk).
+    pub chunks_prefilled: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
+    ttft_queue_ms: Vec<f64>,
+    ttft_prefill_ms: Vec<f64>,
     tpot_ms: Vec<f64>,
     decode_step_ms: Vec<f64>,
     stall_ms: Vec<f64>,
@@ -299,6 +308,17 @@ impl ServingStats {
     /// Record one request's time-to-first-token.
     pub fn record_ttft(&mut self, ttft: Duration) {
         self.ttft_ms.push(ttft.as_secs_f64() * 1e3);
+    }
+
+    /// Record the two components of one request's TTFT: the queueing wait
+    /// (arrival → admission) and the prefill span (admission → first
+    /// token). Chunked prefill shrinks the queue component (admission no
+    /// longer waits for a full monolithic prefill slot) while stretching
+    /// the prefill component across interleaved ticks — the split is what
+    /// makes that trade visible.
+    pub fn record_ttft_split(&mut self, queued: Duration, prefill: Duration) {
+        self.ttft_queue_ms.push(queued.as_secs_f64() * 1e3);
+        self.ttft_prefill_ms.push(prefill.as_secs_f64() * 1e3);
     }
 
     /// Record one finished request's mean time-per-output-token: the
@@ -438,6 +458,26 @@ impl ServingStats {
         Self::pct(&self.ttft_ms, 0.99)
     }
 
+    /// Median queueing component of TTFT (arrival → admission, ms).
+    pub fn ttft_queue_p50(&self) -> f64 {
+        Self::pct(&self.ttft_queue_ms, 0.50)
+    }
+
+    /// 99th-percentile queueing component of TTFT (ms).
+    pub fn ttft_queue_p99(&self) -> f64 {
+        Self::pct(&self.ttft_queue_ms, 0.99)
+    }
+
+    /// Median prefill component of TTFT (admission → first token, ms).
+    pub fn ttft_prefill_p50(&self) -> f64 {
+        Self::pct(&self.ttft_prefill_ms, 0.50)
+    }
+
+    /// 99th-percentile prefill component of TTFT (ms).
+    pub fn ttft_prefill_p99(&self) -> f64 {
+        Self::pct(&self.ttft_prefill_ms, 0.99)
+    }
+
     /// Median time-per-output-token (ms).
     pub fn tpot_p50(&self) -> f64 {
         Self::pct(&self.tpot_ms, 0.50)
@@ -453,7 +493,9 @@ impl ServingStats {
         format!(
             "requests={} tokens={} steps={} prefills={} wall={:.2}s \
              tput={:.1} tok/s goodput={:.2} req/s p50={:.1}ms p99={:.1}ms \
-             ttft_p50={:.1}ms tpot_p50={:.2}ms step_p50={:.2}ms \
+             ttft_p50={:.1}ms ttft_queue_p50={:.1}ms ttft_prefill_p50={:.1}ms \
+             tpot_p50={:.2}ms step_p50={:.2}ms \
+             chunks={} preempted={} \
              recoveries={} stall={:.0}ms degraded={:.0}ms \
              full_stall_ticks={} degraded_ticks={} degraded_tok/tick={:.2} \
              kv_migrated={} kv_restored={} reprefilled={} recomputed_tok={} kv_bytes={} \
@@ -468,8 +510,12 @@ impl ServingStats {
             self.latency_p50(),
             self.latency_p99(),
             self.ttft_p50(),
+            self.ttft_queue_p50(),
+            self.ttft_prefill_p50(),
             self.tpot_p50(),
             self.decode_step_p50(),
+            self.chunks_prefilled,
+            self.seqs_preempted,
             self.recoveries,
             self.stall_total_ms(),
             self.degraded_total_ms(),

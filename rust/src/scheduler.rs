@@ -20,6 +20,14 @@ pub type Token = u16;
 pub enum SeqState {
     /// In the waiting queue; not yet admitted to the running set.
     Waiting,
+    /// Admitted under chunked prefill: prompt rows `[0, next_row)` have
+    /// their KV committed; rows from `next_row` on are still to be built.
+    /// The sequence occupies a running-set slot but is excluded from
+    /// decode batches until the final chunk produces its first token.
+    Prefilling {
+        /// First prompt row the next chunk will cover.
+        next_row: usize,
+    },
     /// Admitted: prefilled (or about to be) and decoding.
     Running,
     /// Hit EOS or exhausted its generation budget.
@@ -44,6 +52,11 @@ pub struct Sequence {
     pub eos: Option<Token>,
     /// When the sequence entered the system (TTFT reference point).
     pub arrived: Instant,
+    /// When the sequence was (last) admitted to a running set — splits
+    /// TTFT into a queueing component (`arrived` → here) and a prefill
+    /// component (here → first token). Reset by migration so the split is
+    /// always measured against the admission that produced the token.
+    pub admitted_at: Option<Instant>,
     /// When the first token was decoded (set once, survives migrations).
     pub first_token_at: Option<Instant>,
     /// set if this sequence was migrated off a failed rank (telemetry)
@@ -61,6 +74,7 @@ impl Sequence {
             max_new_tokens,
             eos,
             arrived: Instant::now(),
+            admitted_at: None,
             first_token_at: None,
             migrations: 0,
         }
@@ -121,6 +135,18 @@ impl Sequence {
         self.n_context().saturating_sub(1)
     }
 
+    /// KV rows actually committed for this running-set member: a
+    /// mid-prefill sequence owns exactly the rows its finished chunks
+    /// scattered (`next_row`), not the [`Self::kv_rows`] count, which
+    /// assumes prefill completed. Rollback uses this to truncate the host
+    /// mirror to the surviving device state.
+    pub fn committed_rows(&self) -> usize {
+        match self.state {
+            SeqState::Prefilling { next_row } => next_row,
+            _ => self.kv_rows(),
+        }
+    }
+
     /// The lossless counterpart of [`Self::into_migration_view`]: the
     /// sequence resumes decoding *at its current position* on the
     /// destination rank, its KV pages adopted there — prompt and decoded
@@ -148,6 +174,7 @@ impl Sequence {
             max_new_tokens: self.max_new_tokens.saturating_sub(n_decoded),
             eos: self.eos,
             arrived: self.arrived,
+            admitted_at: None, // re-admitted (and re-stamped) elsewhere
             first_token_at: self.first_token_at,
             migrations: self.migrations + 1,
         }
@@ -198,10 +225,28 @@ impl LocalScheduler {
         while self.running.len() < self.max_batch {
             let Some(mut s) = self.waiting.pop_front() else { break };
             s.state = SeqState::Running;
+            s.admitted_at = Some(Instant::now());
             admitted.push(s.id);
             self.running.push(s);
         }
         admitted
+    }
+
+    /// Admit *one* waiting sequence into the chunked-prefill phase
+    /// ([`SeqState::Prefilling`] at row 0). The budget-aware serve tick
+    /// calls this per admission so prefill chunks can be charged against
+    /// the tick token budget one sequence at a time, instead of the
+    /// all-at-once lockstep [`LocalScheduler::admit`].
+    pub fn admit_prefilling(&mut self) -> Option<SeqId> {
+        if self.running.len() >= self.max_batch {
+            return None;
+        }
+        let mut s = self.waiting.pop_front()?;
+        s.state = SeqState::Prefilling { next_row: 0 };
+        s.admitted_at = Some(Instant::now());
+        let id = s.id;
+        self.running.push(s);
+        Some(id)
     }
 
     /// Collect finished sequences out of the running set. Ownership moves
@@ -468,6 +513,47 @@ mod tests {
         // the adopted sequence is immediately part of the decode set
         assert!(s.get_running_mut(9).is_some());
         assert_eq!(s.queue_depth(), 0, "adoption never touches the waiting queue");
+    }
+
+    #[test]
+    fn admit_prefilling_enters_chunk_phase_one_at_a_time() {
+        let mut s = LocalScheduler::new(2);
+        for i in 0..3 {
+            s.submit(seq(i, 4));
+        }
+        let a = s.admit_prefilling().unwrap();
+        assert_eq!(a, 0);
+        let b = s.admit_prefilling().unwrap();
+        assert_eq!(b, 1);
+        assert_eq!(s.admit_prefilling(), None, "running set is full");
+        assert_eq!(s.n_running(), 2);
+        assert_eq!(s.queue_depth(), 1);
+        for q in &s.running {
+            assert_eq!(q.state, SeqState::Prefilling { next_row: 0 });
+            assert!(q.admitted_at.is_some(), "admission stamps the TTFT split point");
+        }
+    }
+
+    #[test]
+    fn committed_rows_tracks_prefill_progress() {
+        let mut q = seq(1, 6);
+        q.state = SeqState::Prefilling { next_row: 0 };
+        assert_eq!(q.committed_rows(), 0, "nothing scattered before the first chunk");
+        q.state = SeqState::Prefilling { next_row: 4 };
+        assert_eq!(q.committed_rows(), 4);
+        q.state = SeqState::Running;
+        q.push_token(3);
+        assert_eq!(q.committed_rows(), q.kv_rows(), "decoding falls back to kv_rows");
+    }
+
+    #[test]
+    fn demote_resets_prefilling_to_waiting() {
+        let mut s = LocalScheduler::new(2);
+        s.submit(seq(7, 4));
+        s.admit_prefilling().unwrap();
+        let n = s.demote_running(|_| true);
+        assert_eq!(n, 1);
+        assert_eq!(s.waiting[0].state, SeqState::Waiting, "chunk progress is discarded");
     }
 
     #[test]

@@ -177,8 +177,8 @@ pub struct ServeReport {
 impl ServeReport {
     /// Decoded token stream per arrival index (completed requests only) —
     /// the other half of the determinism surface.
-    pub fn token_streams(&self) -> BTreeMap<usize, Vec<Token>> {
-        self.completed.iter().map(|c| (c.arrival, c.output.clone())).collect()
+    pub fn token_streams(&self) -> BTreeMap<usize, &[Token]> {
+        self.completed.iter().map(|c| (c.arrival, c.output.as_slice())).collect()
     }
 
     /// Percentile over the restart-inclusive end-to-end request
@@ -226,12 +226,14 @@ impl ServeReport {
     }
 }
 
-/// Book-keeping for one arrival: the original request (kept so the reinit
-/// baseline can resubmit it from scratch), its restart count, and the
+/// Book-keeping for one arrival: the original request (retained only
+/// under the reinit baseline, which must resubmit it from scratch — the
+/// in-place strategies never resubmit, so they skip the copy and move
+/// the request straight into the engine), its restart count, and the
 /// instant + tick it first entered the loop (the restart-inclusive
 /// latency references — wall for reporting, tick for determinism).
 struct ArrivalRecord {
-    request: Request,
+    request: Option<Request>,
     restarts: u32,
     first_arrival: Instant,
     arrival_tick: u64,
@@ -295,7 +297,7 @@ pub fn run_scenario(
         for req in arrivals.poll(tick)? {
             let arrival = records.len();
             records.push(ArrivalRecord {
-                request: req.clone(),
+                request: (strategy == RecoveryStrategy::BaselineReinit).then(|| req.clone()),
                 restarts: 0,
                 first_arrival: Instant::now(),
                 arrival_tick: tick,
@@ -610,7 +612,9 @@ fn handle_faults(
                 // service, not the instance), outstanding requests do not —
                 // they are resubmitted from scratch on the new engine
                 let t0 = Instant::now();
-                let saved_stats = engine.stats.clone();
+                // the engine is consumed by `baseline_reinit` right below,
+                // so take the stats rather than deep-copying the histograms
+                let saved_stats = std::mem::take(&mut engine.stats);
                 let device = ann.device;
                 // faults queued behind this one describe *hardware* that is
                 // still broken — they must survive the instance restart, or
@@ -646,7 +650,12 @@ fn handle_faults(
                 for arrival in lost.iter().copied() {
                     records[arrival].restarts += 1;
                     engine.stats.requests_restarted += 1;
-                    let id = engine.submit(records[arrival].request.clone())?;
+                    let req = records[arrival]
+                        .request
+                        .as_ref()
+                        .expect("reinit strategy retains every request")
+                        .clone();
+                    let id = engine.submit(req)?;
                     outstanding.insert(id, arrival);
                 }
                 let stall = t0.elapsed();

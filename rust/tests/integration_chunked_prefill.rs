@@ -1,0 +1,194 @@
+//! Continuous batching with chunked prefill + KV-pressure preemption
+//! (acceptance criteria of the serve-tick perf PR):
+//!
+//! 1. with `prefill_chunk_tokens` and `tick_token_budget` on, every canned
+//!    scenario produces token streams **identical** to the monolithic
+//!    lockstep baseline — chunking changes *when* prefill work runs, never
+//!    a token (greedy decoding is batch-composition-independent);
+//! 2. with both knobs at their 0 defaults, two runs reproduce the baseline
+//!    event log byte-for-byte and no chunk/preemption counter ever ticks —
+//!    the A/B convention shared with PRs 1/3/4/5;
+//! 3. under KV pressure (a pool too small for the resident set) with
+//!    `kv_host_mirror` on, preempted sequences spill to the host mirror
+//!    and restore with **zero recomputed tokens**; with the mirror off the
+//!    engine falls back to the lossy re-prefill requeue and still finishes
+//!    with identical streams.
+//!
+//! Needs `make artifacts` (skipped loudly otherwise), like the other
+//! integration suites.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::scenario::Scenario;
+use revivemoe::scheduler::Token;
+use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
+use revivemoe::workload::Request;
+
+fn ready() -> bool {
+    Path::new("artifacts/hlo/manifest.json").exists()
+}
+
+fn cfg_with(chunk: usize, budget: usize) -> DeploymentConfig {
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    cfg.prefill_chunk_tokens = chunk;
+    cfg.tick_token_budget = budget;
+    cfg
+}
+
+fn run(cfg: DeploymentConfig, scenario: &Scenario) -> ServeReport {
+    let (engine, _bd) = Engine::boot(cfg).expect("boot");
+    let (engine, report) =
+        run_scenario(engine, scenario, RecoveryStrategy::ReviveMoE).expect("serve");
+    engine.shutdown();
+    report
+}
+
+/// Long prompts against a deliberately tiny KV pool: every rank's
+/// resident set overflows the pool mid-decode, forcing preemption.
+fn pressure_requests() -> Vec<Request> {
+    (0..8)
+        .map(|i| Request {
+            task: "pressure".into(),
+            prompt: vec![(1 + i % 60) as Token; 128],
+            expected: String::new(),
+            max_new_tokens: 6,
+        })
+        .collect()
+}
+
+/// Drive a raw engine over `reqs` to completion and return the decoded
+/// output per submission index.
+fn drive(cfg: DeploymentConfig, reqs: &[Request]) -> (Engine, BTreeMap<usize, Vec<Token>>) {
+    let (mut engine, _bd) = Engine::boot(cfg).expect("boot");
+    engine.stats.start();
+    let mut ids = BTreeMap::new();
+    for (i, req) in reqs.iter().enumerate() {
+        let id = engine.submit(req.clone()).expect("submit");
+        ids.insert(id, i);
+    }
+    let done = engine.run_to_completion(10_000).expect("run");
+    assert_eq!(done.len(), reqs.len(), "every request must finish");
+    let outputs =
+        done.into_iter().map(|c| (ids[&c.seq_id], c.output)).collect::<BTreeMap<_, _>>();
+    (engine, outputs)
+}
+
+#[test]
+fn chunked_and_budgeted_match_monolithic_across_all_canned_scenarios() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    for name in Scenario::CANNED {
+        let scenario = Scenario::by_name(name, 21).expect(name).requests(12);
+        let baseline = run(cfg_with(0, 0), &scenario);
+        let chunked = run(cfg_with(24, 48), &scenario);
+
+        assert_eq!(baseline.incomplete, 0, "{name}: baseline incomplete");
+        assert_eq!(chunked.incomplete, 0, "{name}: chunked incomplete");
+        assert_eq!(
+            baseline.token_streams(),
+            chunked.token_streams(),
+            "{name}: chunked prefill changed a token stream"
+        );
+        // chunking really engaged: more chunks than prefill passes
+        // (every prompt longer than one chunk splits), while the
+        // monolithic baseline counts exactly one chunk per prefill
+        assert_eq!(baseline.stats.chunks_prefilled, baseline.stats.prefills, "{name}");
+        assert!(
+            chunked.stats.chunks_prefilled > chunked.stats.prefills,
+            "{name}: expected multi-chunk prefills, got {} chunks over {} prefills",
+            chunked.stats.chunks_prefilled,
+            chunked.stats.prefills
+        );
+    }
+}
+
+#[test]
+fn budget_only_throttles_admission_without_changing_tokens() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    // chunk = 0 with a budget > 0: monolithic prefills, admission-gated
+    let scenario = Scenario::rate_surge(33).requests(16);
+    let baseline = run(cfg_with(0, 0), &scenario);
+    let budgeted = run(cfg_with(0, 32), &scenario);
+    assert_eq!(budgeted.incomplete, 0);
+    assert_eq!(baseline.token_streams(), budgeted.token_streams());
+    assert_eq!(budgeted.stats.chunks_prefilled, budgeted.stats.prefills);
+}
+
+#[test]
+fn knobs_off_reproduces_baseline_event_log_byte_for_byte() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = Scenario::single_fault(57).requests(16);
+    let a = run(cfg_with(0, 0), &scenario);
+    let b = run(cfg_with(0, 0), &scenario);
+    assert_eq!(a.event_log, b.event_log, "knobs-off must replay exactly");
+    assert_eq!(a.token_streams(), b.token_streams());
+    assert_eq!(a.ticks, b.ticks);
+    // and none of the new machinery ever engages
+    assert_eq!(a.stats.seqs_preempted, 0);
+    assert_eq!(a.stats.chunks_prefilled, a.stats.prefills);
+}
+
+#[test]
+fn preemption_spills_to_mirror_and_restores_without_recompute() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let reqs = pressure_requests();
+    // roomy lockstep baseline: the token-stream ground truth
+    let (baseline, expected) = drive(cfg_with(0, 0), &reqs);
+    baseline.shutdown();
+
+    // 12 blocks of 16 tokens per rank: two 134-row sequences per rank
+    // cannot coexist, so decode must preempt — and with the mirror on the
+    // victim spills losslessly and resumes at position
+    let mut cfg = cfg_with(64, 0);
+    cfg.blocks_per_rank = 12;
+    cfg.recovery.kv_host_mirror = true;
+    let (engine, outputs) = drive(cfg, &reqs);
+    assert_eq!(outputs, expected, "mirror-spill preemption changed a token stream");
+    assert!(
+        engine.stats.seqs_preempted >= 1,
+        "the tiny pool must force at least one preemption: {:?}",
+        engine.stats
+    );
+    // the acceptance bar: spill + restore moves KV, it never recomputes
+    assert_eq!(engine.stats.seqs_reprefilled, 0, "{:?}", engine.stats);
+    assert_eq!(engine.stats.recomputed_tokens, 0);
+    assert!(engine.stats.kv_bytes_moved > 0, "the restore moved real pages");
+    engine.shutdown();
+}
+
+#[test]
+fn preemption_without_mirror_falls_back_to_lossy_requeue() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let reqs = pressure_requests();
+    let (baseline, expected) = drive(cfg_with(0, 0), &reqs);
+    baseline.shutdown();
+
+    let mut cfg = cfg_with(64, 0);
+    cfg.blocks_per_rank = 12;
+    cfg.recovery.kv_host_mirror = false;
+    let (engine, outputs) = drive(cfg, &reqs);
+    // lossy fallback recomputes, but determinism still holds: the requeued
+    // sequence re-prefills to the identical state and finishes the same
+    assert_eq!(outputs, expected, "lossy preemption changed a token stream");
+    assert!(engine.stats.seqs_preempted >= 1, "{:?}", engine.stats);
+    assert!(engine.stats.seqs_reprefilled >= 1, "no mirror: preemption must re-prefill");
+    assert!(engine.stats.recomputed_tokens > 0);
+    engine.shutdown();
+}
