@@ -1,0 +1,135 @@
+//! **Predictive health**: reactive ride-to-death vs preemptive
+//! drain/swap on the canned degradation scenarios.
+//!
+//! The paper recovers fast *after* a failure; this PR's detector acts
+//! *before* one. The bench quantifies the difference the way the
+//! integration gates assert it: each degradation scenario (`slow-node`,
+//! `flaky-node`, `degrading-node`) runs under the serve loop twice —
+//! `reactive` (HealthPolicy off: the straggler rides into its scripted
+//! death and the failure path pays re-prefill/recompute) and
+//! `predictive` (detection on, tuned to the canned onset ticks: the
+//! Suspect attention rank is drained losslessly over the live KV path
+//! before the death, which then lands on an absent device).
+//!
+//! Reported per row: ticks, completions, re-prefilled sequences and
+//! recomputed tokens (the redundancy the detector removes), preemptive
+//! drains/swaps, false positives, tokens-at-risk saved, KV-migrated
+//! sequences, recovery-pass count, total stall ms, and the p99
+//! end-to-end latency in logical ticks. Expectation: `predictive` pins
+//! re-prefills and recomputed tokens at zero on the dying scenarios
+//! while `flaky-node` (below the error-rate threshold) shows both modes
+//! identical — zero drains, zero false positives.
+//!
+//! Run: `cargo bench --bench health_detection` (or
+//! `scripts/bench_health.sh` from the repo root, which also refreshes
+//! `BENCH_health_detection.json`).
+
+mod common;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy};
+
+const SCENARIOS: [&str; 3] = ["slow-node", "flaky-node", "degrading-node"];
+
+fn cfg_for(mode: &str) -> DeploymentConfig {
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    if mode == "predictive" {
+        // tuned to the canned onset (tick 4): calibrate from boot-time
+        // commands, call the device after two breaching polls
+        cfg.recovery.health.enabled = true;
+        cfg.recovery.health.min_samples = 2;
+        cfg.recovery.health.hysteresis = 2;
+    }
+    cfg
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let requests = if quick { 12 } else { 24 };
+    let seeds: &[u64] = if quick { &[21] } else { &[21, 33] };
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("Predictive health: reactive ride-to-death vs preemptive drain\n");
+    println!(
+        "{:<15} {:<11} {:<7} {:>5} {:>5} {:>7} {:>10} {:>7} {:>5} {:>9} {:>9}",
+        "scenario", "mode", "label", "ticks", "done", "repref", "recomp_tok", "drains", "fpos",
+        "tok_saved", "stall_ms"
+    );
+    for name in SCENARIOS {
+        for mode in ["reactive", "predictive"] {
+            for &seed in seeds {
+                let label = format!("seed{seed}");
+                let scenario =
+                    Scenario::by_name(name, seed).expect("canned scenario").requests(requests);
+                let (engine, _bd) = match Engine::boot(cfg_for(mode)) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        println!("{name:<15} {mode:<11} SKIP (boot: {e})");
+                        continue;
+                    }
+                };
+                let (engine, report) =
+                    match run_scenario(engine, &scenario, RecoveryStrategy::ReviveMoE) {
+                        Ok(x) => x,
+                        Err(e) => {
+                            println!("{name:<15} {mode:<11} FAILED: {e}");
+                            continue;
+                        }
+                    };
+                let stats = &report.stats;
+                let stall_ms = stats.stall_total_ms();
+                let p99_ticks = report.e2e_latency_ticks_pct(0.99);
+                println!(
+                    "{:<15} {:<11} {:<7} {:>5} {:>5} {:>7} {:>10} {:>7} {:>5} {:>9} {:>9.1}",
+                    name,
+                    mode,
+                    label,
+                    report.ticks,
+                    report.completed.len(),
+                    stats.seqs_reprefilled,
+                    stats.recomputed_tokens,
+                    stats.preemptive_drains,
+                    stats.false_positive_drains,
+                    stats.tokens_at_risk_saved,
+                    stall_ms
+                );
+                rows.push(obj(vec![
+                    ("scenario", s(name)),
+                    ("mode", s(mode)),
+                    ("label", s(&label)),
+                    ("ticks", num(report.ticks as f64)),
+                    ("submitted", num(report.submitted as f64)),
+                    ("completed", num(report.completed.len() as f64)),
+                    ("incomplete", num(report.incomplete as f64)),
+                    ("reprefilled", num(stats.seqs_reprefilled as f64)),
+                    ("recomputed_tokens", num(stats.recomputed_tokens as f64)),
+                    ("preemptive_drains", num(stats.preemptive_drains as f64)),
+                    ("preemptive_swaps", num(stats.preemptive_swaps as f64)),
+                    ("false_positive_drains", num(stats.false_positive_drains as f64)),
+                    ("tokens_at_risk_saved", num(stats.tokens_at_risk_saved as f64)),
+                    ("kv_migrated", num(stats.seqs_kv_migrated as f64)),
+                    ("recovery_passes", num(report.recoveries.len() as f64)),
+                    ("stall_total_ms", num(stall_ms)),
+                    ("e2e_p99_ticks", num(p99_ticks)),
+                ]));
+                engine.shutdown();
+            }
+        }
+    }
+
+    let j = obj(vec![
+        ("bench", s("health_detection")),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("health_detection", &j);
+    // repo-root copy: the predictive-health baseline future PRs compare to
+    match std::fs::write("../BENCH_health_detection.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_health_detection.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_health_detection.json: {e}"),
+    }
+}

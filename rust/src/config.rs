@@ -5,7 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
-
+use crate::health::HealthPolicy;
 use crate::Result;
 
 /// Model dimensions — mirror of `python/compile/config.py::ModelConfig`.
@@ -136,6 +136,18 @@ pub struct RecoveryPolicy {
     /// Off (default) reproduces the lossy §3.2 migration as the A/B
     /// baseline.
     pub kv_host_mirror: bool,
+    /// Predictive health detection (straggler/flaky/degrading devices):
+    /// when [`HealthPolicy::enabled`], the serve loop polls each
+    /// device's rolling latency/error window every tick, moves anomalous
+    /// devices Healthy → Suspect through the
+    /// [`crate::health::AnomalyDetector`], and *preemptively* drains a
+    /// Suspect attention rank over the lossless live-KV path (zero
+    /// recomputed tokens — the device can still export) or schedules a
+    /// planned revive-style swap for a Suspect expert rank. Off
+    /// (default) = no polling, no verdicts, byte-for-byte reactive
+    /// baseline (`tests/integration_predictive.rs` asserts;
+    /// `benches/health_detection.rs` measures the goodput gap).
+    pub health: HealthPolicy,
 }
 
 impl Default for RecoveryPolicy {
@@ -151,6 +163,7 @@ impl Default for RecoveryPolicy {
             degraded_serving: false,
             kv_live_migration: false,
             kv_host_mirror: false,
+            health: HealthPolicy::default(),
         }
     }
 }

@@ -38,6 +38,7 @@ use crate::cluster::{
 use crate::comms::{self, DomainManager, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, ModelMeta};
 use crate::executor::{artifact_set, out1, out4, router_out, Executor, PendingWeights};
+use crate::health::{AnomalyDetector, HealthVerdict};
 use crate::kvpool::{KvMirror, KvPayload};
 use crate::metrics::{Breakdown, Category, ServingStats};
 use crate::moe::{DenseGroups, ExpertMap};
@@ -119,6 +120,14 @@ pub enum FaultDomainKind {
 pub enum DeviceHealth {
     /// Serving normally.
     Healthy,
+    /// Flagged by the predictive [`AnomalyDetector`] ([`Engine::poll_health`]):
+    /// the device still serves its in-flight work — it is degraded, not
+    /// dead — but receives no *new* placements (submissions, migrations,
+    /// KV adoptions) while the serve loop plans a preemptive drain
+    /// (attention rank) or a planned swap (MoE rank). The detector can
+    /// also clear the flag (`HealthVerdict::Recovered`) before the drain
+    /// runs, which the serve loop counts as a false positive.
+    Suspect,
     /// Excluded from serving while the in-flight [`RecoveryTask`] rebuilds
     /// its fault domain. An `ExpertPlane` quarantine blocks every rank
     /// ([`Engine::serving_blocked`]); an `AttentionRank` quarantine only
@@ -186,6 +195,11 @@ pub struct Engine {
     /// The in-flight degraded-mode recovery, advanced one stage per
     /// [`Engine::poll_recovery`] call.
     recovery_task: Option<RecoveryTask>,
+    /// Per-device anomaly detectors backing [`Engine::poll_health`]
+    /// (empty while `RecoveryPolicy::health.enabled` is off). Entries are
+    /// created lazily on first poll and removed when a device is drained
+    /// or swapped away.
+    health_monitors: BTreeMap<DeviceId, AnomalyDetector>,
     /// Host-side incremental KV mirror (`Some` iff
     /// `RecoveryPolicy::kv_host_mirror`): prefill and decode copy each
     /// committed KV row here so a dead attention rank's sequences
@@ -450,6 +464,7 @@ impl Engine {
             last_sweep: None,
             health: BTreeMap::new(),
             recovery_task: None,
+            health_monitors: BTreeMap::new(),
             kv_mirror,
             spilled: VecDeque::new(),
             scratch: DecodeScratch::default(),
@@ -523,7 +538,11 @@ impl Engine {
         self.attn_order
             .iter()
             .copied()
-            .filter(move |d| !flagged.contains(d) && self.rank_serving(*d))
+            // strictly Healthy: a Suspect rank keeps serving what it has
+            // but must not receive new placements — it is about to drain
+            .filter(move |d| {
+                !flagged.contains(d) && self.device_health(*d) == DeviceHealth::Healthy
+            })
     }
 
     /// The one load metric rank placement uses (waiting + running; MAX for
@@ -800,6 +819,58 @@ impl Engine {
         }
     }
 
+    /// Poll the predictive anomaly detectors over every serving device
+    /// (§3.1 extended): fetch each device's rolling latency/error window
+    /// and let its [`AnomalyDetector`] judge it against the frozen
+    /// baseline. Returns the non-`Normal` verdicts in device order; the
+    /// serve loop maps `Suspect` to [`DeviceHealth::Suspect`] (and plans
+    /// a preemptive drain or swap) and `Recovered` back to `Healthy` (a
+    /// false positive).
+    ///
+    /// A no-op returning no verdicts while `RecoveryPolicy::health.enabled`
+    /// is off — no stats round-trips, no detector state, byte-for-byte
+    /// the reactive baseline. Devices carrying an un-cleared fault
+    /// annotation are skipped (their stats query would stall against a
+    /// hung thread; the reactive path owns them already), as are
+    /// quarantined/condemned devices.
+    pub fn poll_health(&mut self) -> Vec<(DeviceId, HealthVerdict)> {
+        if !self.cfg.recovery.health.enabled {
+            return Vec::new();
+        }
+        let policy = self.cfg.recovery.health.clone();
+        // sorted ids: the executor map is unordered and verdict order must
+        // be replay-stable
+        let mut devices: Vec<DeviceId> = self.executors.keys().copied().collect();
+        devices.sort_unstable();
+        let mut verdicts = Vec::new();
+        for d in devices {
+            if self.plugin.annotation_for(d).is_some() {
+                continue;
+            }
+            match self.device_health(d) {
+                DeviceHealth::Healthy | DeviceHealth::Suspect => {}
+                _ => continue,
+            }
+            let Ok(stats) = self.executors[&d].handle.stats() else { continue };
+            let det = self
+                .health_monitors
+                .entry(d)
+                .or_insert_with(|| AnomalyDetector::new(policy.clone()));
+            let v = det.assess(&stats.health);
+            if v != HealthVerdict::Normal {
+                verdicts.push((d, v));
+            }
+        }
+        verdicts
+    }
+
+    /// Drop a device's anomaly detector (after a preemptive drain or swap
+    /// retires/replaces it, so a fresh device starts with a fresh
+    /// baseline).
+    pub fn clear_health_monitor(&mut self, d: DeviceId) {
+        self.health_monitors.remove(&d);
+    }
+
     /// Which fault domain a failure of `d` takes down: an attention-only
     /// device loses just its DP rank; anything hosting experts or dense
     /// shards (including every collocated device) takes the shared expert
@@ -822,13 +893,22 @@ impl Engine {
         self.health.iter().any(|(d, h)| match h {
             DeviceHealth::Quarantined(scope) => *scope == FaultDomainKind::ExpertPlane,
             DeviceHealth::Condemned => self.fault_domain_of(*d) == FaultDomainKind::ExpertPlane,
-            DeviceHealth::Healthy => false,
+            // a Suspect device is degraded, not down: it keeps serving
+            // until its preemptive drain/swap runs, so it never stalls
+            // the instance
+            DeviceHealth::Healthy | DeviceHealth::Suspect => false,
         })
     }
 
     /// Whether rank `d` participates in this tick's serving partition.
+    /// Suspect ranks keep serving their in-flight sequences (they are
+    /// slow, not dead) until the preemptive drain moves them; only
+    /// quarantined/condemned ranks drop out.
     fn rank_serving(&self, d: DeviceId) -> bool {
-        self.device_health(d) == DeviceHealth::Healthy
+        matches!(
+            self.device_health(d),
+            DeviceHealth::Healthy | DeviceHealth::Suspect
+        )
     }
 
     /// Start a resumable recovery for `ann` and run its Drain stage
@@ -1985,11 +2065,18 @@ impl Engine {
             return None;
         }
         self.last_sweep = Some(Instant::now());
+        // Suspect devices are still serving and can still die for real —
+        // the heartbeat keeps watching them alongside the healthy set
         let mut devices: Vec<DeviceId> = self
             .executors
             .keys()
             .copied()
-            .filter(|d| self.device_health(*d) == DeviceHealth::Healthy)
+            .filter(|d| {
+                matches!(
+                    self.device_health(*d),
+                    DeviceHealth::Healthy | DeviceHealth::Suspect
+                )
+            })
             .collect();
         // deterministic sweep order: with several devices down at once the
         // heartbeat must always flag the same one first (scenario replays

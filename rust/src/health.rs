@@ -1,0 +1,394 @@
+//! Predictive device health: rolling latency/error statistics and a
+//! deterministic anomaly detector.
+//!
+//! The reactive health model (heartbeats and step failures, see
+//! [`crate::cluster`]) only fires once a device is already dead. Real
+//! fleets degrade first — devices straggle, flake, and ramp toward death
+//! — and the ReviveMoE machinery is strictly cheaper when invoked
+//! *before* the failure, while the victim can still serve its own KV
+//! export. This module is the statistical layer that calls those states
+//! early, in the spirit of ReaLM's error-rate detection:
+//!
+//! - [`RollingWindow`] — EWMA mean + variance over per-command latency
+//!   scores plus an exact sliding error-rate window, maintained by every
+//!   device thread inside [`crate::runtime::DeviceStats`].
+//! - [`AnomalyDetector`] — a deterministic judge over window snapshots:
+//!   z-score latency threshold against a frozen calibration baseline,
+//!   error-rate threshold, and consecutive-breach hysteresis, emitting
+//!   [`HealthVerdict`]s that the serve loop turns into Healthy ↔ Suspect
+//!   transitions and preemptive drains (see [`crate::serve`]).
+//! - [`HealthPolicy`] — the knobs, living on
+//!   [`crate::config::RecoveryPolicy`]. `enabled` defaults **off** =
+//!   byte-for-byte baseline, the A/B convention every knob in this
+//!   crate follows.
+//!
+//! Latency samples are *logical* scores (one unit per recorded command
+//! plus any synthetic degradation injected by the scenario DSL), never
+//! wall-clock, so detection verdicts replay deterministically — which is
+//! what lets `tests/integration_predictive.rs` assert byte-identical
+//! event logs and `tests/prop_health.rs` replay verdict sequences.
+
+use std::collections::VecDeque;
+
+/// Smoothing factor of the exponentially-weighted latency mean/variance.
+/// A module constant rather than a [`HealthPolicy`] knob so the
+/// device-side windows in [`crate::runtime::DeviceStats`] and the
+/// detector-internal window of [`AnomalyDetector::observe`] can never
+/// disagree about what a window means.
+pub const EWMA_ALPHA: f64 = 0.3;
+
+/// Number of completed commands the sliding error-rate window covers
+/// (same module-constant rationale as [`EWMA_ALPHA`]).
+pub const ERROR_WINDOW: usize = 64;
+
+/// Rolling per-command statistics: an exponentially-weighted latency
+/// mean/variance plus an exact sliding window of command outcomes.
+///
+/// Updated by the device thread on every *recorded* command (execute,
+/// compile, weight load, KV export/import — pings and stats queries are
+/// excluded: they are wall-paced and would break replay determinism).
+/// Snapshots ride back with [`crate::runtime::DeviceStats`] for the
+/// engine's [`AnomalyDetector::assess`] pass.
+#[derive(Clone, Debug, Default)]
+pub struct RollingWindow {
+    mean: f64,
+    var: f64,
+    samples: u64,
+    outcomes: VecDeque<bool>,
+    errors: usize,
+}
+
+impl RollingWindow {
+    /// Fold one command sample into the window: its latency score and
+    /// whether it completed successfully. Eviction keeps the error count
+    /// exact: once the outcome window holds [`ERROR_WINDOW`] entries the
+    /// oldest outcome is dropped and, if it was an error, un-counted.
+    pub fn record(&mut self, latency_ms: f64, ok: bool) {
+        if self.samples == 0 {
+            self.mean = latency_ms;
+            self.var = 0.0;
+        } else {
+            // West's EW update: variance shrinks by (1 - alpha) and
+            // absorbs the step the mean just took.
+            let diff = latency_ms - self.mean;
+            let incr = EWMA_ALPHA * diff;
+            self.mean += incr;
+            self.var = (1.0 - EWMA_ALPHA) * (self.var + diff * incr);
+        }
+        self.samples += 1;
+        self.outcomes.push_back(ok);
+        if !ok {
+            self.errors += 1;
+        }
+        while self.outcomes.len() > ERROR_WINDOW {
+            if let Some(evicted) = self.outcomes.pop_front() {
+                if !evicted {
+                    self.errors -= 1;
+                }
+            }
+        }
+    }
+
+    /// Exponentially-weighted latency mean (0 before any sample).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Exponentially-weighted latency variance.
+    pub fn variance(&self) -> f64 {
+        self.var
+    }
+
+    /// Square root of [`RollingWindow::variance`].
+    pub fn std(&self) -> f64 {
+        self.var.max(0.0).sqrt()
+    }
+
+    /// Total samples ever recorded (not capped by the outcome window).
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Outcomes currently inside the sliding window (≤ [`ERROR_WINDOW`]).
+    pub fn error_samples(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Errors currently inside the sliding window.
+    pub fn errors(&self) -> usize {
+        self.errors
+    }
+
+    /// Fraction of windowed outcomes that were errors (0 when empty).
+    pub fn error_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            0.0
+        } else {
+            self.errors as f64 / self.outcomes.len() as f64
+        }
+    }
+}
+
+/// Knobs of the predictive-health detector, carried on
+/// [`crate::config::RecoveryPolicy`].
+///
+/// Off (default): the engine never polls device windows and never emits
+/// a verdict — byte-for-byte identical behavior to the reactive
+/// baseline (`tests/integration_predictive.rs` asserts this;
+/// `benches/health_detection.rs` measures the profiles).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthPolicy {
+    /// Master switch. `false` (default) = no polling, no verdicts, no
+    /// behavior change.
+    pub enabled: bool,
+    /// Latency breach bar: the EW mean must exceed the frozen baseline
+    /// mean by more than `z_threshold` baseline standard deviations.
+    pub z_threshold: f64,
+    /// Error breach bar: windowed error rate above this fraction.
+    pub error_rate_threshold: f64,
+    /// Samples required before the calibration baseline freezes; no
+    /// verdict other than [`HealthVerdict::Normal`] is possible earlier.
+    pub min_samples: u64,
+    /// Windowed outcomes required before the error rate is trusted.
+    pub min_error_samples: usize,
+    /// Consecutive breaching assessments required to call a device
+    /// Suspect (one clean assessment resets the streak).
+    pub hysteresis: u32,
+    /// Floor on the baseline standard deviation used in the z-score
+    /// (a perfectly steady calibration window would otherwise make any
+    /// jitter an infinite-z breach).
+    pub min_sigma_ms: f64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            enabled: false,
+            z_threshold: 4.0,
+            error_rate_threshold: 0.25,
+            min_samples: 16,
+            min_error_samples: 16,
+            hysteresis: 3,
+            min_sigma_ms: 0.25,
+        }
+    }
+}
+
+/// Outcome of one detector assessment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthVerdict {
+    /// Within bounds (or still calibrating the baseline).
+    Normal,
+    /// A threshold is breached but the hysteresis streak is not yet met,
+    /// or the device is already Suspect and still breaching.
+    Breaching,
+    /// The breach streak just reached the hysteresis bar: the caller
+    /// should mark the device Suspect and plan its drain/swap.
+    Suspect,
+    /// A previously Suspect device dropped back within bounds: the
+    /// caller should restore it to Healthy (a false positive if its
+    /// drain had not fired yet).
+    Recovered,
+}
+
+/// Deterministic statistical judge for one device.
+///
+/// Calibration is **frozen-baseline**: the first assessment that sees at
+/// least [`HealthPolicy::min_samples`] samples freezes the window's
+/// `(mean, std)` as the device's healthy baseline; every later
+/// assessment compares the *current* EW mean against that frozen
+/// baseline, so a slow drift cannot quietly re-calibrate itself into
+/// normality (exactly the degrading-node failure mode).
+///
+/// Two entry points share one judgment: [`AnomalyDetector::assess`]
+/// judges an external window snapshot (the engine feeds it the
+/// device-side [`RollingWindow`] each serve tick) and
+/// [`AnomalyDetector::observe`] folds a sample into a detector-internal
+/// window first (the property-test harness drives this one).
+#[derive(Clone, Debug)]
+pub struct AnomalyDetector {
+    policy: HealthPolicy,
+    window: RollingWindow,
+    baseline: Option<(f64, f64)>,
+    streak: u32,
+    suspect: bool,
+}
+
+impl AnomalyDetector {
+    /// A fresh detector judging with `policy`.
+    pub fn new(policy: HealthPolicy) -> Self {
+        AnomalyDetector {
+            policy,
+            window: RollingWindow::default(),
+            baseline: None,
+            streak: 0,
+            suspect: false,
+        }
+    }
+
+    /// Whether the detector currently considers its device Suspect.
+    pub fn is_suspect(&self) -> bool {
+        self.suspect
+    }
+
+    /// The frozen `(mean, std)` calibration baseline, once set.
+    pub fn baseline(&self) -> Option<(f64, f64)> {
+        self.baseline
+    }
+
+    /// Fold one sample into the detector's internal window, then judge.
+    pub fn observe(&mut self, latency_ms: f64, ok: bool) -> HealthVerdict {
+        self.window.record(latency_ms, ok);
+        let w = self.window.clone();
+        self.judge(&w)
+    }
+
+    /// Judge an external window snapshot (device-side statistics).
+    pub fn assess(&mut self, window: &RollingWindow) -> HealthVerdict {
+        self.judge(window)
+    }
+
+    fn judge(&mut self, w: &RollingWindow) -> HealthVerdict {
+        let baseline = match self.baseline {
+            Some(b) => b,
+            None => {
+                if w.samples() >= self.policy.min_samples {
+                    self.baseline = Some((w.mean(), w.std()));
+                }
+                return HealthVerdict::Normal;
+            }
+        };
+        let (base_mean, base_std) = baseline;
+        let sigma = base_std.max(self.policy.min_sigma_ms);
+        let latency_breach = w.mean() > base_mean + self.policy.z_threshold * sigma;
+        let error_breach = w.error_samples() >= self.policy.min_error_samples
+            && w.error_rate() > self.policy.error_rate_threshold;
+        if latency_breach || error_breach {
+            self.streak += 1;
+            if !self.suspect && self.streak >= self.policy.hysteresis {
+                self.suspect = true;
+                return HealthVerdict::Suspect;
+            }
+            HealthVerdict::Breaching
+        } else {
+            self.streak = 0;
+            if self.suspect {
+                self.suspect = false;
+                HealthVerdict::Recovered
+            } else {
+                HealthVerdict::Normal
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_policy() -> HealthPolicy {
+        HealthPolicy {
+            enabled: true,
+            min_samples: 8,
+            min_error_samples: 8,
+            hysteresis: 2,
+            ..HealthPolicy::default()
+        }
+    }
+
+    #[test]
+    fn policy_defaults_off() {
+        assert!(!HealthPolicy::default().enabled, "detection must default off");
+    }
+
+    #[test]
+    fn window_tracks_mean_and_exact_error_counts() {
+        let mut w = RollingWindow::default();
+        assert_eq!(w.error_rate(), 0.0);
+        for _ in 0..10 {
+            w.record(1.0, true);
+        }
+        assert!((w.mean() - 1.0).abs() < 1e-12);
+        assert!(w.variance().abs() < 1e-12);
+        w.record(1.0, false);
+        assert_eq!(w.errors(), 1);
+        assert_eq!(w.error_samples(), 11);
+        // push the error out of the window: the count un-ticks exactly
+        for _ in 0..ERROR_WINDOW {
+            w.record(1.0, true);
+        }
+        assert_eq!(w.errors(), 0);
+        assert_eq!(w.error_samples(), ERROR_WINDOW);
+    }
+
+    #[test]
+    fn steady_stream_never_breaches() {
+        let mut det = AnomalyDetector::new(fast_policy());
+        for _ in 0..200 {
+            assert_eq!(det.observe(1.0, true), HealthVerdict::Normal);
+        }
+        assert!(!det.is_suspect());
+    }
+
+    #[test]
+    fn latency_shift_breaches_after_hysteresis_and_recovers() {
+        let mut det = AnomalyDetector::new(fast_policy());
+        for _ in 0..20 {
+            det.observe(1.0, true);
+        }
+        assert!(det.baseline().is_some(), "baseline freezes after min_samples");
+        // a 5 ms shift is 20 frozen sigmas (min_sigma floor 0.25)
+        assert_eq!(det.observe(6.0, true), HealthVerdict::Breaching);
+        assert_eq!(det.observe(6.0, true), HealthVerdict::Suspect);
+        assert_eq!(det.observe(6.0, true), HealthVerdict::Breaching);
+        assert!(det.is_suspect());
+        // back to normal: the EW mean decays under the bar again
+        let mut verdicts = Vec::new();
+        for _ in 0..30 {
+            verdicts.push(det.observe(1.0, true));
+        }
+        assert!(verdicts.contains(&HealthVerdict::Recovered));
+        assert!(!det.is_suspect());
+    }
+
+    #[test]
+    fn error_rate_breach_is_independent_of_latency() {
+        let mut det = AnomalyDetector::new(fast_policy());
+        for _ in 0..20 {
+            det.observe(1.0, true);
+        }
+        // latency stays at baseline but every second command fails
+        let mut saw_suspect = false;
+        for i in 0..20 {
+            let v = det.observe(1.0, i % 2 != 0);
+            saw_suspect |= v == HealthVerdict::Suspect;
+        }
+        assert!(saw_suspect, "50% windowed errors must cross the 25% bar");
+    }
+
+    #[test]
+    fn baseline_freezes_and_ignores_later_drift() {
+        let mut det = AnomalyDetector::new(fast_policy());
+        for _ in 0..20 {
+            det.observe(1.0, true);
+        }
+        let frozen = det.baseline().unwrap();
+        // a slow ramp cannot re-calibrate the baseline upward
+        for i in 0..50 {
+            det.observe(1.0 + 0.2 * i as f64, true);
+        }
+        assert_eq!(det.baseline().unwrap(), frozen);
+        assert!(det.is_suspect(), "the ramp must eventually breach the frozen baseline");
+    }
+
+    #[test]
+    fn replay_determinism_same_stream_same_verdicts() {
+        let stream: Vec<(f64, bool)> =
+            (0..120).map(|i| (1.0 + if i > 60 { 4.0 } else { 0.0 }, i % 7 != 0)).collect();
+        let mut a = AnomalyDetector::new(fast_policy());
+        let mut b = AnomalyDetector::new(fast_policy());
+        let va: Vec<_> = stream.iter().map(|&(l, ok)| a.observe(l, ok)).collect();
+        let vb: Vec<_> = stream.iter().map(|&(l, ok)| b.observe(l, ok)).collect();
+        assert_eq!(va, vb);
+    }
+}

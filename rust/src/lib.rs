@@ -28,6 +28,8 @@
 //! - [`weights`]    weight manifest loading / expert slicing
 //! - [`executor`]   DPExecutor / MoEExecutor / generator layer loop (§2.2)
 //! - [`engine`]     global engine: intake, dispatch, serving loop
+//! - [`health`]     predictive device health: rolling latency/error
+//!                  windows, deterministic anomaly detector
 //! - [`recovery`]   ReviveMoE recovery, device revival, reinit baseline
 //!                  (§3, §4.1)
 //! - [`scenario`]   deterministic, seeded fault-scenario scripts
@@ -46,6 +48,7 @@ pub mod config;
 pub mod engine;
 pub mod evalharness;
 pub mod executor;
+pub mod health;
 pub mod json;
 pub mod kvcache;
 pub mod kvpool;
@@ -62,8 +65,11 @@ pub mod workload;
 
 pub use config::{DeployMode, DeploymentConfig, ModelMeta, RecoveryPolicy};
 pub use engine::{DeviceHealth, Engine, FaultDomainKind};
+pub use health::{AnomalyDetector, HealthPolicy, HealthVerdict, RollingWindow};
 pub use kvpool::{KvMirror, KvPayload};
-pub use recovery::{RecoveryPoll, RecoveryReport, RecoveryStage, RecoveryTask, ReviveMoE};
+pub use recovery::{
+    DrainSummary, RecoveryPoll, RecoveryReport, RecoveryStage, RecoveryTask, ReviveMoE,
+};
 pub use scenario::Scenario;
 pub use serve::{run_scenario, RecoveryStrategy, ServeReport};
 

@@ -5,7 +5,7 @@
 //!
 //! Commands:
 //!   serve     [--scenario NAME] [--strategy revivemoe|reinit] [--degraded]
-//!             [--kv-live] [--kv-mirror]
+//!             [--kv-live] [--kv-mirror] [--predictive]
 //!             [--prefill-chunk C] [--tick-budget B]
 //!             [--rate R] [--requests N] [--ticks T] [--seed S] [--log]
 //!                                            online open-loop serving under
@@ -13,10 +13,18 @@
 //!                                            (steady | single-fault |
 //!                                            cascade | fault-revive |
 //!                                            rate-surge | fault-surge |
-//!                                            cascade-degraded); --degraded
+//!                                            cascade-degraded | slow-node |
+//!                                            flaky-node | degrading-node);
+//!                                            --degraded
 //!                                            serves through recovery at
 //!                                            reduced capacity instead of
 //!                                            stalling the tick loop;
+//!                                            --predictive turns on the
+//!                                            anomaly detector: a straggler
+//!                                            or flaky rank is marked Suspect
+//!                                            and preemptively drained
+//!                                            (attention) or swapped (expert
+//!                                            plane) before it dies;
 //!                                            --kv-live moves a role-switch
 //!                                            victim's sequences with their
 //!                                            KV (no re-prefill); --kv-mirror
@@ -146,6 +154,9 @@ fn main() -> Result<()> {
             }
             if args.flag_bool("kv-mirror") {
                 cfg.recovery.kv_host_mirror = true;
+            }
+            if args.flag_bool("predictive") {
+                cfg.recovery.health.enabled = true;
             }
             if args.flags.contains_key("prefill-chunk") {
                 cfg.prefill_chunk_tokens = args.flag_usize("prefill-chunk", 0);

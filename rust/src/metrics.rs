@@ -272,6 +272,21 @@ pub struct ServingStats {
     /// Prefill chunks executed (equals `prefills` when chunking is off:
     /// every monolithic prefill counts as one chunk).
     pub chunks_prefilled: usize,
+    /// Preemptive drains: Suspect attention ranks retired through the
+    /// lossless live-KV path *before* entering the failure path
+    /// (predictive health, `HealthPolicy::enabled`). Accounted apart
+    /// from `recoveries` — no fault ever fired.
+    pub preemptive_drains: usize,
+    /// Preemptive swaps: Suspect expert ranks replaced through a
+    /// planned revive-style recovery instead of waiting for the crash.
+    pub preemptive_swaps: usize,
+    /// Suspect devices whose verdict cleared before their deferred
+    /// drain/swap fired — the detector's false-positive count.
+    pub false_positive_drains: usize,
+    /// KV rows moved losslessly off Suspect devices by preemptive
+    /// drains: the tokens that would have been at risk of recompute (or
+    /// loss) had the device been allowed to die.
+    pub tokens_at_risk_saved: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     ttft_queue_ms: Vec<f64>,
@@ -498,6 +513,8 @@ impl ServingStats {
              chunks={} preempted={} \
              recoveries={} stall={:.0}ms degraded={:.0}ms \
              full_stall_ticks={} degraded_ticks={} degraded_tok/tick={:.2} \
+             preemptive_drains={} preemptive_swaps={} false_positive_drains={} \
+             tokens_at_risk_saved={} \
              kv_migrated={} kv_restored={} reprefilled={} recomputed_tok={} kv_bytes={} \
              dispatched={}B combined={}B",
             self.requests_completed,
@@ -522,6 +539,10 @@ impl ServingStats {
             self.full_stall_ticks,
             self.degraded_ticks,
             self.degraded_tok_per_tick(),
+            self.preemptive_drains,
+            self.preemptive_swaps,
+            self.false_positive_drains,
+            self.tokens_at_risk_saved,
             self.seqs_kv_migrated,
             self.seqs_kv_restored,
             self.seqs_reprefilled,
@@ -628,6 +649,22 @@ mod tests {
         let r = s.report();
         assert!(r.contains("degraded_ticks=2"));
         assert!(r.contains("full_stall_ticks=1"));
+    }
+
+    #[test]
+    fn preemptive_accounting_separates_from_reactive_recoveries() {
+        let mut s = ServingStats::default();
+        s.preemptive_drains += 1;
+        s.preemptive_swaps += 1;
+        s.false_positive_drains += 1;
+        s.tokens_at_risk_saved += 37;
+        // preemptive actions never count as reactive recoveries
+        assert_eq!(s.recoveries, 0);
+        let r = s.report();
+        assert!(r.contains("preemptive_drains=1"));
+        assert!(r.contains("preemptive_swaps=1"));
+        assert!(r.contains("false_positive_drains=1"));
+        assert!(r.contains("tokens_at_risk_saved=37"));
     }
 
     #[test]

@@ -71,6 +71,19 @@
 //! Any move that cannot complete (victim died mid-export, no destination
 //! with batch room, import refused) falls back to the lossy requeue —
 //! the pass never fails because a KV optimization did.
+//!
+//! # Preemptive drain (predictive health)
+//!
+//! When the [`crate::health::AnomalyDetector`] calls an attention rank
+//! Suspect *before* it dies, [`ReviveMoE::preemptive_drain`] retires it
+//! while it can still serve its own KV exports: every running sequence
+//! leaves losslessly over the live-migration path — routed, imported,
+//! and adopted **before** the domain rebuild, while the victim is still
+//! an attention-expert domain member the P2P channel accepts — so the
+//! rank exits the instance without ever entering the failure path and
+//! with zero recomputed tokens. Unlike the role-switch drain this is
+//! unconditional on `kv_live_migration`: the knob trades off against the
+//! lossy baseline, but a preemptive drain exists *only* to be lossless.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
@@ -184,6 +197,30 @@ impl ReviveReport {
     pub fn wall(&self) -> Duration {
         self.breakdown.total_wall()
     }
+}
+
+/// What one [`ReviveMoE::preemptive_drain`] pass did.
+#[derive(Debug)]
+pub struct DrainSummary {
+    /// The Suspect attention rank that was drained and retired.
+    pub victim: DeviceId,
+    /// Sequences taken off the victim (lossless moves + lossy fallbacks
+    /// + waiting requeues).
+    pub moved_sequences: usize,
+    /// Sequences moved losslessly with their KV pages and resumed at
+    /// position on a survivor.
+    pub kv_migrated_sequences: usize,
+    /// Sequences that fell back to the lossy re-prefill path (export
+    /// died, no destination with room, adoption refused).
+    pub lossy_sequences: usize,
+    /// Committed KV rows the lossless moves carried — decode work that
+    /// would have been recomputed had the rank been left to die on the
+    /// reactive path.
+    pub tokens_at_risk_saved: usize,
+    /// KV bytes moved over the P2P channel.
+    pub kv_bytes_moved: usize,
+    /// Wall time of the whole drain (exports through recompile).
+    pub wall: Duration,
 }
 
 /// The recovery engine. Stateless — all state lives in [`Engine`].
@@ -582,6 +619,157 @@ impl ReviveMoE {
             joined_attention: plan.joined_attention,
             restored_dense_groups: plan.restored_dense_groups,
             recompiled_graphs: sweep.recompiled,
+        })
+    }
+
+    /// Preemptively retire a Suspect — degraded but still live —
+    /// attention rank with zero recomputed tokens (the predictive-health
+    /// tentpole; the serve loop calls this when [`Engine::poll_health`]
+    /// turns a pure attention rank Suspect).
+    ///
+    /// Ordering is the whole trick, and it is deliberately **not** the
+    /// [`RecoveryTask`] stage order: the task rebuilds the domain before
+    /// `KvRestore`, which works for a role switch (the victim stays a
+    /// member under a compacted rank) but not for a retirement — a
+    /// drained victim leaves the domain entirely, and
+    /// [`comms::p2p_kv_transfer`] declines a non-member source, which
+    /// would demote every export to the lossy path. So this pass lands
+    /// every export — route, import, adopt — *first*, while the victim
+    /// is still a domain member, and only then tears the executor down,
+    /// recreates the domain without it, and runs the boundary recompile
+    /// sweep. Blocking throughout: the instance keeps its other ranks
+    /// serving between ticks, not between stages.
+    ///
+    /// An `Err` is instance-fatal exactly like [`ReviveMoE::recover`]:
+    /// the victim is escalated to an expert-plane quarantine. Individual
+    /// sequences whose move cannot complete fall back to the lossy
+    /// requeue without failing the pass.
+    pub fn preemptive_drain(engine: &mut Engine, victim: DeviceId) -> Result<DrainSummary> {
+        anyhow::ensure!(
+            !engine.recovering,
+            "cannot preemptively drain while a recovery pass is running"
+        );
+        anyhow::ensure!(
+            engine.attn_order.contains(&victim),
+            "preemptive drain victim {victim} is not an attention rank"
+        );
+        anyhow::ensure!(
+            engine.attn_order.len() > 1,
+            "preemptive drain needs a surviving attention rank"
+        );
+        anyhow::ensure!(
+            engine.fault_domain_of(victim) == FaultDomainKind::AttentionRank,
+            "device {victim} hosts expert-plane roles; plan a swap, not a drain"
+        );
+        engine.recovering = true;
+        match Self::preemptive_drain_inner(engine, victim) {
+            Ok(summary) => {
+                engine.recovering = false;
+                Ok(summary)
+            }
+            Err(e) => {
+                engine.fail_recovery(victim);
+                Err(e)
+            }
+        }
+    }
+
+    fn preemptive_drain_inner(engine: &mut Engine, victim: DeviceId) -> Result<DrainSummary> {
+        let t_wall = Instant::now();
+        let lossy_mark = engine.stats.seqs_reprefilled;
+
+        // 1. take everything off the victim while it can still export:
+        //    running sequences leave as in-flight KV export DMAs on the
+        //    victim's own queue; waiting sequences (and any running
+        //    sequence without a committed table) requeue on survivors.
+        //    The victim leaves the DP set before the requeue so nothing
+        //    lands back on it.
+        let (exports, leftovers) = engine.live_migrate_kv(victim)?;
+        engine.attn_order.retain(|&d| d != victim);
+        let moved = exports.len() + leftovers.len();
+        engine.requeue(leftovers)?;
+
+        // 2. land every export and adopt it at position on a survivor —
+        //    all before the domain rebuild (see the method doc for why)
+        let mut kv_migrated = 0usize;
+        let mut tokens_saved = 0usize;
+        let mut kv_bytes = 0usize;
+        for KvExportInFlight { seq, pending } in exports {
+            let payload = match pending.wait() {
+                Ok(p) => p,
+                Err(_) => {
+                    // the victim degraded into a real failure mid-export
+                    engine.requeue_lossy(seq)?;
+                    continue;
+                }
+            };
+            let Some(dst) = engine.kv_adoption_target(&BTreeMap::new()) else {
+                engine.requeue_lossy(seq)?;
+                continue;
+            };
+            let routed = engine.domains.get(ATTN_EXPERT_DOMAIN).and_then(|d| {
+                comms::p2p_kv_transfer(d, engine.epoch(), victim, dst, payload.bytes())
+            });
+            if routed.is_err() {
+                engine.requeue_lossy(seq)?;
+                continue;
+            }
+            let submitted = {
+                let handle = &engine.executors[&dst].handle;
+                handle.submit_kv_import(payload, handle.queued_deadline(0))
+            };
+            let pending = match submitted {
+                Ok(p) => p,
+                Err(_) => {
+                    engine.requeue_lossy(seq)?;
+                    continue;
+                }
+            };
+            let payload = match pending.wait() {
+                Ok(p) => p,
+                Err(_) => {
+                    engine.requeue_lossy(seq)?;
+                    continue;
+                }
+            };
+            let rows = seq.kv_rows();
+            match engine.adopt_with_kv(dst, seq, &payload)? {
+                Ok(()) => {
+                    kv_migrated += 1;
+                    tokens_saved += rows;
+                    kv_bytes += payload.bytes();
+                    engine.stats.seqs_kv_migrated += 1;
+                    engine.stats.kv_bytes_moved += payload.bytes();
+                }
+                Err(seq) => engine.requeue_lossy(seq)?,
+            }
+        }
+
+        // 3. retire the victim: executor teardown + a fresh detector
+        //    slate, then the domain rebuild and boundary recompile the
+        //    member change requires. The victim was attention-only, so
+        //    the trampoline domain is untouched.
+        if let Some(ex) = engine.executors.remove(&victim) {
+            ex.shutdown();
+        }
+        engine.plugin.clear(victim);
+        engine.clear_health_monitor(victim);
+        engine.set_device_health(victim, DeviceHealth::Healthy);
+        let epoch = engine.domains.recreate_without(ATTN_EXPERT_DOMAIN, victim)?.epoch;
+        engine.set_epoch(epoch);
+        let scope = engine.cfg.recovery.recompile_scope;
+        let skip: BTreeSet<DeviceId> =
+            engine.plugin.pending_recovery().iter().map(|a| a.device).collect();
+        recompile_for_domain_change(engine, scope, &[], &skip, None, &BTreeMap::new())?;
+
+        Ok(DrainSummary {
+            victim,
+            moved_sequences: moved,
+            kv_migrated_sequences: kv_migrated,
+            lossy_sequences: engine.stats.seqs_reprefilled.saturating_sub(lossy_mark),
+            tokens_at_risk_saved: tokens_saved,
+            kv_bytes_moved: kv_bytes,
+            wall: t_wall.elapsed(),
         })
     }
 

@@ -42,6 +42,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cluster::{DeviceId, FailureBehavior, ProbeError};
+use crate::health::RollingWindow;
 use crate::kvpool::KvPayload;
 use crate::tensor::Tensor;
 use crate::Result;
@@ -49,6 +50,12 @@ use crate::Result;
 /// Default per-command timeout; a hung device surfaces as a timeout here
 /// (and as a heartbeat miss in the monitor).
 pub const DEFAULT_CMD_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Logical latency score of one healthy recorded command. Health windows
+/// are fed logical scores — one unit per command plus any synthetic
+/// degradation — never wall-clock, so anomaly verdicts replay
+/// deterministically (see [`crate::health`]).
+const LOGICAL_CMD_MS: f64 = 1.0;
 
 /// An executable argument: either a device-resident weight (by name) or a
 /// host value shipped with the call.
@@ -90,6 +97,29 @@ pub struct DeviceStats {
     /// KV bytes uploaded by `KvImport` commands (migration/restore
     /// writes).
     pub kv_bytes_imported: usize,
+    /// Rolling latency/error window over recorded commands (execute,
+    /// compile, weight load, KV export/import — pings and stats queries
+    /// are excluded as wall-paced). Input to the predictive-health
+    /// detector in [`crate::health`].
+    pub health: RollingWindow,
+}
+
+/// Synthetic degradation profile a scenario injects into a device thread
+/// (the straggler/flaky/ramp-to-death states of the scenario DSL). It
+/// only shapes the *recorded* health samples — a flaky command records
+/// an error in the window but still completes successfully (the device
+/// retried internally), and inflation is a logical score, never a real
+/// sleep — so degraded runs stay replay-deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct DegradationProfile {
+    /// Fixed extra latency score added to every recorded command.
+    pub extra_ms: f64,
+    /// Every Nth recorded command logs as an internally-recovered error
+    /// (0 = never).
+    pub error_period: u32,
+    /// Extra latency score per recorded command since the profile was
+    /// set: a ramp toward death (0 = flat).
+    pub ramp_ms: f64,
 }
 
 enum Cmd {
@@ -104,7 +134,27 @@ enum Cmd {
     KvImport { payload: KvPayload, reply: Sender<Result<KvPayload>> },
     Stats { reply: Sender<DeviceStats> },
     SetFailed { behavior: FailureBehavior },
+    SetDegradation { profile: DegradationProfile },
     Shutdown,
+}
+
+/// Fold one recorded command into the device's health window, applying
+/// the active degradation profile: latency = logical score + fixed
+/// inflation + ramp, and every `error_period`-th degraded command logs
+/// as an error even though it succeeded (an internally-recovered flake).
+fn record_health(
+    stats: &mut DeviceStats,
+    profile: &DegradationProfile,
+    degraded_cmds: &mut u64,
+    ok: bool,
+) {
+    let inflation = profile.extra_ms + profile.ramp_ms * *degraded_cmds as f64;
+    if profile.extra_ms != 0.0 || profile.ramp_ms != 0.0 || profile.error_period != 0 {
+        *degraded_cmds += 1;
+    }
+    let flaky =
+        profile.error_period != 0 && *degraded_cmds % u64::from(profile.error_period) == 0;
+    stats.health.record(LOGICAL_CMD_MS + inflation, ok && !flaky);
 }
 
 /// Cloneable handle to a device thread.
@@ -293,6 +343,8 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
     let mut weight_bytes: usize = 0;
     let mut stats = DeviceStats::default();
     let mut failed: Option<FailureBehavior> = None;
+    let mut degradation = DegradationProfile::default();
+    let mut degraded_cmds: u64 = 0;
     // Commands swallowed while hung: kept alive (reply senders NOT dropped)
     // so callers block until their timeout — a genuine hang, not an error.
     let mut graveyard: Vec<Cmd> = Vec::new();
@@ -320,17 +372,23 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                 weights.clear();
                 weight_bytes = 0;
             }
+            Cmd::SetDegradation { profile } => {
+                degradation = profile;
+                degraded_cmds = 0;
+            }
             Cmd::Shutdown => break,
             Cmd::Compile { name, path, reply } => {
                 if failed.is_some() {
                     let _ = reply.send(Err(anyhow::anyhow!("device failed")));
                     continue;
                 }
-                let _ = reply.send(do_compile(&mut client, &mut executables, &name, &path)
+                let r = do_compile(&mut client, &mut executables, &name, &path)
                     .inspect(|_| {
                         stats.compiles += 1;
                         stats.executables = executables.len();
-                    }));
+                    });
+                record_health(&mut stats, &degradation, &mut degraded_cmds, r.is_ok());
+                let _ = reply.send(r);
             }
             Cmd::DropExecutables { names, reply } => {
                 let n = match names {
@@ -370,6 +428,7 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                     weight_bytes += n;
                     stats.weight_bytes = weight_bytes;
                 }
+                record_health(&mut stats, &degradation, &mut degraded_cmds, r.is_ok());
                 let _ = reply.send(r.map(|n| (n, secs)));
             }
             Cmd::DropWeightsPrefix { prefix, reply } => {
@@ -392,6 +451,7 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                 if r.is_ok() {
                     stats.executions += 1;
                 }
+                record_health(&mut stats, &degradation, &mut degraded_cmds, r.is_ok());
                 let _ = reply.send(r);
             }
             Cmd::KvExport { payload, reply } => {
@@ -405,6 +465,7 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                     continue;
                 }
                 stats.kv_bytes_exported += payload.bytes();
+                record_health(&mut stats, &degradation, &mut degraded_cmds, true);
                 let _ = reply.send(Ok(payload));
             }
             Cmd::KvImport { payload, reply } => {
@@ -416,6 +477,7 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                     continue;
                 }
                 stats.kv_bytes_imported += payload.bytes();
+                record_health(&mut stats, &degradation, &mut degraded_cmds, true);
                 let _ = reply.send(Ok(payload));
             }
             Cmd::Stats { reply } => {
@@ -700,6 +762,14 @@ impl DeviceHandle {
         let _ = self.tx.send(Cmd::SetFailed { behavior });
     }
 
+    /// Install a synthetic degradation profile (straggler / flaky /
+    /// ramp-to-death; used by the scenario DSL). Fire-and-forget like
+    /// [`DeviceHandle::set_failed`]; resets the degraded-command counter
+    /// so ramps restart from zero.
+    pub fn set_degradation(&self, profile: DegradationProfile) {
+        let _ = self.tx.send(Cmd::SetDegradation { profile });
+    }
+
     /// Terminate the device thread (SIGKILL analog; queued work is lost).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Cmd::Shutdown);
@@ -922,6 +992,56 @@ mod tests {
             .wait()
             .unwrap_err();
         assert!(e.to_string().contains("timed out"), "hung device must hit the deadline: {e}");
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn degradation_inflates_recorded_latency_scores() {
+        let d = SimDevice::spawn(40);
+        d.handle.load_weights(vec![]).unwrap();
+        let base = d.handle.stats().unwrap().health;
+        assert_eq!(base.samples(), 1);
+        assert!((base.mean() - 1.0).abs() < 1e-12, "healthy commands score 1.0");
+        d.handle.set_degradation(DegradationProfile { extra_ms: 4.0, ..Default::default() });
+        for _ in 0..8 {
+            d.handle.load_weights(vec![]).unwrap();
+        }
+        let w = d.handle.stats().unwrap().health;
+        assert_eq!(w.samples(), 9);
+        assert!(w.mean() > 3.0, "EW mean must converge toward 5.0, got {}", w.mean());
+        assert_eq!(w.errors(), 0);
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn flaky_profile_records_errors_but_commands_still_succeed() {
+        let d = SimDevice::spawn(41);
+        d.handle.set_degradation(DegradationProfile { error_period: 2, ..Default::default() });
+        for _ in 0..8 {
+            d.handle.load_weights(vec![]).unwrap();
+        }
+        let w = d.handle.stats().unwrap().health;
+        assert_eq!(w.errors(), 4, "every 2nd command logs an internally-recovered error");
+        assert_eq!(w.error_samples(), 8);
+        assert!((w.mean() - 1.0).abs() < 1e-12, "flakes do not inflate latency");
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn ramp_profile_raises_scores_per_command() {
+        let d = SimDevice::spawn(42);
+        d.handle.set_degradation(DegradationProfile { ramp_ms: 1.0, ..Default::default() });
+        d.handle.load_weights(vec![]).unwrap();
+        let first = d.handle.stats().unwrap().health.mean();
+        assert!((first - 1.0).abs() < 1e-12, "ramp starts at zero extra");
+        for _ in 0..6 {
+            d.handle.load_weights(vec![]).unwrap();
+        }
+        let w = d.handle.stats().unwrap().health;
+        assert!(w.mean() > first, "scores must ramp: {} -> {}", first, w.mean());
         d.handle.shutdown();
         d.join.join().unwrap();
     }

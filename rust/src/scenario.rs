@@ -18,7 +18,11 @@
 //! *inside* a load surge ([`Scenario::fault_under_surge`] — the
 //! degraded-serving showcase), and a second fault arriving while the
 //! first degraded recovery is still advancing tick-by-tick
-//! ([`Scenario::cascade_while_degraded`]). Device ids in the canned
+//! ([`Scenario::cascade_while_degraded`]), and the three degradation
+//! profiles the predictive-health detector exists for: a straggler
+//! ([`Scenario::straggler`]), an intermittently flaky device below the
+//! drain threshold ([`Scenario::flaky`]), and a latency ramp ending in a
+//! scripted death ([`Scenario::degrading`]). Device ids in the canned
 //! scenarios assume the default 8-device MA-disaggregated shape
 //! (devices 0–3 attention, 4–7 MoE).
 
@@ -53,6 +57,38 @@ pub enum ScenarioEvent {
     },
     /// Stop arrivals entirely (the drain phase of a run).
     StopArrivals,
+    /// A device turns straggler: every recorded command's health-window
+    /// latency score inflates by a fixed amount
+    /// ([`crate::runtime::DegradationProfile::extra_ms`]). Real work is
+    /// unaffected — only the statistics the predictive detector reads,
+    /// so with detection off this is behaviorally invisible.
+    SlowNode {
+        /// The straggling device.
+        device: DeviceId,
+        /// Extra latency score per recorded command.
+        extra_ms: f64,
+    },
+    /// A device turns flaky: every `error_period`-th recorded command
+    /// logs an internally-recovered error in its health window (the
+    /// command itself still succeeds), so the reactive fault path never
+    /// fires — only the error-rate detector can see it.
+    FlakyNode {
+        /// The flaky device.
+        device: DeviceId,
+        /// Every Nth recorded command logs as an error.
+        error_period: u32,
+    },
+    /// A device starts degrading: its latency score ramps by `ramp_ms`
+    /// per recorded command — the straggler-to-death profile. Scripts
+    /// pair this with a later [`ScenarioEvent::InjectFault`] so the
+    /// reactive baseline eventually pays the full failure cost the
+    /// predictive drain avoids.
+    DegradingNode {
+        /// The degrading device.
+        device: DeviceId,
+        /// Extra latency score per recorded command since onset.
+        ramp_ms: f64,
+    },
 }
 
 /// A scenario event bound to the tick it fires at.
@@ -148,6 +184,33 @@ impl Scenario {
         self
     }
 
+    /// Script a straggler onset at `tick`.
+    pub fn slow_node(mut self, tick: u64, device: DeviceId, extra_ms: f64) -> Self {
+        self.events.push(TimedEvent {
+            at_tick: tick,
+            event: ScenarioEvent::SlowNode { device, extra_ms },
+        });
+        self
+    }
+
+    /// Script a flaky-device onset at `tick`.
+    pub fn flaky_node(mut self, tick: u64, device: DeviceId, error_period: u32) -> Self {
+        self.events.push(TimedEvent {
+            at_tick: tick,
+            event: ScenarioEvent::FlakyNode { device, error_period },
+        });
+        self
+    }
+
+    /// Script a degradation-ramp onset at `tick`.
+    pub fn degrading_node(mut self, tick: u64, device: DeviceId, ramp_ms: f64) -> Self {
+        self.events.push(TimedEvent {
+            at_tick: tick,
+            event: ScenarioEvent::DegradingNode { device, ramp_ms },
+        });
+        self
+    }
+
     /// The event script sorted by tick (stable: same-tick events keep
     /// their insertion order — this is what makes a cascading double
     /// fault's ordering well-defined).
@@ -224,6 +287,41 @@ impl Scenario {
             .inject_fault(9, 1, FaultLevel::L5, FailureBehavior::Erroring)
     }
 
+    /// An attention NPU turns straggler at tick 4 (every command +4.0
+    /// latency score) and finally dies at tick 20. With predictive
+    /// detection off, the death is a plain reactive attention fault;
+    /// with detection on, the rank is preemptively drained long before
+    /// tick 20 and the death hits an already-retired device.
+    pub fn straggler(seed: u64) -> Self {
+        Scenario::new("slow-node", seed).slow_node(4, 2, 4.0).inject_fault(
+            20,
+            2,
+            FaultLevel::L6,
+            FailureBehavior::Erroring,
+        )
+    }
+
+    /// An attention NPU turns flaky at tick 4 — one internally-recovered
+    /// error every 8 recorded commands, a 12.5% windowed rate *below*
+    /// the default 25% drain threshold. The false-positive guard: even
+    /// with detection on, nothing should drain.
+    pub fn flaky(seed: u64) -> Self {
+        Scenario::new("flaky-node", seed).flaky_node(4, 2, 8)
+    }
+
+    /// An attention NPU starts ramping at tick 4 (+0.5 latency score per
+    /// command, compounding) and dies at tick 30. The predictive
+    /// showcase: detection drains it mid-ramp, losslessly, while the
+    /// reactive baseline rides the ramp into the failure path.
+    pub fn degrading(seed: u64) -> Self {
+        Scenario::new("degrading-node", seed).degrading_node(4, 2, 0.5).inject_fault(
+            30,
+            2,
+            FaultLevel::L6,
+            FailureBehavior::Erroring,
+        )
+    }
+
     /// Look a canned scenario up by name (the `serve` CLI mode's
     /// `--scenario` flag).
     pub fn by_name(name: &str, seed: u64) -> Option<Self> {
@@ -235,12 +333,15 @@ impl Scenario {
             "rate-surge" => Some(Self::rate_surge(seed)),
             "fault-surge" => Some(Self::fault_under_surge(seed)),
             "cascade-degraded" => Some(Self::cascade_while_degraded(seed)),
+            "slow-node" => Some(Self::straggler(seed)),
+            "flaky-node" => Some(Self::flaky(seed)),
+            "degrading-node" => Some(Self::degrading(seed)),
             _ => None,
         }
     }
 
     /// Every canned scenario name, for CLI help and the bench sweep.
-    pub const CANNED: [&str; 7] = [
+    pub const CANNED: [&str; 10] = [
         "steady",
         "single-fault",
         "cascade",
@@ -248,6 +349,9 @@ impl Scenario {
         "rate-surge",
         "fault-surge",
         "cascade-degraded",
+        "slow-node",
+        "flaky-node",
+        "degrading-node",
     ];
 }
 
@@ -264,11 +368,14 @@ mod tests {
             .inject_fault(5, 3, FaultLevel::L6, FailureBehavior::Hung)
             .revive(9, 3)
             .rate_change(7, 0.25)
-            .stop_arrivals(20);
+            .stop_arrivals(20)
+            .slow_node(11, 1, 3.0)
+            .flaky_node(12, 1, 6)
+            .degrading_node(13, 1, 0.25);
         assert_eq!(s.rate, 2.0);
         assert_eq!(s.max_requests, Some(10));
         assert_eq!(s.max_ticks, 99);
-        assert_eq!(s.events.len(), 4);
+        assert_eq!(s.events.len(), 7);
     }
 
     #[test]

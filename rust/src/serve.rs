@@ -37,6 +37,29 @@
 //! the active pass completes. Off (the default), every fault takes the
 //! pre-PR-4 blocking path below, byte-for-byte.
 //!
+//! # Predictive health (straggler/flaky detection)
+//!
+//! With [`crate::health::HealthPolicy::enabled`] on
+//! (`RecoveryPolicy::health`), each tick also polls the per-device
+//! anomaly detectors ([`Engine::poll_health`]): a device whose rolling
+//! latency/error window breaches its frozen baseline for
+//! `hysteresis` consecutive assessments turns
+//! [`DeviceHealth::Suspect`] — still serving, but receiving no new
+//! placements. A Suspect *attention* rank is then preemptively drained
+//! ([`ReviveMoE::preemptive_drain`]): every running sequence leaves
+//! losslessly over the live KV-migration path while the device can
+//! still export, and the rank retires without ever entering the failure
+//! path — zero recomputed tokens. A Suspect rank hosting expert-plane
+//! roles gets a *planned swap* instead: a synthetic `predictive-swap`
+//! fault is posted and the ordinary ReviveMoE pass runs at a moment of
+//! the loop's choosing. A detector that clears before the drain fires
+//! is a false positive; all three outcomes are counted separately in
+//! [`ServingStats`] (`preemptive_drains`, `preemptive_swaps`,
+//! `false_positive_drains`, `tokens_at_risk_saved`). Off (the
+//! default), none of this runs and every scenario replays the reactive
+//! baseline byte-for-byte (`tests/integration_predictive.rs` asserts
+//! both sides).
+//!
 //! Everything observable is tick-stamped, so a seeded [`Scenario`] replays
 //! deterministically: identical token streams per arrival and an
 //! identical event log across runs (wall-clock latencies of course vary;
@@ -51,13 +74,15 @@
 //! attention fault is tick-identical to the blocking run, which is what
 //! the degraded integration tests assert).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
-use crate::cluster::{FaultAnnotation, FaultInjector};
-use crate::engine::{Completion, DeviceHealth, Engine, StepOutcome};
+use crate::cluster::{DeviceId, FailureBehavior, FaultAnnotation, FaultInjector, FaultLevel};
+use crate::engine::{Completion, DeviceHealth, Engine, FaultDomainKind, StepOutcome};
+use crate::health::HealthVerdict;
 use crate::metrics::ServingStats;
 use crate::recovery::{baseline_reinit, RecoveryReport, ReviveMoE};
+use crate::runtime::DegradationProfile;
 use crate::scenario::{Scenario, ScenarioEvent};
 use crate::scheduler::{SeqId, Token};
 use crate::workload::{ArrivalProcess, Request};
@@ -136,7 +161,10 @@ pub struct RecoveryRecord {
     pub tick: u64,
     /// The failed device.
     pub device: usize,
-    /// `"revivemoe"`, `"reinit"`, or `"revive"` (device rejoining).
+    /// `"revivemoe"`, `"reinit"`, `"revive"` (device rejoining),
+    /// `"preemptive-drain"` (Suspect attention rank retired losslessly),
+    /// or `"preemptive-swap"` (Suspect expert-plane rank swapped on a
+    /// planned fault).
     pub kind: String,
     /// Wall time of the pass, in ms. For a blocking pass this is how long
     /// serving stalled; for a degraded pass serving continued throughout
@@ -259,6 +287,9 @@ pub fn run_scenario(
     let mut completed: Vec<RequestOutcome> = Vec::new();
     let mut recoveries: Vec<RecoveryRecord> = Vec::new();
     let mut log: Vec<String> = Vec::new();
+    // devices the anomaly detector marked Suspect and that still await
+    // their preemptive drain/swap (cleared if the detector recants first)
+    let mut suspects: BTreeSet<DeviceId> = BTreeSet::new();
 
     engine.stats.start();
     let mut tick: u64 = 0;
@@ -305,6 +336,13 @@ pub fn run_scenario(
             let id = engine.submit(req)?;
             outstanding.insert(id, arrival);
             log.push(format!("tick {tick}: request {arrival} arrived"));
+        }
+
+        // 2b. predictive health: poll the anomaly detectors and act on
+        //     Suspect devices while they can still export (no-op with the
+        //     policy off, which is the default)
+        if engine.cfg.recovery.health.enabled {
+            poll_predictive(&mut engine, tick, &mut suspects, &mut recoveries, &mut log)?;
         }
 
         // 3. advance any in-flight degraded recovery by one stage, then
@@ -467,6 +505,33 @@ fn apply_event(
                 }
             }
         }
+        ScenarioEvent::SlowNode { device, extra_ms } => {
+            if let Some(ex) = engine.executors.get(&device) {
+                ex.handle.set_degradation(DegradationProfile { extra_ms, ..Default::default() });
+                log.push(format!("tick {tick}: slow-node device {device} extra_ms={extra_ms}"));
+            } else {
+                log.push(format!("tick {tick}: slow-node device {device} skipped (absent)"));
+            }
+        }
+        ScenarioEvent::FlakyNode { device, error_period } => {
+            if let Some(ex) = engine.executors.get(&device) {
+                ex.handle
+                    .set_degradation(DegradationProfile { error_period, ..Default::default() });
+                log.push(format!(
+                    "tick {tick}: flaky-node device {device} error_period={error_period}"
+                ));
+            } else {
+                log.push(format!("tick {tick}: flaky-node device {device} skipped (absent)"));
+            }
+        }
+        ScenarioEvent::DegradingNode { device, ramp_ms } => {
+            if let Some(ex) = engine.executors.get(&device) {
+                ex.handle.set_degradation(DegradationProfile { ramp_ms, ..Default::default() });
+                log.push(format!("tick {tick}: degrading-node device {device} ramp_ms={ramp_ms}"));
+            } else {
+                log.push(format!("tick {tick}: degrading-node device {device} skipped (absent)"));
+            }
+        }
         ScenarioEvent::RateChange { rate } => {
             arrivals.set_rate(tick as f64, rate);
             log.push(format!("tick {tick}: rate change to {rate}"));
@@ -475,6 +540,128 @@ fn apply_event(
             arrivals.set_rate(tick as f64, 0.0);
             log.push(format!("tick {tick}: arrivals stopped"));
         }
+    }
+    Ok(())
+}
+
+/// One predictive-health pass: fold fresh detector verdicts into the
+/// Suspect set, then act on each Suspect device while it can still
+/// cooperate — preemptive lossless drain for attention ranks, planned
+/// `predictive-swap` fault + ordinary ReviveMoE pass for expert-plane
+/// roles. Acting is deferred while a (degraded) recovery is in flight;
+/// the Suspect keeps serving its in-flight work until the pass is free
+/// to run. A detector that recants before the drain fires clears the
+/// device back to Healthy and counts a false positive.
+fn poll_predictive(
+    engine: &mut Engine,
+    tick: u64,
+    suspects: &mut BTreeSet<DeviceId>,
+    recoveries: &mut Vec<RecoveryRecord>,
+    log: &mut Vec<String>,
+) -> Result<()> {
+    // verdict pass: detector output -> Suspect set + health marks
+    for (device, verdict) in engine.poll_health() {
+        match verdict {
+            HealthVerdict::Suspect => {
+                engine.set_device_health(device, DeviceHealth::Suspect);
+                suspects.insert(device);
+                log.push(format!(
+                    "tick {tick}: device {device} marked Suspect by the anomaly detector"
+                ));
+            }
+            HealthVerdict::Recovered => {
+                if suspects.remove(&device) {
+                    engine.stats.false_positive_drains += 1;
+                    engine.set_device_health(device, DeviceHealth::Healthy);
+                    log.push(format!(
+                        "tick {tick}: device {device} cleared by the anomaly detector \
+                         (false positive)"
+                    ));
+                }
+            }
+            HealthVerdict::Normal | HealthVerdict::Breaching => {}
+        }
+    }
+    // act pass: drains and swaps are recovery passes, so they wait their
+    // turn behind any in-flight recovery (faults recover sequentially)
+    if engine.recovery_in_flight() {
+        return Ok(());
+    }
+    let due: Vec<DeviceId> = suspects.iter().copied().collect();
+    for device in due {
+        if engine.device_health(device) != DeviceHealth::Suspect
+            || !engine.executors.contains_key(&device)
+        {
+            // the reactive path got there first — the Suspect actually
+            // died and was condemned/recovered; nothing left to drain
+            suspects.remove(&device);
+            continue;
+        }
+        if engine.fault_domain_of(device) == FaultDomainKind::AttentionRank {
+            if engine.attn_order.len() <= 1 {
+                engine.set_device_health(device, DeviceHealth::Healthy);
+                suspects.remove(&device);
+                log.push(format!(
+                    "tick {tick}: preemptive drain of device {device} skipped \
+                     (no spare attention rank)"
+                ));
+                continue;
+            }
+            let summary = ReviveMoE::preemptive_drain(engine, device)
+                .map_err(|e| e.context(format!("preemptive drain of device {device} failed")))?;
+            engine.stats.record_stall(summary.wall);
+            engine.stats.preemptive_drains += 1;
+            engine.stats.tokens_at_risk_saved += summary.tokens_at_risk_saved;
+            log.push(format!(
+                "tick {tick}: preemptively drained device {device} moved={} kv_migrated={} \
+                 lossy={} tokens_saved={}",
+                summary.moved_sequences,
+                summary.kv_migrated_sequences,
+                summary.lossy_sequences,
+                summary.tokens_at_risk_saved
+            ));
+            recoveries.push(RecoveryRecord {
+                tick,
+                device,
+                kind: "preemptive-drain".into(),
+                stall_ms: summary.wall.as_secs_f64() * 1e3,
+                moved_sequences: summary.moved_sequences,
+                degraded: false,
+            });
+        } else {
+            // the rank hosts expert-plane roles (MoE experts, dense-FFN
+            // shards): there is no drain to run — post a planned fault at
+            // a moment of our choosing and let the ordinary ReviveMoE
+            // pass swap the roles out. MoE ranks hold no sequences, so
+            // nothing is lost.
+            let injector = FaultInjector::new(engine.plugin.clone());
+            let ann = injector.inject(
+                device,
+                FaultLevel::L5,
+                FailureBehavior::Erroring,
+                "predictive-swap",
+                |b| engine.executors[&device].handle.set_failed(b),
+            );
+            let report = ReviveMoE::recover(engine, &ann)
+                .map_err(|e| e.context(format!("preemptive swap of device {device} failed")))?;
+            engine.clear_health_monitor(device);
+            let stall = report.wall();
+            engine.stats.record_stall(stall);
+            engine.stats.preemptive_swaps += 1;
+            log.push(format!(
+                "tick {tick}: preemptively swapped device {device} role={} kind={:?} migrated={}",
+                report.role, report.moe_recovery, report.migrated_sequences
+            ));
+            recoveries.push(RecoveryRecord {
+                tick,
+                device,
+                kind: "preemptive-swap".into(),
+                stall_ms: stall.as_secs_f64() * 1e3,
+                moved_sequences: report.migrated_sequences,
+                degraded: false,
+            });
+        }
+        suspects.remove(&device);
     }
     Ok(())
 }

@@ -1,0 +1,72 @@
+//! Shared helpers for the serve-loop integration suites: the artifact
+//! gate, the boot-serve-shutdown driver every suite used to hand-roll,
+//! and the replay-equality assertion (token streams + full event log +
+//! tick count + every `RecoveryRecord` field-by-field, in order).
+//!
+//! Integration binaries pull this in with `mod common;` — each only uses
+//! a subset, hence the `dead_code` allowance.
+#![allow(dead_code)]
+
+use std::path::Path;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
+
+/// True once `make artifacts` has produced the HLO manifest the engine
+/// boots from; suites skip loudly when it is absent.
+pub fn ready() -> bool {
+    Path::new("artifacts/hlo/manifest.json").exists()
+}
+
+/// The deployment every serve suite boots unless it needs custom knobs.
+pub fn default_cfg() -> DeploymentConfig {
+    DeploymentConfig::disaggregated_default("artifacts")
+}
+
+/// Boot `cfg`, serve `scenario` under `strategy`, shut down, return the
+/// report.
+pub fn run_with(
+    cfg: DeploymentConfig,
+    scenario: &Scenario,
+    strategy: RecoveryStrategy,
+) -> ServeReport {
+    let (engine, _bd) = Engine::boot(cfg).expect("boot");
+    let (engine, report) = run_scenario(engine, scenario, strategy).expect("serve");
+    engine.shutdown();
+    report
+}
+
+/// [`run_with`] under the default ReviveMoE strategy.
+pub fn run(cfg: DeploymentConfig, scenario: &Scenario) -> ServeReport {
+    run_with(cfg, scenario, RecoveryStrategy::ReviveMoE)
+}
+
+/// Assert two runs of the same scenario replayed identically over the
+/// whole determinism surface: token streams per arrival, the complete
+/// tick-stamped event log, the tick count, and the recovery records in
+/// order with every deterministic field equal (`stall_ms` is wall clock
+/// and deliberately excluded).
+pub fn assert_replay_identical(a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.token_streams(), b.token_streams(), "token streams must replay");
+    assert_eq!(a.event_log, b.event_log, "event ordering must replay");
+    assert_eq!(a.ticks, b.ticks, "tick counts must replay");
+    assert_eq!(
+        a.recoveries.len(),
+        b.recoveries.len(),
+        "recovery counts must replay: {:?} vs {:?}",
+        a.recoveries,
+        b.recoveries
+    );
+    for (i, (ra, rb)) in a.recoveries.iter().zip(&b.recoveries).enumerate() {
+        assert_eq!(ra.tick, rb.tick, "recovery {i}: tick diverged");
+        assert_eq!(ra.device, rb.device, "recovery {i}: device diverged");
+        assert_eq!(ra.kind, rb.kind, "recovery {i}: kind diverged");
+        assert_eq!(
+            ra.moved_sequences, rb.moved_sequences,
+            "recovery {i}: moved_sequences diverged"
+        );
+        assert_eq!(ra.degraded, rb.degraded, "recovery {i}: degraded flag diverged");
+    }
+}

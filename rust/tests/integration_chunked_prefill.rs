@@ -17,33 +17,22 @@
 //! Needs `make artifacts` (skipped loudly otherwise), like the other
 //! integration suites.
 
-use std::collections::BTreeMap;
-use std::path::Path;
+mod common;
 
+use std::collections::BTreeMap;
+
+use common::{assert_replay_identical, default_cfg, ready, run};
 use revivemoe::config::DeploymentConfig;
 use revivemoe::engine::Engine;
 use revivemoe::scenario::Scenario;
 use revivemoe::scheduler::Token;
-use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
 use revivemoe::workload::Request;
 
-fn ready() -> bool {
-    Path::new("artifacts/hlo/manifest.json").exists()
-}
-
 fn cfg_with(chunk: usize, budget: usize) -> DeploymentConfig {
-    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let mut cfg = default_cfg();
     cfg.prefill_chunk_tokens = chunk;
     cfg.tick_token_budget = budget;
     cfg
-}
-
-fn run(cfg: DeploymentConfig, scenario: &Scenario) -> ServeReport {
-    let (engine, _bd) = Engine::boot(cfg).expect("boot");
-    let (engine, report) =
-        run_scenario(engine, scenario, RecoveryStrategy::ReviveMoE).expect("serve");
-    engine.shutdown();
-    report
 }
 
 /// Long prompts against a deliberately tiny KV pool: every rank's
@@ -131,9 +120,7 @@ fn knobs_off_reproduces_baseline_event_log_byte_for_byte() {
     let scenario = Scenario::single_fault(57).requests(16);
     let a = run(cfg_with(0, 0), &scenario);
     let b = run(cfg_with(0, 0), &scenario);
-    assert_eq!(a.event_log, b.event_log, "knobs-off must replay exactly");
-    assert_eq!(a.token_streams(), b.token_streams());
-    assert_eq!(a.ticks, b.ticks);
+    assert_replay_identical(&a, &b);
     // and none of the new machinery ever engages
     assert_eq!(a.stats.seqs_preempted, 0);
     assert_eq!(a.stats.chunks_prefilled, a.stats.prefills);

@@ -17,17 +17,12 @@
 //! Needs `make artifacts` (skipped loudly otherwise), like the other
 //! integration suites.
 
-use std::path::Path;
+mod common;
 
+use common::{assert_replay_identical, default_cfg, ready, run};
 use revivemoe::cluster::{FailureBehavior, FaultLevel};
 use revivemoe::config::DeploymentConfig;
-use revivemoe::engine::Engine;
 use revivemoe::scenario::Scenario;
-use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
-
-fn ready() -> bool {
-    Path::new("artifacts/hlo/manifest.json").exists()
-}
 
 /// A MoE-rank fault that forces the §3.4 role switch (no redundancy, no
 /// missing-experts masking), late enough that the victim DP rank is
@@ -52,19 +47,11 @@ fn attn_fault_scenario(seed: u64) -> Scenario {
 }
 
 fn role_switch_cfg(live: bool) -> DeploymentConfig {
-    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let mut cfg = default_cfg();
     cfg.redundant_per_rank = 0;
     cfg.recovery.allow_missing_experts = false; // force the switch
     cfg.recovery.kv_live_migration = live;
     cfg
-}
-
-fn run(cfg: DeploymentConfig, scenario: &Scenario) -> ServeReport {
-    let (engine, _bd) = Engine::boot(cfg).expect("boot");
-    let (engine, report) =
-        run_scenario(engine, scenario, RecoveryStrategy::ReviveMoE).expect("serve");
-    engine.shutdown();
-    report
 }
 
 #[test]
@@ -117,9 +104,9 @@ fn host_mirror_restores_dead_rank_without_reprefill() {
         return;
     }
     let scenario = attn_fault_scenario(33);
-    let mut base_cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let mut base_cfg = default_cfg();
     base_cfg.recovery.kv_host_mirror = false;
-    let mut mirror_cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let mut mirror_cfg = default_cfg();
     mirror_cfg.recovery.kv_host_mirror = true;
     let baseline = run(base_cfg, &scenario);
     let mirrored = run(mirror_cfg, &scenario);
@@ -153,7 +140,7 @@ fn mirror_restores_under_degraded_serving_too() {
     // surviving DP ranks keep serving — the restore lands mid-stream
     // through the try_wait path instead of blocking waits
     let scenario = attn_fault_scenario(45);
-    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let mut cfg = default_cfg();
     cfg.recovery.kv_host_mirror = true;
     cfg.recovery.degraded_serving = true;
     let report = run(cfg, &scenario);
@@ -173,9 +160,7 @@ fn knobs_off_reproduces_baseline_event_log_byte_for_byte() {
     let scenario = role_switch_scenario(57);
     let a = run(role_switch_cfg(false), &scenario);
     let b = run(role_switch_cfg(false), &scenario);
-    assert_eq!(a.event_log, b.event_log, "knobs-off must replay exactly");
-    assert_eq!(a.token_streams(), b.token_streams());
-    assert_eq!(a.ticks, b.ticks);
+    assert_replay_identical(&a, &b);
     // and no KV machinery ever engages
     assert_eq!(a.stats.seqs_kv_migrated, 0);
     assert_eq!(a.stats.seqs_kv_restored, 0);

@@ -1,0 +1,182 @@
+//! Predictive health serving integration (acceptance criteria of the
+//! straggler/flaky detection + preemptive-drain PR):
+//!
+//! 1. with `HealthPolicy` at its defaults (off), every degradation
+//!    scenario replays the reactive baseline **byte-for-byte** — two
+//!    runs agree on token streams, the full event log, tick counts, and
+//!    recovery records, and no predictive counter ever ticks — the A/B
+//!    convention shared with PRs 1/3/4/5/6;
+//! 2. `slow-node` with detection **on** completes with
+//!    `seqs_reprefilled == 0` and `recomputed_tokens == 0`: the Suspect
+//!    attention rank is preemptively drained over the live KV path
+//!    before its scripted death, which then hits an absent device —
+//!    while the reactive baseline pays a nonzero restart cost for the
+//!    same scenario; detection-on runs replay deterministically too;
+//! 3. `flaky-node` erroring **below** the rate threshold is never
+//!    drained — and because polling alone changes nothing observable,
+//!    the detection-on run replays the detection-off run exactly;
+//! 4. `degrading-node` (latency ramping toward a scripted death) is
+//!    drained **before** the death tick, losslessly.
+//!
+//! Needs `make artifacts` (skipped loudly otherwise), like the other
+//! integration suites.
+
+mod common;
+
+use common::{assert_replay_identical, default_cfg, ready, run};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::scenario::Scenario;
+
+/// Detection on, tuned for the canned degradation scenarios: onset is
+/// at tick 4, so the calibration baseline must freeze from boot-time
+/// commands (all at the 1.0 logical score — the frozen std is 0 and the
+/// `min_sigma_ms` floor carries the z-test), and two breaching polls
+/// suffice to call the device.
+fn predictive_cfg() -> DeploymentConfig {
+    let mut cfg = default_cfg();
+    cfg.recovery.health.enabled = true;
+    cfg.recovery.health.min_samples = 2;
+    cfg.recovery.health.hysteresis = 2;
+    cfg
+}
+
+#[test]
+fn knobs_off_replays_reactive_baseline_byte_for_byte() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    for name in ["slow-node", "flaky-node", "degrading-node"] {
+        let scenario = Scenario::by_name(name, 21).expect(name).requests(12);
+        let a = run(default_cfg(), &scenario);
+        let b = run(default_cfg(), &scenario);
+        assert_replay_identical(&a, &b);
+        // the predictive machinery never engages with the policy off
+        assert_eq!(a.stats.preemptive_drains, 0, "{name}");
+        assert_eq!(a.stats.preemptive_swaps, 0, "{name}");
+        assert_eq!(a.stats.false_positive_drains, 0, "{name}");
+        assert_eq!(a.stats.tokens_at_risk_saved, 0, "{name}");
+        assert!(
+            !a.event_log.iter().any(|l| l.contains("Suspect")),
+            "{name}: no detector verdict may surface with the policy off"
+        );
+    }
+}
+
+#[test]
+fn slow_node_detection_drains_before_death_with_zero_recompute() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    // straggler: device 2 (attention) slows at tick 4, dies at tick 20
+    let scenario = Scenario::straggler(21).requests(24);
+    let reactive = run(default_cfg(), &scenario);
+    let predictive = run(predictive_cfg(), &scenario);
+
+    // the reactive baseline rides the slow rank into its death and pays
+    // the restart cost: the dead rank's KV is gone, so its residents
+    // re-prefill from scratch
+    assert!(
+        reactive.recoveries.iter().any(|r| r.kind == "revivemoe" && r.device == 2),
+        "reactive baseline must take the failure path: {:?}",
+        reactive.recoveries
+    );
+    assert!(
+        reactive.stats.seqs_reprefilled >= 1,
+        "reactive baseline must re-prefill the dead rank's residents: {:?}",
+        reactive.stats
+    );
+    assert!(reactive.stats.recomputed_tokens > 0);
+
+    // detection on: the straggler is drained losslessly before it dies
+    assert_eq!(predictive.incomplete, 0);
+    assert_eq!(predictive.completed.len(), predictive.submitted);
+    assert_eq!(predictive.stats.preemptive_drains, 1, "{:?}", predictive.stats);
+    assert_eq!(predictive.stats.seqs_reprefilled, 0, "{:?}", predictive.stats);
+    assert_eq!(predictive.stats.recomputed_tokens, 0, "zero recomputed tokens");
+    let drain = predictive
+        .recoveries
+        .iter()
+        .find(|r| r.kind == "preemptive-drain")
+        .expect("a preemptive drain must be recorded");
+    assert_eq!(drain.device, 2);
+    assert!(drain.tick < 20, "the drain must land before the scripted death (tick 20)");
+    assert!(drain.moved_sequences >= 1, "the Suspect rank had residents to move");
+    assert!(predictive.stats.tokens_at_risk_saved >= 1, "{:?}", predictive.stats);
+    assert!(predictive.stats.seqs_kv_migrated >= 1, "{:?}", predictive.stats);
+    // the scripted death then finds no device: it never becomes a fault
+    assert!(
+        predictive.event_log.iter().any(|l| l.contains("device 2 skipped (absent)")),
+        "the scripted death must hit an absent device"
+    );
+    assert!(
+        !predictive.recoveries.iter().any(|r| r.kind == "revivemoe"),
+        "no reactive recovery may run: {:?}",
+        predictive.recoveries
+    );
+
+    // detection-on runs are replay-deterministic too: samples are
+    // logical scores, never wall clock
+    let again = run(predictive_cfg(), &scenario);
+    assert_replay_identical(&predictive, &again);
+}
+
+#[test]
+fn flaky_below_threshold_is_never_drained() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    // flaky: device 2 errors every 8th command = 12.5% windowed rate,
+    // half the 25% threshold — the detector must hold its fire
+    let scenario = Scenario::flaky(33).requests(16);
+    let off = run(default_cfg(), &scenario);
+    let on = run(predictive_cfg(), &scenario);
+
+    assert_eq!(on.stats.preemptive_drains, 0, "{:?}", on.stats);
+    assert_eq!(on.stats.preemptive_swaps, 0);
+    assert_eq!(on.stats.false_positive_drains, 0);
+    assert!(on.recoveries.is_empty(), "nothing to recover: {:?}", on.recoveries);
+    assert!(
+        !on.event_log.iter().any(|l| l.contains("Suspect")),
+        "a below-threshold flaky rank must never be marked Suspect"
+    );
+    assert_eq!(on.incomplete, 0);
+    // polling alone is observation-free: the detection-on run replays
+    // the detection-off run exactly
+    assert_replay_identical(&off, &on);
+}
+
+#[test]
+fn degrading_node_drains_before_the_scripted_death_tick() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    // degrading: device 2 (attention) ramps +0.5ms per command from
+    // tick 4 and is scripted to die at tick 30
+    let scenario = Scenario::degrading(45).requests(24);
+    let report = run(predictive_cfg(), &scenario);
+
+    assert_eq!(report.incomplete, 0);
+    assert_eq!(report.completed.len(), report.submitted);
+    let drain = report
+        .recoveries
+        .iter()
+        .find(|r| r.kind == "preemptive-drain")
+        .expect("the ramp must be called before the death");
+    assert_eq!(drain.device, 2);
+    assert!(
+        drain.tick < 30,
+        "the drain must land before the scripted death (tick 30), got {}",
+        drain.tick
+    );
+    assert_eq!(report.stats.seqs_reprefilled, 0, "{:?}", report.stats);
+    assert_eq!(report.stats.recomputed_tokens, 0, "lossless drain only");
+    assert!(
+        !report.recoveries.iter().any(|r| r.kind == "revivemoe"),
+        "the death never fires on the drained device: {:?}",
+        report.recoveries
+    );
+}

@@ -15,23 +15,15 @@
 //! Needs `make artifacts` (skipped loudly otherwise), like the other
 //! integration suites.
 
-use std::path::Path;
+mod common;
 
-use revivemoe::config::DeploymentConfig;
+use common::{assert_replay_identical, default_cfg, ready, run_with};
 use revivemoe::engine::Engine;
 use revivemoe::scenario::Scenario;
 use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
 
-fn ready() -> bool {
-    Path::new("artifacts/hlo/manifest.json").exists()
-}
-
 fn run(scenario: &Scenario, strategy: RecoveryStrategy) -> ServeReport {
-    let (engine, _bd) =
-        Engine::boot(DeploymentConfig::disaggregated_default("artifacts")).expect("boot");
-    let (engine, report) = run_scenario(engine, scenario, strategy).expect("serve");
-    engine.shutdown();
-    report
+    run_with(default_cfg(), scenario, strategy)
 }
 
 #[test]
@@ -50,10 +42,8 @@ fn single_fault_scenario_is_deterministic() {
     assert_eq!(a.incomplete, 0, "every request finishes");
     assert_eq!(a.completed.len(), a.submitted);
 
-    // determinism surface: token streams per arrival + event ordering
-    assert_eq!(a.token_streams(), b.token_streams(), "token streams must replay");
-    assert_eq!(a.event_log, b.event_log, "event ordering must replay");
-    assert_eq!(a.ticks, b.ticks);
+    // determinism surface: token streams, event ordering, recovery records
+    assert_replay_identical(&a, &b);
 }
 
 #[test]
@@ -83,8 +73,7 @@ fn cascading_double_fault_completes_sequentially() {
     }
     // cascade determinism holds too
     let again = run(&scenario, RecoveryStrategy::ReviveMoE);
-    assert_eq!(report.token_streams(), again.token_streams());
-    assert_eq!(report.event_log, again.event_log);
+    assert_replay_identical(&report, &again);
 }
 
 #[test]
@@ -94,8 +83,7 @@ fn fault_then_revive_restores_the_device() {
         return;
     }
     let scenario = Scenario::fault_then_revive(45).requests(20);
-    let (engine, _bd) =
-        Engine::boot(DeploymentConfig::disaggregated_default("artifacts")).expect("boot");
+    let (engine, _bd) = Engine::boot(default_cfg()).expect("boot");
     let (engine, report) = run_scenario(engine, &scenario, RecoveryStrategy::ReviveMoE)
         .expect("serve");
 

@@ -25,17 +25,12 @@
 //! Needs `make artifacts` (skipped loudly otherwise), like the other
 //! integration suites.
 
-use std::path::Path;
+mod common;
 
+use common::{assert_replay_identical, default_cfg, ready};
 use revivemoe::cluster::{FailureBehavior, FaultLevel};
-use revivemoe::config::DeploymentConfig;
-use revivemoe::engine::Engine;
 use revivemoe::scenario::Scenario;
-use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
-
-fn ready() -> bool {
-    Path::new("artifacts/hlo/manifest.json").exists()
-}
+use revivemoe::serve::ServeReport;
 
 /// One attention-rank fault (device 2) under live traffic — the shape the
 /// degraded path exists for.
@@ -49,13 +44,9 @@ fn attn_fault_scenario(seed: u64) -> Scenario {
 }
 
 fn run(scenario: &Scenario, degraded: bool) -> ServeReport {
-    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    let mut cfg = default_cfg();
     cfg.recovery.degraded_serving = degraded;
-    let (engine, _bd) = Engine::boot(cfg).expect("boot");
-    let (engine, report) =
-        run_scenario(engine, scenario, RecoveryStrategy::ReviveMoE).expect("serve");
-    engine.shutdown();
-    report
+    common::run(cfg, scenario)
 }
 
 #[test]
@@ -117,9 +108,7 @@ fn blocking_baseline_replays_deterministically() {
     let scenario = attn_fault_scenario(33);
     let a = run(&scenario, false);
     let b = run(&scenario, false);
-    assert_eq!(a.event_log, b.event_log, "the blocking A/B baseline must replay exactly");
-    assert_eq!(a.token_streams(), b.token_streams());
-    assert_eq!(a.ticks, b.ticks);
+    assert_replay_identical(&a, &b);
     // the blocking path files its recovery as a full stall window
     assert!(a.stats.stall_total_ms() > 0.0);
     assert_eq!(a.stats.degraded_total_ms(), 0.0);

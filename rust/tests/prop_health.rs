@@ -1,0 +1,191 @@
+//! Property tests for the statistical health detector
+//! (`revivemoe::health`) — seeded, dependency-free randomized checks
+//! over the detector's four core guarantees:
+//!
+//! 1. **No false alarms on steady traffic**: latencies drawn from a
+//!    stationary N(μ, σ) with σ well below the breach bar never produce
+//!    a Suspect verdict, across seeds and σ regimes (including σ small
+//!    enough that the `min_sigma_ms` floor is what protects us);
+//! 2. **Guaranteed detection of a real shift**: once calibrated, a mean
+//!    shift of ≥ 2× the z-threshold (in floored baseline sigmas) always
+//!    reaches Suspect within a small bounded number of samples — the
+//!    EWMA convergence lag plus the hysteresis streak;
+//! 3. **Replay determinism**: the verdict sequence is a pure function of
+//!    the sample stream — two detectors fed the same stream agree
+//!    verdict-for-verdict (the property the serve-loop event-log replay
+//!    tests stand on);
+//! 4. **Exact window eviction**: the sliding error window's
+//!    counts/rate match a naive keep-the-last-N model after every
+//!    record, under arbitrary ok/error interleavings.
+//!
+//! The randomness is hand-rolled (xorshift + Box-Muller) because the
+//! build environment carries no property-testing crate; every case is
+//! seeded and therefore fully reproducible.
+
+use revivemoe::health::{AnomalyDetector, HealthPolicy, HealthVerdict, RollingWindow, ERROR_WINDOW};
+
+/// xorshift64 — tiny, seeded, good enough for test-case generation.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1))
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform in [0, 1).
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// One N(mu, sigma) draw via Box-Muller.
+    fn gauss(&mut self, mu: f64, sigma: f64) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        mu + sigma * (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+}
+
+fn policy() -> HealthPolicy {
+    HealthPolicy { enabled: true, ..HealthPolicy::default() }
+}
+
+#[test]
+fn steady_gaussian_traffic_never_goes_suspect() {
+    // σ regimes: floor-protected (σ << min_sigma_ms), floor-boundary,
+    // and genuinely stochastic. In every one the EW mean's stationary
+    // fluctuation (~0.42σ) sits many multiples below the z=4 bar.
+    for &sigma in &[0.05, 0.25, 0.5] {
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed * 3 + 1);
+            let mut det = AnomalyDetector::new(policy());
+            for i in 0..1500 {
+                let v = det.observe(rng.gauss(10.0, sigma).max(0.0), true);
+                assert_ne!(
+                    v,
+                    HealthVerdict::Suspect,
+                    "seed {seed} sigma {sigma}: false alarm at sample {i}"
+                );
+                if (i as u64) < policy().min_samples {
+                    assert_eq!(v, HealthVerdict::Normal, "calibration phase must stay Normal");
+                }
+            }
+            assert!(!det.is_suspect());
+        }
+    }
+}
+
+#[test]
+fn mean_shift_always_detected_within_the_hysteresis_window() {
+    for &sigma in &[0.1, 0.5, 1.0] {
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed * 7 + 3);
+            let p = policy();
+            let mut det = AnomalyDetector::new(p.clone());
+            for _ in 0..32 {
+                det.observe(rng.gauss(10.0, sigma).max(0.0), true);
+            }
+            let (base_mean, base_std) = det.baseline().expect("baseline frozen by now");
+            // shift by 2× the breach bar (z_threshold floored sigmas):
+            // the EW mean crosses the bar once (1 - (1-α)^n) > 0.5,
+            // i.e. within 2 samples, and hysteresis adds 3 more
+            let shift = 2.0 * p.z_threshold * base_std.max(p.min_sigma_ms);
+            let deadline = p.hysteresis + 12;
+            let mut suspect_at = None;
+            for i in 0..deadline {
+                let v = det.observe(rng.gauss(base_mean + shift, sigma).max(0.0), true);
+                if v == HealthVerdict::Suspect {
+                    suspect_at = Some(i);
+                    break;
+                }
+            }
+            assert!(
+                suspect_at.is_some(),
+                "seed {seed} sigma {sigma}: a {shift:.2}ms shift was never called \
+                 Suspect within {deadline} samples"
+            );
+            assert!(det.is_suspect());
+        }
+    }
+}
+
+#[test]
+fn verdict_sequence_is_a_pure_function_of_the_stream() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed + 11);
+        // a stream with everything in it: steady phases, a shifted
+        // phase, and a random sprinkle of errors
+        let stream: Vec<(f64, bool)> = (0..400)
+            .map(|i| {
+                let mu = if (150..260).contains(&i) { 18.0 } else { 10.0 };
+                (rng.gauss(mu, 0.4).max(0.0), rng.next_f64() > 0.1)
+            })
+            .collect();
+        let mut a = AnomalyDetector::new(policy());
+        let mut b = AnomalyDetector::new(policy());
+        let va: Vec<HealthVerdict> = stream.iter().map(|&(l, ok)| a.observe(l, ok)).collect();
+        let vb: Vec<HealthVerdict> = stream.iter().map(|&(l, ok)| b.observe(l, ok)).collect();
+        assert_eq!(va, vb, "seed {seed}: same stream must yield same verdicts");
+        // and the state the verdicts left behind agrees too
+        assert_eq!(a.is_suspect(), b.is_suspect());
+        assert_eq!(a.baseline(), b.baseline());
+    }
+}
+
+#[test]
+fn error_window_eviction_matches_a_naive_model_exactly() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed * 13 + 5);
+        let mut w = RollingWindow::default();
+        let mut naive: Vec<bool> = Vec::new();
+        let len = 50 + (rng.next_u64() % 300) as usize;
+        for i in 0..len {
+            // arbitrary interleaving: error probability itself wanders
+            let p_err = rng.next_f64() * 0.9;
+            let ok = rng.next_f64() >= p_err;
+            w.record(rng.gauss(5.0, 1.0).max(0.0), ok);
+            naive.push(ok);
+            let tail_start = naive.len().saturating_sub(ERROR_WINDOW);
+            let window = &naive[tail_start..];
+            let expect_errors = window.iter().filter(|&&o| !o).count();
+            assert_eq!(w.errors(), expect_errors, "seed {seed}: error count drifted at {i}");
+            assert_eq!(w.error_samples(), window.len(), "seed {seed}: window size drifted at {i}");
+            let expect_rate = expect_errors as f64 / window.len() as f64;
+            assert!(
+                (w.error_rate() - expect_rate).abs() < 1e-12,
+                "seed {seed}: error rate drifted at {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn calibration_baseline_freezes_at_min_samples_and_never_moves() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed + 101);
+        let p = policy();
+        let mut det = AnomalyDetector::new(p.clone());
+        for i in 0..(p.min_samples * 4) {
+            det.observe(rng.gauss(7.0, 0.3).max(0.0), true);
+            if i + 1 < p.min_samples {
+                assert!(det.baseline().is_none(), "seed {seed}: baseline froze early at {i}");
+            } else {
+                assert!(det.baseline().is_some(), "seed {seed}: baseline missing at {i}");
+            }
+        }
+        let frozen = det.baseline().unwrap();
+        // later samples — including a breaching ramp — never re-calibrate
+        for i in 0..100 {
+            det.observe(7.0 + 0.5 * f64::from(i), true);
+        }
+        assert_eq!(det.baseline().unwrap(), frozen, "seed {seed}: baseline moved after freeze");
+    }
+}

@@ -32,6 +32,15 @@ failures = []
 if not FILES:
     failures.append("no BENCH_*.json baselines found at the repo root")
 
+# every bench target checks in a baseline; keep this count in lockstep
+# with the [[bench]] JSON-writing targets so a new bench cannot land
+# without one (or an old baseline vanish unnoticed)
+EXPECTED = 6
+if FILES and len(FILES) != EXPECTED:
+    failures.append(
+        f"expected {EXPECTED} BENCH_*.json baselines, found {len(FILES)}: "
+        + ", ".join(FILES))
+
 
 def rows_of(doc):
     # decode_throughput predates the "rows" convention and uses "shapes"
