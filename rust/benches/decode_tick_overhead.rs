@@ -1,0 +1,215 @@
+//! **Decode tick overhead**: coordinator-side cost of one steady-state
+//! decode tick — wall time, heap allocations, and Execute-class
+//! submissions per device — as rank count and per-rank batch size grow,
+//! per-command baseline vs coalesced `ExecuteBatch` submission.
+//!
+//! The per-command data plane pays one command envelope (and one reply
+//! channel) per executable per device per tick, plus fresh argument
+//! vectors for every call. The coalesced path folds each fan-out point
+//! into a single envelope per device built from recycled arena buffers,
+//! so its coordinator overhead must be both smaller and flat in batch
+//! size. A thread-local counting allocator (device threads excluded)
+//! reports allocations per tick for each mode.
+//!
+//! Each shape boots once and serves the same workload under both modes,
+//! sharing weights, artifacts, and prompts. Shapes whose AOT artifact
+//! set is missing are skipped loudly, not failed.
+//!
+//! Run: `cargo bench --bench decode_tick_overhead` (or
+//! `scripts/bench_tick.sh` from the repo root, which also refreshes
+//! `BENCH_decode_tick_overhead.json`).
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::workload::{self, Request};
+
+// -- thread-local allocation counter (coordinator thread only) --------------
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+
+struct PhaseResult {
+    step_ms_p50: f64,
+    step_ms_mean: f64,
+    allocs_per_tick: f64,
+    submissions_per_tick: f64,
+    ticks: usize,
+}
+
+fn requests(n: usize, decode_steps: usize) -> Vec<Request> {
+    workload::gen_mixed(n, 7)
+        .expect("workload")
+        .into_iter()
+        .map(|mut r| {
+            r.max_new_tokens = decode_steps;
+            r
+        })
+        .collect()
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn total_submissions(engine: &Engine) -> u64 {
+    engine.executors.values().map(|ex| ex.handle.stats().map_or(0, |s| s.execute_cmds)).sum()
+}
+
+/// Serve `reqs` to completion under one submission mode, returning
+/// coordinator-side per-tick cost figures.
+fn run_phase(
+    engine: &mut Engine,
+    reqs: &[Request],
+    coalesced: bool,
+    max_steps: usize,
+) -> PhaseResult {
+    engine.cfg.coalesced_submission = coalesced;
+    for r in reqs {
+        engine.submit(r.clone()).expect("submit");
+    }
+    engine.stats.take_decode_step_ms(); // drop any stale samples
+    let subs0 = total_submissions(engine);
+    let alloc0 = allocs_here();
+    let mut finished = 0;
+    let mut ticks = 0usize;
+    while finished < reqs.len() {
+        assert!(ticks < max_steps, "phase left requests unfinished (raise max_steps)");
+        finished += engine.step().expect("step").len();
+        ticks += 1;
+    }
+    let allocs = allocs_here() - alloc0;
+    let subs = total_submissions(engine) - subs0;
+    let samples = engine.stats.take_decode_step_ms();
+    PhaseResult {
+        step_ms_p50: median(samples.clone()),
+        step_ms_mean: if samples.is_empty() {
+            0.0
+        } else {
+            samples.iter().sum::<f64>() / samples.len() as f64
+        },
+        allocs_per_tick: allocs as f64 / ticks.max(1) as f64,
+        submissions_per_tick: subs as f64 / ticks.max(1) as f64,
+        ticks,
+    }
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let decode_steps = if quick { 8 } else { 24 };
+    let ranks: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("decode tick overhead: per-command baseline vs coalesced submission\n");
+    for &r in ranks {
+        let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+        cfg.n_attn_ranks = r;
+        let (mut engine, _bd) = match Engine::boot(cfg) {
+            Ok(x) => x,
+            Err(e) => {
+                println!("DP{r:<2} SKIP (boot: {e})");
+                continue;
+            }
+        };
+        let max_batch = engine.cfg.max_batch;
+        for batch in [1usize, max_batch] {
+            let n_req = batch * r;
+            let reqs = requests(n_req, decode_steps);
+            let max_steps = decode_steps * 4 + 64;
+
+            let base = run_phase(&mut engine, &reqs, false, max_steps);
+            let coal = run_phase(&mut engine, &reqs, true, max_steps);
+            let alloc_ratio = if base.allocs_per_tick > 0.0 {
+                coal.allocs_per_tick / base.allocs_per_tick
+            } else {
+                0.0
+            };
+            println!(
+                "DP{r} batch/rank {batch:>2}: step p50 {:>7.3} -> {:>7.3} ms | \
+                 allocs/tick {:>8.1} -> {:>8.1} ({:.0}%) | subs/tick {:>6.1} -> {:>6.1}",
+                base.step_ms_p50,
+                coal.step_ms_p50,
+                base.allocs_per_tick,
+                coal.allocs_per_tick,
+                alloc_ratio * 100.0,
+                base.submissions_per_tick,
+                coal.submissions_per_tick,
+            );
+            rows.push(obj(vec![
+                ("label", s(&format!("DP{r} batch{batch}"))),
+                ("attn_ranks", num(r as f64)),
+                ("batch_per_rank", num(batch as f64)),
+                ("requests", num(n_req as f64)),
+                ("baseline_step_ms_p50", num(base.step_ms_p50)),
+                ("baseline_step_ms_mean", num(base.step_ms_mean)),
+                ("baseline_allocs_per_tick", num(base.allocs_per_tick)),
+                ("baseline_submissions_per_tick", num(base.submissions_per_tick)),
+                ("baseline_ticks", num(base.ticks as f64)),
+                ("coalesced_step_ms_p50", num(coal.step_ms_p50)),
+                ("coalesced_step_ms_mean", num(coal.step_ms_mean)),
+                ("coalesced_allocs_per_tick", num(coal.allocs_per_tick)),
+                ("coalesced_submissions_per_tick", num(coal.submissions_per_tick)),
+                ("coalesced_ticks", num(coal.ticks as f64)),
+                ("alloc_ratio", num(alloc_ratio)),
+            ]));
+        }
+        engine.shutdown();
+    }
+
+    let j = obj(vec![
+        ("bench", s("decode_tick_overhead")),
+        ("quick", Json::Bool(quick)),
+        ("decode_steps_per_request", num(decode_steps as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("decode_tick_overhead", &j);
+    // repo-root copy: the perf baseline every future PR compares against
+    match std::fs::write("../BENCH_decode_tick_overhead.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_decode_tick_overhead.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_decode_tick_overhead.json: {e}"),
+    }
+}

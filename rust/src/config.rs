@@ -278,6 +278,19 @@ pub struct DeploymentConfig {
     /// [`RecoveryPolicy::kv_host_mirror`]) or requeues lossily. 0
     /// (default) = unbounded lockstep ticks, the A/B baseline.
     pub tick_token_budget: usize,
+    /// Coalesce the decode/prefill fan-out into one
+    /// [`crate::runtime::Cmd`]-channel envelope per device per submission
+    /// point ([`crate::runtime::DeviceHandle::submit_execute_batch`]),
+    /// with executable names interned and `Arg` payload buffers recycled
+    /// through the per-tick arena in `engine::DecodeScratch` — the
+    /// allocation-free steady-state tick. On MoE layers the attention
+    /// call and the router chain device-side via
+    /// [`crate::runtime::Arg::PrevOut`], halving those round-trips.
+    /// Token streams and event logs are identical either way
+    /// (`tests/integration_coalesced.rs` equivalence-gates all canned
+    /// scenarios); off (default) = the per-command baseline, matching the
+    /// `serial_data_plane` A/B convention.
+    pub coalesced_submission: bool,
 }
 
 impl DeploymentConfig {
@@ -306,6 +319,7 @@ impl DeploymentConfig {
             serial_data_plane: false,
             prefill_chunk_tokens: 0,
             tick_token_budget: 0,
+            coalesced_submission: false,
         }
     }
 

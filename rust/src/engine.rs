@@ -43,7 +43,7 @@ use crate::kvpool::{KvMirror, KvPayload};
 use crate::metrics::{Breakdown, Category, ServingStats};
 use crate::moe::{DenseGroups, ExpertMap};
 use crate::recovery::{RecoveryPoll, RecoveryReport, RecoveryTask};
-use crate::runtime::{CompileStat, ExecWave, Pending};
+use crate::runtime::{Arg, BatchReply, CompileStat, ExecCall, ExecWave, Pending, PendingBatch};
 use crate::scheduler::{SeqId, SeqState, Sequence, Token};
 use crate::tensor::Tensor;
 use crate::weights::WeightStore;
@@ -217,6 +217,10 @@ pub struct Engine {
     /// decode tick", first slice): cleared and refilled every tick
     /// instead of reallocated.
     scratch: DecodeScratch,
+    /// Reusable heartbeat-sweep device list: [`Engine::detect_failure`]
+    /// runs on every guarded serve tick, and rebuilding this sorted list
+    /// was the loop's last steady-state allocation.
+    sweep_scratch: Vec<DeviceId>,
     /// Re-entrancy guard: true while a recovery pass is executing. A
     /// second fault arriving during recovery must *queue* (the plugin
     /// keeps its annotation) and recover afterwards, never nest.
@@ -224,9 +228,14 @@ pub struct Engine {
 }
 
 /// Reusable decode-tick assembly buffers (ROADMAP "zero-allocation decode
-/// tick", first slice). One instance lives on the [`Engine`]; every tick
-/// clears and refills it, recycling the per-rank id/len vectors through
-/// pools, so steady-state decode performs no batch-assembly allocations.
+/// tick"). One instance lives on the [`Engine`]; every tick clears and
+/// refills it, recycling the per-rank id/len vectors through pools, so
+/// steady-state decode performs no batch-assembly allocations. Under
+/// `coalesced_submission` it is also the per-device command arena: every
+/// envelope's `Vec<ExecCall>` and every call's `Vec<Arg>` is checked out
+/// of `calls_pool`/`args_pool` at submission and recycled when the reply
+/// rides them back ([`BatchReply`]), so a warmed-up steady-state tick
+/// builds its submissions without touching the heap.
 #[derive(Debug, Default)]
 struct DecodeScratch {
     /// Per-rank decode batches: (device, seq ids, batch bucket).
@@ -241,11 +250,28 @@ struct DecodeScratch {
     toks: Vec<i32>,
     /// Position staging for one rank's embed submission (bucket-padded).
     pos: Vec<i32>,
+    /// Recycled per-call `Arg` buffers for coalesced envelopes. Checked
+    /// out empty (capacity retained), returned inside the reply's
+    /// [`crate::runtime::ExecResult`]s.
+    args_pool: Vec<Vec<Arg>>,
+    /// Recycled envelope buffers for coalesced submission; returned
+    /// drained in [`BatchReply::calls_buf`].
+    calls_pool: Vec<Vec<ExecCall>>,
+    /// In-flight envelope handles for the current coalesced fan-out
+    /// (reused so the fan-out itself is allocation-free once warmed).
+    pending: Vec<PendingBatch>,
+    /// Collected envelope replies for the current coalesced fan-out.
+    replies: Vec<BatchReply>,
 }
 
 impl DecodeScratch {
     /// Return every per-batch vector to its pool and clear the staging
-    /// buffers, retaining all capacity for the next tick.
+    /// buffers, retaining all capacity for the next tick. The arena pools
+    /// (`args_pool`/`calls_pool`) are already idle between ticks — their
+    /// buffers were recycled when each envelope's reply was consumed —
+    /// except after a fault aborted a tick mid-wave, in which case any
+    /// stranded handles are dropped and stranded reply buffers recycled
+    /// here.
     fn reset(&mut self) {
         for (_, mut ids, _) in self.batches.drain(..) {
             ids.clear();
@@ -257,7 +283,81 @@ impl DecodeScratch {
         }
         self.toks.clear();
         self.pos.clear();
+        self.pending.clear();
+        for mut reply in self.replies.drain(..) {
+            for res in reply.results.drain(..) {
+                recycle_args(&mut self.args_pool, res.args);
+            }
+            self.calls_pool.push(reply.calls_buf);
+        }
     }
+}
+
+/// Return one envelope's arg buffer to the arena. Clearing drops this
+/// tick's `Value` tensors — deallocation is free under the zero-alloc
+/// discipline (which counts allocations), and the buffer keeps its
+/// capacity for the next checkout.
+fn recycle_args(pool: &mut Vec<Vec<Arg>>, mut args: Vec<Arg>) {
+    args.clear();
+    pool.push(args);
+}
+
+/// Surface the first per-call error of a collected coalesced wave before
+/// any of its outputs are consumed. The per-command baseline aborts at
+/// `Wave::collect` before any host-side state (KV writes, mirrors,
+/// tokens) is touched, and the coalesced path must leave the engine in
+/// the same rollback-ready state for recovery, so errors are swept first.
+fn check_batch_errors(replies: &[BatchReply]) -> Result<()> {
+    for reply in replies {
+        for res in &reply.results {
+            if let Err(e) = &res.outputs {
+                anyhow::bail!("coalesced call '{}' failed: {e}", res.exe);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Unwrap a single-call envelope reply, recycling its buffers into the
+/// arena pools, and yield the call's outputs.
+fn take_single(
+    args_pool: &mut Vec<Vec<Arg>>,
+    calls_pool: &mut Vec<Vec<ExecCall>>,
+    mut reply: BatchReply,
+) -> Result<Vec<Tensor>> {
+    anyhow::ensure!(reply.results.len() == 1, "expected a single-call envelope");
+    let res = reply.results.pop().unwrap();
+    recycle_args(args_pool, res.args);
+    calls_pool.push(reply.calls_buf);
+    res.outputs
+}
+
+/// Submit one coalesced envelope, honoring the `serial_data_plane` A/B
+/// knob the same way `Wave::push` does: serial awaits the reply before
+/// returning, otherwise the handle parks in `pending` until
+/// [`collect_pending`].
+fn submit_envelope(
+    submitted: Result<PendingBatch>,
+    serial: bool,
+    pending: &mut Vec<PendingBatch>,
+    replies: &mut Vec<BatchReply>,
+) -> Result<()> {
+    let p = submitted?;
+    if serial {
+        replies.push(p.wait()?);
+    } else {
+        pending.push(p);
+    }
+    Ok(())
+}
+
+/// Await every in-flight envelope, appending replies in submission order
+/// (the order `submit_envelope` parked them, matching `Wave::collect`).
+fn collect_pending(pending: &mut Vec<PendingBatch>, replies: &mut Vec<BatchReply>) -> Result<()> {
+    for p in pending.drain(..) {
+        replies.push(p.wait()?);
+    }
+    Ok(())
 }
 
 impl Engine {
@@ -468,6 +568,7 @@ impl Engine {
             kv_mirror,
             spilled: VecDeque::new(),
             scratch: DecodeScratch::default(),
+            sweep_scratch: Vec::new(),
             recovering: false,
         };
         bd.add(Category::Other, t0.elapsed());
@@ -839,11 +940,14 @@ impl Engine {
         }
         let policy = self.cfg.recovery.health.clone();
         // sorted ids: the executor map is unordered and verdict order must
-        // be replay-stable
-        let mut devices: Vec<DeviceId> = self.executors.keys().copied().collect();
+        // be replay-stable. The list vector is recycled (this poll runs
+        // every serve tick when the policy is on).
+        let mut devices = std::mem::take(&mut self.sweep_scratch);
+        devices.clear();
+        devices.extend(self.executors.keys().copied());
         devices.sort_unstable();
         let mut verdicts = Vec::new();
-        for d in devices {
+        for &d in &devices {
             if self.plugin.annotation_for(d).is_some() {
                 continue;
             }
@@ -861,6 +965,7 @@ impl Engine {
                 verdicts.push((d, v));
             }
         }
+        self.sweep_scratch = devices;
         verdicts
     }
 
@@ -1614,7 +1719,11 @@ impl Engine {
         // disjoint; it is restored even when the step errors out, keeping
         // its capacity across fault-preempted ticks
         let mut scratch = std::mem::take(&mut self.scratch);
-        let r = self.decode_step_inner(&mut scratch);
+        let r = if self.cfg.coalesced_submission {
+            self.decode_step_coalesced(&mut scratch)
+        } else {
+            self.decode_step_inner(&mut scratch)
+        };
         self.scratch = scratch;
         r
     }
@@ -1824,6 +1933,265 @@ impl Engine {
         Ok(())
     }
 
+    /// Coalesced-submission decode tick (`coalesced_submission` on):
+    /// identical host-visible state transitions to
+    /// [`Self::decode_step_inner`], but every fan-out point sends exactly
+    /// one `ExecuteBatch` envelope per device — MoE layers fuse attention
+    /// and router into one two-call envelope chained through
+    /// [`Arg::PrevOut`], so per-device round-trips on attention ranks
+    /// drop from `2·L − D + 2` to `L + 2` per tick — and every submission
+    /// buffer is drawn from the [`DecodeScratch`] arena and recycled when
+    /// the reply rides it back. Per-call errors are swept across the
+    /// whole wave ([`check_batch_errors`]) before any output is consumed,
+    /// matching the baseline's collect-before-write ordering so recovery
+    /// sees the same rollback-ready state. `tests/integration_coalesced.rs`
+    /// replays every canned scenario against both paths.
+    fn decode_step_coalesced(&mut self, scratch: &mut DecodeScratch) -> Result<()> {
+        let t_step = Instant::now();
+        scratch.reset();
+        self.decode_batches_into(scratch);
+        if scratch.batches.is_empty() {
+            return Ok(());
+        }
+        let serial = self.cfg.serial_data_plane;
+        let chunked = self.chunked_path();
+
+        // page reservation + embed fan-out: same undo-log step boundary
+        // and spill-retry loop as the baseline, with the embed submitted
+        // as a one-call envelope per rank.
+        let mut bi = 0;
+        while bi < scratch.batches.len() {
+            let d = scratch.batches[bi].0;
+            loop {
+                let reserved = {
+                    let ids = &scratch.batches[bi].1;
+                    scratch.toks.clear();
+                    scratch.pos.clear();
+                    let ls = &mut scratch.lens[bi];
+                    ls.clear();
+                    let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                    a.blocks.begin_step();
+                    a.step_slots.clear();
+                    let mut r = Ok(());
+                    for id in ids {
+                        let (t, p) = {
+                            let s = a.sched.running.iter().find(|s| s.id == *id).unwrap();
+                            (s.last_token(), s.next_pos() - 1)
+                        };
+                        match a.blocks.append_token(*id) {
+                            Ok((blk, slot)) => {
+                                a.step_slots.push((*id, blk, slot));
+                                scratch.toks.push(t as i32);
+                                scratch.pos.push(p as i32);
+                                ls.push(p); // cur_len = position
+                            }
+                            Err(e) => {
+                                r = Err(e);
+                                break;
+                            }
+                        }
+                    }
+                    r
+                };
+                match reserved {
+                    Ok(()) => break,
+                    Err(e) => {
+                        if !chunked {
+                            return Err(e);
+                        }
+                        {
+                            let a = self.executors.get_mut(&d).unwrap().attn.as_mut().unwrap();
+                            a.blocks.undo_step()?;
+                            a.blocks.audit()?;
+                        }
+                        if !self.preempt_one(d)? {
+                            return Err(e);
+                        }
+                        // the victim may have sat in this very batch:
+                        // rebuild the rank's decode set before retrying
+                        let (_, ids, bucket) = &mut scratch.batches[bi];
+                        ids.clear();
+                        if let Some(a) = self.executors[&d].attn.as_ref() {
+                            ids.extend(
+                                a.sched
+                                    .running
+                                    .iter()
+                                    .filter(|s| {
+                                        s.state == SeqState::Running && !s.is_finished()
+                                    })
+                                    .map(|s| s.id),
+                            );
+                        }
+                        *bucket = self.cfg.batch_bucket(ids.len()).unwrap_or(ids.len());
+                    }
+                }
+            }
+            if scratch.batches[bi].1.is_empty() {
+                // the rank spilled its last decodable sequence: no batch
+                let (_, ids, _) = scratch.batches.remove(bi);
+                scratch.ids_pool.push(ids);
+                let ls = scratch.lens.remove(bi);
+                scratch.lens_pool.push(ls);
+                continue;
+            }
+            let bucket = scratch.batches[bi].2;
+            scratch.toks.resize(bucket, 0);
+            scratch.pos.resize(bucket, 0);
+            let ex = &self.executors[&d];
+            let args = scratch.args_pool.pop().unwrap_or_default();
+            let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+            calls.push(ex.embed_decode_call(bucket, &scratch.toks, &scratch.pos, args));
+            submit_envelope(
+                ex.handle.submit_execute_batch(calls),
+                serial,
+                &mut scratch.pending,
+                &mut scratch.replies,
+            )?;
+            bi += 1;
+        }
+        if scratch.batches.is_empty() {
+            return Ok(());
+        }
+        collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+        check_batch_errors(&scratch.replies)?;
+        let mut xs: Vec<Tensor> = Vec::with_capacity(scratch.batches.len());
+        for reply in scratch.replies.drain(..) {
+            xs.push(out1(take_single(&mut scratch.args_pool, &mut scratch.calls_pool, reply)?)?);
+        }
+
+        // layer loop: one fused envelope per attention rank per layer
+        for li in 0..self.meta.n_layers {
+            let max_seq = self.meta.max_seq;
+            let is_moe = li >= self.meta.n_dense_layers;
+            // gate mask once per MoE layer, as in the baseline's router wave
+            let mask = if is_moe { self.expert_map.gate_mask() } else { Vec::new() };
+            for (bi, (d, ids, bucket)) in scratch.batches.iter().enumerate() {
+                let ex = &self.executors[d];
+                let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+                let args = scratch.args_pool.pop().unwrap_or_default();
+                calls.push(ex.attn_decode_call(
+                    li,
+                    *bucket,
+                    &xs[bi],
+                    ids,
+                    &scratch.lens[bi],
+                    max_seq,
+                    args,
+                )?);
+                if is_moe {
+                    let args = scratch.args_pool.pop().unwrap_or_default();
+                    calls.push(ex.router_call_chained(*bucket, li, 0, &mask, args));
+                }
+                submit_envelope(
+                    ex.handle.submit_execute_batch(calls),
+                    serial,
+                    &mut scratch.pending,
+                    &mut scratch.replies,
+                )?;
+            }
+            collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+            check_batch_errors(&scratch.replies)?;
+
+            let expected = if is_moe { 2 } else { 1 };
+            let k = self.meta.top_k;
+            let t_total: usize = scratch.batches.iter().map(|(_, ids, _)| ids.len()).sum();
+            let mut hs: Vec<Tensor> = Vec::with_capacity(scratch.batches.len());
+            let mut ffns: Vec<Tensor> = Vec::with_capacity(scratch.batches.len());
+            let mut idx_cat: Vec<i32> = Vec::with_capacity(t_total * k);
+            let mut wt_cat: Vec<f32> = Vec::with_capacity(t_total * k);
+            for (bi, reply) in scratch.replies.drain(..).enumerate() {
+                let BatchReply { mut results, calls_buf } = reply;
+                anyhow::ensure!(
+                    results.len() == expected,
+                    "attention envelope returned {} results, expected {expected}",
+                    results.len()
+                );
+                let router_res = if is_moe { results.pop() } else { None };
+                let attn_res = results.pop().unwrap();
+                scratch.calls_pool.push(calls_buf);
+                let (d, ids, _) = &scratch.batches[bi];
+                let (h, ffn_in, nk, nv) = out4(attn_res.outputs?)?;
+                recycle_args(&mut scratch.args_pool, attn_res.args);
+                self.executors.get_mut(d).unwrap().write_new_kv(li, &nk, &nv)?;
+                if let Some(m) = self.kv_mirror.as_mut() {
+                    // mirror the step's new rows host-side, position order,
+                    // exactly as write_new_kv scattered them into the pool
+                    let row = nk.shape[1] * nk.shape[2];
+                    let kd = nk.as_f32()?;
+                    let vd = nv.as_f32()?;
+                    for (i, id) in ids.iter().enumerate() {
+                        m.record_row(
+                            *id,
+                            li,
+                            &kd[i * row..(i + 1) * row],
+                            &vd[i * row..(i + 1) * row],
+                        )?;
+                    }
+                }
+                if let Some(r) = router_res {
+                    let (idx, wt) = router_out(r.outputs?)?;
+                    idx_cat.extend_from_slice(&idx[..ids.len() * k]);
+                    wt_cat.extend_from_slice(&wt[..ids.len() * k]);
+                    recycle_args(&mut scratch.args_pool, r.args);
+                }
+                hs.push(h);
+                ffns.push(ffn_in);
+            }
+
+            // FFN half over the *global* token set
+            let valid: Vec<usize> = scratch.batches.iter().map(|(_, ids, _)| ids.len()).collect();
+            let cat = concat_valid_rows(&ffns, &valid, self.meta.d_model)?;
+            let out = if is_moe {
+                let arena = Some(&mut *scratch);
+                self.moe_layer_routed_impl(li, &cat, &idx_cat, &wt_cat, t_total, arena)?
+            } else {
+                let t_bucket = self.t_bucket(t_total)?;
+                let padded = cat.pad_rows(t_bucket)?;
+                self.dense_layer_coalesced(li, &padded, t_bucket, scratch)?
+            };
+            // x = h + out, split back per rank through a borrowed row view
+            let mut row = 0usize;
+            for (bi, ((_, ids, _), mut x)) in scratch.batches.iter().zip(hs).enumerate() {
+                x.add_slice(out.rows(row, ids.len())?)?;
+                row += ids.len();
+                xs[bi] = x;
+            }
+        }
+
+        // heads + sampling per rank, one envelope per rank
+        for (bi, (d, _, bucket)) in scratch.batches.iter().enumerate() {
+            let ex = &self.executors[d];
+            let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+            let args = scratch.args_pool.pop().unwrap_or_default();
+            calls.push(ex.lm_head_call(*bucket, &xs[bi], args));
+            submit_envelope(
+                ex.handle.submit_execute_batch(calls),
+                serial,
+                &mut scratch.pending,
+                &mut scratch.replies,
+            )?;
+        }
+        collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+        check_batch_errors(&scratch.replies)?;
+        for (bi, reply) in scratch.replies.drain(..).enumerate() {
+            let (d, ids, _) = &scratch.batches[bi];
+            let logits =
+                out1(take_single(&mut scratch.args_pool, &mut scratch.calls_pool, reply)?)?;
+            let am = logits.argmax_rows()?;
+            let a = self.executors.get_mut(d).unwrap().attn.as_mut().unwrap();
+            for (i, id) in ids.iter().enumerate() {
+                let s = a.sched.get_running_mut(*id).unwrap();
+                s.push_token(am[i] as Token);
+            }
+            // the step committed on this rank: clear its undo log so a later
+            // failure does not roll back a *completed* step (§3.3)
+            a.blocks.begin_step();
+            self.stats.tokens_generated += ids.len();
+        }
+        self.stats.record_decode_step(t_step.elapsed());
+        Ok(())
+    }
+
     /// Bucket covering `t` tokens for router/dense/head artifacts.
     fn t_bucket(&self, t: usize) -> Result<usize> {
         self.cfg
@@ -1889,6 +2257,43 @@ impl Engine {
         Self::collect_dense(wave)
     }
 
+    /// Coalesced twin of [`Self::dense_layer`]: one single-call envelope
+    /// per TP shard device drawn from the scratch arena, same
+    /// [`DenseGroups::next_group`] round-robin and all-reduce.
+    fn dense_layer_coalesced(
+        &mut self,
+        li: usize,
+        x: &Tensor,
+        t_bucket: usize,
+        scratch: &mut DecodeScratch,
+    ) -> Result<Tensor> {
+        let g = self.dense.next_group()?;
+        let tp = self.cfg.dense_tp;
+        let serial = self.cfg.serial_data_plane;
+        for &dev in &self.dense.groups[g] {
+            let ex = self
+                .executors
+                .get(&dev)
+                .ok_or_else(|| anyhow::anyhow!("dense shard device {dev} missing"))?;
+            let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+            let args = scratch.args_pool.pop().unwrap_or_default();
+            calls.push(ex.dense_forward_call(li, tp, t_bucket, x, args)?);
+            submit_envelope(
+                ex.handle.submit_execute_batch(calls),
+                serial,
+                &mut scratch.pending,
+                &mut scratch.replies,
+            )?;
+        }
+        collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+        check_batch_errors(&scratch.replies)?;
+        let mut parts: Vec<Tensor> = Vec::with_capacity(scratch.replies.len());
+        for reply in scratch.replies.drain(..) {
+            parts.push(out1(take_single(&mut scratch.args_pool, &mut scratch.calls_pool, reply)?)?);
+        }
+        comms::all_reduce_sum(&parts)
+    }
+
     /// MoE layer for prefill: route every valid position of `[s,d]`.
     /// The gate runs on the owning DP rank's device.
     fn moe_layer_prefill(
@@ -1934,6 +2339,23 @@ impl Engine {
         wt: &[f32],
         t_total: usize,
     ) -> Result<Tensor> {
+        self.moe_layer_routed_impl(li, x, idx, wt, t_total, None)
+    }
+
+    /// [`Self::moe_layer_routed`] body with the fan-out style picked by
+    /// `arena`: `None` is the per-command baseline (prefill, scoring, and
+    /// decode with `coalesced_submission` off); `Some` draws single-call
+    /// envelopes from the decode scratch arena. Dispatch, placeholder
+    /// handling and combine are shared so the two styles cannot drift.
+    fn moe_layer_routed_impl(
+        &mut self,
+        li: usize,
+        x: &Tensor,
+        idx: &[i32],
+        wt: &[f32],
+        t_total: usize,
+        arena: Option<&mut DecodeScratch>,
+    ) -> Result<Tensor> {
         for &e in idx {
             if e >= 0 {
                 self.activation_counts[e as usize] += 1;
@@ -1959,22 +2381,56 @@ impl Engine {
         // no full-size zero buffer is materialized for them.
         let mut outputs: Vec<Tensor> =
             disp.per_rank.iter().map(|_| Tensor::zeros(vec![0, 1, 0])).collect();
-        let mut wave = ExecWave::new(self.cfg.serial_data_plane);
-        let mut submitted: Vec<usize> = Vec::new();
-        for (pi, payload) in disp.per_rank.iter().enumerate() {
-            if payload.assigns.is_empty() {
-                continue;
+        match arena {
+            None => {
+                let mut wave = ExecWave::new(self.cfg.serial_data_plane);
+                let mut submitted: Vec<usize> = Vec::new();
+                for (pi, payload) in disp.per_rank.iter().enumerate() {
+                    if payload.assigns.is_empty() {
+                        continue;
+                    }
+                    let dev = self.moe_order[payload.rank];
+                    let ex = self
+                        .executors
+                        .get(&dev)
+                        .ok_or_else(|| anyhow::anyhow!("MoE device {dev} missing"))?;
+                    wave.push(ex.submit_moe_forward(li, &payload.grouped)?)?;
+                    submitted.push(pi);
+                }
+                for (pi, out) in submitted.into_iter().zip(wave.collect()?) {
+                    outputs[pi] = out1(out)?;
+                }
             }
-            let dev = self.moe_order[payload.rank];
-            let ex = self
-                .executors
-                .get(&dev)
-                .ok_or_else(|| anyhow::anyhow!("MoE device {dev} missing"))?;
-            wave.push(ex.submit_moe_forward(li, &payload.grouped)?)?;
-            submitted.push(pi);
-        }
-        for (pi, out) in submitted.into_iter().zip(wave.collect()?) {
-            outputs[pi] = out1(out)?;
+            Some(scratch) => {
+                let serial = self.cfg.serial_data_plane;
+                let mut submitted: Vec<usize> = Vec::new();
+                for (pi, payload) in disp.per_rank.iter().enumerate() {
+                    if payload.assigns.is_empty() {
+                        continue;
+                    }
+                    let dev = self.moe_order[payload.rank];
+                    let ex = self
+                        .executors
+                        .get(&dev)
+                        .ok_or_else(|| anyhow::anyhow!("MoE device {dev} missing"))?;
+                    let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+                    let args = scratch.args_pool.pop().unwrap_or_default();
+                    calls.push(ex.moe_forward_call(li, &payload.grouped, args)?);
+                    submit_envelope(
+                        ex.handle.submit_execute_batch(calls),
+                        serial,
+                        &mut scratch.pending,
+                        &mut scratch.replies,
+                    )?;
+                    submitted.push(pi);
+                }
+                collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+                check_batch_errors(&scratch.replies)?;
+                for (pi, reply) in submitted.into_iter().zip(scratch.replies.drain(..)) {
+                    outputs[pi] =
+                        out1(take_single(&mut scratch.args_pool, &mut scratch.calls_pool, reply)?)?;
+                }
+            }
         }
         let domain = self.domains.get(ATTN_EXPERT_DOMAIN)?;
         let (acc, bytes) = comms::combine(domain, &disp, &outputs, t_total, self.meta.d_model)?;
@@ -2066,18 +2522,17 @@ impl Engine {
         }
         self.last_sweep = Some(Instant::now());
         // Suspect devices are still serving and can still die for real —
-        // the heartbeat keeps watching them alongside the healthy set
-        let mut devices: Vec<DeviceId> = self
-            .executors
-            .keys()
-            .copied()
-            .filter(|d| {
-                matches!(
-                    self.device_health(*d),
-                    DeviceHealth::Healthy | DeviceHealth::Suspect
-                )
-            })
-            .collect();
+        // the heartbeat keeps watching them alongside the healthy set.
+        // The list vector is recycled across sweeps (steady-state ticks
+        // must not allocate).
+        let mut devices = std::mem::take(&mut self.sweep_scratch);
+        devices.clear();
+        devices.extend(self.executors.keys().copied().filter(|d| {
+            matches!(
+                self.device_health(*d),
+                DeviceHealth::Healthy | DeviceHealth::Suspect
+            )
+        }));
         // deterministic sweep order: with several devices down at once the
         // heartbeat must always flag the same one first (scenario replays
         // depend on it; the executor map itself is unordered)
@@ -2087,6 +2542,7 @@ impl Engine {
         let executors = &self.executors;
         let verdict =
             self.monitor.sweep(&devices, |d, timeout| executors[&d].handle.ping(timeout));
+        self.sweep_scratch = devices;
         match verdict {
             HeartbeatVerdict::AllHealthy => None,
             HeartbeatVerdict::Erroring(d) => Some(self.plugin.post_fault(
@@ -2179,5 +2635,89 @@ mod tests {
         sc.reset();
         assert_eq!(sc.ids_pool.len(), 2);
         assert_eq!(sc.lens_pool.len(), 2);
+    }
+
+    #[test]
+    fn decode_scratch_recycles_stranded_reply_buffers() {
+        use crate::runtime::ExecResult;
+
+        // a fault that aborts a tick mid-wave leaves collected replies in
+        // the scratch; reset() must salvage their buffers into the arena
+        let mut sc = DecodeScratch::default();
+        let exe: std::sync::Arc<str> = std::sync::Arc::from("exe");
+        sc.replies.push(BatchReply {
+            results: vec![
+                ExecResult {
+                    exe: exe.clone(),
+                    outputs: Ok(Vec::new()),
+                    args: Vec::with_capacity(8),
+                },
+                ExecResult {
+                    exe,
+                    outputs: Err(anyhow::anyhow!("boom")),
+                    args: Vec::with_capacity(4),
+                },
+            ],
+            calls_buf: Vec::with_capacity(2),
+        });
+        sc.reset();
+        assert!(sc.replies.is_empty());
+        assert_eq!(sc.args_pool.len(), 2);
+        assert!(sc.args_pool.iter().all(|a| a.is_empty()));
+        assert!(sc.args_pool.iter().any(|a| a.capacity() >= 8));
+        assert_eq!(sc.calls_pool.len(), 1);
+        assert!(sc.calls_pool[0].capacity() >= 2);
+    }
+
+    #[test]
+    fn take_single_recycles_buffers_into_the_arena() {
+        use crate::runtime::ExecResult;
+
+        let mut args_pool: Vec<Vec<Arg>> = Vec::new();
+        let mut calls_pool: Vec<Vec<ExecCall>> = Vec::new();
+        let mut args = Vec::with_capacity(4);
+        args.push(Arg::Weight(std::sync::Arc::from("w")));
+        let reply = BatchReply {
+            results: vec![ExecResult {
+                exe: std::sync::Arc::from("exe"),
+                outputs: Ok(vec![Tensor::zeros(vec![1, 1])]),
+                args,
+            }],
+            calls_buf: Vec::with_capacity(1),
+        };
+        let out = take_single(&mut args_pool, &mut calls_pool, reply).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(args_pool.len(), 1);
+        assert!(args_pool[0].is_empty() && args_pool[0].capacity() >= 4);
+        assert_eq!(calls_pool.len(), 1);
+
+        // a multi-call reply is a logic error on single-call fan-outs
+        let bad = BatchReply { results: Vec::new(), calls_buf: Vec::new() };
+        assert!(take_single(&mut args_pool, &mut calls_pool, bad).is_err());
+    }
+
+    #[test]
+    fn check_batch_errors_surfaces_the_first_failed_call() {
+        use crate::runtime::ExecResult;
+
+        let ok = BatchReply {
+            results: vec![ExecResult {
+                exe: std::sync::Arc::from("fine"),
+                outputs: Ok(Vec::new()),
+                args: Vec::new(),
+            }],
+            calls_buf: Vec::new(),
+        };
+        assert!(check_batch_errors(std::slice::from_ref(&ok)).is_ok());
+        let bad = BatchReply {
+            results: vec![ExecResult {
+                exe: std::sync::Arc::from("broken"),
+                outputs: Err(anyhow::anyhow!("device said no")),
+                args: Vec::new(),
+            }],
+            calls_buf: Vec::new(),
+        };
+        let e = check_batch_errors(&[ok, bad]).unwrap_err().to_string();
+        assert!(e.contains("broken") && e.contains("device said no"), "{e}");
     }
 }

@@ -8,17 +8,90 @@
 //! weight moves.
 
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::artifacts::{self, ArtifactStore};
 use crate::cluster::DeviceId;
 use crate::config::{DeploymentConfig, ModelMeta};
 use crate::kvcache::BlockManager;
 use crate::kvpool::{KvPayload, KvPool};
 use crate::moe::ExpertId;
-use crate::runtime::{Arg, CompileStat, DeviceHandle, Pending, PendingExec, SimDevice};
+use crate::runtime::{
+    Arg, CompileStat, DeviceHandle, ExecCall, Pending, PendingExec, SimDevice,
+};
 use crate::scheduler::{LocalScheduler, SeqId};
 use crate::tensor::Tensor;
 use crate::weights::{WeightStore, ATTN_WEIGHT_ORDER};
 use crate::Result;
+
+/// Structured key of one interned executable/weight name. `Copy`, so the
+/// hot path hashes a few machine words instead of formatting a `String`
+/// to look one up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum NameKey {
+    /// The `embed` weight.
+    Embed,
+    /// The `pos` weight.
+    Pos,
+    /// The `lnf_g` weight.
+    LnfG,
+    /// The `lnf_b` weight.
+    LnfB,
+    /// `embed_decode` executable for a batch bucket.
+    EmbedDecode(usize),
+    /// `attn_decode` executable for a batch bucket.
+    AttnDecode(usize),
+    /// `router` executable for a token bucket.
+    Router(usize),
+    /// `lm_head` executable for a token bucket.
+    LmHead(usize),
+    /// `embed_prefill` executable for a seq bucket.
+    EmbedPrefill(usize),
+    /// `attn_prefill` executable for a seq bucket.
+    AttnPrefill(usize),
+    /// `moe_block` executable for (n_slots, capacity).
+    MoeBlock(usize, usize),
+    /// `dense_ffn` executable for (tp, token bucket).
+    DenseFfn(usize, usize),
+    /// `layers.{layer}.{ATTN_WEIGHT_ORDER[idx]}` weight.
+    AttnWeight(usize, usize),
+    /// `layers.{layer}.router` weight.
+    RouterWeight(usize),
+    /// `layers.{layer}.e_w1.slots` weight.
+    EW1(usize),
+    /// `layers.{layer}.e_w2.slots` weight.
+    EW2(usize),
+    /// `layers.{layer}.d_w1.s{shard}` weight.
+    DW1(usize, usize),
+    /// `layers.{layer}.d_w2.s{shard}` weight.
+    DW2(usize, usize),
+}
+
+/// Per-executor interner for executable and weight names. The first use
+/// of a name formats it once; every later use is a `HashMap` hit on a
+/// `Copy` key returning an `Arc<str>` clone (a refcount bump, zero heap
+/// traffic) — both the serial and the coalesced data plane submit
+/// through it, so the steady-state tick stops paying a `String` per
+/// call. `RefCell` because executors live on the single-threaded
+/// coordinator; the `Arc<str>` itself crosses to the device thread.
+#[derive(Default)]
+struct NameCache {
+    map: RefCell<HashMap<NameKey, Arc<str>>>,
+}
+
+impl NameCache {
+    fn get(&self, key: NameKey, build: impl FnOnce() -> String) -> Arc<str> {
+        let mut m = self.map.borrow_mut();
+        if let Some(v) = m.get(&key) {
+            return Arc::clone(v);
+        }
+        let v: Arc<str> = build().into();
+        m.insert(key, Arc::clone(&v));
+        v
+    }
+}
 
 /// One role's weight loads, submitted to the device but not yet awaited.
 /// Produced by the `submit_*_weights` halves of the split init API
@@ -120,6 +193,7 @@ pub struct Executor {
     pub moe: Option<MoeState>,
     /// (dense group idx, shard idx) if this device hosts a dense-FFN shard.
     pub dense_shard: Option<(usize, usize)>,
+    names: NameCache,
 }
 
 impl Executor {
@@ -134,6 +208,7 @@ impl Executor {
             attn: None,
             moe: None,
             dense_shard: None,
+            names: NameCache::default(),
         }
     }
 
@@ -313,30 +388,60 @@ impl Executor {
 
     // -- attention-role device ops -----------------------------------------
 
-    fn attn_weight_args(li: usize) -> Vec<Arg> {
-        ATTN_WEIGHT_ORDER
-            .iter()
-            .map(|n| Arg::Weight(format!("layers.{li}.{n}")))
-            .collect()
+    /// Append the interned per-layer attention weight args
+    /// ([`ATTN_WEIGHT_ORDER`]).
+    fn push_attn_weight_args(&self, li: usize, args: &mut Vec<Arg>) {
+        for (i, n) in ATTN_WEIGHT_ORDER.iter().enumerate() {
+            args.push(Arg::Weight(
+                self.names.get(NameKey::AttnWeight(li, i), || format!("layers.{li}.{n}")),
+            ));
+        }
+    }
+
+    fn embed_decode_name(&self, bucket: usize) -> Arc<str> {
+        self.names.get(NameKey::EmbedDecode(bucket), || artifacts::embed_decode(bucket))
+    }
+
+    fn attn_decode_name(&self, bucket: usize) -> Arc<str> {
+        self.names.get(NameKey::AttnDecode(bucket), || artifacts::attn_decode(bucket))
+    }
+
+    fn fill_embed_decode(&self, bucket: usize, toks: &[i32], pos: &[i32], args: &mut Vec<Arg>) {
+        args.push(Arg::Value(Tensor::i32(vec![bucket], toks.to_vec())));
+        args.push(Arg::Value(Tensor::i32(vec![bucket], pos.to_vec())));
+        args.push(Arg::Weight(self.names.get(NameKey::Embed, || "embed".into())));
+        args.push(Arg::Weight(self.names.get(NameKey::Pos, || "pos".into())));
     }
 
     /// Submit the decode-path embed without waiting: tokens/pos `[B]`
     /// (already padded to the bucket).
-    pub fn submit_embed_decode(&self, bucket: usize, toks: &[i32], pos: &[i32]) -> Result<PendingExec> {
-        let args = vec![
-            Arg::Value(Tensor::i32(vec![bucket], toks.to_vec())),
-            Arg::Value(Tensor::i32(vec![bucket], pos.to_vec())),
-            Arg::Weight("embed".into()),
-            Arg::Weight("pos".into()),
-        ];
-        self.handle.submit_execute(&artifacts::embed_decode(bucket), args)
+    pub fn submit_embed_decode(
+        &self,
+        bucket: usize,
+        toks: &[i32],
+        pos: &[i32],
+    ) -> Result<PendingExec> {
+        let mut args = Vec::with_capacity(4);
+        self.fill_embed_decode(bucket, toks, pos, &mut args);
+        self.handle.submit_execute_interned(&self.embed_decode_name(bucket), args)
     }
 
-    /// Submit one layer's attention half for the decode batch without
-    /// waiting. `x` is `[B,d]` (bucket-padded); this rank's paged KV for
-    /// `layer` is gathered host-side at submission time. Awaiting the
-    /// result yields `(h, ffn_in, new_k, new_v)` (unpack with [`out4`]).
-    pub fn submit_attn_decode(
+    /// Build the decode-embed call for a coalesced envelope; `args` is a
+    /// recycled (empty, capacity-retaining) arena buffer.
+    pub fn embed_decode_call(
+        &self,
+        bucket: usize,
+        toks: &[i32],
+        pos: &[i32],
+        mut args: Vec<Arg>,
+    ) -> ExecCall {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        self.fill_embed_decode(bucket, toks, pos, &mut args);
+        ExecCall { exe: self.embed_decode_name(bucket), args }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fill_attn_decode(
         &self,
         layer: usize,
         bucket: usize,
@@ -344,7 +449,8 @@ impl Executor {
         seq_ids: &[SeqId],
         lens: &[usize],
         max_seq: usize,
-    ) -> Result<PendingExec> {
+        args: &mut Vec<Arg>,
+    ) -> Result<()> {
         let st = self.attn.as_ref().ok_or_else(|| anyhow::anyhow!("not an attention rank"))?;
         let tables: Vec<_> = seq_ids
             .iter()
@@ -360,14 +466,49 @@ impl Executor {
         }
         let (kc, vc) = st.kv.gather(layer, &tables_pad, &lens_pad, max_seq)?;
         let cur: Vec<i32> = lens_pad.iter().map(|&l| l as i32).collect();
-        let mut args = vec![
-            Arg::Value(x.clone()),
-            Arg::Value(kc),
-            Arg::Value(vc),
-            Arg::Value(Tensor::i32(vec![bucket], cur)),
-        ];
-        args.extend(Self::attn_weight_args(layer));
-        self.handle.submit_execute(&artifacts::attn_decode(bucket), args)
+        args.push(Arg::Value(x.clone()));
+        args.push(Arg::Value(kc));
+        args.push(Arg::Value(vc));
+        args.push(Arg::Value(Tensor::i32(vec![bucket], cur)));
+        self.push_attn_weight_args(layer, args);
+        Ok(())
+    }
+
+    /// Submit one layer's attention half for the decode batch without
+    /// waiting. `x` is `[B,d]` (bucket-padded); this rank's paged KV for
+    /// `layer` is gathered host-side at submission time. Awaiting the
+    /// result yields `(h, ffn_in, new_k, new_v)` (unpack with [`out4`]).
+    pub fn submit_attn_decode(
+        &self,
+        layer: usize,
+        bucket: usize,
+        x: &Tensor,
+        seq_ids: &[SeqId],
+        lens: &[usize],
+        max_seq: usize,
+    ) -> Result<PendingExec> {
+        let mut args = Vec::with_capacity(4 + ATTN_WEIGHT_ORDER.len());
+        self.fill_attn_decode(layer, bucket, x, seq_ids, lens, max_seq, &mut args)?;
+        self.handle.submit_execute_interned(&self.attn_decode_name(bucket), args)
+    }
+
+    /// Build one layer's decode-attention call for a coalesced envelope
+    /// (same host-side KV gather as [`Executor::submit_attn_decode`]);
+    /// `args` is a recycled arena buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_decode_call(
+        &self,
+        layer: usize,
+        bucket: usize,
+        x: &Tensor,
+        seq_ids: &[SeqId],
+        lens: &[usize],
+        max_seq: usize,
+        mut args: Vec<Arg>,
+    ) -> Result<ExecCall> {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        self.fill_attn_decode(layer, bucket, x, seq_ids, lens, max_seq, &mut args)?;
+        Ok(ExecCall { exe: self.attn_decode_name(bucket), args })
     }
 
     /// Write the step's new K/V rows (one per real batch element) into the
@@ -384,6 +525,18 @@ impl Executor {
         Ok(())
     }
 
+    fn router_name(&self, bucket: usize) -> Arc<str> {
+        self.names.get(NameKey::Router(bucket), || artifacts::router(bucket))
+    }
+
+    /// Append the router's weight + mask args (everything but `ffn_in`).
+    fn fill_router_tail(&self, layer: usize, mask: &[f32], args: &mut Vec<Arg>) {
+        args.push(Arg::Weight(
+            self.names.get(NameKey::RouterWeight(layer), || format!("layers.{layer}.router")),
+        ));
+        args.push(Arg::Value(Tensor::f32(vec![mask.len()], mask.to_vec())));
+    }
+
     /// Submit the gate for this rank's tokens without waiting. Unpack the
     /// awaited result with [`router_out`].
     pub fn submit_router(
@@ -393,12 +546,30 @@ impl Executor {
         ffn_in: &Tensor,
         mask: &[f32],
     ) -> Result<PendingExec> {
-        let args = vec![
-            Arg::Value(ffn_in.clone()),
-            Arg::Weight(format!("layers.{layer}.router")),
-            Arg::Value(Tensor::f32(vec![mask.len()], mask.to_vec())),
-        ];
-        self.handle.submit_execute(&artifacts::router(bucket), args)
+        let mut args = Vec::with_capacity(3);
+        args.push(Arg::Value(ffn_in.clone()));
+        self.fill_router_tail(layer, mask, &mut args);
+        self.handle.submit_execute_interned(&self.router_name(bucket), args)
+    }
+
+    /// Build the router call for a coalesced envelope, chained onto the
+    /// attention call at index `attn_call` earlier in the *same*
+    /// envelope: `ffn_in` arrives device-side as that call's output 1
+    /// ([`Arg::PrevOut`]), so attention + gate cost one submission and
+    /// one round-trip per rank instead of two. `args` is a recycled
+    /// arena buffer.
+    pub fn router_call_chained(
+        &self,
+        bucket: usize,
+        layer: usize,
+        attn_call: usize,
+        mask: &[f32],
+        mut args: Vec<Arg>,
+    ) -> ExecCall {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        args.push(Arg::PrevOut { call: attn_call, out: 1 });
+        self.fill_router_tail(layer, mask, &mut args);
+        ExecCall { exe: self.router_name(bucket), args }
     }
 
     /// Gate for this rank's tokens: returns `(idx, wt)` flattened `[B*k]`.
@@ -412,16 +583,31 @@ impl Executor {
         router_out(self.submit_router(bucket, layer, ffn_in, mask)?.wait()?)
     }
 
+    fn lm_head_name(&self, bucket: usize) -> Arc<str> {
+        self.names.get(NameKey::LmHead(bucket), || artifacts::lm_head(bucket))
+    }
+
+    fn fill_lm_head(&self, x: &Tensor, args: &mut Vec<Arg>) {
+        args.push(Arg::Value(x.clone()));
+        args.push(Arg::Weight(self.names.get(NameKey::LnfG, || "lnf_g".into())));
+        args.push(Arg::Weight(self.names.get(NameKey::LnfB, || "lnf_b".into())));
+        args.push(Arg::Weight(self.names.get(NameKey::Embed, || "embed".into())));
+    }
+
     /// Submit the final norm + tied-embedding head over `[T,d]` without
     /// waiting.
     pub fn submit_lm_head(&self, bucket: usize, x: &Tensor) -> Result<PendingExec> {
-        let args = vec![
-            Arg::Value(x.clone()),
-            Arg::Weight("lnf_g".into()),
-            Arg::Weight("lnf_b".into()),
-            Arg::Weight("embed".into()),
-        ];
-        self.handle.submit_execute(&artifacts::lm_head(bucket), args)
+        let mut args = Vec::with_capacity(4);
+        self.fill_lm_head(x, &mut args);
+        self.handle.submit_execute_interned(&self.lm_head_name(bucket), args)
+    }
+
+    /// Build the lm-head call for a coalesced envelope; `args` is a
+    /// recycled arena buffer.
+    pub fn lm_head_call(&self, bucket: usize, x: &Tensor, mut args: Vec<Arg>) -> ExecCall {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        self.fill_lm_head(x, &mut args);
+        ExecCall { exe: self.lm_head_name(bucket), args }
     }
 
     /// Final norm + tied-embedding head over `[T,d]` (blocking).
@@ -433,10 +619,11 @@ impl Executor {
     pub fn embed_prefill(&self, s: usize, toks: &[i32]) -> Result<Tensor> {
         let args = vec![
             Arg::Value(Tensor::i32(vec![1, s], toks.to_vec())),
-            Arg::Weight("embed".into()),
-            Arg::Weight("pos".into()),
+            Arg::Weight(self.names.get(NameKey::Embed, || "embed".into())),
+            Arg::Weight(self.names.get(NameKey::Pos, || "pos".into())),
         ];
-        let out = self.handle.execute(&artifacts::embed_prefill(s), args)?;
+        let exe = self.names.get(NameKey::EmbedPrefill(s), || artifacts::embed_prefill(s));
+        let out = self.handle.submit_execute_interned(&exe, args)?.wait()?;
         Ok(out.into_iter().next().unwrap())
     }
 
@@ -449,26 +636,73 @@ impl Executor {
         x: &Tensor,
     ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
         let mut args = vec![Arg::Value(x.clone())];
-        args.extend(Self::attn_weight_args(layer));
-        let out = self.handle.execute(&artifacts::attn_prefill(s), args)?;
+        self.push_attn_weight_args(layer, &mut args);
+        let exe = self.names.get(NameKey::AttnPrefill(s), || artifacts::attn_prefill(s));
+        let out = self.handle.submit_execute_interned(&exe, args)?.wait()?;
         let mut it = out.into_iter();
         Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
     }
 
     // -- MoE-role device ops -------------------------------------------------
 
-    /// Submit the grouped expert FFN over dispatched tokens
-    /// `[n_slots, C, d]` without waiting.
-    pub fn submit_moe_forward(&self, layer: usize, grouped: &Tensor) -> Result<PendingExec> {
+    fn fill_moe_forward(
+        &self,
+        layer: usize,
+        grouped: &Tensor,
+        args: &mut Vec<Arg>,
+    ) -> Result<(usize, usize)> {
         let st = self.moe.as_ref().ok_or_else(|| anyhow::anyhow!("not a MoE rank"))?;
         let (n_slots, cap) = (grouped.shape[0], grouped.shape[1]);
         anyhow::ensure!(n_slots == st.slots.len(), "grouped slots mismatch");
-        let args = vec![
-            Arg::Value(grouped.clone()),
-            Arg::Weight(format!("layers.{layer}.e_w1.slots")),
-            Arg::Weight(format!("layers.{layer}.e_w2.slots")),
-        ];
-        self.handle.submit_execute(&artifacts::moe_block(n_slots, cap), args)
+        args.push(Arg::Value(grouped.clone()));
+        args.push(Arg::Weight(
+            self.names.get(NameKey::EW1(layer), || format!("layers.{layer}.e_w1.slots")),
+        ));
+        args.push(Arg::Weight(
+            self.names.get(NameKey::EW2(layer), || format!("layers.{layer}.e_w2.slots")),
+        ));
+        Ok((n_slots, cap))
+    }
+
+    fn moe_block_name(&self, n_slots: usize, cap: usize) -> Arc<str> {
+        self.names.get(NameKey::MoeBlock(n_slots, cap), || artifacts::moe_block(n_slots, cap))
+    }
+
+    /// Submit the grouped expert FFN over dispatched tokens
+    /// `[n_slots, C, d]` without waiting.
+    pub fn submit_moe_forward(&self, layer: usize, grouped: &Tensor) -> Result<PendingExec> {
+        let mut args = Vec::with_capacity(3);
+        let (n_slots, cap) = self.fill_moe_forward(layer, grouped, &mut args)?;
+        self.handle.submit_execute_interned(&self.moe_block_name(n_slots, cap), args)
+    }
+
+    /// Build the grouped expert FFN call for a coalesced envelope; `args`
+    /// is a recycled arena buffer.
+    pub fn moe_forward_call(
+        &self,
+        layer: usize,
+        grouped: &Tensor,
+        mut args: Vec<Arg>,
+    ) -> Result<ExecCall> {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        let (n_slots, cap) = self.fill_moe_forward(layer, grouped, &mut args)?;
+        Ok(ExecCall { exe: self.moe_block_name(n_slots, cap), args })
+    }
+
+    fn fill_dense_forward(&self, layer: usize, x: &Tensor, args: &mut Vec<Arg>) -> Result<()> {
+        let (_, shard) = self.dense_shard.ok_or_else(|| anyhow::anyhow!("no dense shard here"))?;
+        args.push(Arg::Value(x.clone()));
+        args.push(Arg::Weight(
+            self.names.get(NameKey::DW1(layer, shard), || format!("layers.{layer}.d_w1.s{shard}")),
+        ));
+        args.push(Arg::Weight(
+            self.names.get(NameKey::DW2(layer, shard), || format!("layers.{layer}.d_w2.s{shard}")),
+        ));
+        Ok(())
+    }
+
+    fn dense_ffn_name(&self, tp: usize, t_bucket: usize) -> Arc<str> {
+        self.names.get(NameKey::DenseFfn(tp, t_bucket), || artifacts::dense_ffn(tp, t_bucket))
     }
 
     /// Submit one dense-FFN TP shard's partial output for `[t,d]` tokens
@@ -480,13 +714,24 @@ impl Executor {
         t_bucket: usize,
         x: &Tensor,
     ) -> Result<PendingExec> {
-        let (_, shard) = self.dense_shard.ok_or_else(|| anyhow::anyhow!("no dense shard here"))?;
-        let args = vec![
-            Arg::Value(x.clone()),
-            Arg::Weight(format!("layers.{layer}.d_w1.s{shard}")),
-            Arg::Weight(format!("layers.{layer}.d_w2.s{shard}")),
-        ];
-        self.handle.submit_execute(&artifacts::dense_ffn(tp, t_bucket), args)
+        let mut args = Vec::with_capacity(3);
+        self.fill_dense_forward(layer, x, &mut args)?;
+        self.handle.submit_execute_interned(&self.dense_ffn_name(tp, t_bucket), args)
+    }
+
+    /// Build one dense-FFN TP shard call for a coalesced envelope; `args`
+    /// is a recycled arena buffer.
+    pub fn dense_forward_call(
+        &self,
+        layer: usize,
+        tp: usize,
+        t_bucket: usize,
+        x: &Tensor,
+        mut args: Vec<Arg>,
+    ) -> Result<ExecCall> {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        self.fill_dense_forward(layer, x, &mut args)?;
+        Ok(ExecCall { exe: self.dense_ffn_name(tp, t_bucket), args })
     }
 
     /// Adopt a migrated sequence's KV onto this attention rank:
@@ -649,6 +894,18 @@ mod tests {
         let ex = Executor::spawn(0);
         assert!(!ex.is_attention());
         assert!(!ex.is_moe());
+        ex.shutdown();
+    }
+
+    #[test]
+    fn name_cache_interns_once_and_shares_the_arc() {
+        let ex = Executor::spawn(2);
+        let a = ex.names.get(NameKey::RouterWeight(3), || "layers.3.router".into());
+        let b = ex.names.get(NameKey::RouterWeight(3), || panic!("must hit the cache"));
+        assert!(Arc::ptr_eq(&a, &b), "a cache hit shares the allocation");
+        assert_eq!(&*a, "layers.3.router");
+        let e = ex.names.get(NameKey::Embed, || "embed".into());
+        assert_eq!(&*e, "embed");
         ex.shutdown();
     }
 

@@ -5,7 +5,7 @@
 //!
 //! Commands:
 //!   serve     [--scenario NAME] [--strategy revivemoe|reinit] [--degraded]
-//!             [--kv-live] [--kv-mirror] [--predictive]
+//!             [--kv-live] [--kv-mirror] [--predictive] [--coalesced]
 //!             [--prefill-chunk C] [--tick-budget B]
 //!             [--rate R] [--requests N] [--ticks T] [--seed S] [--log]
 //!                                            online open-loop serving under
@@ -31,6 +31,11 @@
 //!                                            restores a dead attention
 //!                                            rank's sequences from the
 //!                                            host-side KV mirror;
+//!                                            --coalesced batches each decode
+//!                                            fan-out into one ExecuteBatch
+//!                                            envelope per device, built from
+//!                                            recycled arena buffers (the
+//!                                            zero-allocation tick);
 //!                                            --prefill-chunk splits prefills
 //!                                            into C-token chunks interleaved
 //!                                            with decode; --tick-budget caps
@@ -158,6 +163,9 @@ fn main() -> Result<()> {
             if args.flag_bool("predictive") {
                 cfg.recovery.health.enabled = true;
             }
+            if args.flag_bool("coalesced") {
+                cfg.coalesced_submission = true;
+            }
             if args.flags.contains_key("prefill-chunk") {
                 cfg.prefill_chunk_tokens = args.flag_usize("prefill-chunk", 0);
             }
@@ -263,7 +271,7 @@ fn main() -> Result<()> {
                 ("attn_prefill_s32", {
                     let mut a = vec![Arg::Value(Tensor::zeros(vec![1, 32, d]))];
                     for n in revivemoe::weights::ATTN_WEIGHT_ORDER {
-                        a.push(Arg::Weight(format!("layers.1.{n}")));
+                        a.push(Arg::Weight(format!("layers.1.{n}").into()));
                     }
                     a
                 }),
@@ -275,7 +283,7 @@ fn main() -> Result<()> {
                         Arg::Value(Tensor::i32(vec![8], vec![4; 8])),
                     ];
                     for n in revivemoe::weights::ATTN_WEIGHT_ORDER {
-                        a.push(Arg::Weight(format!("layers.1.{n}")));
+                        a.push(Arg::Weight(format!("layers.1.{n}").into()));
                     }
                     a
                 }),

@@ -214,6 +214,98 @@ pub fn percentile(v: &[f64], p: f64) -> f64 {
     s[idx]
 }
 
+/// A fixed-capacity sample window whose `push` is allocation-free: the
+/// buffer is allocated once at construction and overwrites the oldest
+/// sample when full. The per-*tick* metric record
+/// ([`ServingStats::record_decode_step`]) goes through one of these so a
+/// steady-state decode tick touches no heap (ROADMAP "zero-allocation
+/// decode tick"); per-*request* and per-*recovery* records keep their
+/// plain `Vec`s — they are off the tick hot path and unbounded growth
+/// there is bounded by the workload, not the tick count.
+#[derive(Clone, Debug)]
+pub struct SampleRing {
+    buf: Vec<f64>,
+    /// Next overwrite position once `buf` has reached capacity.
+    head: usize,
+    /// Lifetime samples since construction or the last drain (the window
+    /// keeps only the newest `capacity` of them).
+    total: u64,
+}
+
+/// Window size for [`SampleRing::default`]: comfortably above any bench
+/// phase's tick count, small enough that the one-time allocation is
+/// boot-cost noise.
+const SAMPLE_RING_WINDOW: usize = 4096;
+
+impl Default for SampleRing {
+    fn default() -> Self {
+        Self::with_capacity(SAMPLE_RING_WINDOW)
+    }
+}
+
+impl SampleRing {
+    /// A ring holding the newest `cap` samples. The buffer is allocated
+    /// here, eagerly, so no later `push` ever allocates.
+    pub fn with_capacity(cap: usize) -> Self {
+        SampleRing { buf: Vec::with_capacity(cap.max(1)), head: 0, total: 0 }
+    }
+
+    /// Record one sample, overwriting the oldest once the window is full.
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+            self.head = (self.head + 1) % self.buf.capacity();
+        }
+        self.total += 1;
+    }
+
+    /// Samples currently held in the window.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether the window holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Lifetime samples recorded since construction or the last
+    /// [`SampleRing::drain_vec`] (≥ [`SampleRing::len`]).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean over the stored window; 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+
+    /// [`percentile`] over the stored window (order-insensitive).
+    pub fn pct(&self, p: f64) -> f64 {
+        percentile(&self.buf, p)
+    }
+
+    /// Take the stored window in insertion order (oldest first) and reset
+    /// the ring, *retaining* its buffer — the `mem::take` discipline of
+    /// `engine::DecodeScratch`, except the allocation never leaves: the
+    /// returned `Vec` is a fresh copy (drains happen at bench-phase
+    /// boundaries, not per tick) and the next `push` reuses the ring.
+    pub fn drain_vec(&mut self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        self.total = 0;
+        out
+    }
+}
+
 /// Online latency/throughput statistics for the serving loop.
 ///
 /// Besides the aggregate counters, the serve loop feeds per-request TTFT
@@ -292,7 +384,7 @@ pub struct ServingStats {
     ttft_queue_ms: Vec<f64>,
     ttft_prefill_ms: Vec<f64>,
     tpot_ms: Vec<f64>,
-    decode_step_ms: Vec<f64>,
+    decode_step_ms: SampleRing,
     stall_ms: Vec<f64>,
     degraded_ms: Vec<f64>,
     started: Option<Instant>,
@@ -403,28 +495,28 @@ impl ServingStats {
     }
 
     /// Wall time of one global decode step (all ranks). The overlap work
-    /// lives or dies on this staying ~flat as rank count grows.
+    /// lives or dies on this staying ~flat as rank count grows. Feeds a
+    /// [`SampleRing`] — the only per-tick record — so the push is
+    /// allocation-free in steady state.
     pub fn record_decode_step(&mut self, d: Duration) {
         self.decode_step_ms.push(d.as_secs_f64() * 1e3);
     }
 
-    /// Median decode-step wall time (ms).
+    /// Median decode-step wall time (ms) over the stored window.
     pub fn decode_step_p50(&self) -> f64 {
-        Self::pct(&self.decode_step_ms, 0.50)
+        self.decode_step_ms.pct(0.50)
     }
 
-    /// Mean decode-step wall time (ms).
+    /// Mean decode-step wall time (ms) over the stored window.
     pub fn decode_step_mean(&self) -> f64 {
-        if self.decode_step_ms.is_empty() {
-            return 0.0;
-        }
-        self.decode_step_ms.iter().sum::<f64>() / self.decode_step_ms.len() as f64
+        self.decode_step_ms.mean()
     }
 
     /// Drain the per-step samples (bench phases reuse one engine and want
-    /// each phase's samples in isolation).
+    /// each phase's samples in isolation). Resets the ring while keeping
+    /// its buffer, so the next tick's record still does not allocate.
     pub fn take_decode_step_ms(&mut self) -> Vec<f64> {
-        std::mem::take(&mut self.decode_step_ms)
+        self.decode_step_ms.drain_vec()
     }
 
     /// Decoded tokens per wall second over the measured window.
@@ -606,6 +698,37 @@ mod tests {
         let drained = s.take_decode_step_ms();
         assert_eq!(drained.len(), 2);
         assert_eq!(s.decode_step_mean(), 0.0, "drain must reset the samples");
+    }
+
+    #[test]
+    fn sample_ring_push_never_grows_the_buffer() {
+        let mut r = SampleRing::with_capacity(4);
+        for i in 0..100 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 4, "window holds exactly `cap` samples");
+        assert_eq!(r.total(), 100);
+        // the window keeps the *newest* cap samples: 96..=99
+        let v = r.drain_vec();
+        assert_eq!(v, vec![96.0, 97.0, 98.0, 99.0], "oldest-first insertion order");
+        assert_eq!(r.total(), 0);
+        assert!(r.is_empty());
+        // the ring survives the drain: pushes keep landing in the window
+        r.push(7.0);
+        assert_eq!(r.len(), 1);
+        assert!((r.mean() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_ring_stats_match_percentile_definition() {
+        let mut r = SampleRing::with_capacity(8);
+        for v in [5.0, 1.0, 3.0] {
+            r.push(v);
+        }
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(r.pct(0.50), percentile(&[5.0, 1.0, 3.0], 0.50));
+        assert_eq!(r.pct(1.0), 5.0);
+        assert_eq!(SampleRing::default().pct(0.99), 0.0, "empty window reports 0");
     }
 
     #[test]

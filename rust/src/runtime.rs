@@ -34,10 +34,32 @@
 //! for any reply type ([`ExecWave`] is its data-plane alias), with an
 //! optional serialized mode kept as the A/B baseline for correctness
 //! tests and the throughput/recovery benches.
+//!
+//! # Coalesced submission
+//!
+//! `DeploymentConfig::coalesced_submission` shrinks the channel traffic
+//! further: instead of one `Execute` command per executable, the engine
+//! packs every call a device runs at one fan-out point into a single
+//! [`Cmd::ExecuteBatch`] envelope ([`DeviceHandle::submit_execute_batch`],
+//! awaited as one [`Pending`]`<`[`BatchReply`]`>` holding a
+//! [`ExecResult`] per call). Calls inside an
+//! envelope run in order on the device thread and may chain device-side
+//! through [`Arg::PrevOut`] — e.g. the decode tick fuses `attn_decode` +
+//! `router` into one envelope per attention rank per MoE layer, the router
+//! consuming the attention call's `ffn_in` output without a host
+//! round-trip. Each call keeps its own success/error slot (one dead
+//! executable fails only its calls), health is recorded per call exactly
+//! like the per-command path, and the envelope deadline is fixed at
+//! submission scaled by call count ([`DeviceHandle::queued_deadline`]) so
+//! a hung device times out the whole batch. The [`Arg`] buffers ride back
+//! inside each [`ExecResult`] so the coordinator can recycle them into its
+//! per-tick arena instead of reallocating — the allocation-free
+//! steady-state tick depends on this round trip.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -57,14 +79,66 @@ pub const DEFAULT_CMD_TIMEOUT: Duration = Duration::from_secs(5);
 /// deterministically (see [`crate::health`]).
 const LOGICAL_CMD_MS: f64 = 1.0;
 
-/// An executable argument: either a device-resident weight (by name) or a
-/// host value shipped with the call.
+/// An executable argument: a device-resident weight (by interned name), a
+/// host value shipped with the call, or — inside a [`Cmd::ExecuteBatch`]
+/// envelope — an output of an earlier call in the same batch.
 #[derive(Clone, Debug)]
 pub enum Arg {
-    /// A device-resident weight, referenced by name.
-    Weight(String),
+    /// A device-resident weight, referenced by name. Interned as
+    /// `Arc<str>` so the hot path shares one allocation per distinct name
+    /// for the lifetime of the process instead of cloning a `String` per
+    /// call (see `executor::NameCache`).
+    Weight(Arc<str>),
     /// A host value shipped with the call.
     Value(Tensor),
+    /// Output `out` of batch call `call` (zero-based, earlier in the same
+    /// [`Cmd::ExecuteBatch`] envelope). Resolved on the device thread, so
+    /// chained calls never round-trip through the coordinator. Errors if
+    /// the referenced call failed, is out of range, or the arg appears in
+    /// a plain `Execute` (which has no batch context).
+    PrevOut {
+        /// Index of the upstream call within the envelope.
+        call: usize,
+        /// Output index within that call's result tuple.
+        out: usize,
+    },
+}
+
+/// One executable call inside a coalesced [`Cmd::ExecuteBatch`] envelope.
+#[derive(Debug)]
+pub struct ExecCall {
+    /// Interned executable name.
+    pub exe: Arc<str>,
+    /// Call arguments; may reference earlier calls via [`Arg::PrevOut`].
+    pub args: Vec<Arg>,
+}
+
+/// Per-call result of a coalesced envelope. Each call keeps its own
+/// success/error slot — one dead executable fails only its call(s), not
+/// the envelope — and the submitted [`Arg`] buffer rides back so the
+/// coordinator can recycle it into the per-tick arena.
+#[derive(Debug)]
+pub struct ExecResult {
+    /// Interned executable name (echoed from the call).
+    pub exe: Arc<str>,
+    /// The call's outputs, or its device-side error.
+    pub outputs: Result<Vec<Tensor>>,
+    /// The argument buffer, returned for arena recycling.
+    pub args: Vec<Arg>,
+}
+
+/// Reply of one coalesced envelope: per-call results in submission order,
+/// plus the envelope's (now empty, capacity-retaining) calls buffer
+/// riding back so the coordinator recycles it instead of allocating a
+/// fresh `Vec<ExecCall>` per envelope. The `results` vector itself is
+/// device-allocated — it is part of the device's reply, like the output
+/// tensors, and never counts against the coordinator's allocation budget.
+#[derive(Debug)]
+pub struct BatchReply {
+    /// One result per call, in submission order.
+    pub results: Vec<ExecResult>,
+    /// The drained calls buffer, returned for arena recycling.
+    pub calls_buf: Vec<ExecCall>,
 }
 
 /// Timing of one cached compile (read the HLO text, then PJRT-compile).
@@ -83,8 +157,16 @@ pub struct CompileStat {
 /// Rolling counters one device thread maintains.
 #[derive(Clone, Debug, Default)]
 pub struct DeviceStats {
-    /// Successful executions.
+    /// Successful executions (counted per call — a coalesced envelope of
+    /// N calls advances this by up to N, identically to N per-command
+    /// submissions).
     pub executions: u64,
+    /// Execute-class channel submissions received: one per `Execute`
+    /// command and one per `ExecuteBatch` envelope regardless of its call
+    /// count. The coalesced-submission equivalence suite asserts its
+    /// per-tick growth to prove the fan-out really sends one envelope per
+    /// device per submission point.
+    pub execute_cmds: u64,
     /// Compiles performed.
     pub compiles: u64,
     /// Bytes of resident weights.
@@ -129,7 +211,8 @@ enum Cmd {
     HasExecutables { names: Vec<String>, reply: Sender<Vec<bool>> },
     LoadWeights { tensors: Vec<(String, Tensor)>, reply: Sender<Result<(usize, f64)>> },
     DropWeightsPrefix { prefix: String, reply: Sender<usize> },
-    Execute { exe: String, args: Vec<Arg>, reply: Sender<Result<Vec<Tensor>>> },
+    Execute { exe: Arc<str>, args: Vec<Arg>, reply: Sender<Result<Vec<Tensor>>> },
+    ExecuteBatch { calls: Vec<ExecCall>, reply: Sender<Result<BatchReply>> },
     KvExport { payload: KvPayload, reply: Sender<Result<KvPayload>> },
     KvImport { payload: KvPayload, reply: Sender<Result<KvPayload>> },
     Stats { reply: Sender<DeviceStats> },
@@ -195,6 +278,7 @@ impl SimDevice {
 /// A command submitted to a device but not yet collected. The deadline is
 /// fixed at submission time: a hung device swallows the command and never
 /// replies, so the caller's `wait`/`try_wait` times out instead of hanging.
+#[derive(Debug)]
 pub struct PendingReply<T> {
     device: DeviceId,
     rx: Receiver<T>,
@@ -248,6 +332,7 @@ impl<T> PendingReply<T> {
 /// deadline bounds the wait on a hung device. [`PendingExec`] (an
 /// `Execute`), compiles ([`DeviceHandle::submit_compile`]), and weight
 /// loads ([`DeviceHandle::submit_load_weights`]) are all instances.
+#[derive(Debug)]
 pub struct Pending<T> {
     inner: PendingReply<Result<T>>,
 }
@@ -274,6 +359,11 @@ impl<T> Pending<T> {
 
 /// An in-flight `Execute`: awaiting it yields the executable's outputs.
 pub type PendingExec = Pending<Vec<Tensor>>;
+
+/// An in-flight `ExecuteBatch` envelope: awaiting it yields the
+/// [`BatchReply`] — one [`ExecResult`] per call, in submission order,
+/// plus the recyclable calls buffer.
+pub type PendingBatch = Pending<BatchReply>;
 
 /// One fan-out wave of typed command submissions, collected in submission
 /// order. In `serial` mode every push awaits its result before returning —
@@ -443,16 +533,39 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                 let _ = reply.send(keys.len());
             }
             Cmd::Execute { exe, args, reply } => {
+                stats.execute_cmds += 1;
                 if failed.is_some() {
                     let _ = reply.send(Err(anyhow::anyhow!("device failed")));
                     continue;
                 }
-                let r = do_execute(&executables, &weights, &exe, args);
+                let r = do_execute(&executables, &weights, &exe, &args, &[]);
                 if r.is_ok() {
                     stats.executions += 1;
                 }
                 record_health(&mut stats, &degradation, &mut degraded_cmds, r.is_ok());
                 let _ = reply.send(r);
+            }
+            Cmd::ExecuteBatch { mut calls, reply } => {
+                stats.execute_cmds += 1;
+                if failed.is_some() {
+                    let _ = reply.send(Err(anyhow::anyhow!("device failed")));
+                    continue;
+                }
+                // Calls run in submission order; each keeps its own
+                // success/error slot and records health individually, so
+                // a flaky profile's error periodicity and the executions
+                // counter advance exactly as they would under N
+                // per-command submissions.
+                let mut results: Vec<ExecResult> = Vec::with_capacity(calls.len());
+                for ExecCall { exe, args } in calls.drain(..) {
+                    let r = do_execute(&executables, &weights, &exe, &args, &results);
+                    if r.is_ok() {
+                        stats.executions += 1;
+                    }
+                    record_health(&mut stats, &degradation, &mut degraded_cmds, r.is_ok());
+                    results.push(ExecResult { exe, outputs: r, args });
+                }
+                let _ = reply.send(Ok(BatchReply { results, calls_buf: calls }));
             }
             Cmd::KvExport { payload, reply } => {
                 // models the HBM→host DMA of a live KV migration: the page
@@ -509,11 +622,27 @@ fn do_compile(
     Ok(CompileStat { name: name.to_string(), read_s, compile_s, hlo_bytes })
 }
 
+/// Look up output `out` of prior batch call `call` for an
+/// [`Arg::PrevOut`] reference; errors on a missing/failed upstream call
+/// (the dependent call fails, the rest of the envelope continues).
+fn prev_out(prior: &[ExecResult], call: usize, out: usize) -> Result<&Tensor> {
+    let res = prior.get(call).ok_or_else(|| {
+        anyhow::anyhow!("PrevOut refers to call {call} not executed earlier in this batch")
+    })?;
+    let outs = res.outputs.as_ref().map_err(|e| {
+        anyhow::anyhow!("upstream call {call} ('{}') failed: {e}", res.exe)
+    })?;
+    outs.get(out).ok_or_else(|| {
+        anyhow::anyhow!("upstream call {call} ('{}') has no output {out}", res.exe)
+    })
+}
+
 fn do_execute(
     executables: &HashMap<String, xla::PjRtLoadedExecutable>,
     weights: &HashMap<String, xla::Literal>,
     exe: &str,
-    args: Vec<Arg>,
+    args: &[Arg],
+    prior: &[ExecResult],
 ) -> Result<Vec<Tensor>> {
     let exe = executables
         .get(exe)
@@ -521,12 +650,16 @@ fn do_execute(
     // materialize owned literals for Value args, then borrow in order
     let mut owned: Vec<xla::Literal> = Vec::new();
     let mut kinds: Vec<std::result::Result<&str, usize>> = Vec::with_capacity(args.len());
-    for a in &args {
+    for a in args {
         match a {
-            Arg::Weight(name) => kinds.push(Ok(name.as_str())),
+            Arg::Weight(name) => kinds.push(Ok(&**name)),
             Arg::Value(t) => {
                 kinds.push(Err(owned.len()));
                 owned.push(t.to_literal()?);
+            }
+            Arg::PrevOut { call, out } => {
+                kinds.push(Err(owned.len()));
+                owned.push(prev_out(prior, *call, *out)?.to_literal()?);
             }
         }
     }
@@ -697,15 +830,48 @@ impl DeviceHandle {
 
     /// Submit an `Execute` without waiting. The per-command timeout clock
     /// starts now; await the returned handle with [`Pending::wait`].
+    /// Interns `exe` on each call — hot-path callers holding an interned
+    /// name use [`DeviceHandle::submit_execute_interned`] instead, which
+    /// shares the `Arc<str>` without copying the bytes.
     pub fn submit_execute(&self, exe: &str, args: Vec<Arg>) -> Result<PendingExec> {
+        self.submit_execute_arc(Arc::from(exe), args)
+    }
+
+    /// [`DeviceHandle::submit_execute`] for callers holding an interned
+    /// name: shares the `Arc<str>` (a refcount bump, no byte copy). Both
+    /// the serial and the coalesced data plane route through interned
+    /// names (see `executor::NameCache`).
+    pub fn submit_execute_interned(&self, exe: &Arc<str>, args: Vec<Arg>) -> Result<PendingExec> {
+        self.submit_execute_arc(Arc::clone(exe), args)
+    }
+
+    fn submit_execute_arc(&self, exe: Arc<str>, args: Vec<Arg>) -> Result<PendingExec> {
         let (tx, rx) = mpsc::channel();
-        self.send(Cmd::Execute { exe: exe.to_string(), args, reply: tx })?;
+        self.send(Cmd::Execute { exe, args, reply: tx })?;
         Ok(Pending {
             inner: PendingReply {
                 device: self.id,
                 rx,
                 deadline: Instant::now() + self.cmd_timeout,
             },
+        })
+    }
+
+    /// Submit a coalesced `ExecuteBatch` envelope without waiting: every
+    /// call a device runs at one fan-out point travels as a single
+    /// channel message, and the reply is one [`ExecResult`] per call in
+    /// submission order. The deadline is fixed now and covers the whole
+    /// batch, scaled by call count through the
+    /// [`DeviceHandle::queued_deadline`] convention (a hung device times
+    /// out the envelope; a healthy device draining a long batch is not a
+    /// hang). A failed device errors the whole envelope, mirroring the
+    /// per-command path where every call would error individually.
+    pub fn submit_execute_batch(&self, calls: Vec<ExecCall>) -> Result<PendingBatch> {
+        let deadline = self.queued_deadline(calls.len().saturating_sub(1));
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::ExecuteBatch { calls, reply: tx })?;
+        Ok(Pending {
+            inner: PendingReply { device: self.id, rx, deadline: Instant::now() + deadline },
         })
     }
 
@@ -1044,6 +1210,87 @@ mod tests {
         assert!(w.mean() > first, "scores must ramp: {} -> {}", first, w.mean());
         d.handle.shutdown();
         d.join.join().unwrap();
+    }
+
+    #[test]
+    fn batch_isolates_call_errors_and_counts_one_submission() {
+        let d = SimDevice::spawn(50);
+        let calls = vec![
+            ExecCall { exe: Arc::from("nope_a"), args: vec![] },
+            ExecCall {
+                exe: Arc::from("nope_b"),
+                args: vec![Arg::Value(Tensor::f32(vec![1], vec![7.0]))],
+            },
+        ];
+        let reply = d.handle.submit_execute_batch(calls).unwrap().wait().unwrap();
+        assert_eq!(reply.results.len(), 2, "one result slot per call, in order");
+        for r in &reply.results {
+            let e = r.outputs.as_ref().unwrap_err();
+            assert!(e.to_string().contains("not compiled"), "got: {e}");
+        }
+        assert_eq!(&*reply.results[0].exe, "nope_a");
+        assert_eq!(reply.results[1].args.len(), 1, "arg buffers ride back for recycling");
+        assert!(reply.calls_buf.is_empty(), "the calls buffer rides back drained");
+        assert!(reply.calls_buf.capacity() >= 2, "…with its capacity intact for recycling");
+        let stats = d.handle.stats().unwrap();
+        assert_eq!(stats.execute_cmds, 1, "a 2-call envelope is one submission");
+        assert_eq!(stats.executions, 0);
+        assert_eq!(stats.health.samples(), 2, "health records per call, not per envelope");
+        // a plain Execute also counts one submission
+        let _ = d.handle.submit_execute("nope", vec![]).unwrap().wait();
+        assert_eq!(d.handle.stats().unwrap().execute_cmds, 2);
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn batch_on_dead_device_errors_whole_envelope() {
+        let d = SimDevice::spawn(51);
+        d.handle.set_failed(FailureBehavior::Erroring);
+        let calls = vec![ExecCall { exe: Arc::from("x"), args: vec![] }];
+        let e = d.handle.submit_execute_batch(calls).unwrap().wait().unwrap_err();
+        assert!(e.to_string().contains("device failed"), "got: {e}");
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn batch_on_hung_device_times_out_with_scaled_deadline() {
+        let d = SimDevice::spawn(52);
+        let mut h = d.handle.clone();
+        h.cmd_timeout = Duration::from_millis(50);
+        d.handle.set_failed(FailureBehavior::Hung);
+        let calls = (0..3).map(|_| ExecCall { exe: Arc::from("x"), args: vec![] }).collect();
+        let t0 = Instant::now();
+        let e = h.submit_execute_batch(calls).unwrap().wait().unwrap_err();
+        assert!(e.to_string().contains("timed out"), "got: {e}");
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(150), "deadline scales by call count");
+        assert!(waited < Duration::from_secs(2), "wait must stay deadline-bounded");
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn prev_out_resolves_and_propagates_upstream_failure() {
+        let t = Tensor::f32(vec![1], vec![3.0]);
+        let prior = vec![
+            ExecResult { exe: Arc::from("ok"), outputs: Ok(vec![t.clone()]), args: vec![] },
+            ExecResult {
+                exe: Arc::from("bad"),
+                outputs: Err(anyhow::anyhow!("boom")),
+                args: vec![],
+            },
+        ];
+        assert_eq!(prev_out(&prior, 0, 0).unwrap(), &t);
+        let e = prev_out(&prior, 0, 3).unwrap_err();
+        assert!(e.to_string().contains("no output 3"), "got: {e}");
+        let e = prev_out(&prior, 1, 0).unwrap_err();
+        assert!(e.to_string().contains("upstream call 1"), "got: {e}");
+        let e = prev_out(&prior, 5, 0).unwrap_err();
+        assert!(e.to_string().contains("not executed earlier"), "got: {e}");
+        // a plain Execute has no batch context: PrevOut must error
+        assert!(prev_out(&[], 0, 0).is_err());
     }
 
     #[test]

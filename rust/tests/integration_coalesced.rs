@@ -1,0 +1,339 @@
+//! Coalesced-submission integration: the `ExecuteBatch` decode path must
+//! be invisible to correctness and visible only to cost.
+//!
+//! 1. with `coalesced_submission` on, every canned fault scenario replays
+//!    **byte-for-byte** against the per-command baseline — token streams,
+//!    event log, tick count, recovery records;
+//! 2. the coalesced engine issues exactly **one** Execute-class
+//!    submission per attention rank per decode fan-out point
+//!    (`n_layers + 2` per tick), versus the baseline's
+//!    `2*n_layers - n_dense_layers + 2`, asserted from [`DeviceStats`]
+//!    deltas computed out of the booted model's own metadata;
+//! 3. faults keep their baseline semantics mid-batch: a hung device
+//!    times out the whole envelope (deadline-bounded, never a deadlock)
+//!    and an erroring device surfaces at wait and is flagged by the
+//!    heartbeat sweep;
+//! 4. a thread-local counting allocator proves the steady-state claims:
+//!    a warmed-up coalesced tick performs strictly fewer coordinator
+//!    heap allocations than the same tick on the baseline path, and the
+//!    recycled machinery itself ([`SampleRing`] pushes, arena buffer
+//!    round-trips) allocates **zero** bytes after construction.
+//!
+//! Engine tests need `make artifacts` (skipped loudly otherwise); the
+//! allocator micro-asserts run everywhere.
+//!
+//! [`DeviceStats`]: revivemoe::runtime::DeviceStats
+//! [`SampleRing`]: revivemoe::metrics::SampleRing
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{assert_replay_identical, default_cfg, ready, run};
+use revivemoe::cluster::FailureBehavior;
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::metrics::{SampleRing, ServingStats};
+use revivemoe::runtime::{Arg, ExecCall, ExecResult};
+use revivemoe::scenario::Scenario;
+use revivemoe::workload;
+
+// ---------------------------------------------------------------------------
+// Counting allocator: lives in THIS test binary only (not tests/common, which
+// every suite includes — swapping the global allocator must stay opt-in).
+// The counter is thread-local, so device threads and parallel sibling tests
+// never perturb the coordinator-thread measurements taken here.
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    // `const`-initialised Cell<u64>: no lazy init, no destructor, so the
+    // accounting itself can never allocate or race thread teardown.
+    ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+/// Heap allocations performed by the calling thread so far.
+fn allocs_here() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+fn coalesced_cfg() -> DeploymentConfig {
+    let mut cfg = default_cfg();
+    cfg.coalesced_submission = true;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: every canned scenario, baseline vs coalesced.
+
+#[test]
+fn coalesced_matches_baseline_replay_on_all_canned_scenarios() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    for name in Scenario::CANNED {
+        let scenario = Scenario::by_name(name, 21).expect(name).requests(12);
+        let baseline = run(default_cfg(), &scenario);
+        let coalesced = run(coalesced_cfg(), &scenario);
+        assert_eq!(baseline.incomplete, 0, "{name}: baseline stranded requests");
+        assert_eq!(coalesced.incomplete, 0, "{name}: coalesced stranded requests");
+        assert_replay_identical(&baseline, &coalesced);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Submission counting: one envelope per device per decode fan-out point.
+
+/// Pure attention ranks of a booted engine (no MoE shard, no dense shard),
+/// so their [`revivemoe::runtime::DeviceStats::execute_cmds`] deltas are
+/// exactly the decode fan-out of the attention plane.
+fn pure_attn_ranks(engine: &Engine) -> Vec<revivemoe::cluster::DeviceId> {
+    engine
+        .attn_order
+        .iter()
+        .copied()
+        .filter(|&d| {
+            let (is_attn, moe_rank, hosts_dense) = engine.device_role(d);
+            is_attn && moe_rank.is_none() && !hosts_dense
+        })
+        .collect()
+}
+
+/// Boot `cfg`, warm past the prefill tick, then measure per-attention-rank
+/// Execute-class submissions across one pure decode tick.
+fn decode_tick_submissions(cfg: DeploymentConfig) -> (Vec<u64>, usize, usize) {
+    let (mut engine, _bd) = Engine::boot(cfg).unwrap();
+    for r in workload::gen_mixed(8, 11).expect("workload") {
+        engine.submit(r).expect("submit");
+    }
+    // tick 1 admits + prefills everything (lockstep admission); ticks 2+
+    // are pure decode while every sequence is still generating
+    engine.step().expect("warmup tick");
+    let ranks = pure_attn_ranks(&engine);
+    assert!(!ranks.is_empty(), "disaggregated default must have pure attention ranks");
+    let before: Vec<u64> =
+        ranks.iter().map(|d| engine.executors[d].handle.stats().unwrap().execute_cmds).collect();
+    // the shortest canned answer is one char + eos = two decode steps, so
+    // every rank still has its sequences running when this tick starts
+    // (completions reaped at its end don't change the fan-out already paid)
+    engine.step().expect("measured tick");
+    let deltas: Vec<u64> = ranks
+        .iter()
+        .zip(&before)
+        .map(|(d, b)| engine.executors[d].handle.stats().unwrap().execute_cmds - b)
+        .collect();
+    let (n_layers, n_dense) = (engine.meta.n_layers, engine.meta.n_dense_layers);
+    engine.shutdown();
+    (deltas, n_layers, n_dense)
+}
+
+#[test]
+fn coalesced_submits_one_envelope_per_attention_rank_per_fanout() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // coalesced: embed + one envelope per layer (attn, with the router
+    // chained inside it on MoE layers) + lm_head
+    let (deltas, n_layers, _) = decode_tick_submissions(coalesced_cfg());
+    for (i, &delta) in deltas.iter().enumerate() {
+        assert_eq!(
+            delta as usize,
+            n_layers + 2,
+            "attention rank #{i}: coalesced tick must be n_layers + 2 envelopes"
+        );
+    }
+    // baseline: embed + attn per layer + a separate router command per
+    // MoE layer + lm_head
+    let (deltas, n_layers, n_dense) = decode_tick_submissions(default_cfg());
+    for (i, &delta) in deltas.iter().enumerate() {
+        assert_eq!(
+            delta as usize,
+            2 * n_layers - n_dense + 2,
+            "attention rank #{i}: baseline tick must be 2*n_layers - n_dense + 2 commands"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault semantics mid-batch.
+
+#[test]
+fn hung_device_times_out_whole_batch_under_coalesced() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let (mut engine, _bd) = Engine::boot(coalesced_cfg()).unwrap();
+    for r in workload::gen_mixed(8, 3).expect("workload") {
+        engine.submit(r).expect("submit");
+    }
+    engine.step().expect("healthy step");
+
+    let victim = engine.attn_order[0];
+    for ex in engine.executors.values_mut() {
+        ex.handle.cmd_timeout = Duration::from_millis(300);
+    }
+    engine.executors[&victim].handle.set_failed(FailureBehavior::Hung);
+
+    let t0 = Instant::now();
+    let err = engine.step().expect_err("a hung device must fail the whole envelope");
+    let elapsed = t0.elapsed();
+    assert!(err.to_string().contains("timed out"), "expected a timeout error, got: {err}");
+    // the batch deadline scales with the call count but stays bounded
+    assert!(elapsed < Duration::from_secs(10), "timeout must be deadline-bounded: {elapsed:?}");
+    let ann = engine.detect_failure().expect("heartbeat sweep must flag the hung device");
+    assert_eq!(ann.device, victim);
+    engine.shutdown();
+}
+
+#[test]
+fn erroring_device_mid_run_surfaces_and_is_flagged_under_coalesced() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let (mut engine, _bd) = Engine::boot(coalesced_cfg()).unwrap();
+    for r in workload::gen_mixed(8, 5).expect("workload") {
+        engine.submit(r).expect("submit");
+    }
+    engine.step().expect("healthy step");
+
+    // kill an expert rank: the envelope fails at wait, never silently
+    let victim = engine.moe_order[0];
+    engine.executors[&victim].handle.set_failed(FailureBehavior::Erroring);
+    let err = engine.step().expect_err("a dead device must fail the decode tick");
+    assert!(err.to_string().contains("device failed"), "expected a device error, got: {err}");
+    let ann = engine.detect_failure().expect("heartbeat sweep must flag the dead device");
+    assert_eq!(ann.device, victim);
+    engine.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Allocation accounting.
+
+#[test]
+fn warmed_coalesced_tick_allocates_strictly_less_than_baseline() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // twin engines, identical traffic, measured at the same tick index so
+    // sequence state (and token-vector growth) matches exactly; plain
+    // `step()` keeps the time-paced heartbeat sweep (which pings over a
+    // fresh channel) out of the measurement
+    let measure = |cfg: DeploymentConfig| -> u64 {
+        let (mut engine, _bd) = Engine::boot(cfg).unwrap();
+        for r in workload::gen_mixed(8, 11).expect("workload") {
+            engine.submit(r).expect("submit");
+        }
+        for _ in 0..3 {
+            engine.step().expect("warmup tick");
+        }
+        let before = allocs_here();
+        engine.step().expect("measured tick");
+        let delta = allocs_here() - before;
+        engine.shutdown();
+        delta
+    };
+    let baseline = measure(default_cfg());
+    let coalesced = measure(coalesced_cfg());
+    assert!(
+        coalesced < baseline,
+        "a warmed coalesced tick must allocate strictly less than the \
+         per-command baseline: {coalesced} vs {baseline} allocations"
+    );
+}
+
+#[test]
+fn sample_ring_push_is_allocation_free_after_construction() {
+    let mut ring = SampleRing::with_capacity(64);
+    ring.push(0.5); // warm: first write into the eagerly sized buffer
+    let before = allocs_here();
+    for i in 0..10_000 {
+        ring.push(i as f64);
+    }
+    let delta = allocs_here() - before;
+    assert_eq!(delta, 0, "SampleRing::push allocated {delta} times");
+    assert_eq!(ring.len(), 64);
+    assert_eq!(ring.total(), 10_001);
+
+    // the per-step record path rides the same ring
+    let mut stats = ServingStats::default();
+    stats.record_decode_step(Duration::from_micros(250));
+    let before = allocs_here();
+    for _ in 0..1_000 {
+        stats.record_decode_step(Duration::from_micros(250));
+    }
+    let delta = allocs_here() - before;
+    assert_eq!(delta, 0, "record_decode_step allocated {delta} times");
+}
+
+#[test]
+fn arena_buffer_round_trip_is_allocation_free() {
+    // the exact recycle discipline of the decode arena: pooled arg/call
+    // buffers are popped, filled, shipped (simulated drain), ridden back,
+    // cleared, and pushed — across "ticks" — without touching the heap
+    let name: Arc<str> = Arc::from("layers.0.attn_decode");
+    let mut args_pool: Vec<Vec<Arg>> = Vec::with_capacity(4);
+    for _ in 0..4 {
+        args_pool.push(Vec::with_capacity(8));
+    }
+    let mut calls_pool: Vec<Vec<ExecCall>> = Vec::with_capacity(2);
+    for _ in 0..2 {
+        calls_pool.push(Vec::with_capacity(4));
+    }
+    let mut results: Vec<ExecResult> = Vec::with_capacity(4);
+
+    let before = allocs_here();
+    for _tick in 0..100 {
+        let mut calls = calls_pool.pop().expect("calls pool");
+        for ci in 0..2 {
+            let mut args = args_pool.pop().expect("args pool");
+            args.push(Arg::Weight(Arc::clone(&name)));
+            args.push(Arg::PrevOut { call: ci, out: 1 });
+            calls.push(ExecCall { exe: Arc::clone(&name), args });
+        }
+        // device side: drain the envelope, ride the buffers back
+        for c in calls.drain(..) {
+            results.push(ExecResult { exe: c.exe, outputs: Ok(Vec::new()), args: c.args });
+        }
+        // coordinator side: recycle into the arena
+        for mut r in results.drain(..) {
+            r.args.clear();
+            args_pool.push(r.args);
+        }
+        calls_pool.push(calls);
+    }
+    let delta = allocs_here() - before;
+    assert_eq!(delta, 0, "arena round-trip allocated {delta} times over 100 ticks");
+}

@@ -3,7 +3,7 @@
 # placeholder/real-run convention, so the checked-in files cannot rot
 # silently (wired into ci.yml).
 #
-# The convention (shared by all three benches):
+# The convention (shared by every bench that writes a baseline):
 #   - every file is valid JSON with a "bench" name and a "rows" array;
 #     decode_throughput predates "rows" and uses "shapes" instead;
 #   - a *placeholder* (no toolchain ran the bench) declares
@@ -35,7 +35,7 @@ if not FILES:
 # every bench target checks in a baseline; keep this count in lockstep
 # with the [[bench]] JSON-writing targets so a new bench cannot land
 # without one (or an old baseline vanish unnoticed)
-EXPECTED = 6
+EXPECTED = 7
 if FILES and len(FILES) != EXPECTED:
     failures.append(
         f"expected {EXPECTED} BENCH_*.json baselines, found {len(FILES)}: "
@@ -55,7 +55,7 @@ def rows_of(doc):
 def null_metrics(rows):
     """(nulls, non_nulls) over every non-identity field of every row."""
     identity = {"scenario", "strategy", "mode", "label", "ranks", "scope",
-                "degraded_serving", "attn_ranks", "ctx"}
+                "degraded_serving", "attn_ranks", "batch_per_rank", "ctx"}
     nulls = non_nulls = 0
     for row in rows:
         if not isinstance(row, dict):
