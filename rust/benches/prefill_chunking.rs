@@ -16,7 +16,15 @@
 //!   p50, chunk/preemption counters, completions;
 //! - **KV pressure**: long prompts against a deliberately small pool so
 //!   decode must preempt — mirror spill/restore (lossless) vs the lossy
-//!   re-prefill fallback, counting recomputed tokens.
+//!   re-prefill fallback, counting recomputed tokens;
+//! - **coalesced prefill**: per-command vs per-segment-envelope prefill
+//!   submission (`coalesced_submission`) on the monolithic and chunked
+//!   paths — attention-rank submissions per committed prefill pass (the
+//!   [`ServingStats`] counter the integration suite pins to the
+//!   device-side `DeviceStats.execute_cmds` truth) plus the TTFT
+//!   queue/prefill split the saved round-trips land in.
+//!
+//! [`ServingStats`]: revivemoe::metrics::ServingStats
 //!
 //! Run: `cargo bench --bench prefill_chunking` (or
 //! `scripts/bench_chunking.sh` from the repo root, which also refreshes
@@ -115,6 +123,63 @@ fn main() {
                 ("seqs_preempted", num(st.seqs_preempted as f64)),
                 ("completed", num(report.completed.len() as f64)),
                 ("incomplete", num(report.incomplete as f64)),
+                ("ticks", num(report.ticks as f64)),
+            ]));
+            engine.shutdown();
+        }
+    }
+
+    // Coalesced prefill: envelopes per committed pass — one per fan-out
+    // segment with `coalesced_submission` on, one per command off —
+    // under monolithic and chunked serving on the same canned surge
+    println!("\nCoalesced prefill: attention-rank submissions per committed pass\n");
+    println!(
+        "{:<18} {:<12} {:>9} {:>9} {:>11} {:>9} {:>5}",
+        "label", "mode", "subs/pass", "ttft_p50", "prefill_p50", "queue_p50", "done"
+    );
+    for &(label, chunk, budget) in &[("monolithic", 0usize, 0usize), ("chunk32+budget64", 32, 64)]
+    {
+        for &(mode, coalesced) in &[("per-command", false), ("coalesced", true)] {
+            let scenario = Scenario::by_name("rate-surge", 21).expect("canned").requests(requests);
+            let mut cfg = cfg_with(chunk, budget);
+            cfg.coalesced_submission = coalesced;
+            let (engine, _bd) = match Engine::boot(cfg) {
+                Ok(x) => x,
+                Err(e) => {
+                    println!("{label:<18} {mode:<12} SKIP (boot: {e})");
+                    continue;
+                }
+            };
+            let (engine, report) =
+                match run_scenario(engine, &scenario, RecoveryStrategy::ReviveMoE) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        println!("{label:<18} {mode:<12} FAILED: {e}");
+                        continue;
+                    }
+                };
+            let st = &report.stats;
+            println!(
+                "{:<18} {:<12} {:>9.1} {:>9.1} {:>11.1} {:>9.1} {:>5}",
+                label,
+                mode,
+                report.prefill_submissions_per_pass(),
+                st.ttft_p50(),
+                st.ttft_prefill_p50(),
+                st.ttft_queue_p50(),
+                report.completed.len()
+            );
+            rows.push(obj(vec![
+                ("scenario", s("coalesced-prefill")),
+                ("label", s(label)),
+                ("mode", s(mode)),
+                ("prefill_subs_per_pass", num(report.prefill_submissions_per_pass())),
+                ("prefill_passes", num(st.prefill_passes as f64)),
+                ("prefill_submissions", num(st.prefill_submissions as f64)),
+                ("ttft_p50_ms", num(st.ttft_p50())),
+                ("ttft_queue_p50_ms", num(st.ttft_queue_p50())),
+                ("ttft_prefill_p50_ms", num(st.ttft_prefill_p50())),
+                ("completed", num(report.completed.len() as f64)),
                 ("ticks", num(report.ticks as f64)),
             ]));
             engine.shutdown();

@@ -286,9 +286,16 @@ pub struct DeploymentConfig {
     /// allocation-free steady-state tick. On MoE layers the attention
     /// call and the router chain device-side via
     /// [`crate::runtime::Arg::PrevOut`], halving those round-trips.
-    /// Token streams and event logs are identical either way
-    /// (`tests/integration_coalesced.rs` equivalence-gates all canned
-    /// scenarios); off (default) = the per-command baseline, matching the
+    /// The prefill forward coalesces under the same knob: one envelope
+    /// per layer segment with the router chained behind the attention
+    /// call ([`crate::runtime::Arg::PrevOutReshaped`] flattens its
+    /// input device-side) and the chunk's K/V riding back in the reply,
+    /// so a committed monolithic pass drops to `n_layers + 2`
+    /// attention-rank submissions. Token streams and event logs are
+    /// identical either way (`tests/integration_coalesced.rs` and
+    /// `tests/integration_coalesced_prefill.rs` equivalence-gate all
+    /// canned scenarios, the latter across the chunking cross-product);
+    /// off (default) = the per-command baseline, matching the
     /// `serial_data_plane` A/B convention.
     pub coalesced_submission: bool,
 }

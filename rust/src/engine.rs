@@ -227,6 +227,14 @@ pub struct Engine {
     pub recovering: bool,
 }
 
+/// Envelope-deadline weight for prefill calls
+/// ([`crate::runtime::DeviceHandle::batch_deadline`]): a bucket-sized
+/// prefill call does O(bucket) the work of a decode step, so each call in
+/// a prefill envelope is granted this many single-command budgets. Kept
+/// small so a hung device mid-envelope still times out in a few command
+/// budgets rather than a wall-clock-scale multiple.
+const PREFILL_CALL_COST: u32 = 2;
+
 /// Reusable decode-tick assembly buffers (ROADMAP "zero-allocation decode
 /// tick"). One instance lives on the [`Engine`]; every tick clears and
 /// refills it, recycling the per-rank id/len vectors through pools, so
@@ -1521,20 +1529,61 @@ impl Engine {
         start: usize,
         end: usize,
     ) -> Result<bool> {
-        let (mut toks, ctx) = {
+        // the scratch leaves the engine for the duration of the pass
+        // (same discipline as `decode_step`): both bodies stage tokens
+        // through its recycled buffer, and the coalesced body draws its
+        // envelope arg/call buffers from the same arena
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let r = if self.cfg.coalesced_submission {
+            self.prefill_range_coalesced(dev, seq_id, start, end, &mut scratch)
+        } else {
+            self.prefill_range_inner(dev, seq_id, start, end, &mut scratch)
+        };
+        self.scratch = scratch;
+        r
+    }
+
+    /// Stage the recomputed prefix `[0, end)` of `seq_id`'s prompt into
+    /// the recycled token buffer, padded to the covering prefill bucket.
+    /// Returns `(s_bucket, ctx)`; the tokens land in `scratch.toks` so a
+    /// chunked prefill stops allocating O(prefix) per chunk.
+    fn stage_prefill_tokens(
+        &self,
+        dev: DeviceId,
+        seq_id: SeqId,
+        end: usize,
+        scratch: &mut DecodeScratch,
+    ) -> Result<(usize, usize)> {
+        let ctx = {
             let a = self.executors[&dev].attn.as_ref().unwrap();
             let s = a.sched.running.iter().find(|s| s.id == seq_id).unwrap();
-            let t: Vec<i32> = s.prompt[..end].iter().map(|&t| t as i32).collect();
-            (t, s.prompt.len())
+            scratch.toks.clear();
+            scratch.toks.extend(s.prompt[..end].iter().map(|&t| t as i32));
+            s.prompt.len()
         };
         let s_bucket = self
             .cfg
             .prefill_bucket(end)
             .ok_or_else(|| anyhow::anyhow!("prompt longer than any prefill bucket"))?;
-        toks.resize(s_bucket, 0);
+        scratch.toks.resize(s_bucket, 0);
+        Ok((s_bucket, ctx))
+    }
 
-        // reserve pages for the chunk's rows (its own undo-log step);
-        // under KV pressure the chunked path spills a victim and retries
+    /// Reserve pages for prompt rows `[start, end)` of `seq_id` — the
+    /// chunk's own undo-log step. Under KV pressure the chunked path
+    /// spills a victim ([`Engine::preempt_one`]) and retries, demoting
+    /// the sequence itself when nothing can spill; with both knobs off
+    /// the allocation error propagates untouched. Shared by the
+    /// per-command and coalesced prefill bodies so the reserve/undo/spill
+    /// discipline cannot drift between them. Returns `Ok(false)` when
+    /// the sequence was demoted and re-queued.
+    fn reserve_prefill_rows(
+        &mut self,
+        dev: DeviceId,
+        seq_id: SeqId,
+        start: usize,
+        end: usize,
+    ) -> Result<bool> {
         let chunked = self.chunked_path();
         loop {
             let reserved = {
@@ -1550,7 +1599,7 @@ impl Engine {
                 r
             };
             match reserved {
-                Ok(()) => break,
+                Ok(()) => return Ok(true),
                 Err(e) => {
                     if !chunked {
                         return Err(e);
@@ -1597,17 +1646,45 @@ impl Engine {
                 }
             }
         }
+    }
+
+    /// Per-command prefill body (`coalesced_submission` off — the
+    /// byte-for-byte baseline): blocking embed/attention round-trips per
+    /// layer, with the FFN wave submitted before the layer's KV scatter
+    /// so devices chew while the host writes pages.
+    fn prefill_range_inner(
+        &mut self,
+        dev: DeviceId,
+        seq_id: SeqId,
+        start: usize,
+        end: usize,
+        scratch: &mut DecodeScratch,
+    ) -> Result<bool> {
+        let (s_bucket, ctx) = self.stage_prefill_tokens(dev, seq_id, end, scratch)?;
+        if !self.reserve_prefill_rows(dev, seq_id, start, end)? {
+            return Ok(false);
+        }
 
         let d_model = self.meta.d_model;
+        // attention-rank submissions this pass issues (embed now; attn +
+        // router per layer and the head counted as they go)
+        let mut subs: u64 = 1;
         let mut x = {
             let ex = self.executors.get_mut(&dev).unwrap();
-            ex.embed_prefill(s_bucket, &toks)? // [1,s,d]
+            ex.embed_prefill(s_bucket, &scratch.toks)? // [1,s,d]
+        };
+        // the chunk's block table is fixed once its rows are reserved:
+        // clone it once for every layer's scatter
+        let table = {
+            let a = self.executors[&dev].attn.as_ref().unwrap();
+            a.blocks.table(seq_id).unwrap().clone()
         };
         for li in 0..self.meta.n_layers {
             let (h, ffn_in, k, v) = {
                 let ex = self.executors.get_mut(&dev).unwrap();
                 ex.attn_prefill(s_bucket, li, &x)?
             };
+            subs += 1;
             // zero-copy flatten [1,s,d] -> [s,d] for the FFN half
             let flat = ffn_in.into_shape(vec![s_bucket, d_model])?;
             // submit the FFN half first, then scatter this layer's K/V into
@@ -1620,11 +1697,11 @@ impl Engine {
                 let mask = self.expert_map.gate_mask();
                 let mut w = ExecWave::new(self.cfg.serial_data_plane);
                 w.push(self.executors[&dev].submit_router(s_bucket, li, &flat, &mask)?)?;
+                subs += 1;
                 w
             };
             {
                 let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
-                let table = a.blocks.table(seq_id).unwrap().clone();
                 // only the chunk's new rows land in the pool; the prefix
                 // rows the forward recomputed are already resident
                 a.kv.scatter_rows(li, &table, start, end - start, &k, &v)?;
@@ -1639,7 +1716,7 @@ impl Engine {
                 Self::collect_dense(wave)?
             } else {
                 let (idx, wt) = router_out(wave.collect()?.pop().unwrap())?;
-                self.moe_routed_valid(li, &flat, &idx, &wt, end, s_bucket)?
+                self.moe_routed_valid(li, &flat, &idx, &wt, end, s_bucket, None)?
             };
             let mut hx = h;
             // x = h + ffn_out (zero-copy broadcast back to [1,s,d])
@@ -1653,6 +1730,7 @@ impl Engine {
             let s = a.sched.get_running_mut(seq_id).unwrap();
             s.state = SeqState::Prefilling { next_row: end };
             a.blocks.begin_step(); // chunk committed: clear its undo log
+            self.stats.record_prefill_pass(subs);
             return Ok(true);
         }
         // head over all positions; the first generated token comes from the
@@ -1662,12 +1740,25 @@ impl Engine {
             let ex = self.executors.get_mut(&dev).unwrap();
             ex.lm_head(s_bucket, &flat)?
         };
+        subs += 1;
         let next = logits.argmax_rows()?[ctx - 1] as Token;
+        self.finish_prefill_pass(dev, seq_id, next, subs)
+    }
+
+    /// Shared tail of a *final* prefill chunk: record the first token
+    /// (flipping the sequence Running before `push_token` so a
+    /// first-token EOS/budget Finish is not overwritten — a no-op on the
+    /// lockstep path, which admits straight to Running), commit the undo
+    /// log, and file TTFT plus the pass's submission count.
+    fn finish_prefill_pass(
+        &mut self,
+        dev: DeviceId,
+        seq_id: SeqId,
+        next: Token,
+        subs: u64,
+    ) -> Result<bool> {
         let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
         let s = a.sched.get_running_mut(seq_id).unwrap();
-        // the final chunk leaves the Prefilling phase — set Running BEFORE
-        // push_token so a first-token EOS/budget Finish is not overwritten
-        // (a no-op on the lockstep path, which admits straight to Running)
         s.state = SeqState::Running;
         s.push_token(next);
         let (arrived, admitted_at) = (s.arrived, s.admitted_at);
@@ -1680,7 +1771,187 @@ impl Engine {
                 }
             }
         }
+        self.stats.record_prefill_pass(subs);
         Ok(true)
+    }
+
+    /// Coalesced twin of [`Self::prefill_range_inner`]
+    /// (`coalesced_submission` on): the chunk forward rides one
+    /// `ExecuteBatch` envelope per fan-out segment on the attention rank
+    /// — embed; then per layer the attention half with the router chained
+    /// device-side behind it on MoE layers ([`Arg::PrevOutReshaped`]
+    /// flattens `ffn_in` to the router's `[s,d]` lowering on the device
+    /// thread); then the head — so a full pass costs `n_layers + 2`
+    /// submissions instead of the baseline's
+    /// `2*n_layers - n_dense_layers + 2`. Segments cannot merge further:
+    /// every layer ends at a host-mediated fan-out (the dense TP wave or
+    /// the MoE dispatch/combine) plus the host-side residual add, exactly
+    /// like the decode tick's fan-out points. Each layer's K/V ride back
+    /// as `attn_prefill` outputs inside the [`BatchReply`], and the host
+    /// scatters/mirrors them only after `check_batch_errors` swept the
+    /// collected envelope — abort-before-commit, so a fault mid-envelope
+    /// leaves the chunk's undo-log step rollback-ready with no partial KV
+    /// committed. Reservation/spill/demote and the commit/TTFT tail are
+    /// shared with the baseline body ([`Self::reserve_prefill_rows`],
+    /// [`Self::finish_prefill_pass`]); buffers come from the
+    /// [`DecodeScratch`] arena.
+    fn prefill_range_coalesced(
+        &mut self,
+        dev: DeviceId,
+        seq_id: SeqId,
+        start: usize,
+        end: usize,
+        scratch: &mut DecodeScratch,
+    ) -> Result<bool> {
+        // recycle anything a fault-aborted pass stranded before reuse
+        scratch.reset();
+        let (s_bucket, ctx) = self.stage_prefill_tokens(dev, seq_id, end, scratch)?;
+        if !self.reserve_prefill_rows(dev, seq_id, start, end)? {
+            return Ok(false);
+        }
+
+        let serial = self.cfg.serial_data_plane;
+        let d_model = self.meta.d_model;
+        let mut subs: u64 = 0;
+
+        // segment 1: embed, a single-call envelope (the layer envelopes
+        // need its output host-side — the residual stream starts here)
+        {
+            let ex = &self.executors[&dev];
+            let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+            let args = scratch.args_pool.pop().unwrap_or_default();
+            calls.push(ex.embed_prefill_call(s_bucket, &scratch.toks, args));
+            let deadline = ex.handle.batch_deadline(calls.len(), PREFILL_CALL_COST);
+            submit_envelope(
+                ex.handle.submit_execute_batch_within(calls, deadline),
+                serial,
+                &mut scratch.pending,
+                &mut scratch.replies,
+            )?;
+            subs += 1;
+        }
+        collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+        check_batch_errors(&scratch.replies)?;
+        anyhow::ensure!(scratch.replies.len() == 1, "expected one embed-prefill reply");
+        let mut x = out1(take_single(
+            &mut scratch.args_pool,
+            &mut scratch.calls_pool,
+            scratch.replies.pop().unwrap(),
+        )?)?;
+
+        // the chunk's block table is fixed once its rows are reserved:
+        // clone it once for every layer's scatter
+        let table = {
+            let a = self.executors[&dev].attn.as_ref().unwrap();
+            a.blocks.table(seq_id).unwrap().clone()
+        };
+
+        for li in 0..self.meta.n_layers {
+            let is_dense = li < self.meta.n_dense_layers;
+            // gate mask once per MoE layer, as in the baseline's router wave
+            let mask = if is_dense { Vec::new() } else { self.expert_map.gate_mask() };
+            {
+                let ex = &self.executors[&dev];
+                let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+                let args = scratch.args_pool.pop().unwrap_or_default();
+                calls.push(ex.attn_prefill_call(s_bucket, li, &x, args));
+                if !is_dense {
+                    let args = scratch.args_pool.pop().unwrap_or_default();
+                    calls.push(ex.router_prefill_call_chained(
+                        s_bucket, li, 0, d_model, &mask, args,
+                    ));
+                }
+                let deadline = ex.handle.batch_deadline(calls.len(), PREFILL_CALL_COST);
+                submit_envelope(
+                    ex.handle.submit_execute_batch_within(calls, deadline),
+                    serial,
+                    &mut scratch.pending,
+                    &mut scratch.replies,
+                )?;
+                subs += 1;
+            }
+            // one collect yields the layer's h/ffn_in/K/V (and, on MoE
+            // layers, the router verdicts); errors are swept before any
+            // KV write so abort-before-commit semantics hold
+            collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+            check_batch_errors(&scratch.replies)?;
+            let expected = if is_dense { 1 } else { 2 };
+            let reply = scratch.replies.pop().unwrap();
+            let BatchReply { mut results, calls_buf } = reply;
+            anyhow::ensure!(
+                results.len() == expected,
+                "prefill envelope returned {} results, expected {expected}",
+                results.len()
+            );
+            let router_res = if is_dense { None } else { results.pop() };
+            let attn_res = results.pop().unwrap();
+            scratch.calls_pool.push(calls_buf);
+            let (h, ffn_in, k, v) = out4(attn_res.outputs?)?;
+            recycle_args(&mut scratch.args_pool, attn_res.args);
+            {
+                let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+                // only the chunk's new rows land in the pool; the prefix
+                // rows the forward recomputed are already resident
+                a.kv.scatter_rows(li, &table, start, end - start, &k, &v)?;
+            }
+            if let Some(m) = self.kv_mirror.as_mut() {
+                // host mirror: the first chunk (or a whole re-prefill
+                // after a lossy migration) rewrites the entry, so stale
+                // rows can never linger; later chunks append in order
+                m.record_prefill_range(seq_id, li, start, end, &k, &v)?;
+            }
+            // zero-copy flatten [1,s,d] -> [s,d] for the FFN half
+            let flat = ffn_in.into_shape(vec![s_bucket, d_model])?;
+            let ffn_out = if is_dense {
+                self.dense_layer_coalesced(li, &flat, s_bucket, scratch)?
+            } else {
+                let r = router_res.unwrap();
+                let (idx, wt) = router_out(r.outputs?)?;
+                recycle_args(&mut scratch.args_pool, r.args);
+                self.moe_routed_valid(li, &flat, &idx, &wt, end, s_bucket, Some(scratch))?
+            };
+            let mut hx = h;
+            // x = h + ffn_out (zero-copy broadcast back to [1,s,d])
+            hx.add_assign(&ffn_out.into_shape(vec![1, s_bucket, d_model])?)?;
+            x = hx;
+        }
+        if end < ctx {
+            // mid-prefill chunk: no head, no token — commit the chunk and
+            // record where the next one picks up
+            let a = self.executors.get_mut(&dev).unwrap().attn.as_mut().unwrap();
+            let s = a.sched.get_running_mut(seq_id).unwrap();
+            s.state = SeqState::Prefilling { next_row: end };
+            a.blocks.begin_step(); // chunk committed: clear its undo log
+            self.stats.record_prefill_pass(subs);
+            return Ok(true);
+        }
+        // final segment: the head over all positions, one envelope; the
+        // first generated token comes from the last *valid* position
+        let flat = x.into_shape(vec![s_bucket, d_model])?;
+        {
+            let ex = &self.executors[&dev];
+            let mut calls = scratch.calls_pool.pop().unwrap_or_default();
+            let args = scratch.args_pool.pop().unwrap_or_default();
+            calls.push(ex.lm_head_call(s_bucket, &flat, args));
+            let deadline = ex.handle.batch_deadline(calls.len(), PREFILL_CALL_COST);
+            submit_envelope(
+                ex.handle.submit_execute_batch_within(calls, deadline),
+                serial,
+                &mut scratch.pending,
+                &mut scratch.replies,
+            )?;
+            subs += 1;
+        }
+        collect_pending(&mut scratch.pending, &mut scratch.replies)?;
+        check_batch_errors(&scratch.replies)?;
+        anyhow::ensure!(scratch.replies.len() == 1, "expected one lm-head reply");
+        let logits = out1(take_single(
+            &mut scratch.args_pool,
+            &mut scratch.calls_pool,
+            scratch.replies.pop().unwrap(),
+        )?)?;
+        let next = logits.argmax_rows()?[ctx - 1] as Token;
+        self.finish_prefill_pass(dev, seq_id, next, subs)
     }
 
     // -- decode step -------------------------------------------------------------
@@ -2309,11 +2580,14 @@ impl Engine {
             let ex = self.executors.get_mut(&dev).unwrap();
             ex.router(s_bucket, li, x, &mask)?
         };
-        self.moe_routed_valid(li, x, &idx, &wt, valid, s_bucket)
+        self.moe_routed_valid(li, x, &idx, &wt, valid, s_bucket, None)
     }
 
     /// Route the first `valid` rows of `[s,d]` through the MoE data plane
-    /// and pad the result back to `[s_bucket, d]`.
+    /// and pad the result back to `[s_bucket, d]`. `arena` picks the
+    /// fan-out style exactly as in [`Self::moe_layer_routed_impl`]:
+    /// `None` is the per-command baseline, `Some` draws envelopes from
+    /// the scratch arena (the coalesced prefill body).
     fn moe_routed_valid(
         &mut self,
         li: usize,
@@ -2322,10 +2596,18 @@ impl Engine {
         wt: &[f32],
         valid: usize,
         s_bucket: usize,
+        arena: Option<&mut DecodeScratch>,
     ) -> Result<Tensor> {
         let k = self.meta.top_k;
         let valid_x = Tensor::f32(vec![valid, self.meta.d_model], x.rows(0, valid)?.to_vec());
-        let out = self.moe_layer_routed(li, &valid_x, &idx[..valid * k], &wt[..valid * k], valid)?;
+        let out = self.moe_layer_routed_impl(
+            li,
+            &valid_x,
+            &idx[..valid * k],
+            &wt[..valid * k],
+            valid,
+            arena,
+        )?;
         out.pad_rows(s_bucket)
     }
 

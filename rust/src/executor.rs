@@ -615,16 +615,34 @@ impl Executor {
         out1(self.submit_lm_head(bucket, x)?.wait()?)
     }
 
+    fn embed_prefill_name(&self, s: usize) -> Arc<str> {
+        self.names.get(NameKey::EmbedPrefill(s), || artifacts::embed_prefill(s))
+    }
+
+    fn attn_prefill_name(&self, s: usize) -> Arc<str> {
+        self.names.get(NameKey::AttnPrefill(s), || artifacts::attn_prefill(s))
+    }
+
+    fn fill_embed_prefill(&self, s: usize, toks: &[i32], args: &mut Vec<Arg>) {
+        args.push(Arg::Value(Tensor::i32(vec![1, s], toks.to_vec())));
+        args.push(Arg::Weight(self.names.get(NameKey::Embed, || "embed".into())));
+        args.push(Arg::Weight(self.names.get(NameKey::Pos, || "pos".into())));
+    }
+
     /// Prefill-path embed for one sequence padded to seq bucket `s`.
     pub fn embed_prefill(&self, s: usize, toks: &[i32]) -> Result<Tensor> {
-        let args = vec![
-            Arg::Value(Tensor::i32(vec![1, s], toks.to_vec())),
-            Arg::Weight(self.names.get(NameKey::Embed, || "embed".into())),
-            Arg::Weight(self.names.get(NameKey::Pos, || "pos".into())),
-        ];
-        let exe = self.names.get(NameKey::EmbedPrefill(s), || artifacts::embed_prefill(s));
-        let out = self.handle.submit_execute_interned(&exe, args)?.wait()?;
+        let mut args = Vec::with_capacity(3);
+        self.fill_embed_prefill(s, toks, &mut args);
+        let out = self.handle.submit_execute_interned(&self.embed_prefill_name(s), args)?.wait()?;
         Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Build the prefill-embed call for a coalesced envelope; `args` is a
+    /// recycled (empty, capacity-retaining) arena buffer.
+    pub fn embed_prefill_call(&self, s: usize, toks: &[i32], mut args: Vec<Arg>) -> ExecCall {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        self.fill_embed_prefill(s, toks, &mut args);
+        ExecCall { exe: self.embed_prefill_name(s), args }
     }
 
     /// One layer's attention half over a full prompt `[1,s,d]`.
@@ -635,12 +653,55 @@ impl Executor {
         layer: usize,
         x: &Tensor,
     ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
-        let mut args = vec![Arg::Value(x.clone())];
+        let mut args = Vec::with_capacity(1 + ATTN_WEIGHT_ORDER.len());
+        args.push(Arg::Value(x.clone()));
         self.push_attn_weight_args(layer, &mut args);
-        let exe = self.names.get(NameKey::AttnPrefill(s), || artifacts::attn_prefill(s));
-        let out = self.handle.submit_execute_interned(&exe, args)?.wait()?;
+        let out = self.handle.submit_execute_interned(&self.attn_prefill_name(s), args)?.wait()?;
         let mut it = out.into_iter();
         Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+    }
+
+    /// Build one layer's prefill-attention call for a coalesced envelope.
+    /// The reply carries all four outputs `(h, ffn_in, k, v)` — the
+    /// layer's K/V ride back inside the [`crate::runtime::BatchReply`],
+    /// so the host scatters/mirrors after one collect per envelope
+    /// instead of one blocking round-trip per layer. `args` is a recycled
+    /// arena buffer.
+    pub fn attn_prefill_call(
+        &self,
+        s: usize,
+        layer: usize,
+        x: &Tensor,
+        mut args: Vec<Arg>,
+    ) -> ExecCall {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        args.push(Arg::Value(x.clone()));
+        self.push_attn_weight_args(layer, &mut args);
+        ExecCall { exe: self.attn_prefill_name(s), args }
+    }
+
+    /// Build the prefill router call chained onto the `attn_prefill` call
+    /// at index `attn_call` earlier in the same envelope. The attention
+    /// half emits `ffn_in` as `[1,s,d]` while the router artifact was
+    /// lowered for `[s,d]`, so the chain rides
+    /// [`Arg::PrevOutReshaped`] — the device thread reinterprets the
+    /// output under the flat shape exactly as the host path's
+    /// `into_shape` flatten would, and attention + gate cost one
+    /// submission per rank per layer instead of two. `args` is a
+    /// recycled arena buffer.
+    pub fn router_prefill_call_chained(
+        &self,
+        s: usize,
+        layer: usize,
+        attn_call: usize,
+        d_model: usize,
+        mask: &[f32],
+        mut args: Vec<Arg>,
+    ) -> ExecCall {
+        debug_assert!(args.is_empty(), "arena buffers are recycled empty");
+        args.push(Arg::PrevOutReshaped { call: attn_call, out: 1, shape: vec![s, d_model] });
+        self.fill_router_tail(layer, mask, &mut args);
+        ExecCall { exe: self.router_name(s), args }
     }
 
     // -- MoE-role device ops -------------------------------------------------

@@ -32,9 +32,10 @@
 //!                                            rank's sequences from the
 //!                                            host-side KV mirror;
 //!                                            --coalesced batches each decode
-//!                                            fan-out into one ExecuteBatch
-//!                                            envelope per device, built from
-//!                                            recycled arena buffers (the
+//!                                            and prefill fan-out into one
+//!                                            ExecuteBatch envelope per device
+//!                                            per segment, built from recycled
+//!                                            arena buffers (the
 //!                                            zero-allocation tick);
 //!                                            --prefill-chunk splits prefills
 //!                                            into C-token chunks interleaved

@@ -364,6 +364,24 @@ pub struct ServingStats {
     /// Prefill chunks executed (equals `prefills` when chunking is off:
     /// every monolithic prefill counts as one chunk).
     pub chunks_prefilled: usize,
+    /// Execute-class submissions the prefill forward issued to its
+    /// attention rank, summed over every completed pass (chunk forward).
+    /// The per-command path pays `2*n_layers - n_dense_layers + 2` per
+    /// full pass (embed + attention per layer + a router command per MoE
+    /// layer + head); coalesced prefill pays `n_layers + 2` envelopes
+    /// (the router chained inside its layer's envelope). The bench and
+    /// the coalesced-prefill integration gate both read this counter —
+    /// one accounting site, in the engine, instead of each re-deriving
+    /// the formula from `ModelMeta`. FFN fan-out to dense/MoE ranks is
+    /// deliberately excluded: the tentpole claim is about the attention
+    /// rank's control path.
+    pub prefill_submissions: u64,
+    /// Completed prefill passes (chunk forwards) behind
+    /// [`ServingStats::prefill_submissions`]. Counts only passes whose
+    /// forward ran to the end of its chunk — aborted passes (device
+    /// fault mid-forward) and demotions under KV pressure never commit a
+    /// pass, matching every other committed-work counter here.
+    pub prefill_passes: u64,
     /// Preemptive drains: Suspect attention ranks retired through the
     /// lossless live-KV path *before* entering the failure path
     /// (predictive health, `HealthPolicy::enabled`). Accounted apart
@@ -512,6 +530,22 @@ impl ServingStats {
         self.decode_step_ms.mean()
     }
 
+    /// Record one completed prefill pass (chunk forward) and the
+    /// Execute-class submissions it issued to its attention rank.
+    pub fn record_prefill_pass(&mut self, submissions: u64) {
+        self.prefill_passes += 1;
+        self.prefill_submissions += submissions;
+    }
+
+    /// Mean attention-rank submissions per completed prefill pass — the
+    /// coalesced-prefill headline figure (0.0 before any pass ran).
+    pub fn prefill_submissions_per_pass(&self) -> f64 {
+        if self.prefill_passes == 0 {
+            return 0.0;
+        }
+        self.prefill_submissions as f64 / self.prefill_passes as f64
+    }
+
     /// Drain the per-step samples (bench phases reuse one engine and want
     /// each phase's samples in isolation). Resets the ring while keeping
     /// its buffer, so the next tick's record still does not allocate.
@@ -602,7 +636,7 @@ impl ServingStats {
              tput={:.1} tok/s goodput={:.2} req/s p50={:.1}ms p99={:.1}ms \
              ttft_p50={:.1}ms ttft_queue_p50={:.1}ms ttft_prefill_p50={:.1}ms \
              tpot_p50={:.2}ms step_p50={:.2}ms \
-             chunks={} preempted={} \
+             chunks={} preempted={} prefill_subs_per_pass={:.1} \
              recoveries={} stall={:.0}ms degraded={:.0}ms \
              full_stall_ticks={} degraded_ticks={} degraded_tok/tick={:.2} \
              preemptive_drains={} preemptive_swaps={} false_positive_drains={} \
@@ -625,6 +659,7 @@ impl ServingStats {
             self.decode_step_p50(),
             self.chunks_prefilled,
             self.seqs_preempted,
+            self.prefill_submissions_per_pass(),
             self.recoveries,
             self.stall_total_ms(),
             self.degraded_total_ms(),
@@ -772,6 +807,23 @@ mod tests {
         let r = s.report();
         assert!(r.contains("degraded_ticks=2"));
         assert!(r.contains("full_stall_ticks=1"));
+    }
+
+    #[test]
+    fn prefill_pass_accounting_averages_submissions() {
+        let mut s = ServingStats::default();
+        assert_eq!(s.prefill_submissions_per_pass(), 0.0, "no pass yet reports 0");
+        // a 4-layer / 1-dense model: per-command pass = 2*4 - 1 + 2 = 9,
+        // coalesced pass = 4 + 2 = 6
+        s.record_prefill_pass(9);
+        s.record_prefill_pass(9);
+        assert_eq!(s.prefill_passes, 2);
+        assert_eq!(s.prefill_submissions, 18);
+        assert!((s.prefill_submissions_per_pass() - 9.0).abs() < 1e-12);
+        s.record_prefill_pass(6);
+        assert!((s.prefill_submissions_per_pass() - 8.0).abs() < 1e-12);
+        let r = s.report();
+        assert!(r.contains("prefill_subs_per_pass=8.0"));
     }
 
     #[test]

@@ -47,14 +47,22 @@
 //! through [`Arg::PrevOut`] — e.g. the decode tick fuses `attn_decode` +
 //! `router` into one envelope per attention rank per MoE layer, the router
 //! consuming the attention call's `ffn_in` output without a host
-//! round-trip. Each call keeps its own success/error slot (one dead
-//! executable fails only its calls), health is recorded per call exactly
-//! like the per-command path, and the envelope deadline is fixed at
-//! submission scaled by call count ([`DeviceHandle::queued_deadline`]) so
-//! a hung device times out the whole batch. The [`Arg`] buffers ride back
-//! inside each [`ExecResult`] so the coordinator can recycle them into its
-//! per-tick arena instead of reallocating — the allocation-free
-//! steady-state tick depends on this round trip.
+//! round-trip. The prefill forward rides the same machinery: each layer's
+//! `attn_prefill` + chained router travel as one envelope, with the
+//! router's input reshaped device-side ([`Arg::PrevOutReshaped`] —
+//! argument shapes are static in the lowered HLO, so the `[1,s,d]` →
+//! `[s,d]` flatten the host path does with `Tensor::into_shape` must
+//! happen on the device thread) and the layer's K/V riding back as
+//! per-call outputs in the [`BatchReply`]. Each call keeps its own
+//! success/error slot (one dead executable fails only its calls), health
+//! is recorded per call exactly like the per-command path, and the
+//! envelope deadline is fixed at submission scaled by call count
+//! ([`DeviceHandle::queued_deadline`]; bucket-sized prefill calls scale
+//! further through [`DeviceHandle::batch_deadline`]) so a hung device
+//! times out the whole batch. The [`Arg`] buffers ride back inside each
+//! [`ExecResult`] so the coordinator can recycle them into its per-tick
+//! arena instead of reallocating — the allocation-free steady-state tick
+//! depends on this round trip.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -101,6 +109,23 @@ pub enum Arg {
         call: usize,
         /// Output index within that call's result tuple.
         out: usize,
+    },
+    /// [`Arg::PrevOut`] with a device-side reshape: the referenced output
+    /// is reinterpreted under `shape` (same element count, row-major)
+    /// before being fed to this call. The chained prefill router needs
+    /// this — `attn_prefill` emits `ffn_in` as `[1,s,d]` while the
+    /// router artifact was lowered for `[s,d]`, and XLA argument shapes
+    /// are static — so the flatten the host path performs with
+    /// `Tensor::into_shape` happens on the device thread instead of
+    /// forcing a host round-trip between the two calls.
+    PrevOutReshaped {
+        /// Index of the upstream call within the envelope.
+        call: usize,
+        /// Output index within that call's result tuple.
+        out: usize,
+        /// Static shape the output is reinterpreted under (element count
+        /// must match, like [`crate::tensor::Tensor::into_shape`]).
+        shape: Vec<usize>,
     },
 }
 
@@ -661,6 +686,10 @@ fn do_execute(
                 kinds.push(Err(owned.len()));
                 owned.push(prev_out(prior, *call, *out)?.to_literal()?);
             }
+            Arg::PrevOutReshaped { call, out, shape } => {
+                kinds.push(Err(owned.len()));
+                owned.push(prev_out(prior, *call, *out)?.to_literal_shaped(shape)?);
+            }
         }
     }
     let mut refs: Vec<&xla::Literal> = Vec::with_capacity(args.len());
@@ -868,6 +897,30 @@ impl DeviceHandle {
     /// per-command path where every call would error individually.
     pub fn submit_execute_batch(&self, calls: Vec<ExecCall>) -> Result<PendingBatch> {
         let deadline = self.queued_deadline(calls.len().saturating_sub(1));
+        self.submit_execute_batch_within(calls, deadline)
+    }
+
+    /// Deadline for an envelope whose calls are heavier than one
+    /// decode-sized command: each of the `n_calls` gets `cost_per_call`
+    /// command budgets instead of the one [`DeviceHandle::queued_deadline`]
+    /// grants. The coalesced *prefill* path scales through here — a
+    /// bucket-sized `attn_prefill` call runs the whole prompt, not one
+    /// decode row — so a healthy device chewing a long chunk is never
+    /// misread as hung, while a genuinely hung device still times out the
+    /// envelope in bounded time.
+    pub fn batch_deadline(&self, n_calls: usize, cost_per_call: u32) -> Duration {
+        self.cmd_timeout * (n_calls.max(1) as u32) * cost_per_call.max(1)
+    }
+
+    /// [`DeviceHandle::submit_execute_batch`] with an explicit envelope
+    /// deadline (fixed at submission, covering the whole batch). Callers
+    /// whose calls exceed one command's budget compute it via
+    /// [`DeviceHandle::batch_deadline`].
+    pub fn submit_execute_batch_within(
+        &self,
+        calls: Vec<ExecCall>,
+        deadline: Duration,
+    ) -> Result<PendingBatch> {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::ExecuteBatch { calls, reply: tx })?;
         Ok(Pending {
@@ -1266,6 +1319,29 @@ mod tests {
         assert!(e.to_string().contains("timed out"), "got: {e}");
         let waited = t0.elapsed();
         assert!(waited >= Duration::from_millis(150), "deadline scales by call count");
+        assert!(waited < Duration::from_secs(2), "wait must stay deadline-bounded");
+        d.handle.shutdown();
+        d.join.join().unwrap();
+    }
+
+    #[test]
+    fn batch_deadline_scales_by_calls_and_per_call_cost() {
+        let d = SimDevice::spawn(53);
+        let mut h = d.handle.clone();
+        h.cmd_timeout = Duration::from_millis(50);
+        assert_eq!(h.batch_deadline(3, 1), Duration::from_millis(150));
+        assert_eq!(h.batch_deadline(2, 2), Duration::from_millis(200), "cost multiplies");
+        assert_eq!(h.batch_deadline(0, 0), Duration::from_millis(50), "floors at one budget");
+        // submit_execute_batch_within honors the explicit deadline on a
+        // hung device: 2 bucket-sized calls at cost 2 = 4 command budgets
+        d.handle.set_failed(FailureBehavior::Hung);
+        let calls = (0..2).map(|_| ExecCall { exe: Arc::from("x"), args: vec![] }).collect();
+        let deadline = h.batch_deadline(2, 2);
+        let t0 = Instant::now();
+        let e = h.submit_execute_batch_within(calls, deadline).unwrap().wait().unwrap_err();
+        assert!(e.to_string().contains("timed out"), "got: {e}");
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(200), "cost-scaled deadline honored");
         assert!(waited < Duration::from_secs(2), "wait must stay deadline-bounded");
         d.handle.shutdown();
         d.join.join().unwrap();

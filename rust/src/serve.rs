@@ -230,6 +230,15 @@ impl ServeReport {
         crate::metrics::percentile(&v, p)
     }
 
+    /// Mean attention-rank submissions per committed prefill pass
+    /// ([`ServingStats::prefill_submissions_per_pass`]) — the counter the
+    /// prefill-envelope bench and the coalesced-prefill integration test
+    /// both read, so the reported drop and the asserted drop cannot
+    /// diverge.
+    pub fn prefill_submissions_per_pass(&self) -> f64 {
+        self.stats.prefill_submissions_per_pass()
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(

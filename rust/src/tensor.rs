@@ -115,6 +115,25 @@ impl Tensor {
         Ok(self)
     }
 
+    /// [`Tensor::to_literal`] under a reinterpreted shape (same element
+    /// count, row-major): the literal-side analog of
+    /// [`Tensor::into_shape`]. `Arg::PrevOutReshaped` resolves through
+    /// here on the device thread, feeding one batch call's output to the
+    /// next under the static shape its HLO was lowered for without
+    /// cloning the payload first.
+    pub fn to_literal_shaped(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        if n != self.len() {
+            bail!("cannot reinterpret {:?} ({} elems) as {shape:?}", self.shape, self.len());
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
     /// Convert to an `xla::Literal` (reshaped to `self.shape`).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
@@ -266,6 +285,16 @@ mod tests {
         assert_eq!(flat.shape, vec![2, 3]);
         assert_eq!(flat.row(1).unwrap(), &[4., 5., 6.]);
         assert!(flat.into_shape(vec![7]).is_err(), "element count must match");
+    }
+
+    #[test]
+    fn to_literal_shaped_reinterprets_and_guards_element_count() {
+        let t = Tensor::f32(vec![1, 2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal_shaped(&[2, 3]).unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.row(1).unwrap(), &[4., 5., 6.]);
+        assert!(t.to_literal_shaped(&[7]).is_err(), "element count must match");
     }
 
     #[test]

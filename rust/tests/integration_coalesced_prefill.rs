@@ -1,0 +1,255 @@
+//! Coalesced-prefill integration: the per-segment `ExecuteBatch` prefill
+//! path must be invisible to correctness and visible only to cost.
+//!
+//! 1. with `coalesced_submission` on, every canned fault scenario replays
+//!    **byte-for-byte** against the per-command baseline — on the
+//!    monolithic lockstep path and on the chunked continuous-batching
+//!    path (the cross-product gate), with the chunked runs' token streams
+//!    also pinned to the monolithic baseline's;
+//! 2. a committed prefill pass costs exactly **one** envelope per fan-out
+//!    segment on the owning attention rank (`n_layers + 2` per
+//!    monolithic pass: embed + one per layer with the router chained
+//!    device-side + head) versus the baseline's
+//!    `2*n_layers - n_dense_layers + 2`, asserted from [`DeviceStats`]
+//!    deltas — and the engine-side [`ServingStats`] prefill counters
+//!    (what the bench reports) must agree with the device-side truth;
+//! 3. a device that hangs mid-prefill-envelope times out the whole
+//!    envelope deadline-bounded, commits no partial KV (the pool audit
+//!    passes right after recovery), and the engine serves every request
+//!    to completion afterwards with byte-identical outputs.
+//!
+//! Engine tests need `make artifacts` (skipped loudly otherwise).
+//!
+//! [`DeviceStats`]: revivemoe::runtime::DeviceStats
+//! [`ServingStats`]: revivemoe::metrics::ServingStats
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use common::{assert_replay_identical, default_cfg, ready, run};
+use revivemoe::cluster::FailureBehavior;
+use revivemoe::config::DeploymentConfig;
+use revivemoe::engine::Engine;
+use revivemoe::recovery::ReviveMoE;
+use revivemoe::scenario::Scenario;
+use revivemoe::workload;
+
+fn coalesced_cfg() -> DeploymentConfig {
+    let mut cfg = default_cfg();
+    cfg.coalesced_submission = true;
+    cfg
+}
+
+/// Chunked continuous-batching knobs on top of `cfg` (the values
+/// `integration_chunked.rs` exercises: chunks smaller than most prompts,
+/// a budget spanning two chunks).
+fn chunked(mut cfg: DeploymentConfig) -> DeploymentConfig {
+    cfg.prefill_chunk_tokens = 24;
+    cfg.tick_token_budget = 48;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: the chunking x coalescing cross-product, every canned
+// scenario.
+
+#[test]
+fn coalesced_prefill_matches_baseline_replay_on_all_canned_scenarios() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    for name in Scenario::CANNED {
+        let scenario = Scenario::by_name(name, 21).expect(name).requests(12);
+        let baseline = run(default_cfg(), &scenario);
+        let coalesced = run(coalesced_cfg(), &scenario);
+        assert_eq!(baseline.incomplete, 0, "{name}: baseline stranded requests");
+        assert_eq!(coalesced.incomplete, 0, "{name}: coalesced stranded requests");
+        assert_replay_identical(&baseline, &coalesced);
+    }
+}
+
+#[test]
+fn chunked_coalesced_prefill_matches_chunked_baseline_on_all_canned_scenarios() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    for name in Scenario::CANNED {
+        let scenario = Scenario::by_name(name, 21).expect(name).requests(12);
+        // chunking changes the tick schedule, so the chunked pair is
+        // compared against itself over the full determinism surface and
+        // against the monolithic baseline over token streams only (the
+        // schedule-independent half)
+        let monolithic = run(default_cfg(), &scenario);
+        let baseline = run(chunked(default_cfg()), &scenario);
+        let coalesced = run(chunked(coalesced_cfg()), &scenario);
+        assert_eq!(baseline.incomplete, 0, "{name}: chunked baseline stranded requests");
+        assert_eq!(coalesced.incomplete, 0, "{name}: chunked coalesced stranded requests");
+        assert_replay_identical(&baseline, &coalesced);
+        assert_eq!(
+            monolithic.token_streams(),
+            coalesced.token_streams(),
+            "{name}: chunked coalesced tokens must match the monolithic baseline"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Submission counting: one envelope per attention rank per prefill segment.
+
+/// Pure attention ranks (no MoE shard, no dense shard): their
+/// [`revivemoe::runtime::DeviceStats::execute_cmds`] deltas are exactly
+/// the attention-plane fan-out. In the disaggregated default the dense
+/// shards live on MoE ranks, so all four attention ranks qualify.
+fn pure_attn_ranks(engine: &Engine) -> Vec<revivemoe::cluster::DeviceId> {
+    engine
+        .attn_order
+        .iter()
+        .copied()
+        .filter(|&d| {
+            let (is_attn, moe_rank, hosts_dense) = engine.device_role(d);
+            is_attn && moe_rank.is_none() && !hosts_dense
+        })
+        .collect()
+}
+
+/// Boot `cfg`, serve `n` single-token requests to completion, and return
+/// (sum of pure-attention-rank Execute-class submissions,
+/// engine-counted prefill submissions, prefill passes, n_layers,
+/// n_dense_layers). `max_new_tokens = 1` means every sequence finishes at
+/// its prefill-produced first token, so no decode tick ever submits and
+/// the device-side deltas are *exactly* the prefill passes.
+fn prefill_only_submissions(cfg: DeploymentConfig, n: usize) -> (u64, u64, u64, usize, usize) {
+    let (mut engine, _bd) = Engine::boot(cfg).unwrap();
+    let ranks = pure_attn_ranks(&engine);
+    assert!(!ranks.is_empty(), "disaggregated default must have pure attention ranks");
+    let before: Vec<u64> =
+        ranks.iter().map(|d| engine.executors[d].handle.stats().unwrap().execute_cmds).collect();
+    for mut r in workload::gen_mixed(n, 17).expect("workload") {
+        r.max_new_tokens = 1;
+        engine.submit(r).expect("submit");
+    }
+    let done = engine.run_to_completion(64).expect("serve");
+    assert_eq!(done.len(), n, "every single-token request must complete");
+    let device_total: u64 = ranks
+        .iter()
+        .zip(&before)
+        .map(|(d, b)| engine.executors[d].handle.stats().unwrap().execute_cmds - b)
+        .sum();
+    let (subs, passes) = (engine.stats.prefill_submissions, engine.stats.prefill_passes);
+    let (n_layers, n_dense) = (engine.meta.n_layers, engine.meta.n_dense_layers);
+    engine.shutdown();
+    (device_total, subs, passes, n_layers, n_dense)
+}
+
+#[test]
+fn coalesced_prefill_submits_one_envelope_per_segment() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // coalesced, monolithic: each pass is embed + one envelope per layer
+    // (router chained inside on MoE layers) + head
+    let (device, subs, passes, n_layers, _) = prefill_only_submissions(coalesced_cfg(), 8);
+    assert_eq!(passes, 8, "one committed pass per monolithic prefill");
+    assert_eq!(
+        device as usize,
+        8 * (n_layers + 2),
+        "coalesced pass must be n_layers + 2 envelopes"
+    );
+    assert_eq!(subs, device, "ServingStats must agree with the device-side counters");
+
+    // baseline: embed + attn per layer + a separate router command per
+    // MoE layer + head
+    let (device, subs, passes, n_layers, n_dense) = prefill_only_submissions(default_cfg(), 8);
+    assert_eq!(passes, 8, "one committed pass per monolithic prefill");
+    assert_eq!(
+        device as usize,
+        8 * (2 * n_layers - n_dense + 2),
+        "baseline pass must be 2*n_layers - n_dense + 2 commands"
+    );
+    assert_eq!(subs, device, "ServingStats must agree with the device-side counters");
+}
+
+#[test]
+fn chunked_coalesced_prefill_drops_submissions_and_counters_agree() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // chunked passes vary in shape (mid-chunk passes skip the head), so
+    // the formula assertion is replaced by the two invariants that hold
+    // regardless: the engine-side counters match the device-side truth
+    // in both modes, and coalescing strictly shrinks the total
+    let (dev_c, subs_c, passes_c, _, _) = prefill_only_submissions(chunked(coalesced_cfg()), 8);
+    let (dev_b, subs_b, passes_b, _, _) = prefill_only_submissions(chunked(default_cfg()), 8);
+    assert_eq!(subs_c, dev_c, "chunked coalesced: ServingStats vs device counters");
+    assert_eq!(subs_b, dev_b, "chunked baseline: ServingStats vs device counters");
+    assert_eq!(passes_c, passes_b, "chunking schedule must not depend on coalescing");
+    assert!(
+        dev_c < dev_b,
+        "chunked coalesced prefill must submit strictly less: {dev_c} vs {dev_b}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fault semantics mid-envelope.
+
+#[test]
+fn hung_device_mid_prefill_envelope_times_out_and_recovers_cleanly() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // healthy twin: the outputs every request must still produce after
+    // the fault (greedy decode is batching-independent, so prompt ->
+    // output is the invariant)
+    let expected: Vec<(Vec<revivemoe::scheduler::Token>, Vec<revivemoe::scheduler::Token>)> = {
+        let (mut engine, _bd) = Engine::boot(coalesced_cfg()).unwrap();
+        for r in workload::gen_mixed(8, 9).expect("workload") {
+            engine.submit(r).expect("submit");
+        }
+        let mut done = engine.run_to_completion(64).expect("healthy serve");
+        engine.shutdown();
+        done.sort_by(|a, b| a.prompt.cmp(&b.prompt));
+        done.into_iter().map(|c| (c.prompt, c.output)).collect()
+    };
+
+    let (mut engine, _bd) = Engine::boot(coalesced_cfg()).unwrap();
+    for ex in engine.executors.values_mut() {
+        ex.handle.cmd_timeout = Duration::from_millis(300);
+    }
+    for r in workload::gen_mixed(8, 9).expect("workload") {
+        engine.submit(r).expect("submit");
+    }
+    // hang an attention rank *before* its first prefill envelope: the
+    // very first step dies inside the coalesced prefill forward
+    let victim = engine.attn_order[0];
+    engine.executors[&victim].handle.set_failed(FailureBehavior::Hung);
+
+    let t0 = Instant::now();
+    let err = engine.step().expect_err("a hung rank must fail its prefill envelope");
+    let elapsed = t0.elapsed();
+    assert!(err.to_string().contains("timed out"), "expected a timeout error, got: {err}");
+    // the envelope deadline scales with calls x PREFILL_CALL_COST but
+    // stays a small multiple of the command budget — never a deadlock
+    assert!(elapsed < Duration::from_secs(10), "timeout must be deadline-bounded: {elapsed:?}");
+
+    let ann = engine.detect_failure().expect("heartbeat sweep must flag the hung rank");
+    assert_eq!(ann.device, victim);
+    let report = ReviveMoE::recover(&mut engine, &ann).expect("recovery must succeed");
+    assert_eq!(report.role, "attention", "the victim is an attention rank");
+    // abort-before-commit: the aborted envelope left no partial KV, so
+    // the pool audit is clean immediately after recovery
+    engine.audit_kv_state().expect("no partial KV may survive an aborted envelope");
+
+    let mut done = engine.run_to_completion(256).expect("post-recovery serve");
+    engine.shutdown();
+    assert_eq!(done.len(), 8, "every request must complete after recovery");
+    done.sort_by(|a, b| a.prompt.cmp(&b.prompt));
+    let got: Vec<(Vec<revivemoe::scheduler::Token>, Vec<revivemoe::scheduler::Token>)> =
+        done.into_iter().map(|c| (c.prompt, c.output)).collect();
+    assert_eq!(got, expected, "outputs must be byte-identical to the healthy run");
+}
