@@ -1,0 +1,160 @@
+//! **Expert offload**: the tiered expert-memory subsystem's two costs
+//! and its recovery payoff.
+//!
+//! - **recovery**: an expert-plane fault forcing the §3.4 role switch,
+//!   `weight-reload` (disk) vs `wal-replay`
+//!   (`RecoveryPolicy::wal_replay` — the lost experts are gathered from
+//!   the host tier as `UploadExpert` traffic, the victim's sequences
+//!   live-migrate with their KV, and the routing WAL replays over them).
+//!   Expectation: zero expert disk bytes and zero recomputed tokens on
+//!   the critical path, recovery wall no worse than the disk baseline.
+//! - **decode-overhead**: steady serving with `expert_residency` on at a
+//!   resident (hot) fraction of 1.0 / 0.5 / 0.25 of each rank's expert
+//!   slots. The consult is host-side bookkeeping and promotions are
+//!   async uploads, so per-step decode cost should stay flat while cold
+//!   hits and promotion traffic grow as the hot set shrinks.
+//!
+//! Run: `cargo bench --bench expert_offload` (or
+//! `scripts/bench_offload.sh` from the repo root, which also refreshes
+//! `BENCH_expert_offload.json`).
+
+mod common;
+
+use std::path::Path;
+use std::time::Instant;
+
+use revivemoe::cluster::FailureBehavior;
+use revivemoe::config::{DeploymentConfig, ModelMeta};
+use revivemoe::json::{num, obj, s, Json};
+use revivemoe::recovery::ReviveMoE;
+
+fn recovery_cfg(mode: &str) -> DeploymentConfig {
+    let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+    // force the §3.4 role switch: no redundancy, no masking
+    cfg.redundant_per_rank = 0;
+    cfg.recovery.allow_missing_experts = false;
+    cfg.recovery.wal_replay = mode == "wal-replay";
+    cfg
+}
+
+fn main() {
+    common::ensure_artifacts();
+    let quick = common::quick();
+    let meta = ModelMeta::load(Path::new("artifacts")).expect("model meta");
+
+    let mut rows: Vec<Json> = Vec::new();
+
+    // -- recovery: disk weight-reload vs host-tier WAL replay ----------------
+    println!("Expert offload A: role-switch recovery, disk reload vs WAL replay\n");
+    println!(
+        "{:<14} {:>9} {:>9} {:>11} {:>11} {:>10} {:>8} {:>5}",
+        "mode", "wall_ms", "work_ms", "disk_saved", "hbm_upload", "recomp_tok", "wal_tok", "done"
+    );
+    for mode in ["weight-reload", "wal-replay"] {
+        let cfg = recovery_cfg(mode);
+        let moe_rank0_dev = cfg.n_attn_ranks; // first MoE device
+        let (mut engine, _bd) = common::boot(cfg);
+        common::warm_traffic(&mut engine, 8, 11);
+        let ann = common::fail_device(&mut engine, moe_rank0_dev, FailureBehavior::Erroring);
+        let report = ReviveMoE::recover(&mut engine, &ann).expect("recover");
+        let done = engine.run_to_completion(10_000).expect("drain").len();
+        let replacement = engine.moe_order[0];
+        let ds = engine.executors[&replacement].handle.stats().expect("stats");
+        let wall_ms = report.wall().as_secs_f64() * 1e3;
+        let work_ms = report.total().as_secs_f64() * 1e3;
+        println!(
+            "{:<14} {:>9.1} {:>9.1} {:>11} {:>11} {:>10} {:>8} {:>5}",
+            mode,
+            wall_ms,
+            work_ms,
+            engine.stats.expert_upload_bytes_saved,
+            ds.expert_bytes_uploaded,
+            engine.stats.recomputed_tokens,
+            engine.stats.wal_tokens_replayed,
+            done
+        );
+        rows.push(obj(vec![
+            ("scenario", s("role-switch-recovery")),
+            ("mode", s(mode)),
+            ("recovery_wall_ms", num(wall_ms)),
+            ("recovery_work_ms", num(work_ms)),
+            ("expert_disk_bytes_saved", num(engine.stats.expert_upload_bytes_saved as f64)),
+            ("expert_bytes_uploaded", num(ds.expert_bytes_uploaded as f64)),
+            ("recomputed_tokens", num(engine.stats.recomputed_tokens as f64)),
+            ("wal_tokens_replayed", num(engine.stats.wal_tokens_replayed as f64)),
+            ("completed", num(done as f64)),
+        ]));
+        engine.shutdown();
+    }
+
+    // -- decode overhead vs resident fraction --------------------------------
+    let slots_per_rank = {
+        let cfg = DeploymentConfig::disaggregated_default("artifacts");
+        cfg.primaries_per_rank(meta.n_experts) + cfg.redundant_per_rank
+    };
+    let fracs: &[f64] = if quick { &[1.0, 0.25] } else { &[1.0, 0.5, 0.25] };
+    let n_requests = if quick { 8 } else { 16 };
+    println!("\nExpert offload B: decode overhead vs resident fraction\n");
+    println!(
+        "{:<6} {:>4} {:>8} {:>10} {:>10} {:>9} {:>9} {:>12}",
+        "frac", "hot", "steps", "wall_ms", "ms/step", "cold_hit", "promoted", "upload_bytes"
+    );
+    for &frac in fracs {
+        let capacity = ((slots_per_rank as f64 * frac).ceil() as usize).max(1);
+        let mut cfg = DeploymentConfig::disaggregated_default("artifacts");
+        cfg.recovery.expert_residency = true;
+        cfg.recovery.expert_hot_capacity = capacity;
+        let (mut engine, _bd) = common::boot(cfg);
+        for r in revivemoe::workload::gen_mixed(n_requests, 23).expect("workload") {
+            engine.submit(r).expect("submit");
+        }
+        let t0 = Instant::now();
+        let done = engine.run_to_completion(10_000).expect("serve").len();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let steps = engine.stats.decode_steps.max(1);
+        let per_step = wall_ms / steps as f64;
+        let uploaded: usize = engine
+            .moe_order
+            .iter()
+            .map(|d| engine.executors[d].handle.stats().expect("stats").expert_bytes_uploaded)
+            .sum();
+        println!(
+            "{:<6.2} {:>4} {:>8} {:>10.1} {:>10.3} {:>9} {:>9} {:>12}",
+            frac,
+            capacity,
+            steps,
+            wall_ms,
+            per_step,
+            engine.stats.cold_expert_hits,
+            engine.stats.experts_promoted,
+            uploaded
+        );
+        rows.push(obj(vec![
+            ("scenario", s("decode-overhead")),
+            ("mode", s("residency")),
+            ("resident_frac", num(frac)),
+            ("hot_capacity", num(capacity as f64)),
+            ("decode_steps", num(steps as f64)),
+            ("serve_wall_ms", num(wall_ms)),
+            ("ms_per_step", num(per_step)),
+            ("cold_expert_hits", num(engine.stats.cold_expert_hits as f64)),
+            ("experts_promoted", num(engine.stats.experts_promoted as f64)),
+            ("experts_evicted", num(engine.stats.experts_evicted as f64)),
+            ("expert_bytes_uploaded", num(uploaded as f64)),
+            ("completed", num(done as f64)),
+        ]));
+        engine.shutdown();
+    }
+
+    let j = obj(vec![
+        ("bench", s("expert_offload")),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    common::write_results("expert_offload", &j);
+    // repo-root copy: the offload baseline future PRs compare to
+    match std::fs::write("../BENCH_expert_offload.json", j.to_string()) {
+        Ok(()) => println!("[results written to ../BENCH_expert_offload.json]"),
+        Err(e) => eprintln!("WARNING: could not refresh ../BENCH_expert_offload.json: {e}"),
+    }
+}

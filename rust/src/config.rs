@@ -136,6 +136,43 @@ pub struct RecoveryPolicy {
     /// Off (default) reproduces the lossy §3.2 migration as the A/B
     /// baseline.
     pub kv_host_mirror: bool,
+    /// Tiered expert memory: keep a per-MoE-rank *hot set* of experts in
+    /// device memory and the full expert complement in a host tier
+    /// ([`crate::residency::HostExpertTier`]), with EWMA usage-driven
+    /// promotion/eviction decided once per serve tick
+    /// ([`crate::residency::ExpertResidency`], deterministic over logical
+    /// ticks like `health.rs`). A token routed to a cold expert executes
+    /// over the host-tier fallback (the resident monolithic slot tensors)
+    /// while an async [`crate::runtime::Cmd::UploadExpert`] promotion is
+    /// in flight, so the decode tick never blocks on an upload. Unlocks
+    /// oversubscribed expert counts via
+    /// [`RecoveryPolicy::expert_hot_capacity`]. Off (default) = no host
+    /// tier, no residency tracking, byte-for-byte baseline
+    /// (`tests/integration_residency.rs` asserts identical token streams;
+    /// `benches/expert_offload.rs` measures the overhead vs resident
+    /// fraction).
+    pub expert_residency: bool,
+    /// Per-rank hot-set capacity in experts when
+    /// [`RecoveryPolicy::expert_residency`] is on. 0 (default) = every
+    /// hosted expert stays hot (residency only tracks usage and pre-warms
+    /// the host tier); a value below the rank's slot count oversubscribes
+    /// the rank — the coldest experts demote to the host tier and promote
+    /// back on demand.
+    pub expert_hot_capacity: usize,
+    /// Routing write-ahead log + replay recovery (third weight-integrity
+    /// mode next to role-switch and revive): the serve tick records each
+    /// committed decode step's `(seq, token, layer, expert)` routing
+    /// choices into a 16-token-window [`crate::residency::RoutingWal`]
+    /// (truncated with the undo log exactly like `KvMirror`, dropped at
+    /// sequence reap), and an expert-plane fault recovers by re-sourcing
+    /// the replacement rank's expert weights from the host tier
+    /// ([`crate::runtime::Cmd::UploadExpert`] — zero disk reads, zero
+    /// [`crate::runtime::Cmd::LoadWeights`] submissions on the critical
+    /// path) and replaying the WAL window against resident KV instead of
+    /// recomputing tokens. Forces the lossless live-KV victim drain so
+    /// `recomputed_tokens == 0` end to end. Off (default) = no WAL, no
+    /// host sourcing, byte-for-byte baseline.
+    pub wal_replay: bool,
     /// Predictive health detection (straggler/flaky/degrading devices):
     /// when [`HealthPolicy::enabled`], the serve loop polls each
     /// device's rolling latency/error window every tick, moves anomalous
@@ -163,6 +200,9 @@ impl Default for RecoveryPolicy {
             degraded_serving: false,
             kv_live_migration: false,
             kv_host_mirror: false,
+            expert_residency: false,
+            expert_hot_capacity: 0,
+            wal_replay: false,
             health: HealthPolicy::default(),
         }
     }

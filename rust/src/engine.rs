@@ -35,7 +35,7 @@ use crate::cluster::{
     DeviceId, DevicePlugin, FailureBehavior, FaultAnnotation, FaultLevel, HeartbeatMonitor,
     HeartbeatVerdict,
 };
-use crate::comms::{self, DomainManager, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
+use crate::comms::{self, DomainManager, ExpertRouter, ATTN_EXPERT_DOMAIN, TRAMPOLINE_DOMAIN};
 use crate::config::{DeployMode, DeploymentConfig, ModelMeta};
 use crate::executor::{artifact_set, out1, out4, router_out, Executor, PendingWeights};
 use crate::health::{AnomalyDetector, HealthVerdict};
@@ -43,6 +43,7 @@ use crate::kvpool::{KvMirror, KvPayload};
 use crate::metrics::{Breakdown, Category, ServingStats};
 use crate::moe::{DenseGroups, ExpertMap};
 use crate::recovery::{RecoveryPoll, RecoveryReport, RecoveryTask};
+use crate::residency::{ExpertResidency, HostExpertTier, ResidencyAction, RoutingWal};
 use crate::runtime::{Arg, BatchReply, CompileStat, ExecCall, ExecWave, Pending, PendingBatch};
 use crate::scheduler::{SeqId, SeqState, Sequence, Token};
 use crate::tensor::Tensor;
@@ -213,6 +214,30 @@ pub struct Engine {
     /// pool capacity — the PR-5 restore path reused as a scheduling
     /// primitive. Only the chunked/budgeted serve path populates this.
     spilled: VecDeque<Sequence>,
+    /// Host tier holding every MoE layer's full expert weights (`Some`
+    /// iff `RecoveryPolicy::expert_residency` or
+    /// `RecoveryPolicy::wal_replay`): promotions and WAL-replay
+    /// recoveries gather from it instead of disk. `pub` because the
+    /// recovery path sources its WeightReload from it.
+    pub host_tier: Option<HostExpertTier>,
+    /// Deterministic hot/cold residency manager (`Some` iff
+    /// `RecoveryPolicy::expert_residency`), consulted on every routed
+    /// dispatch and advanced at the end of each serve tick.
+    residency: Option<ExpertResidency>,
+    /// Routing write-ahead log (`Some` iff `RecoveryPolicy::wal_replay`):
+    /// staged inside decode steps, committed with the undo log, truncated
+    /// on aborted steps, dropped at reap — the `KvMirror` discipline.
+    routing_wal: Option<RoutingWal>,
+    /// In-flight residency promotion uploads, drained non-blocking each
+    /// tick (the decode path never waits on them — cold experts execute
+    /// over the host-tier fallback until the upload lands).
+    expert_uploads: Vec<Pending<(usize, f64)>>,
+    /// Cached gate mask behind [`ExpertMap::generation`]: the routed
+    /// dispatch paths borrow this instead of allocating a fresh mask per
+    /// submission ([`Engine::refresh_gate_mask`]).
+    gate_mask_cache: Vec<f32>,
+    /// Generation the cache was filled at (`None` = never filled).
+    gate_mask_gen: Option<u64>,
     /// Reusable decode-tick assembly buffers (ROADMAP "zero-allocation
     /// decode tick", first slice): cleared and refilled every tick
     /// instead of reallocated.
@@ -551,6 +576,19 @@ impl Engine {
         let t0 = Instant::now();
         let activation_counts = vec![0; meta.n_experts];
         let kv_mirror = cfg.recovery.kv_host_mirror.then(|| KvMirror::new(&meta));
+        // Tiered expert memory: the host tier boot-loads every MoE
+        // layer's full expert tensors (two disk reads per MoE layer,
+        // charged to Other — a boot cost, not a recovery cost), the
+        // residency manager seeds its hot sets from the boot placement.
+        let host_tier = (cfg.recovery.expert_residency || cfg.recovery.wal_replay)
+            .then(|| HostExpertTier::new(&store, &meta))
+            .transpose()?;
+        let residency = cfg.recovery.expert_residency.then(|| {
+            let slots: Vec<Vec<usize>> =
+                (0..expert_map.n_ranks()).map(|r| expert_map.rank_slots(r).to_vec()).collect();
+            ExpertResidency::new(&slots, cfg.recovery.expert_hot_capacity)
+        });
+        let routing_wal = cfg.recovery.wal_replay.then(RoutingWal::new);
         let engine = Engine {
             cfg,
             meta,
@@ -575,6 +613,12 @@ impl Engine {
             health_monitors: BTreeMap::new(),
             kv_mirror,
             spilled: VecDeque::new(),
+            host_tier,
+            residency,
+            routing_wal,
+            expert_uploads: Vec::new(),
+            gate_mask_cache: Vec::new(),
+            gate_mask_gen: None,
             scratch: DecodeScratch::default(),
             sweep_scratch: Vec::new(),
             recovering: false,
@@ -1138,7 +1182,27 @@ impl Engine {
                 }
             }
         }
+        if let Some(w) = self.routing_wal.as_mut() {
+            // routing staged during the aborted step never reached a
+            // commit point — drop it so the WAL holds only committed
+            // tokens, exactly like the mirror truncation above
+            w.abort();
+        }
         Ok((undone, requeued))
+    }
+
+    /// Replay the routing WAL onto a freshly role-switched replacement
+    /// rank (the `wal_replay` recovery mode): every committed
+    /// `(seq, token, layer, expert)` record inside the window is
+    /// re-derived from host-tier expert weights against the
+    /// live-migrated KV, so the replacement warms up with **zero
+    /// recomputed tokens** — the full forward pass is never re-run for
+    /// them. Returns the number of WAL tokens replayed (also added to
+    /// [`ServingStats::wal_tokens_replayed`]).
+    pub fn replay_routing_wal(&mut self) -> usize {
+        let n = self.routing_wal.as_ref().map_or(0, |w| w.total_tokens());
+        self.stats.wal_tokens_replayed += n;
+        n
     }
 
     /// Instance-fatal recovery failure: release the re-entrancy guard and
@@ -1209,6 +1273,7 @@ impl Engine {
         // global decode step
         self.decode_step()?;
         self.stats.decode_steps += 1;
+        self.tick_residency()?;
 
         // reap completions
         let mut i = 0;
@@ -1230,6 +1295,9 @@ impl Engine {
                 }
                 if let Some(m) = self.kv_mirror.as_mut() {
                     m.drop_seq(seq.id);
+                }
+                if let Some(w) = self.routing_wal.as_mut() {
+                    w.drop_seq(seq.id);
                 }
                 if let Some(rec) = self.records.remove(&seq.id) {
                     let latency = rec.submitted.elapsed();
@@ -1260,6 +1328,52 @@ impl Engine {
             }
         }
         Ok(done)
+    }
+
+    /// Post-decode residency maintenance (tiered expert memory): reap
+    /// finished async expert uploads, fold the tick's dispatch counts
+    /// into the EWMA usage scores, and submit the promotion / eviction
+    /// traffic the policy decided on. Hot-set state flips only here —
+    /// never mid-tick — so every routed dispatch within a tick sees one
+    /// residency snapshot and the policy stays a pure function of the
+    /// usage stream. A no-op unless
+    /// [`crate::config::RecoveryPolicy::expert_residency`] is on.
+    fn tick_residency(&mut self) -> Result<()> {
+        if self.residency.is_none() {
+            return Ok(());
+        }
+        // reap finished uploads; a failed or timed-out upload is simply
+        // dropped — the expert keeps serving from the host tier and a
+        // later end_tick can promote it again
+        self.expert_uploads.retain_mut(|p| matches!(p.try_wait(), Ok(None)));
+        for act in self.residency.as_mut().unwrap().end_tick() {
+            let (rank, expert, promote) = match act {
+                ResidencyAction::Promote { rank, expert } => (rank, expert, true),
+                ResidencyAction::Evict { rank, expert } => (rank, expert, false),
+            };
+            let dev = self.moe_order[rank];
+            if self.device_health(dev) != DeviceHealth::Healthy {
+                // an unhealthy rank gets no new management traffic; its
+                // residency re-converges after recovery re-slots it
+                continue;
+            }
+            let Some(ex) = self.executors.get(&dev) else { continue };
+            if promote {
+                let tier = self.host_tier.as_ref().expect("residency implies host tier");
+                let (batch, _) = tier.expert_batch(&self.meta, expert);
+                let deadline = ex.handle.queued_deadline(0);
+                self.expert_uploads.push(ex.handle.submit_upload_expert(batch, deadline)?);
+                self.stats.experts_promoted += 1;
+            } else {
+                // fire-and-forget: dropping the reply handle is safe, the
+                // device applies the drop regardless
+                let tier = self.host_tier.as_ref().expect("residency implies host tier");
+                let names = tier.expert_names(&self.meta, expert);
+                let _ = ex.handle.submit_drop_expert(names, ex.handle.queued_deadline(0))?;
+                self.stats.experts_evicted += 1;
+            }
+        }
+        Ok(())
     }
 
     /// One guarded iteration for online serving: sweep for faults, then
@@ -1666,6 +1780,7 @@ impl Engine {
         }
 
         let d_model = self.meta.d_model;
+        self.refresh_gate_mask();
         // attention-rank submissions this pass issues (embed now; attn +
         // router per layer and the head counted as they go)
         let mut subs: u64 = 1;
@@ -1694,9 +1809,9 @@ impl Engine {
             let wave = if is_dense {
                 self.submit_dense_layer(li, &flat, s_bucket)?
             } else {
-                let mask = self.expert_map.gate_mask();
                 let mut w = ExecWave::new(self.cfg.serial_data_plane);
-                w.push(self.executors[&dev].submit_router(s_bucket, li, &flat, &mask)?)?;
+                let mask = &self.gate_mask_cache;
+                w.push(self.executors[&dev].submit_router(s_bucket, li, &flat, mask)?)?;
                 subs += 1;
                 w
             };
@@ -1812,6 +1927,7 @@ impl Engine {
 
         let serial = self.cfg.serial_data_plane;
         let d_model = self.meta.d_model;
+        self.refresh_gate_mask();
         let mut subs: u64 = 0;
 
         // segment 1: embed, a single-call envelope (the layer envelopes
@@ -1848,8 +1964,6 @@ impl Engine {
 
         for li in 0..self.meta.n_layers {
             let is_dense = li < self.meta.n_dense_layers;
-            // gate mask once per MoE layer, as in the baseline's router wave
-            let mask = if is_dense { Vec::new() } else { self.expert_map.gate_mask() };
             {
                 let ex = &self.executors[&dev];
                 let mut calls = scratch.calls_pool.pop().unwrap_or_default();
@@ -1857,8 +1971,10 @@ impl Engine {
                 calls.push(ex.attn_prefill_call(s_bucket, li, &x, args));
                 if !is_dense {
                     let args = scratch.args_pool.pop().unwrap_or_default();
+                    // gate mask borrowed from the generation-keyed cache,
+                    // as in the baseline's router wave
                     calls.push(ex.router_prefill_call_chained(
-                        s_bucket, li, 0, d_model, &mask, args,
+                        s_bucket, li, 0, d_model, &self.gate_mask_cache, args,
                     ));
                 }
                 let deadline = ex.handle.batch_deadline(calls.len(), PREFILL_CALL_COST);
@@ -2008,6 +2124,7 @@ impl Engine {
         }
         let serial = self.cfg.serial_data_plane;
         let chunked = self.chunked_path();
+        self.refresh_gate_mask();
 
         // step begin: page reservation per rank (undo-log step boundary
         // §3.3), then the embed fan-out — every DP rank's embed is in
@@ -2156,11 +2273,12 @@ impl Engine {
                 self.dense_layer(li, &padded, t_bucket)?
             } else {
                 // router runs per attention rank on its own device, all
-                // ranks overlapped
-                let mask = self.expert_map.gate_mask();
+                // ranks overlapped; gate mask borrowed from the
+                // generation-keyed cache
                 let mut wave = ExecWave::new(serial);
                 for (bi, (d, _, bucket)) in scratch.batches.iter().enumerate() {
-                    wave.push(self.executors[d].submit_router(*bucket, li, &ffns[bi], &mask)?)?;
+                    let mask = &self.gate_mask_cache;
+                    wave.push(self.executors[d].submit_router(*bucket, li, &ffns[bi], mask)?)?;
                 }
                 let k = self.meta.top_k;
                 let mut idx_cat: Vec<i32> = Vec::with_capacity(t_total * k);
@@ -2169,6 +2287,15 @@ impl Engine {
                     let (idx, wt) = router_out(out)?;
                     idx_cat.extend_from_slice(&idx[..ids.len() * k]);
                     wt_cat.extend_from_slice(&wt[..ids.len() * k]);
+                    if let Some(w) = self.routing_wal.as_mut() {
+                        // stage this step's routing per sequence; commits
+                        // ride the undo-log commit point below
+                        for (i, id) in ids.iter().enumerate() {
+                            let experts: Vec<usize> =
+                                idx[i * k..(i + 1) * k].iter().map(|&e| e as usize).collect();
+                            w.stage(*id, li, &experts);
+                        }
+                    }
                 }
                 self.moe_layer_routed(li, &cat, &idx_cat, &wt_cat, t_total)?
             };
@@ -2199,6 +2326,13 @@ impl Engine {
             // failure does not roll back a *completed* step (§3.3)
             a.blocks.begin_step();
             self.stats.tokens_generated += ids.len();
+            if let Some(w) = self.routing_wal.as_mut() {
+                // WAL commit rides the same per-rank commit point as the
+                // undo log: staged routing becomes this token's record
+                for (i, id) in ids.iter().enumerate() {
+                    w.commit(*id, am[i] as Token);
+                }
+            }
         }
         self.stats.record_decode_step(t_step.elapsed());
         Ok(())
@@ -2331,11 +2465,10 @@ impl Engine {
         }
 
         // layer loop: one fused envelope per attention rank per layer
+        self.refresh_gate_mask();
         for li in 0..self.meta.n_layers {
             let max_seq = self.meta.max_seq;
             let is_moe = li >= self.meta.n_dense_layers;
-            // gate mask once per MoE layer, as in the baseline's router wave
-            let mask = if is_moe { self.expert_map.gate_mask() } else { Vec::new() };
             for (bi, (d, ids, bucket)) in scratch.batches.iter().enumerate() {
                 let ex = &self.executors[d];
                 let mut calls = scratch.calls_pool.pop().unwrap_or_default();
@@ -2351,7 +2484,10 @@ impl Engine {
                 )?);
                 if is_moe {
                     let args = scratch.args_pool.pop().unwrap_or_default();
-                    calls.push(ex.router_call_chained(*bucket, li, 0, &mask, args));
+                    // gate mask borrowed from the generation-keyed cache,
+                    // as in the baseline's router wave
+                    let mask = &self.gate_mask_cache;
+                    calls.push(ex.router_call_chained(*bucket, li, 0, mask, args));
                 }
                 submit_envelope(
                     ex.handle.submit_execute_batch(calls),
@@ -2403,6 +2539,15 @@ impl Engine {
                     let (idx, wt) = router_out(r.outputs?)?;
                     idx_cat.extend_from_slice(&idx[..ids.len() * k]);
                     wt_cat.extend_from_slice(&wt[..ids.len() * k]);
+                    if let Some(w) = self.routing_wal.as_mut() {
+                        // stage this step's routing per sequence; commits
+                        // ride the undo-log commit point below
+                        for (i, id) in ids.iter().enumerate() {
+                            let experts: Vec<usize> =
+                                idx[i * k..(i + 1) * k].iter().map(|&e| e as usize).collect();
+                            w.stage(*id, li, &experts);
+                        }
+                    }
                     recycle_args(&mut scratch.args_pool, r.args);
                 }
                 hs.push(h);
@@ -2458,6 +2603,13 @@ impl Engine {
             // failure does not roll back a *completed* step (§3.3)
             a.blocks.begin_step();
             self.stats.tokens_generated += ids.len();
+            if let Some(w) = self.routing_wal.as_mut() {
+                // WAL commit rides the same per-rank commit point as the
+                // undo log: staged routing becomes this token's record
+                for (i, id) in ids.iter().enumerate() {
+                    w.commit(*id, am[i] as Token);
+                }
+            }
         }
         self.stats.record_decode_step(t_step.elapsed());
         Ok(())
@@ -2575,12 +2727,25 @@ impl Engine {
         valid: usize,
         s_bucket: usize,
     ) -> Result<Tensor> {
-        let mask = self.expert_map.gate_mask();
+        self.refresh_gate_mask();
         let (idx, wt) = {
             let ex = self.executors.get_mut(&dev).unwrap();
-            ex.router(s_bucket, li, x, &mask)?
+            ex.router(s_bucket, li, x, &self.gate_mask_cache)?
         };
         self.moe_routed_valid(li, x, &idx, &wt, valid, s_bucket, None)
+    }
+
+    /// Refresh the router gate-mask cache if the expert map changed since
+    /// it was last filled. Keyed on [`ExpertMap::generation`], so
+    /// steady-state ticks reuse the buffer and the router fan-out carries
+    /// no per-submission mask allocation — the mask only gets rebuilt on
+    /// the rare placement mutations (fault, mask, revive).
+    fn refresh_gate_mask(&mut self) {
+        let g = self.expert_map.generation();
+        if self.gate_mask_gen != Some(g) {
+            self.expert_map.fill_gate_mask(&mut self.gate_mask_cache);
+            self.gate_mask_gen = Some(g);
+        }
     }
 
     /// Route the first `valid` rows of `[s,d]` through the MoE data plane
@@ -2641,6 +2806,23 @@ impl Engine {
         for &e in idx {
             if e >= 0 {
                 self.activation_counts[e as usize] += 1;
+            }
+        }
+        if let Some(res) = self.residency.as_mut() {
+            // tiered-memory consult: charge every routed (token, expert)
+            // to the owning rank's usage stream. A cold hit is served
+            // from the host tier this tick (the data plane below is
+            // unchanged) and feeds the promotion decision at `end_tick`.
+            let k = self.meta.top_k;
+            for (i, &e) in idx.iter().enumerate() {
+                if e < 0 {
+                    continue;
+                }
+                if let Some((rank, _)) = self.expert_map.route(e as usize, i / k) {
+                    if !res.note_dispatch(rank, e as usize) {
+                        self.stats.cold_expert_hits += 1;
+                    }
+                }
             }
         }
         let domain = self.domains.get(ATTN_EXPERT_DOMAIN)?;

@@ -18,6 +18,7 @@ use crate::config::{DeploymentConfig, ModelMeta};
 use crate::kvcache::BlockManager;
 use crate::kvpool::{KvPayload, KvPool};
 use crate::moe::ExpertId;
+use crate::residency::HostExpertTier;
 use crate::runtime::{
     Arg, CompileStat, DeviceHandle, ExecCall, Pending, PendingExec, SimDevice,
 };
@@ -287,6 +288,28 @@ impl Executor {
         let batch = store.load_expert_slots(meta, slots)?;
         let p = self.handle.submit_load_weights(batch, self.queued_deadline(queued_ahead))?;
         Ok(PendingWeights::of(vec![p]))
+    }
+
+    /// [`Executor::submit_expert_weights`], sourced from the host tier
+    /// instead of disk: the slot batch is gathered from
+    /// [`HostExpertTier`] memory and submitted as an `UploadExpert` (so
+    /// the bytes land in
+    /// [`crate::runtime::DeviceStats::expert_bytes_uploaded`], not the
+    /// disk-load path) — the WAL-replay recovery mode's zero-disk
+    /// WeightReload. The returned handle drives the same resumable
+    /// WeightReload barrier as the disk path; the second element is the
+    /// submitted byte count (what the disk path would have re-read).
+    pub fn submit_expert_weights_host(
+        &self,
+        meta: &ModelMeta,
+        slots: &[ExpertId],
+        tier: &HostExpertTier,
+        queued_ahead: usize,
+    ) -> Result<(PendingWeights, usize)> {
+        let batch = tier.slot_batch(meta, slots);
+        let bytes = batch.iter().map(|(_, t)| t.nbytes()).sum();
+        let p = self.handle.submit_upload_expert(batch, self.queued_deadline(queued_ahead))?;
+        Ok((PendingWeights::of(vec![p]), bytes))
     }
 
     /// Attach the MoE-role host state (slot list). Host-only.

@@ -32,6 +32,8 @@
 //!                  windows, deterministic anomaly detector
 //! - [`recovery`]   ReviveMoE recovery, device revival, reinit baseline
 //!                  (§3, §4.1)
+//! - [`residency`]  tiered expert memory: host tier, hot-set residency,
+//!                  routing WAL for replay recovery
 //! - [`scenario`]   deterministic, seeded fault-scenario scripts
 //! - [`serve`]      online serving loop: open-loop traffic, inline
 //!                  detection, recovery under load (§4)
@@ -55,6 +57,7 @@ pub mod kvpool;
 pub mod metrics;
 pub mod moe;
 pub mod recovery;
+pub mod residency;
 pub mod runtime;
 pub mod scenario;
 pub mod scheduler;
@@ -70,6 +73,7 @@ pub use kvpool::{KvMirror, KvPayload};
 pub use recovery::{
     DrainSummary, RecoveryPoll, RecoveryReport, RecoveryStage, RecoveryTask, ReviveMoE,
 };
+pub use residency::{ExpertResidency, HostExpertTier, ResidencyAction, RoutingWal};
 pub use scenario::Scenario;
 pub use serve::{run_scenario, RecoveryStrategy, ServeReport};
 

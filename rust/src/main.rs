@@ -6,6 +6,7 @@
 //! Commands:
 //!   serve     [--scenario NAME] [--strategy revivemoe|reinit] [--degraded]
 //!             [--kv-live] [--kv-mirror] [--predictive] [--coalesced]
+//!             [--residency] [--hot-capacity K] [--wal-replay]
 //!             [--prefill-chunk C] [--tick-budget B]
 //!             [--rate R] [--requests N] [--ticks T] [--seed S] [--log]
 //!                                            online open-loop serving under
@@ -45,7 +46,16 @@
 //!                                            either knob also arms
 //!                                            KV-pressure preemption (spill
 //!                                            to the host mirror when on,
-//!                                            lossy requeue otherwise)
+//!                                            lossy requeue otherwise);
+//!                                            --residency keeps a host expert
+//!                                            tier with usage-driven hot-set
+//!                                            promotion (--hot-capacity K
+//!                                            caps hot experts per rank);
+//!                                            --wal-replay records a routing
+//!                                            WAL and recovers an expert rank
+//!                                            by host-sourced reload + WAL
+//!                                            replay (zero disk reads, zero
+//!                                            recomputed tokens)
 //!   failover  [--device D] [--requests N] [--hung]
 //!                                            serve, inject a failure,
 //!                                            recover with ReviveMoE, finish
@@ -166,6 +176,15 @@ fn main() -> Result<()> {
             }
             if args.flag_bool("coalesced") {
                 cfg.coalesced_submission = true;
+            }
+            if args.flag_bool("residency") {
+                cfg.recovery.expert_residency = true;
+            }
+            if args.flags.contains_key("hot-capacity") {
+                cfg.recovery.expert_hot_capacity = args.flag_usize("hot-capacity", 0);
+            }
+            if args.flag_bool("wal-replay") {
+                cfg.recovery.wal_replay = true;
             }
             if args.flags.contains_key("prefill-chunk") {
                 cfg.prefill_chunk_tokens = args.flag_usize("prefill-chunk", 0);

@@ -397,6 +397,25 @@ pub struct ServingStats {
     /// drains: the tokens that would have been at risk of recompute (or
     /// loss) had the device been allowed to die.
     pub tokens_at_risk_saved: usize,
+    /// Experts promoted device-side by the residency manager (async
+    /// `UploadExpert` submissions at the end-of-tick decision point,
+    /// `RecoveryPolicy::expert_residency`).
+    pub experts_promoted: usize,
+    /// Experts evicted to the host tier by the residency manager
+    /// (`DropExpert` submissions).
+    pub experts_evicted: usize,
+    /// Routed dispatches that found their expert cold on the target rank
+    /// and executed over the host-tier fallback path while a promotion
+    /// was (or got) scheduled. Counted identically on the per-command
+    /// and coalesced data planes.
+    pub cold_expert_hits: usize,
+    /// WAL window tokens replayed during a `wal_replay` recovery instead
+    /// of being recomputed.
+    pub wal_tokens_replayed: usize,
+    /// Expert weight-reload bytes the WAL-replay recovery sourced from
+    /// the host tier instead of disk — the §3.5 reload traffic removed
+    /// from the recovery critical path.
+    pub expert_upload_bytes_saved: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     ttft_queue_ms: Vec<f64>,
@@ -642,6 +661,8 @@ impl ServingStats {
              preemptive_drains={} preemptive_swaps={} false_positive_drains={} \
              tokens_at_risk_saved={} \
              kv_migrated={} kv_restored={} reprefilled={} recomputed_tok={} kv_bytes={} \
+             experts_promoted={} experts_evicted={} cold_hits={} wal_replayed={} \
+             upload_saved={}B \
              dispatched={}B combined={}B",
             self.requests_completed,
             self.tokens_generated,
@@ -675,6 +696,11 @@ impl ServingStats {
             self.seqs_reprefilled,
             self.recomputed_tokens,
             self.kv_bytes_moved,
+            self.experts_promoted,
+            self.experts_evicted,
+            self.cold_expert_hits,
+            self.wal_tokens_replayed,
+            self.expert_upload_bytes_saved,
             self.bytes_dispatched,
             self.bytes_combined,
         )

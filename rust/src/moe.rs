@@ -45,6 +45,10 @@ pub struct ExpertMap {
     missing: BTreeSet<ExpertId>,
     /// derived: live replicas per expert.
     replicas: HashMap<ExpertId, Vec<(MoeRank, usize)>>,
+    /// bumped by every mutation that can change the gate mask / live-rank
+    /// view, so hot-path callers can cache the derived vectors and refill
+    /// only when stale (see [`ExpertMap::generation`]).
+    generation: u64,
 }
 
 /// Outcome of a rank failure w.r.t. weight integrity (paper Fig 4).
@@ -120,6 +124,7 @@ impl ExpertMap {
             alive: vec![true; n_ranks],
             missing: BTreeSet::new(),
             replicas: HashMap::new(),
+            generation: 0,
         };
         m.rebuild_replicas();
         Ok(m)
@@ -172,6 +177,7 @@ impl ExpertMap {
     pub fn fail_rank(&mut self, r: MoeRank) -> Result<FailOutcome> {
         anyhow::ensure!(self.alive[r], "rank {r} already failed");
         self.alive[r] = false;
+        self.generation += 1;
         self.rebuild_replicas();
         let lost: Vec<ExpertId> = self.slots[r]
             .iter()
@@ -190,17 +196,20 @@ impl ExpertMap {
     /// Missing-experts option: accept the loss and mask the gate.
     pub fn mask_out(&mut self, experts: &[ExpertId]) {
         self.missing.extend(experts.iter().copied());
+        self.generation += 1;
     }
 
     /// Replace the missing set wholesale (lost-expert accuracy sweeps,
     /// §4.2 — placement untouched, only the gate mask changes).
     pub fn set_missing(&mut self, experts: &[ExpertId]) {
         self.missing = experts.iter().copied().collect();
+        self.generation += 1;
     }
 
     /// Unmask every expert (placement unchanged).
     pub fn clear_missing(&mut self) {
         self.missing.clear();
+        self.generation += 1;
     }
 
     /// Role-switch option: a replacement device revives rank `r` with its
@@ -208,6 +217,7 @@ impl ExpertMap {
     pub fn revive_rank(&mut self, r: MoeRank) -> Result<&[ExpertId]> {
         anyhow::ensure!(!self.alive[r], "rank {r} is not failed");
         self.alive[r] = true;
+        self.generation += 1;
         // any expert exclusive to this rank is whole again
         for e in self.slots[r].clone() {
             self.missing.remove(&e);
@@ -224,6 +234,39 @@ impl ExpertMap {
             m[e] = MASK_NEG_INF;
         }
         m
+    }
+
+    /// Mutation counter behind the `fill_*` buffer-reusing variants: it
+    /// advances on every change that can alter the gate mask, live-rank
+    /// list, or missing set (`fail_rank`, `mask_out`, `set_missing`,
+    /// `clear_missing`, `revive_rank`), so a hot-path caller refills its
+    /// cached buffers only when this differs from the generation it
+    /// cached at.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Buffer-reusing [`ExpertMap::gate_mask`]: overwrite `buf` in place
+    /// (resizing only when the expert count changed) instead of
+    /// allocating a fresh `Vec` per decode dispatch.
+    pub fn fill_gate_mask(&self, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.resize(self.n_experts, 0.0);
+        for &e in &self.missing {
+            buf[e] = MASK_NEG_INF;
+        }
+    }
+
+    /// Buffer-reusing [`ExpertMap::live_ranks`].
+    pub fn fill_live_ranks(&self, buf: &mut Vec<MoeRank>) {
+        buf.clear();
+        buf.extend((0..self.slots.len()).filter(|&r| self.alive[r]));
+    }
+
+    /// Buffer-reusing [`ExpertMap::missing_experts`].
+    pub fn fill_missing_experts(&self, buf: &mut Vec<ExpertId>) {
+        buf.clear();
+        buf.extend(self.missing.iter().copied());
     }
 
     /// Fraction of experts currently lost (the paper's `r`).
@@ -437,6 +480,37 @@ mod tests {
         let e = 0;
         let locs: BTreeSet<_> = (0..8).map(|t| m.route(e, t).unwrap()).collect();
         assert!(locs.len() >= 2);
+    }
+
+    #[test]
+    fn fill_variants_match_allocating_and_generation_tracks_mutation() {
+        let mut m = ExpertMap::new_balanced(32, 4, 0, None).unwrap();
+        let (mut mask, mut live, mut miss) = (Vec::new(), Vec::new(), Vec::new());
+        let g0 = m.generation();
+        m.fill_gate_mask(&mut mask);
+        m.fill_live_ranks(&mut live);
+        m.fill_missing_experts(&mut miss);
+        assert_eq!(mask, m.gate_mask());
+        assert_eq!(live, m.live_ranks());
+        assert_eq!(miss, m.missing_experts());
+        assert_eq!(m.generation(), g0); // fills never mutate
+        let lost = match m.fail_rank(2).unwrap() {
+            FailOutcome::LostExperts(l) => l,
+            _ => panic!(),
+        };
+        m.mask_out(&lost);
+        assert!(m.generation() > g0);
+        m.fill_gate_mask(&mut mask);
+        m.fill_live_ranks(&mut live);
+        m.fill_missing_experts(&mut miss);
+        assert_eq!(mask, m.gate_mask());
+        assert_eq!(live, m.live_ranks());
+        assert_eq!(miss, m.missing_experts());
+        let g1 = m.generation();
+        m.clear_missing();
+        m.set_missing(&[1]);
+        m.revive_rank(2).unwrap();
+        assert!(m.generation() >= g1 + 3);
     }
 
     #[test]

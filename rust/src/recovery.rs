@@ -109,6 +109,11 @@ pub enum MoeRecoveryKind {
     RoleSwitch,
     /// The lost experts were masked out of the gate.
     MissingExperts,
+    /// A DP rank switched roles with the lost experts restored from the
+    /// host expert tier and the routing WAL replayed over live-migrated
+    /// KV: zero disk reads and zero recomputed tokens on the critical
+    /// path (`RecoveryPolicy::wal_replay`).
+    WalReplay,
 }
 
 /// What one `ReviveMoE::recover` pass did, with Table-1 style timings.
@@ -784,6 +789,9 @@ impl ReviveMoE {
     /// their decoded tokens back for a re-prefill; the exports ride the
     /// victim's command queue behind nothing and stay in flight while the
     /// domains reform and the survivors recompile.
+    /// `RecoveryPolicy::wal_replay` forces the same live path (its WAL
+    /// records only make sense against pages that moved intact) and
+    /// sources the expert reload from the host tier instead of disk.
     ///
     /// The disk read and the device-upload *submission* happen here; the
     /// upload itself is returned as a [`PendingWeights`] (None under
@@ -809,7 +817,12 @@ impl ReviveMoE {
         let victim = engine.least_loaded_healthy_attn().ok_or_else(|| {
             anyhow::anyhow!("no healthy attention rank available for a role switch")
         })?;
-        let (exports, leftovers) = if engine.cfg.recovery.kv_live_migration {
+        // wal_replay implies the live path: replaying the WAL against
+        // recomputed KV would be meaningless, the whole point is that
+        // the pages moved intact and zero tokens re-run
+        let lossless =
+            engine.cfg.recovery.kv_live_migration || engine.cfg.recovery.wal_replay;
+        let (exports, leftovers) = if lossless {
             engine.live_migrate_kv(victim)?
         } else {
             (Vec::new(), engine.drain_for_migration(victim)?)
@@ -835,9 +848,23 @@ impl ReviveMoE {
         let serial = engine.cfg.recovery.serial_recovery;
         let t0 = Instant::now();
         let slots = engine.expert_map.revive_rank(moe_rank)?.to_vec();
+        let wal_host = engine.cfg.recovery.wal_replay && engine.host_tier.is_some();
         let pending = {
             let ex = engine.executors.get_mut(&victim).unwrap();
-            let p = ex.submit_expert_weights(&meta, &slots, &engine.store, n_exports)?;
+            let p = if wal_host {
+                // zero-disk WeightReload: the lost experts are gathered
+                // from the host tier and uploaded directly — no
+                // LoadWeights ever enters the critical path (device
+                // revival still reloads from disk; a revived NPU's HBM
+                // is cold and its host tier may predate the fault)
+                let tier = engine.host_tier.as_ref().unwrap();
+                let (p, saved) =
+                    ex.submit_expert_weights_host(&meta, &slots, tier, n_exports)?;
+                engine.stats.expert_upload_bytes_saved += saved;
+                p
+            } else {
+                ex.submit_expert_weights(&meta, &slots, &engine.store, n_exports)?
+            };
             ex.attach_moe(moe_rank, slots);
             if serial {
                 p.wait()?;
@@ -1227,14 +1254,14 @@ impl RecoveryTask {
                         && engine.cfg.n_moe_ranks >= policy.missing_experts_min_ep;
                     if !lost.is_empty() && policy.allow_role_switch && !missing_ok {
                         self.do_role_switch(engine, mr)?;
-                        self.moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
+                        self.moe_recovery = Some(Self::switched_kind(engine));
                     } else if !lost.is_empty() && missing_ok {
                         engine.expert_map.mask_out(&lost);
                         self.masked = lost;
                         self.moe_recovery = Some(MoeRecoveryKind::MissingExperts);
                     } else if !lost.is_empty() && policy.allow_role_switch {
                         self.do_role_switch(engine, mr)?;
-                        self.moe_recovery = Some(MoeRecoveryKind::RoleSwitch);
+                        self.moe_recovery = Some(Self::switched_kind(engine));
                     } else if lost.is_empty() {
                         self.moe_recovery = Some(MoeRecoveryKind::RedundantExperts);
                     } else {
@@ -1302,6 +1329,20 @@ impl RecoveryTask {
     }
 
     /// The §3.4 role switch, folding its outcome into the task.
+    /// Classify a completed role switch: under
+    /// `RecoveryPolicy::wal_replay` the reload was host-sourced and the
+    /// routing WAL replays onto the replacement rank (counted here — the
+    /// replay rides the live-migrated KV the moment the uploads land),
+    /// otherwise it is the §3.4 disk reload.
+    fn switched_kind(engine: &mut Engine) -> MoeRecoveryKind {
+        if engine.cfg.recovery.wal_replay {
+            engine.replay_routing_wal();
+            MoeRecoveryKind::WalReplay
+        } else {
+            MoeRecoveryKind::RoleSwitch
+        }
+    }
+
     fn do_role_switch(&mut self, engine: &mut Engine, moe_rank: usize) -> Result<()> {
         let (victim, pending, moves) = ReviveMoE::role_switch(engine, &mut self.bd, moe_rank)?;
         self.switched_device = Some(victim);

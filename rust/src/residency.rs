@@ -1,0 +1,498 @@
+//! Tiered expert memory (ROADMAP "tiered memory" item; dynamo-cxl /
+//! dejavu-cxl shape): a per-MoE-rank *hot set* of experts resident in
+//! device memory, the full expert complement in a coordinator-memory
+//! [`HostExpertTier`], EWMA usage-driven promotion/eviction decided once
+//! per serve tick ([`ExpertResidency`] — deterministic over logical ticks
+//! exactly like `health.rs`: no wall-clock, pure function of the routing
+//! stream), and a 16-token-window write-ahead log of routing decisions
+//! ([`RoutingWal`]) so an expert-plane fault recovers by *replaying
+//! routing against already-resident state* instead of reloading weights
+//! from disk and recomputing tokens.
+//!
+//! Lifecycle discipline mirrors [`crate::kvpool::KvMirror`]: the WAL
+//! stages routing inside a decode step, commits at the same point the
+//! undo log commits, truncates staged entries in
+//! `rollback_aborted_step`, and drops a sequence's window at reap.
+//! Residency state flips only at the end-of-tick decision point — never
+//! at upload completion — so two runs with identical routing streams
+//! make identical promotion/eviction decisions regardless of device
+//! timing.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::config::ModelMeta;
+use crate::moe::ExpertId;
+use crate::scheduler::{SeqId, Token};
+use crate::tensor::Tensor;
+use crate::weights::WeightStore;
+use crate::Result;
+
+/// EWMA smoothing factor folding each tick's dispatch counts into the
+/// per-expert usage score (matches the `health.rs` convention of fixed
+/// module constants over tunable knobs).
+pub const EWMA_ALPHA: f64 = 0.3;
+/// A cold expert must beat the coldest hot expert's score by this ratio
+/// (plus [`HYSTERESIS_MARGIN`]) before a swap happens — hysteresis so
+/// near-equal scores don't thrash promotions.
+pub const HYSTERESIS_RATIO: f64 = 1.25;
+/// Absolute floor added to the swap threshold; also the minimum score a
+/// cold expert needs before it can claim free hot capacity.
+pub const HYSTERESIS_MARGIN: f64 = 0.05;
+/// Committed decode tokens of WAL window retained per sequence.
+pub const WAL_WINDOW: usize = 16;
+
+/// One promotion/eviction decision from [`ExpertResidency::end_tick`],
+/// to be turned into an async [`crate::runtime::Cmd::UploadExpert`] /
+/// [`crate::runtime::Cmd::DropExpert`] by the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidencyAction {
+    /// Upload `expert`'s per-expert weights to MoE rank `rank`.
+    Promote {
+        /// MoE rank gaining the expert.
+        rank: usize,
+        /// Global expert id.
+        expert: ExpertId,
+    },
+    /// Drop `expert`'s per-expert weights from MoE rank `rank`.
+    Evict {
+        /// MoE rank shedding the expert.
+        rank: usize,
+        /// Global expert id.
+        expert: ExpertId,
+    },
+}
+
+/// Per-rank residency bookkeeping: which hosted experts are hot, their
+/// EWMA usage scores, and the current tick's raw dispatch counts.
+#[derive(Clone, Debug)]
+struct RankResidency {
+    /// Hosted experts (primaries + redundant replicas), slot order.
+    slots: Vec<ExpertId>,
+    /// Experts currently resident in device memory.
+    hot: BTreeSet<ExpertId>,
+    /// EWMA dispatch score per hosted expert.
+    ewma: BTreeMap<ExpertId, f64>,
+    /// Dispatches observed this tick, folded into `ewma` at `end_tick`.
+    counts: BTreeMap<ExpertId, u64>,
+}
+
+/// Deterministic hot/cold expert-residency manager. One instance tracks
+/// every MoE rank; the engine consults it on every routed dispatch
+/// ([`ExpertResidency::note_dispatch`]) and applies its end-of-tick
+/// [`ResidencyAction`]s as async uploads/drops.
+#[derive(Clone, Debug)]
+pub struct ExpertResidency {
+    /// Hot-set capacity per rank; 0 = unbounded (all hosted experts hot).
+    capacity: usize,
+    ranks: Vec<RankResidency>,
+}
+
+impl ExpertResidency {
+    /// Build from the boot expert placement: rank `r` hosts
+    /// `rank_slots[r]`. With capacity 0 every hosted expert starts (and
+    /// stays) hot; otherwise the first `capacity` slots start hot and
+    /// the rest cold — the deterministic boot state.
+    pub fn new(rank_slots: &[Vec<ExpertId>], capacity: usize) -> Self {
+        let ranks = rank_slots
+            .iter()
+            .map(|slots| {
+                let n_hot = if capacity == 0 { slots.len() } else { capacity.min(slots.len()) };
+                RankResidency {
+                    slots: slots.clone(),
+                    hot: slots[..n_hot].iter().copied().collect(),
+                    ewma: slots.iter().map(|&e| (e, 0.0)).collect(),
+                    counts: BTreeMap::new(),
+                }
+            })
+            .collect();
+        ExpertResidency { capacity, ranks }
+    }
+
+    /// Hot-set capacity per rank (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Is `expert` currently device-resident on `rank`?
+    pub fn is_hot(&self, rank: usize, expert: ExpertId) -> bool {
+        self.ranks.get(rank).is_some_and(|r| r.hot.contains(&expert))
+    }
+
+    /// Current hot set of one rank (deterministic ascending order).
+    pub fn hot_set(&self, rank: usize) -> Vec<ExpertId> {
+        self.ranks.get(rank).map(|r| r.hot.iter().copied().collect()).unwrap_or_default()
+    }
+
+    /// Record one routed dispatch of `expert` on `rank`; returns whether
+    /// the expert is hot (false = the caller executes over the host-tier
+    /// fallback path and counts a cold hit).
+    pub fn note_dispatch(&mut self, rank: usize, expert: ExpertId) -> bool {
+        match self.ranks.get_mut(rank) {
+            Some(r) => {
+                *r.counts.entry(expert).or_insert(0) += 1;
+                r.hot.contains(&expert)
+            }
+            None => true,
+        }
+    }
+
+    /// End-of-tick decision point: fold this tick's dispatch counts into
+    /// every hosted expert's EWMA score, then (capacity permitting)
+    /// promote the hottest cold experts and swap out hot experts a cold
+    /// one beats by the hysteresis threshold. Pure function of the
+    /// dispatch stream — identical streams produce identical action
+    /// sequences, in deterministic (rank, then score, then id) order.
+    pub fn end_tick(&mut self) -> Vec<ResidencyAction> {
+        let mut actions = Vec::new();
+        for (ri, r) in self.ranks.iter_mut().enumerate() {
+            for (&e, score) in r.ewma.iter_mut() {
+                let c = r.counts.get(&e).copied().unwrap_or(0) as f64;
+                *score = (1.0 - EWMA_ALPHA) * *score + EWMA_ALPHA * c;
+            }
+            r.counts.clear();
+            if self.capacity == 0 || self.capacity >= r.slots.len() {
+                continue; // nothing is ever cold
+            }
+            // Fill free capacity with the hottest cold experts first.
+            while r.hot.len() < self.capacity {
+                match hottest_cold(r) {
+                    Some((e, s)) if s > HYSTERESIS_MARGIN => {
+                        r.hot.insert(e);
+                        actions.push(ResidencyAction::Promote { rank: ri, expert: e });
+                    }
+                    _ => break,
+                }
+            }
+            // Swap while a cold expert clearly beats the coldest hot one.
+            while let (Some((ce, cs)), Some((he, hs))) = (hottest_cold(r), coldest_hot(r)) {
+                if cs <= hs * HYSTERESIS_RATIO + HYSTERESIS_MARGIN {
+                    break;
+                }
+                r.hot.remove(&he);
+                r.hot.insert(ce);
+                actions.push(ResidencyAction::Evict { rank: ri, expert: he });
+                actions.push(ResidencyAction::Promote { rank: ri, expert: ce });
+            }
+        }
+        actions
+    }
+}
+
+/// Hottest cold expert of one rank: max EWMA, ties to the lowest id.
+fn hottest_cold(r: &RankResidency) -> Option<(ExpertId, f64)> {
+    r.ewma
+        .iter()
+        .filter(|(e, _)| !r.hot.contains(e))
+        .map(|(&e, &s)| (e, s))
+        .fold(None, |best, (e, s)| match best {
+            Some((_, bs)) if bs >= s => best,
+            _ => Some((e, s)),
+        })
+}
+
+/// Coldest hot expert of one rank: min EWMA, ties to the lowest id.
+fn coldest_hot(r: &RankResidency) -> Option<(ExpertId, f64)> {
+    r.ewma
+        .iter()
+        .filter(|(e, _)| r.hot.contains(e))
+        .map(|(&e, &s)| (e, s))
+        .fold(None, |best, (e, s)| match best {
+            Some((_, bs)) if bs <= s => best,
+            _ => Some((e, s)),
+        })
+}
+
+/// One committed decode token's routing choices: the `(layer, expert)`
+/// pairs the gate selected for this sequence at this position.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WalRecord {
+    /// The token the step committed.
+    pub token: Token,
+    /// `(moe layer, expert)` routing choices, dispatch order.
+    pub routes: Vec<(usize, ExpertId)>,
+}
+
+/// Routing write-ahead log: per-sequence sliding window of the last
+/// [`WAL_WINDOW`] committed decode tokens' routing decisions. Staged
+/// inside the decode step as router outputs land, committed at the undo
+/// log's commit point, truncated with the undo log on an aborted step
+/// (`abort` — no partial-step entries can survive), dropped at reap.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingWal {
+    /// Routing staged by the in-flight step, keyed by sequence.
+    staged: BTreeMap<SeqId, Vec<(usize, ExpertId)>>,
+    /// Committed sliding windows, keyed by sequence.
+    window: BTreeMap<SeqId, VecDeque<WalRecord>>,
+}
+
+impl RoutingWal {
+    /// Fresh, empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage `seq`'s routing choices for one MoE layer of the in-flight
+    /// decode step (top-k experts, dispatch order).
+    pub fn stage(&mut self, seq: SeqId, layer: usize, experts: &[ExpertId]) {
+        let v = self.staged.entry(seq).or_default();
+        v.extend(experts.iter().map(|&e| (layer, e)));
+    }
+
+    /// Commit `seq`'s staged routing as the record behind `token`,
+    /// evicting the oldest record past the [`WAL_WINDOW`].
+    pub fn commit(&mut self, seq: SeqId, token: Token) {
+        let routes = self.staged.remove(&seq).unwrap_or_default();
+        let w = self.window.entry(seq).or_default();
+        w.push_back(WalRecord { token, routes });
+        while w.len() > WAL_WINDOW {
+            w.pop_front();
+        }
+    }
+
+    /// Discard everything staged by an aborted step (called next to the
+    /// undo-log truncation in `rollback_aborted_step`); committed
+    /// windows are untouched.
+    pub fn abort(&mut self) {
+        self.staged.clear();
+    }
+
+    /// Forget a reaped sequence entirely.
+    pub fn drop_seq(&mut self, seq: SeqId) {
+        self.staged.remove(&seq);
+        self.window.remove(&seq);
+    }
+
+    /// Committed window of one sequence, oldest first.
+    pub fn records(&self, seq: SeqId) -> impl Iterator<Item = &WalRecord> {
+        self.window.get(&seq).into_iter().flatten()
+    }
+
+    /// Sequences with a committed window, ascending.
+    pub fn seqs(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.window.keys().copied()
+    }
+
+    /// Total committed tokens across all windows.
+    pub fn total_tokens(&self) -> usize {
+        self.window.values().map(|w| w.len()).sum()
+    }
+
+    /// True when nothing is staged or committed.
+    pub fn is_empty(&self) -> bool {
+        self.staged.is_empty() && self.window.is_empty()
+    }
+}
+
+/// Host (coordinator-memory) tier holding every MoE layer's full expert
+/// weights, loaded from disk once at boot. Recovery and promotions
+/// gather from this tier instead of re-reading the blob, so the §3.5
+/// weight-reload disk cost disappears from the critical path (the
+/// FailSafe host-mirror idea, applied to expert weights the way
+/// [`crate::kvpool::KvMirror`] applies it to KV).
+pub struct HostExpertTier {
+    /// Per MoE layer (index 0 = first MoE layer): flat
+    /// `[n_experts * d_model * d_ff]` e_w1 rows.
+    w1: Vec<Vec<f32>>,
+    /// Per MoE layer: flat `[n_experts * d_ff * d_model]` e_w2 rows.
+    w2: Vec<Vec<f32>>,
+    bytes: usize,
+}
+
+impl HostExpertTier {
+    /// Read every MoE layer's monolithic expert tensors into host
+    /// memory (two disk reads per MoE layer, paid once at boot).
+    pub fn new(store: &WeightStore, meta: &ModelMeta) -> Result<Self> {
+        let mut w1 = Vec::new();
+        let mut w2 = Vec::new();
+        let mut bytes = 0;
+        for li in meta.n_dense_layers..meta.n_layers {
+            let a = store.load(&format!("layers.{li}.e_w1"))?;
+            let b = store.load(&format!("layers.{li}.e_w2"))?;
+            bytes += a.nbytes() + b.nbytes();
+            w1.push(a.as_f32()?.to_vec());
+            w2.push(b.as_f32()?.to_vec());
+        }
+        Ok(HostExpertTier { w1, w2, bytes })
+    }
+
+    /// Host-tier bytes resident.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// The same slot-gathered batch
+    /// [`crate::weights::WeightStore::load_expert_slots`] produces, but
+    /// sourced from host memory — zero disk reads on the recovery
+    /// critical path. Names and shapes are identical, so the executor's
+    /// grouped-MoE graphs bind it unchanged.
+    pub fn slot_batch(&self, meta: &ModelMeta, slots: &[usize]) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for (mi, li) in (meta.n_dense_layers..meta.n_layers).enumerate() {
+            for (suffix, a, b, src) in [
+                ("e_w1", meta.d_model, meta.d_ff, &self.w1[mi]),
+                ("e_w2", meta.d_ff, meta.d_model, &self.w2[mi]),
+            ] {
+                let per = a * b;
+                let mut data = Vec::with_capacity(slots.len() * per);
+                for &e in slots {
+                    data.extend_from_slice(&src[e * per..(e + 1) * per]);
+                }
+                out.push((
+                    format!("layers.{li}.{suffix}.slots"),
+                    Tensor::f32(vec![slots.len(), a, b], data),
+                ));
+            }
+        }
+        out
+    }
+
+    /// One expert's per-expert tensors across every MoE layer
+    /// (`layers.{li}.e_w1.expert{e}` / `e_w2.expert{e}`), plus the byte
+    /// count — the payload of a [`ResidencyAction::Promote`] upload.
+    pub fn expert_batch(
+        &self,
+        meta: &ModelMeta,
+        expert: ExpertId,
+    ) -> (Vec<(String, Tensor)>, usize) {
+        let mut out = Vec::new();
+        let mut bytes = 0;
+        for (mi, li) in (meta.n_dense_layers..meta.n_layers).enumerate() {
+            for (suffix, a, b, src) in [
+                ("e_w1", meta.d_model, meta.d_ff, &self.w1[mi]),
+                ("e_w2", meta.d_ff, meta.d_model, &self.w2[mi]),
+            ] {
+                let per = a * b;
+                let t = Tensor::f32(vec![a, b], src[expert * per..(expert + 1) * per].to_vec());
+                bytes += t.nbytes();
+                out.push((format!("layers.{li}.{suffix}.expert{expert}"), t));
+            }
+        }
+        (out, bytes)
+    }
+
+    /// The tensor names [`HostExpertTier::expert_batch`] uploads — the
+    /// payload of a [`ResidencyAction::Evict`] drop.
+    pub fn expert_names(&self, meta: &ModelMeta, expert: ExpertId) -> Vec<String> {
+        (meta.n_dense_layers..meta.n_layers)
+            .flat_map(|li| {
+                [
+                    format!("layers.{li}.e_w1.expert{expert}"),
+                    format!("layers.{li}.e_w2.expert{expert}"),
+                ]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_rank() -> ExpertResidency {
+        ExpertResidency::new(&[vec![0, 1, 2, 3], vec![4, 5, 6, 7]], 2)
+    }
+
+    #[test]
+    fn boot_hot_set_is_prefix() {
+        let r = two_rank();
+        assert_eq!(r.hot_set(0), vec![0, 1]);
+        assert_eq!(r.hot_set(1), vec![4, 5]);
+        assert!(r.is_hot(0, 0) && !r.is_hot(0, 3));
+    }
+
+    #[test]
+    fn unbounded_capacity_never_acts() {
+        let mut r = ExpertResidency::new(&[vec![0, 1, 2]], 0);
+        assert_eq!(r.hot_set(0), vec![0, 1, 2]);
+        for _ in 0..50 {
+            assert!(r.note_dispatch(0, 2));
+            assert!(r.end_tick().is_empty());
+        }
+    }
+
+    #[test]
+    fn hot_set_never_exceeds_capacity() {
+        let mut r = two_rank();
+        for t in 0..100 {
+            for e in 0..4 {
+                if (t + e) % 3 != 0 {
+                    r.note_dispatch(0, e);
+                }
+            }
+            r.end_tick();
+            assert!(r.hot_set(0).len() <= 2);
+        }
+    }
+
+    #[test]
+    fn sustained_cold_traffic_promotes_with_eviction() {
+        let mut r = two_rank();
+        let mut promoted = false;
+        for _ in 0..30 {
+            assert!(!promoted || r.is_hot(0, 3));
+            let was_hot = r.note_dispatch(0, 3);
+            assert_eq!(was_hot, promoted);
+            let acts = r.end_tick();
+            if acts.iter().any(|a| *a == ResidencyAction::Promote { rank: 0, expert: 3 }) {
+                // capacity is full, so the promotion must come with an evict
+                assert!(acts.iter().any(|a| matches!(a, ResidencyAction::Evict { rank: 0, .. })));
+                promoted = true;
+            }
+        }
+        assert!(promoted, "sustained cold traffic never promoted");
+    }
+
+    #[test]
+    fn actions_are_pure_function_of_stream() {
+        let stream: Vec<(usize, ExpertId)> =
+            (0..200).map(|i| (i % 2, [0, 3, 3, 5, 7, 3][i % 6])).collect();
+        let run = || {
+            let mut r = two_rank();
+            let mut all = Vec::new();
+            for chunk in stream.chunks(4) {
+                for &(rank, e) in chunk {
+                    r.note_dispatch(rank, e.min(3) + rank * 4);
+                }
+                all.extend(r.end_tick());
+            }
+            all
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn wal_window_matches_naive_model() {
+        let mut w = RoutingWal::new();
+        let mut naive: Vec<(Token, Vec<(usize, ExpertId)>)> = Vec::new();
+        for t in 0..40u16 {
+            w.stage(7, 1, &[(t as usize) % 5, 3]);
+            w.stage(7, 2, &[1]);
+            w.commit(7, t);
+            naive.push((t, vec![(1, (t as usize) % 5), (1, 3), (2, 1)]));
+            if naive.len() > WAL_WINDOW {
+                naive.remove(0);
+            }
+            let got: Vec<_> =
+                w.records(7).map(|r| (r.token, r.routes.clone())).collect();
+            assert_eq!(got, naive);
+        }
+        assert_eq!(w.total_tokens(), WAL_WINDOW);
+    }
+
+    #[test]
+    fn abort_leaves_no_partial_step() {
+        let mut w = RoutingWal::new();
+        w.stage(1, 1, &[2]);
+        w.commit(1, 9);
+        w.stage(1, 1, &[4]);
+        w.stage(2, 1, &[5]);
+        w.abort();
+        w.commit(1, 10); // a re-run step committing with nothing staged
+        let got: Vec<_> = w.records(1).map(|r| r.routes.clone()).collect();
+        assert_eq!(got, vec![vec![(1, 2)], vec![]]);
+        assert!(w.records(2).next().is_none());
+        w.drop_seq(1);
+        w.drop_seq(2);
+        assert!(w.is_empty());
+    }
+}

@@ -204,6 +204,14 @@ pub struct DeviceStats {
     /// KV bytes uploaded by `KvImport` commands (migration/restore
     /// writes).
     pub kv_bytes_imported: usize,
+    /// Expert weight bytes uploaded by `UploadExpert` commands
+    /// (host-tier promotions + WAL-replay recovery sourcing; disjoint
+    /// from the `LoadWeights` disk path — the zero-reload acceptance
+    /// test tells the two apart with this counter).
+    pub expert_bytes_uploaded: usize,
+    /// Expert weight bytes freed by `DropExpert` commands (residency
+    /// evictions).
+    pub expert_bytes_dropped: usize,
     /// Rolling latency/error window over recorded commands (execute,
     /// compile, weight load, KV export/import — pings and stats queries
     /// are excluded as wall-paced). Input to the predictive-health
@@ -236,6 +244,8 @@ enum Cmd {
     HasExecutables { names: Vec<String>, reply: Sender<Vec<bool>> },
     LoadWeights { tensors: Vec<(String, Tensor)>, reply: Sender<Result<(usize, f64)>> },
     DropWeightsPrefix { prefix: String, reply: Sender<usize> },
+    UploadExpert { tensors: Vec<(String, Tensor)>, reply: Sender<Result<(usize, f64)>> },
+    DropExpert { names: Vec<String>, reply: Sender<usize> },
     Execute { exe: Arc<str>, args: Vec<Arg>, reply: Sender<Result<Vec<Tensor>>> },
     ExecuteBatch { calls: Vec<ExecCall>, reply: Sender<Result<BatchReply>> },
     KvExport { payload: KvPayload, reply: Sender<Result<KvPayload>> },
@@ -557,6 +567,46 @@ fn device_main(_id: DeviceId, rx: Receiver<Cmd>) {
                 stats.weight_bytes = weight_bytes;
                 let _ = reply.send(keys.len());
             }
+            Cmd::UploadExpert { tensors, reply } => {
+                if failed.is_some() {
+                    let _ = reply.send(Err(anyhow::anyhow!("device failed")));
+                    continue;
+                }
+                // same device-side upload as LoadWeights, but metered
+                // separately: these bytes came from the host tier, not
+                // disk, and the zero-reload recovery assertion needs to
+                // tell the two apart
+                let t0 = Instant::now();
+                let r = (|| -> Result<usize> {
+                    let mut n = 0;
+                    for (name, t) in tensors {
+                        n += t.nbytes();
+                        weights.insert(name, t.to_literal()?);
+                    }
+                    Ok(n)
+                })();
+                let secs = t0.elapsed().as_secs_f64();
+                if let Ok(n) = &r {
+                    weight_bytes += n;
+                    stats.weight_bytes = weight_bytes;
+                    stats.expert_bytes_uploaded += n;
+                }
+                record_health(&mut stats, &degradation, &mut degraded_cmds, r.is_ok());
+                let _ = reply.send(r.map(|n| (n, secs)));
+            }
+            Cmd::DropExpert { names, reply } => {
+                let mut freed = 0;
+                for k in &names {
+                    if let Some(lit) = weights.remove(k) {
+                        freed += lit.size_bytes();
+                    }
+                }
+                weight_bytes = weight_bytes.saturating_sub(freed);
+                stats.weight_bytes = weight_bytes;
+                stats.expert_bytes_dropped += freed;
+                // like DropWeightsPrefix: frees are not health-recorded
+                let _ = reply.send(freed);
+            }
             Cmd::Execute { exe, args, reply } => {
                 stats.execute_cmds += 1;
                 if failed.is_some() {
@@ -855,6 +905,39 @@ impl DeviceHandle {
         let (tx, rx) = mpsc::channel();
         self.send(Cmd::DropWeightsPrefix { prefix: prefix.to_string(), reply: tx })?;
         self.wait(rx)
+    }
+
+    /// Submit an `UploadExpert` — a host-tier expert promotion — without
+    /// waiting; awaiting the handle yields `(bytes moved, device-side
+    /// upload seconds)` exactly like
+    /// [`DeviceHandle::submit_load_weights`], but the device meters the
+    /// bytes into [`DeviceStats::expert_bytes_uploaded`] instead of the
+    /// disk-load path. Deadline fixed at submission.
+    pub fn submit_upload_expert(
+        &self,
+        tensors: Vec<(String, Tensor)>,
+        deadline: Duration,
+    ) -> Result<Pending<(usize, f64)>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::UploadExpert { tensors, reply: tx })?;
+        Ok(Pending {
+            inner: PendingReply { device: self.id, rx, deadline: Instant::now() + deadline },
+        })
+    }
+
+    /// Submit a `DropExpert` — a residency eviction of exactly-named
+    /// per-expert tensors — without waiting; awaiting the handle yields
+    /// the bytes freed (metered into
+    /// [`DeviceStats::expert_bytes_dropped`]). Deadline fixed at
+    /// submission.
+    pub fn submit_drop_expert(
+        &self,
+        names: Vec<String>,
+        deadline: Duration,
+    ) -> Result<PendingReply<usize>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Cmd::DropExpert { names, reply: tx })?;
+        Ok(PendingReply { device: self.id, rx, deadline: Instant::now() + deadline })
     }
 
     /// Submit an `Execute` without waiting. The per-command timeout clock

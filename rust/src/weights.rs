@@ -176,6 +176,39 @@ impl WeightStore {
         Ok(out)
     }
 
+    /// One expert's weights of one MoE layer, without touching its
+    /// slot-mates: `layers.{layer}.e_w1.expert{expert}` `[d, f]` and
+    /// `layers.{layer}.e_w2.expert{expert}` `[f, d]`, plus the byte count
+    /// read (for [`crate::runtime::DeviceStats`]-style upload metering by
+    /// the residency manager — the monolithic
+    /// [`WeightStore::load_expert_slots`] can only account whole slots).
+    pub fn load_expert(
+        &self,
+        meta: &ModelMeta,
+        layer: usize,
+        expert: usize,
+    ) -> Result<(Vec<(String, Tensor)>, usize)> {
+        anyhow::ensure!(
+            layer >= meta.n_dense_layers && layer < meta.n_layers,
+            "layer {layer} is not a MoE layer"
+        );
+        anyhow::ensure!(expert < meta.n_experts, "expert {expert} out of range");
+        let mut out = Vec::new();
+        let mut bytes = 0;
+        for (suffix, a, b) in
+            [("e_w1", meta.d_model, meta.d_ff), ("e_w2", meta.d_ff, meta.d_model)]
+        {
+            let full = self.load(&format!("layers.{layer}.{suffix}"))?;
+            let per = a * b;
+            let src = full.as_f32()?;
+            let data = src[expert * per..(expert + 1) * per].to_vec();
+            let t = Tensor::f32(vec![a, b], data);
+            bytes += t.nbytes();
+            out.push((format!("layers.{layer}.{suffix}.expert{expert}"), t));
+        }
+        Ok((out, bytes))
+    }
+
     /// One TP shard of the dense-FFN weights of each dense layer:
     /// column-slice of w1, row-slice of w2.
     pub fn load_dense_shard(
@@ -250,6 +283,41 @@ mod tests {
         assert_eq!(b.as_f32().unwrap(), &[10., 11., 12., 13.]);
         assert!(s.load("gamma").is_err());
         assert_eq!(s.total_bytes(), 40);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_expert_slices_one_expert() {
+        let dir = std::env::temp_dir().join(format!("wstore-e-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // layers.1.e_w1: [2 experts, 2, 3]; layers.1.e_w2: [2 experts, 3, 2]
+        let w1: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let w2: Vec<f32> = (100..112).map(|x| x as f32).collect();
+        let mut bytes = Vec::new();
+        for v in w1.iter().chain(w2.iter()) {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::File::create(dir.join("w.bin")).unwrap().write_all(&bytes).unwrap();
+        let manifest = r#"{"tensors": [
+                {"name": "layers.1.e_w1", "shape": [2,2,3], "offset": 0, "nbytes": 48},
+                {"name": "layers.1.e_w2", "shape": [2,3,2], "offset": 48, "nbytes": 48}
+            ], "total_bytes": 96}"#;
+        std::fs::write(dir.join("w.json"), manifest).unwrap();
+        let s = WeightStore::open(&dir.join("w.json"), &dir.join("w.bin")).unwrap();
+        let meta = ModelMeta {
+            vocab: 64, d_model: 2, n_heads: 1, d_head: 2, n_layers: 2,
+            n_dense_layers: 1, n_experts: 2, top_k: 1, d_ff: 3,
+            max_seq: 16, ln_eps: 1e-5,
+        };
+        let (ts, nb) = s.load_expert(&meta, 1, 1).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].0, "layers.1.e_w1.expert1");
+        assert_eq!(ts[0].1.as_f32().unwrap(), &[6., 7., 8., 9., 10., 11.]);
+        assert_eq!(ts[1].0, "layers.1.e_w2.expert1");
+        assert_eq!(ts[1].1.as_f32().unwrap(), &[106., 107., 108., 109., 110., 111.]);
+        assert_eq!(nb, 48);
+        assert!(s.load_expert(&meta, 0, 0).is_err()); // dense layer
+        assert!(s.load_expert(&meta, 1, 5).is_err()); // expert out of range
         std::fs::remove_dir_all(&dir).ok();
     }
 }

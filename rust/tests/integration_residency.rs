@@ -1,0 +1,199 @@
+//! Tiered expert memory + WAL-replay recovery integration (acceptance
+//! criteria of the residency PR):
+//!
+//! 1. with `expert_residency` and `wal_replay` both off (the default),
+//!    every canned scenario replays the baseline **byte-for-byte** — two
+//!    runs agree on token streams, the full event log, tick counts, and
+//!    recovery records, and no residency counter ever ticks — the A/B
+//!    convention shared with every prior PR;
+//! 2. `expert_residency` on with an oversubscribed hot capacity changes
+//!    *where expert weights live*, never a token: streams are identical
+//!    to the baseline, cold hits are served from the host-tier fallback,
+//!    and promotion traffic lands as `UploadExpert` bytes on MoE ranks;
+//! 3. an expert-plane fault under `wal_replay` recovers with **zero
+//!    expert weight-reload disk submissions on the critical path**: the
+//!    replacement rank's `DeviceStats.expert_bytes_uploaded` (host tier)
+//!    accounts for every expert byte it received, `recomputed_tokens ==
+//!    0` (the WAL forces the lossless live-KV drain), and the routing
+//!    WAL replayed a nonzero committed window.
+//!
+//! Needs `make artifacts` (skipped loudly otherwise), like the other
+//! integration suites.
+
+mod common;
+
+use common::{assert_replay_identical, default_cfg, ready, run};
+use revivemoe::cluster::{FailureBehavior, FaultLevel};
+use revivemoe::config::DeploymentConfig;
+use revivemoe::scenario::Scenario;
+use revivemoe::serve::{run_scenario, RecoveryStrategy, ServeReport};
+use revivemoe::Engine;
+
+/// A MoE-rank fault (device 5 = moe rank 1) that forces the §3.4 role
+/// switch (no redundancy, no missing-experts masking), late enough that
+/// real decode context and a populated routing WAL exist.
+fn role_switch_scenario(seed: u64) -> Scenario {
+    Scenario::new("wal-replay", seed).requests(24).inject_fault(
+        12,
+        5,
+        FaultLevel::L6,
+        FailureBehavior::Erroring,
+    )
+}
+
+fn role_switch_cfg(wal: bool) -> DeploymentConfig {
+    let mut cfg = default_cfg();
+    cfg.redundant_per_rank = 0;
+    cfg.recovery.allow_missing_experts = false; // force the switch
+    cfg.recovery.wal_replay = wal;
+    cfg
+}
+
+/// Like `common::run`, but keeps the engine alive so the test can read
+/// per-device [`revivemoe::runtime::DeviceStats`] after the run.
+fn run_keep_engine(cfg: DeploymentConfig, scenario: &Scenario) -> (Engine, ServeReport) {
+    let (engine, _bd) = Engine::boot(cfg).expect("boot");
+    run_scenario(engine, scenario, RecoveryStrategy::ReviveMoE).expect("serve")
+}
+
+#[test]
+fn knobs_off_replays_baseline_byte_for_byte_on_every_canned_scenario() {
+    if !ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    for name in Scenario::CANNED {
+        let scenario = Scenario::by_name(name, 21).expect(name).requests(12);
+        let a = run(default_cfg(), &scenario);
+        let b = run(default_cfg(), &scenario);
+        assert_replay_identical(&a, &b);
+        // the tiered-memory machinery never engages with the knobs off
+        assert_eq!(a.stats.experts_promoted, 0, "{name}");
+        assert_eq!(a.stats.experts_evicted, 0, "{name}");
+        assert_eq!(a.stats.cold_expert_hits, 0, "{name}");
+        assert_eq!(a.stats.wal_tokens_replayed, 0, "{name}");
+        assert_eq!(a.stats.expert_upload_bytes_saved, 0, "{name}");
+        assert!(
+            !a.event_log.iter().any(|l| l.contains("WalReplay")),
+            "{name}: wal_replay recovery must never surface with the knob off"
+        );
+    }
+}
+
+#[test]
+fn residency_on_changes_weight_placement_but_never_a_token() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = Scenario::steady(33).requests(16);
+    let baseline = run(default_cfg(), &scenario);
+    let mut cfg = default_cfg();
+    cfg.recovery.expert_residency = true;
+    cfg.recovery.expert_hot_capacity = 1; // heavily oversubscribed
+    let (engine, tiered) = run_keep_engine(cfg, &scenario);
+
+    assert_eq!(tiered.incomplete, 0);
+    assert_eq!(tiered.completed.len(), tiered.submitted);
+    assert_eq!(
+        baseline.token_streams(),
+        tiered.token_streams(),
+        "residency changed a token stream"
+    );
+    // with 1 hot slot per rank most dispatches land cold and execute
+    // over the host-tier fallback
+    assert!(tiered.stats.cold_expert_hits > 0, "{:?}", tiered.stats);
+    // usage concentrates (the gate is data-dependent and stable), so
+    // somewhere a cold expert must overtake an arbitrary boot-hot one
+    assert!(tiered.stats.experts_promoted > 0, "{:?}", tiered.stats);
+    // promotion traffic is real device traffic: UploadExpert bytes land
+    // on the MoE plane, and evictions only happen to make room
+    let uploaded: usize = engine
+        .moe_order
+        .iter()
+        .map(|d| engine.executors[d].handle.stats().expect("stats").expert_bytes_uploaded)
+        .sum();
+    assert!(uploaded > 0, "promotions must move real bytes");
+    assert!(tiered.stats.experts_evicted <= tiered.stats.experts_promoted);
+    engine.shutdown();
+
+    // the baseline never touched any of it
+    assert_eq!(baseline.stats.cold_expert_hits, 0);
+    assert_eq!(baseline.stats.experts_promoted, 0);
+}
+
+#[test]
+fn wal_replay_recovers_with_zero_expert_disk_reload_and_zero_recompute() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = role_switch_scenario(45);
+    let (base_engine, baseline) = run_keep_engine(role_switch_cfg(false), &scenario);
+    let (wal_engine, wal) = run_keep_engine(role_switch_cfg(true), &scenario);
+
+    // both complete everything with identical streams: the WAL mode
+    // changes the recovery mechanism, never a token
+    assert_eq!(baseline.incomplete, 0);
+    assert_eq!(wal.incomplete, 0);
+    assert_eq!(wal.completed.len(), wal.submitted);
+    assert_eq!(
+        baseline.token_streams(),
+        wal.token_streams(),
+        "wal_replay changed a token stream"
+    );
+
+    // the recovery took the WalReplay path, visibly
+    assert_eq!(wal.recoveries.len(), 1);
+    assert!(
+        wal.event_log.iter().any(|l| l.contains("WalReplay")),
+        "the recovery must classify as WalReplay: {:?}",
+        wal.event_log
+    );
+
+    // the acceptance bar, half 1: zero expert weight-reload disk
+    // submissions on the critical path. The replacement rank (moe rank
+    // 1's device after the switch) received its experts as host-tier
+    // uploads — and the engine-side savings counter accounts for every
+    // byte of them.
+    let victim = wal_engine.moe_order[1];
+    let ds = wal_engine.executors[&victim].handle.stats().expect("stats");
+    assert!(ds.expert_bytes_uploaded > 0, "the reload must arrive as host-tier uploads");
+    assert_eq!(
+        wal.stats.expert_upload_bytes_saved, ds.expert_bytes_uploaded,
+        "every uploaded expert byte must be a disk byte saved"
+    );
+    // the disk baseline's replacement rank reloads via LoadWeights and
+    // never sees an expert upload
+    let base_victim = base_engine.moe_order[1];
+    let base_ds = base_engine.executors[&base_victim].handle.stats().expect("stats");
+    assert_eq!(base_ds.expert_bytes_uploaded, 0, "baseline reloads from disk");
+    assert_eq!(baseline.stats.expert_upload_bytes_saved, 0);
+
+    // half 2: zero recomputed tokens — wal_replay forces the lossless
+    // live-KV drain, and the committed WAL window replayed
+    assert_eq!(wal.stats.recomputed_tokens, 0, "zero recomputed tokens");
+    assert_eq!(wal.stats.seqs_reprefilled, 0, "{:?}", wal.stats);
+    assert!(wal.stats.wal_tokens_replayed > 0, "{:?}", wal.stats);
+    assert_eq!(baseline.stats.wal_tokens_replayed, 0);
+    assert!(
+        baseline.stats.recomputed_tokens > 0,
+        "the disk baseline re-prefills what the WAL mode replays: {:?}",
+        baseline.stats
+    );
+
+    base_engine.shutdown();
+    wal_engine.shutdown();
+}
+
+#[test]
+fn wal_replay_run_is_replay_deterministic() {
+    if !ready() {
+        eprintln!("SKIP");
+        return;
+    }
+    let scenario = role_switch_scenario(57);
+    let a = run(role_switch_cfg(true), &scenario);
+    let b = run(role_switch_cfg(true), &scenario);
+    assert_replay_identical(&a, &b);
+}

@@ -1,0 +1,205 @@
+//! Property-based tests for the tiered expert-memory subsystem
+//! (residency hot sets + routing WAL) across randomized placements,
+//! capacities, and dispatch streams. Artifact-free: everything here
+//! drives [`ExpertResidency`] / [`RoutingWal`] directly.
+
+use std::collections::BTreeSet;
+
+use revivemoe::residency::{ExpertResidency, ResidencyAction, RoutingWal, WAL_WINDOW};
+use revivemoe::workload::Rng;
+
+/// Balanced placement: `n_ranks` ranks hosting `per_rank` distinct
+/// experts each (global ids unique across ranks, like primaries without
+/// redundancy).
+fn balanced_slots(n_ranks: usize, per_rank: usize) -> Vec<Vec<usize>> {
+    (0..n_ranks).map(|r| (0..per_rank).map(|s| r * per_rank + s).collect()).collect()
+}
+
+#[test]
+fn hot_set_never_exceeds_capacity_under_random_traffic() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(91 + seed);
+        let n_ranks = rng.below(4) + 1;
+        let per_rank = rng.below(7) + 2;
+        let capacity = rng.below(per_rank + 2); // 0 (unbounded) .. oversized
+        let slots = balanced_slots(n_ranks, per_rank);
+        let mut res = ExpertResidency::new(&slots, capacity);
+        for _tick in 0..30 {
+            for _ in 0..rng.below(40) {
+                let rank = rng.below(n_ranks);
+                let expert = slots[rank][rng.below(per_rank)];
+                res.note_dispatch(rank, expert);
+            }
+            res.end_tick();
+            for (rank, hosted) in slots.iter().enumerate() {
+                let hot = res.hot_set(rank);
+                let bound = if capacity == 0 { hosted.len() } else { capacity.min(hosted.len()) };
+                assert!(
+                    hot.len() <= bound,
+                    "seed {seed}: rank {rank} hot set {hot:?} over bound {bound}"
+                );
+                // hot experts are always hosted experts
+                let hosted_set: BTreeSet<_> = hosted.iter().copied().collect();
+                assert!(hot.iter().all(|e| hosted_set.contains(e)), "seed {seed}: alien expert");
+            }
+        }
+    }
+}
+
+#[test]
+fn actions_are_a_pure_function_of_the_dispatch_stream() {
+    for seed in 0..60 {
+        let mut rng = Rng::new(417 + seed);
+        let n_ranks = rng.below(3) + 1;
+        let per_rank = rng.below(6) + 2;
+        let capacity = rng.below(per_rank) + 1;
+        let slots = balanced_slots(n_ranks, per_rank);
+        // one pre-drawn stream of (tick boundary | dispatch) events
+        let mut stream: Vec<Option<(usize, usize)>> = Vec::new();
+        for _tick in 0..20 {
+            for _ in 0..rng.below(25) {
+                let rank = rng.below(n_ranks);
+                stream.push(Some((rank, slots[rank][rng.below(per_rank)])));
+            }
+            stream.push(None);
+        }
+        let replay = |stream: &[Option<(usize, usize)>]| {
+            let mut res = ExpertResidency::new(&slots, capacity);
+            let mut actions = Vec::new();
+            let mut hots = Vec::new();
+            for ev in stream {
+                match ev {
+                    Some((rank, expert)) => {
+                        res.note_dispatch(*rank, *expert);
+                    }
+                    None => {
+                        actions.extend(res.end_tick());
+                        hots.push((0..n_ranks).map(|r| res.hot_set(r)).collect::<Vec<_>>());
+                    }
+                }
+            }
+            (actions, hots)
+        };
+        let (a1, h1) = replay(&stream);
+        let (a2, h2) = replay(&stream);
+        assert_eq!(a1, a2, "seed {seed}: action sequences diverged");
+        assert_eq!(h1, h2, "seed {seed}: hot-set histories diverged");
+        // every action's rank/expert is well-formed
+        for act in &a1 {
+            let (rank, expert) = match act {
+                ResidencyAction::Promote { rank, expert } => (*rank, *expert),
+                ResidencyAction::Evict { rank, expert } => (*rank, *expert),
+            };
+            assert!(rank < n_ranks && slots[rank].contains(&expert), "seed {seed}: {act:?}");
+        }
+    }
+}
+
+#[test]
+fn promotions_and_evictions_mirror_the_hot_set_delta() {
+    // The action list IS the hot-set diff: applying Promote/Evict to the
+    // previous hot set must reproduce the next one exactly.
+    for seed in 0..60 {
+        let mut rng = Rng::new(3301 + seed);
+        let per_rank = rng.below(6) + 3;
+        let capacity = rng.below(per_rank - 1) + 1;
+        let slots = balanced_slots(2, per_rank);
+        let mut res = ExpertResidency::new(&slots, capacity);
+        let mut model: Vec<BTreeSet<usize>> =
+            (0..2).map(|r| res.hot_set(r).into_iter().collect()).collect();
+        for _tick in 0..25 {
+            for _ in 0..rng.below(30) {
+                let rank = rng.below(2);
+                res.note_dispatch(rank, slots[rank][rng.below(per_rank)]);
+            }
+            for act in res.end_tick() {
+                match act {
+                    ResidencyAction::Promote { rank, expert } => {
+                        assert!(model[rank].insert(expert), "seed {seed}: double promote {act:?}")
+                    }
+                    ResidencyAction::Evict { rank, expert } => {
+                        assert!(model[rank].remove(&expert), "seed {seed}: evicting cold {act:?}")
+                    }
+                }
+            }
+            for r in 0..2 {
+                let got: BTreeSet<usize> = res.hot_set(r).into_iter().collect();
+                assert_eq!(got, model[r], "seed {seed}: hot set diverged from the action diff");
+            }
+        }
+    }
+}
+
+#[test]
+fn wal_window_matches_a_naive_model_across_random_streams() {
+    for seed in 0..60 {
+        let mut rng = Rng::new(5511 + seed);
+        let n_seqs = rng.below(4) + 1;
+        let mut wal = RoutingWal::new();
+        // naive model: unbounded per-seq vec, truncated to the window
+        let mut naive: Vec<Vec<(u16, Vec<(usize, usize)>)>> = vec![Vec::new(); n_seqs];
+        for step in 0..80u16 {
+            for seq in 0..n_seqs {
+                if rng.below(4) == 0 {
+                    continue; // this seq skipped the step
+                }
+                let mut routes = Vec::new();
+                for layer in 2..2 + rng.below(3) + 1 {
+                    let experts: Vec<usize> = (0..2).map(|_| rng.below(16)).collect();
+                    wal.stage(seq as u64, layer, &experts);
+                    routes.extend(experts.iter().map(|&e| (layer, e)));
+                }
+                wal.commit(seq as u64, step);
+                naive[seq].push((step, routes));
+                if naive[seq].len() > WAL_WINDOW {
+                    naive[seq].remove(0);
+                }
+            }
+        }
+        for seq in 0..n_seqs {
+            let got: Vec<_> =
+                wal.records(seq as u64).map(|r| (r.token, r.routes.clone())).collect();
+            assert_eq!(got, naive[seq], "seed {seed}: seq {seq} window diverged");
+        }
+        let total: usize = naive.iter().map(|w| w.len()).sum();
+        assert_eq!(wal.total_tokens(), total, "seed {seed}");
+    }
+}
+
+#[test]
+fn abort_never_leaks_partial_step_entries() {
+    for seed in 0..60 {
+        let mut rng = Rng::new(7741 + seed);
+        let mut wal = RoutingWal::new();
+        let mut committed: Vec<Vec<u16>> = vec![Vec::new(); 3];
+        for step in 0..60u16 {
+            for seq in 0..3u64 {
+                wal.stage(seq, 2, &[rng.below(8), rng.below(8)]);
+            }
+            if rng.below(3) == 0 {
+                // the step aborts: staged routing must vanish, committed
+                // windows must be untouched
+                wal.abort();
+            } else {
+                for seq in 0..3u64 {
+                    wal.commit(seq, step);
+                    committed[seq as usize].push(step);
+                    if committed[seq as usize].len() > WAL_WINDOW {
+                        committed[seq as usize].remove(0);
+                    }
+                }
+            }
+            for seq in 0..3u64 {
+                let tokens: Vec<u16> = wal.records(seq).map(|r| r.token).collect();
+                assert_eq!(tokens, committed[seq as usize], "seed {seed}: partial step leaked");
+                // every surviving record carries real routes: an aborted
+                // step can never have committed an empty-staged record
+                assert!(wal.records(seq).all(|r| !r.routes.is_empty()), "seed {seed}");
+            }
+        }
+        for seq in 0..3u64 {
+            wal.drop_seq(seq);
+        }
+        assert!(wal.is_empty(), "seed {seed}: drop_seq left state behind");
+    }
+}

@@ -35,7 +35,7 @@ if not FILES:
 # every bench target checks in a baseline; keep this count in lockstep
 # with the [[bench]] JSON-writing targets so a new bench cannot land
 # without one (or an old baseline vanish unnoticed)
-EXPECTED = 7
+EXPECTED = 8
 if FILES and len(FILES) != EXPECTED:
     failures.append(
         f"expected {EXPECTED} BENCH_*.json baselines, found {len(FILES)}: "
